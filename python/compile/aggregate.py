@@ -1,0 +1,71 @@
+"""L2: weight aggregation graphs — Multi-Krum (DeFL §3.2) and FedAvg.
+
+These are the aggregation-side compute graphs the rust coordinator executes
+on every training round. ``multi_krum`` is the DeFL/Biscotti weight filter:
+Krum scores from the L1 Pallas Gram kernel, top-m selection, then a
+FedAvg-style weighted mean over the selected rows. ``fedavg`` is the FL/SL
+aggregation rule.
+
+n (silo count) and f (tolerated Byzantine count) are trace-time constants,
+so aot.py exports one artifact per (n, f) combination used by the paper's
+tables; the rust krum/ module covers arbitrary shapes natively and
+cross-checks these artifacts in tests.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.pairwise import pairwise_sq_dists
+
+
+def krum_scores(w: jax.Array, f: int) -> jax.Array:
+    """Krum score per row of w (n, D): the sum of squared distances to the
+    n−f−2 closest other rows. Lower is more trustworthy."""
+    n = w.shape[0]
+    closest = n - f - 2
+    if closest < 1:
+        raise ValueError(f"krum needs n - f - 2 >= 1, got n={n} f={f}")
+    d2 = pairwise_sq_dists(w)
+    # Exclude self-distance by pushing the diagonal past any real distance.
+    d2 = d2 + jnp.diag(jnp.full((n,), jnp.finfo(jnp.float32).max / 4, jnp.float32))
+    srt = jnp.sort(d2, axis=1)
+    return jnp.sum(srt[:, :closest], axis=1)
+
+
+def multi_krum(w: jax.Array, sample_weights: jax.Array, f: int, m: int):
+    """Multi-Krum aggregate (DeFL §3.2).
+
+    Args:
+      w: f32[n, D] stacked flat weight vectors, one row per silo.
+      sample_weights: f32[n] FedAvg weights (∝ local dataset sizes).
+      f: tolerated Byzantine count (trace-time constant).
+      m: rows to keep (paper: top-k; we use m = n − f).
+
+    Returns (agg f32[D], scores f32[n], mask f32[n]).
+    """
+    n = w.shape[0]
+    scores = krum_scores(w, f)
+    # mask = 1 for the m smallest scores. Threshold at the m-th order
+    # statistic; strict ranking tie-break via argsort for determinism.
+    order = jnp.argsort(scores)
+    mask = jnp.zeros((n,), jnp.float32).at[order[:m]].set(1.0)
+    sw = sample_weights.astype(jnp.float32) * mask
+    agg = (sw[:, None] * w).sum(axis=0) / jnp.maximum(sw.sum(), 1e-12)
+    return agg, scores, mask
+
+
+def fedavg(w: jax.Array, sample_weights: jax.Array):
+    """FedAvg (McMahan et al.): weighted mean of all rows."""
+    sw = sample_weights.astype(jnp.float32)
+    agg = (sw[:, None] * w).sum(axis=0) / jnp.maximum(sw.sum(), 1e-12)
+    return (agg,)
+
+
+def make_multi_krum(n: int, f: int, m: int):
+    """Trace-time wrapper returning a 2-arg fn for aot export."""
+
+    def fn(w, sample_weights):
+        return multi_krum(w, sample_weights, f, m)
+
+    fn.__name__ = f"multi_krum_n{n}_f{f}_m{m}"
+    return fn

@@ -1,0 +1,91 @@
+"""L1 Pallas kernel: tiled Gram-matrix accumulation for Multi-Krum.
+
+The Multi-Krum weight filter (DeFL §3.2) needs the full pairwise
+squared-distance matrix over the n stacked flat weight vectors W ∈ R^{n×D}.
+D is the model dimension (10^4..10^7), n is the silo count (4..10), so the
+hot spot is the contraction over D.
+
+GPU→TPU adaptation (DESIGN.md §Hardware-Adaptation): instead of the CUDA
+threadblock/shared-memory tiling a GPU implementation would use, we compute
+the Gram matrix G = W·Wᵀ with a Pallas kernel whose grid walks D in
+VMEM-sized blocks and accumulates an (n_pad, n_pad) f32 tile directly in the
+output ref; the per-block contraction is an (n_pad, BLK_D)×(BLK_D, n_pad)
+matmul that maps onto the MXU systolic array. Squared distances follow from
+    dist²(i, j) = G_ii + G_jj − 2·G_ij
+outside the kernel (O(n²) work, negligible).
+
+Kernels are lowered with interpret=True: the CPU PJRT client cannot execute
+Mosaic custom-calls, and interpret mode lowers the same schedule to plain
+HLO (a while-loop over the grid), so numerics and the HBM↔VMEM block
+schedule are both exercised.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default D-block. 8 rows × 4096 f32 = 128 KiB per operand block; with
+# double buffering the kernel's VMEM footprint stays ≪ 16 MiB for n ≤ 16.
+# See EXPERIMENTS.md §Perf for the footprint/utilization table.
+DEFAULT_BLOCK_D = 4096
+
+# Pad n up to the TPU sublane count so the MXU tile is well-shaped.
+ROW_PAD = 8
+
+
+def _pad_rows(n: int) -> int:
+    return max(ROW_PAD, ((n + ROW_PAD - 1) // ROW_PAD) * ROW_PAD)
+
+
+def _gram_kernel(w_ref, o_ref):
+    """One grid step: accumulate W_blk · W_blkᵀ into the (n_pad, n_pad) output.
+
+    The output BlockSpec maps every grid step to the same (0, 0) block, so
+    o_ref acts as a VMEM-resident accumulator across the D-walk.
+    """
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    blk = w_ref[...]
+    # (n_pad, BLK_D) @ (BLK_D, n_pad) -> MXU contraction.
+    o_ref[...] += jnp.dot(blk, blk.T, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def gram(w: jax.Array, block_d: int = DEFAULT_BLOCK_D) -> jax.Array:
+    """Gram matrix G = W·Wᵀ for W of shape (n, D), via the Pallas kernel.
+
+    Pads n to the sublane multiple and D to a multiple of block_d (zero
+    padding changes neither G nor the derived distances), runs the blocked
+    accumulation, and slices back to (n, n).
+    """
+    n, d = w.shape
+    n_pad = _pad_rows(n)
+    d_pad = ((d + block_d - 1) // block_d) * block_d
+    wp = jnp.pad(w, ((0, n_pad - n), (0, d_pad - d)))
+    nblocks = d_pad // block_d
+
+    out = pl.pallas_call(
+        _gram_kernel,
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((n_pad, block_d), lambda k: (0, k))],
+        out_specs=pl.BlockSpec((n_pad, n_pad), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, n_pad), jnp.float32),
+        interpret=True,
+    )(wp)
+    return out[:n, :n]
+
+
+def pairwise_sq_dists(w: jax.Array, block_d: int = DEFAULT_BLOCK_D) -> jax.Array:
+    """Pairwise squared euclidean distances between rows of W, shape (n, n).
+
+    dist²(i,j) = G_ii + G_jj − 2 G_ij, clamped at 0 against rounding."""
+    g = gram(w, block_d=block_d)
+    sq = jnp.diag(g)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * g
+    return jnp.maximum(d2, 0.0)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels (pytest compares against these).
+
+Every kernel in this package has a reference here computed with plain
+jax.numpy — no Pallas, no blocking — serving as the correctness ground
+truth for python/tests/test_kernels.py (hypothesis sweeps shapes/dtypes).
+"""
+
+import jax.numpy as jnp
+
+
+def gram_ref(w):
+    """G = W·Wᵀ, f32 accumulate."""
+    w = w.astype(jnp.float32)
+    return w @ w.T
+
+
+def pairwise_sq_dists_ref(w):
+    """Pairwise squared distances via direct elementwise differences."""
+    w = w.astype(jnp.float32)
+    diff = w[:, None, :] - w[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def sgd_update_ref(theta, grad, lr):
+    return theta.astype(jnp.float32) - jnp.float32(lr) * grad.astype(jnp.float32)
+
+
+def krum_scores_ref(w, f):
+    """Krum score per row: sum of squared distances to its n−f−2 closest
+    peers (self excluded), per Blanchard et al. and DeFL §3.2."""
+    n = w.shape[0]
+    closest = n - f - 2
+    assert closest >= 1, "krum needs n - f - 2 >= 1"
+    d2 = pairwise_sq_dists_ref(w)
+    d2 = d2 + jnp.diag(jnp.full((n,), jnp.inf, dtype=jnp.float32))
+    srt = jnp.sort(d2, axis=1)
+    return jnp.sum(srt[:, :closest], axis=1)
+
+
+def multi_krum_ref(w, sample_weights, f, m):
+    """Multi-Krum aggregate: FedAvg (weighted by sample_weights) over the m
+    rows with the smallest Krum scores. Returns (agg, scores, mask)."""
+    scores = krum_scores_ref(w, f)
+    order = jnp.argsort(scores)
+    sel = order[:m]
+    mask = jnp.zeros((w.shape[0],), jnp.float32).at[sel].set(1.0)
+    sw = sample_weights.astype(jnp.float32) * mask
+    agg = (sw[:, None] * w.astype(jnp.float32)).sum(0) / jnp.maximum(sw.sum(), 1e-12)
+    return agg, scores, mask

@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: fused SGD parameter update.
+
+The train-path hot spot after the backward pass is the elementwise update
+    theta' = theta − lr · grad
+over the flat parameter vector (DESIGN.md flat-parameter convention). On a
+GPU this is a trivially coalesced elementwise kernel; on TPU it is a pure
+VPU pass that we block along D so each step streams one VMEM-sized slab of
+theta and grad. Fusing the update into one kernel avoids materializing the
+scaled gradient. interpret=True for the same reason as pairwise.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 8 × 4096 f32 = 128 KiB per operand slab.
+DEFAULT_BLOCK = 32768
+_LANES = 128
+
+
+def _sgd_kernel(lr_ref, t_ref, g_ref, o_ref):
+    o_ref[...] = t_ref[...] - lr_ref[0] * g_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def sgd_update(theta: jax.Array, grad: jax.Array, lr: jax.Array,
+               block: int = DEFAULT_BLOCK) -> jax.Array:
+    """theta − lr·grad over a flat f32[D] vector via the blocked kernel.
+
+    D is zero-padded to a multiple of the block, reshaped to
+    (D_pad/128, 128) so the last axis fills the VPU lanes, updated
+    block-row-wise, and sliced back.
+    """
+    (d,) = theta.shape
+    lr = jnp.asarray(lr, jnp.float32).reshape((1,))
+    rows_per_blk = max(block // _LANES, 1)
+    d_pad = ((d + block - 1) // block) * block
+    rows = d_pad // _LANES
+
+    tp = jnp.pad(theta, (0, d_pad - d)).reshape(rows, _LANES)
+    gp = jnp.pad(grad, (0, d_pad - d)).reshape(rows, _LANES)
+    nblocks = rows // rows_per_blk
+
+    out = pl.pallas_call(
+        _sgd_kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda k: (0,)),
+            pl.BlockSpec((rows_per_blk, _LANES), lambda k: (k, 0)),
+            pl.BlockSpec((rows_per_blk, _LANES), lambda k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows_per_blk, _LANES), lambda k: (k, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, _LANES), jnp.float32),
+        interpret=True,
+    )(lr, tp, gp)
+    return out.reshape(d_pad)[:d]

@@ -1,0 +1,250 @@
+"""L2: jax model definitions with the flat-parameter convention.
+
+Two model tracks mirror the paper's two evaluation tracks (§5.1):
+
+* ``cifar_cnn`` — compact CNN for 32×32×3 10-class image classification.
+  Stands in for DenseNet-100 on CIFAR-10 (see DESIGN.md substitution table:
+  the table-level phenomena depend on gradient geometry, not on DenseNet).
+* ``sent_mlp`` — EmbeddingBag + MLP for 2-class token-sequence sentiment.
+  Stands in for Word2Vec + attention Bi-LSTM on Sentiment140.
+
+Every model exposes its parameters as ONE flat f32[D] vector; the rust
+coordinator only ever sees flat buffers (it hashes them into UPD
+transactions, stacks them into the f32[n,D] Multi-Krum input, and feeds the
+aggregate back). ``ParamSpec`` records the (name, shape) layout so the
+traced train/eval steps can unflatten with static slices.
+
+The SGD application itself goes through the L1 fused Pallas kernel
+(kernels/sgd.py) so that the kernel lowers into the same train-step HLO.
+"""
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.sgd import sgd_update
+
+# ---------------------------------------------------------------------------
+# Flat-parameter plumbing
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Static layout of a model's parameters inside the flat vector."""
+
+    entries: Tuple[Tuple[str, Tuple[int, ...]], ...]
+
+    @property
+    def dim(self) -> int:
+        total = 0
+        for _, shape in self.entries:
+            size = 1
+            for s in shape:
+                size *= s
+            total += size
+        return total
+
+    def offsets(self) -> List[Tuple[str, int, int, Tuple[int, ...]]]:
+        out, off = [], 0
+        for name, shape in self.entries:
+            size = 1
+            for s in shape:
+                size *= s
+            out.append((name, off, size, shape))
+            off += size
+        return out
+
+    def unflatten(self, theta: jax.Array) -> Dict[str, jax.Array]:
+        return {
+            name: jax.lax.slice(theta, (off,), (off + size,)).reshape(shape)
+            for name, off, size, shape in self.offsets()
+        }
+
+    def flatten(self, params: Dict[str, jax.Array]) -> jax.Array:
+        return jnp.concatenate(
+            [params[name].reshape(-1) for name, _ in self.entries]
+        ).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# CIFAR track: compact CNN
+# ---------------------------------------------------------------------------
+
+CIFAR_IMG = (32, 32, 3)
+CIFAR_CLASSES = 10
+CIFAR_BATCH = 32
+
+CIFAR_SPEC = ParamSpec(
+    entries=(
+        ("conv1_w", (3, 3, 3, 8)),
+        ("conv1_b", (8,)),
+        ("conv2_w", (3, 3, 8, 16)),
+        ("conv2_b", (16,)),
+        ("conv3_w", (3, 3, 16, 32)),
+        ("conv3_b", (32,)),
+        ("fc1_w", (32, 64)),
+        ("fc1_b", (64,)),
+        ("fc2_w", (64, CIFAR_CLASSES)),
+        ("fc2_b", (CIFAR_CLASSES,)),
+    )
+)
+
+
+def _conv(x, w, b, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b
+
+
+def _avgpool2(x):
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    ) / 4.0
+
+
+def cifar_logits(theta: jax.Array, x: jax.Array) -> jax.Array:
+    """x: f32[B,32,32,3] -> logits f32[B,10]."""
+    p = CIFAR_SPEC.unflatten(theta)
+    h = jax.nn.relu(_conv(x, p["conv1_w"], p["conv1_b"]))
+    h = _avgpool2(h)                      # 16x16x8
+    h = jax.nn.relu(_conv(h, p["conv2_w"], p["conv2_b"]))
+    h = _avgpool2(h)                      # 8x8x16
+    h = jax.nn.relu(_conv(h, p["conv3_w"], p["conv3_b"]))
+    h = jnp.mean(h, axis=(1, 2))          # global average pool -> [B,32]
+    h = jax.nn.relu(h @ p["fc1_w"] + p["fc1_b"])
+    return h @ p["fc2_w"] + p["fc2_b"]
+
+
+def cifar_init(seed: jax.Array) -> jax.Array:
+    """He-style init of the flat parameter vector from a u32[1] seed."""
+    key = jax.random.PRNGKey(seed[0])
+    params = {}
+    for name, shape in CIFAR_SPEC.entries:
+        key, sub = jax.random.split(key)
+        if name.endswith("_b"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = 1
+            for s in shape[:-1]:
+                fan_in *= s
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * jnp.sqrt(
+                2.0 / fan_in
+            )
+    return CIFAR_SPEC.flatten(params)
+
+
+# ---------------------------------------------------------------------------
+# Sentiment track: EmbeddingBag + MLP
+# ---------------------------------------------------------------------------
+
+SENT_VOCAB = 2048
+SENT_LEN = 32
+SENT_EMBED = 16
+SENT_HIDDEN = 64
+SENT_CLASSES = 2
+SENT_BATCH = 64
+
+SENT_SPEC = ParamSpec(
+    entries=(
+        ("embed", (SENT_VOCAB, SENT_EMBED)),
+        ("fc1_w", (SENT_EMBED, SENT_HIDDEN)),
+        ("fc1_b", (SENT_HIDDEN,)),
+        ("fc2_w", (SENT_HIDDEN, SENT_CLASSES)),
+        ("fc2_b", (SENT_CLASSES,)),
+    )
+)
+
+
+def sent_logits(theta: jax.Array, x: jax.Array) -> jax.Array:
+    """x: i32[B,L] token ids -> logits f32[B,2]. Mean-pooled embedding bag."""
+    p = SENT_SPEC.unflatten(theta)
+    emb = jnp.take(p["embed"], x, axis=0)  # [B,L,E]
+    h = jnp.mean(emb, axis=1)              # [B,E]
+    h = jnp.tanh(h @ p["fc1_w"] + p["fc1_b"])
+    return h @ p["fc2_w"] + p["fc2_b"]
+
+
+def sent_init(seed: jax.Array) -> jax.Array:
+    key = jax.random.PRNGKey(seed[0])
+    params = {}
+    for name, shape in SENT_SPEC.entries:
+        key, sub = jax.random.split(key)
+        if name.endswith("_b"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif name == "embed":
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * 0.1
+        else:
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * jnp.sqrt(
+                2.0 / shape[0]
+            )
+    return SENT_SPEC.flatten(params)
+
+
+# ---------------------------------------------------------------------------
+# Shared train / eval steps
+# ---------------------------------------------------------------------------
+
+
+def _xent(logits: jax.Array, y: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def make_train_step(logits_fn):
+    """(theta f32[D], x, y i32[B], lr f32[1]) -> (theta' f32[D], loss f32[1]).
+
+    Forward + backward with jax.value_and_grad; the parameter update runs
+    through the fused Pallas SGD kernel so L1 lowers into this HLO module.
+    """
+
+    def loss_fn(theta, x, y):
+        return _xent(logits_fn(theta, x), y)
+
+    def train_step(theta, x, y, lr):
+        loss, grad = jax.value_and_grad(loss_fn)(theta, x, y)
+        new_theta = sgd_update(theta, grad, lr[0])
+        return new_theta, loss.reshape((1,))
+
+    return train_step
+
+
+def make_eval_step(logits_fn):
+    """(theta, x, y) -> (loss f32[1], ncorrect f32[1])."""
+
+    def eval_step(theta, x, y):
+        logits = logits_fn(theta, x)
+        loss = _xent(logits, y)
+        correct = jnp.sum((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+        return loss.reshape((1,)), correct.reshape((1,))
+
+    return eval_step
+
+
+# Registry consumed by aot.py and the tests.
+MODELS = {
+    "cifar_cnn": dict(
+        spec=CIFAR_SPEC,
+        logits=cifar_logits,
+        init=cifar_init,
+        batch=CIFAR_BATCH,
+        x_shape=(CIFAR_BATCH,) + CIFAR_IMG,
+        x_dtype=jnp.float32,
+        classes=CIFAR_CLASSES,
+    ),
+    "sent_mlp": dict(
+        spec=SENT_SPEC,
+        logits=sent_logits,
+        init=sent_init,
+        batch=SENT_BATCH,
+        x_shape=(SENT_BATCH, SENT_LEN),
+        x_dtype=jnp.int32,
+        classes=SENT_CLASSES,
+    ),
+}

@@ -1,0 +1,105 @@
+"""L2 aggregation graphs: Multi-Krum / FedAvg semantics.
+
+Checks the paper-level property the whole system rests on: Krum scores rank
+outliers last, so poisoned rows are excluded from the aggregate (§3.2).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import aggregate
+from compile.kernels import ref
+
+SETTLE = dict(max_examples=20, deadline=None)
+
+
+def honest_cluster(n, d, seed, spread=0.1):
+    rs = np.random.RandomState(seed)
+    center = rs.randn(d).astype(np.float32)
+    return center + spread * rs.randn(n, d).astype(np.float32), center
+
+
+def test_krum_scores_match_ref():
+    w = np.random.RandomState(0).randn(7, 512).astype(np.float32)
+    got = np.asarray(aggregate.krum_scores(jnp.array(w), f=2))
+    want = np.asarray(ref.krum_scores_ref(jnp.array(w), f=2))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-2)
+
+
+@settings(**SETTLE)
+@given(
+    n=st.sampled_from([4, 7, 10]),
+    seed=st.integers(min_value=0, max_value=10_000),
+    attack_scale=st.sampled_from([10.0, 100.0]),
+)
+def test_multi_krum_excludes_outlier(n, seed, attack_scale):
+    """One Byzantine row far from the honest cluster must get mask 0."""
+    f = 1
+    d = 256
+    w, _ = honest_cluster(n, d, seed)
+    rs = np.random.RandomState(seed + 1)
+    w[0] = attack_scale * rs.randn(d).astype(np.float32)
+    sw = np.ones(n, np.float32)
+    agg, scores, mask = aggregate.multi_krum(
+        jnp.array(w), jnp.array(sw), f=f, m=n - f)
+    mask = np.asarray(mask)
+    assert mask[0] == 0.0, f"byzantine row selected; scores={np.asarray(scores)}"
+    assert mask.sum() == n - f
+
+
+def test_multi_krum_no_attack_aggregates_cluster():
+    n, f, d = 7, 1, 128
+    w, center = honest_cluster(n, d, 3, spread=0.05)
+    sw = np.ones(n, np.float32)
+    agg, _, mask = aggregate.multi_krum(jnp.array(w), jnp.array(sw), f=f, m=n - f)
+    agg = np.asarray(agg)
+    # Aggregate stays within the cluster spread of the center.
+    assert np.linalg.norm(agg - center) < 0.1 * np.sqrt(d)
+    assert np.asarray(mask).sum() == n - f
+
+
+def test_multi_krum_sign_flip_filtered():
+    """Sign-flipping attack (−2·w) lands far from the cluster -> filtered."""
+    n, f, d = 4, 1, 512
+    w, _ = honest_cluster(n, d, 9, spread=0.05)
+    w[2] = -2.0 * w[2]
+    agg, _, mask = aggregate.multi_krum(
+        jnp.array(w), jnp.ones(n, dtype=jnp.float32), f=f, m=n - f)
+    assert np.asarray(mask)[2] == 0.0
+
+
+def test_multi_krum_matches_ref_full():
+    n, f = 10, 3
+    w = np.random.RandomState(5).randn(n, 300).astype(np.float32)
+    sw = np.random.RandomState(6).rand(n).astype(np.float32) + 0.5
+    m = n - f
+    agg, scores, mask = aggregate.multi_krum(jnp.array(w), jnp.array(sw), f=f, m=m)
+    agg_r, scores_r, mask_r = ref.multi_krum_ref(jnp.array(w), jnp.array(sw), f=f, m=m)
+    np.testing.assert_allclose(np.asarray(scores), np.asarray(scores_r),
+                               rtol=1e-3, atol=1e-2)
+    np.testing.assert_array_equal(np.asarray(mask), np.asarray(mask_r))
+    np.testing.assert_allclose(np.asarray(agg), np.asarray(agg_r),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_fedavg_weighted_mean():
+    w = np.stack([np.full(64, 1.0), np.full(64, 3.0)]).astype(np.float32)
+    sw = np.array([1.0, 3.0], np.float32)
+    (agg,) = aggregate.fedavg(jnp.array(w), jnp.array(sw))
+    np.testing.assert_allclose(np.asarray(agg), 2.5, rtol=1e-6)
+
+
+def test_fedavg_does_not_filter_outliers():
+    """The FL/SL failure mode the paper's Table 1 shows."""
+    n, d = 4, 128
+    w, center = honest_cluster(n, d, 1, spread=0.01)
+    w[0] = 1000.0 * np.ones(d, np.float32)
+    (agg,) = aggregate.fedavg(jnp.array(w), jnp.ones(n, dtype=jnp.float32))
+    assert np.linalg.norm(np.asarray(agg) - center) > 10.0
+
+
+def test_krum_rejects_bad_nf():
+    with pytest.raises(ValueError):
+        aggregate.krum_scores(jnp.zeros((4, 8)), f=2)  # n-f-2 = 0

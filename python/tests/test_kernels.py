@@ -1,0 +1,115 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+hypothesis sweeps shapes and value ranges; assert_allclose against ref.py
+is THE correctness signal for the kernels that end up inside the exported
+HLO artifacts.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.pairwise import gram, pairwise_sq_dists
+from compile.kernels.sgd import sgd_update
+
+SETTLE = dict(max_examples=25, deadline=None)
+
+
+def rand(shape, seed, scale=1.0):
+    return (np.random.RandomState(seed).randn(*shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Gram / pairwise kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTLE)
+@given(
+    n=st.integers(min_value=2, max_value=12),
+    d=st.integers(min_value=1, max_value=700),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_gram_matches_ref(n, d, seed):
+    w = rand((n, d), seed)
+    got = np.asarray(gram(jnp.array(w), block_d=128))
+    want = np.asarray(ref.gram_ref(jnp.array(w)))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-3)
+
+
+@settings(**SETTLE)
+@given(
+    n=st.integers(min_value=2, max_value=10),
+    d=st.integers(min_value=1, max_value=600),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.sampled_from([0.01, 1.0, 30.0]),
+)
+def test_pairwise_matches_ref(n, d, seed, scale):
+    w = rand((n, d), seed, scale)
+    got = np.asarray(pairwise_sq_dists(jnp.array(w), block_d=256))
+    want = np.asarray(ref.pairwise_sq_dists_ref(jnp.array(w)))
+    # Gram-trick cancellation costs a few ulps relative to the magnitudes.
+    tol = 1e-3 * max(1.0, float(want.max()))
+    np.testing.assert_allclose(got, want, atol=tol)
+
+
+def test_pairwise_diag_zero():
+    w = rand((6, 257), 7)
+    d2 = np.asarray(pairwise_sq_dists(jnp.array(w), block_d=64))
+    np.testing.assert_allclose(np.diag(d2), 0.0, atol=1e-2)
+
+
+def test_pairwise_symmetric():
+    w = rand((8, 333), 3)
+    d2 = np.asarray(pairwise_sq_dists(jnp.array(w), block_d=64))
+    np.testing.assert_allclose(d2, d2.T, atol=1e-3)
+
+
+def test_gram_block_size_invariance():
+    """The D-block walk must not change the result."""
+    w = rand((5, 1000), 11)
+    a = np.asarray(gram(jnp.array(w), block_d=64))
+    b = np.asarray(gram(jnp.array(w), block_d=1024))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-3)
+
+
+def test_gram_identical_rows():
+    w = np.tile(rand((1, 128), 5), (4, 1))
+    d2 = np.asarray(pairwise_sq_dists(jnp.array(w), block_d=64))
+    np.testing.assert_allclose(d2, 0.0, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# Fused SGD kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTLE)
+@given(
+    d=st.integers(min_value=1, max_value=100_000),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    lr=st.sampled_from([0.0, 1e-3, 0.1, 1.0]),
+)
+def test_sgd_matches_ref(d, seed, lr):
+    t = rand((d,), seed)
+    g = rand((d,), seed + 1)
+    got = np.asarray(sgd_update(jnp.array(t), jnp.array(g), lr, block=4096))
+    want = np.asarray(ref.sgd_update_ref(jnp.array(t), jnp.array(g), lr))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_sgd_zero_lr_identity():
+    t = rand((12345,), 1)
+    g = rand((12345,), 2)
+    got = np.asarray(sgd_update(jnp.array(t), jnp.array(g), 0.0))
+    np.testing.assert_array_equal(got, t)
+
+
+def test_sgd_block_invariance():
+    t = rand((9999,), 3)
+    g = rand((9999,), 4)
+    a = np.asarray(sgd_update(jnp.array(t), jnp.array(g), 0.01, block=512))
+    b = np.asarray(sgd_update(jnp.array(t), jnp.array(g), 0.01, block=32768))
+    np.testing.assert_array_equal(a, b)

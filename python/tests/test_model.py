@@ -1,0 +1,110 @@
+"""L2 model graphs: shapes, learning signal, flat-param round-trips."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.model import (
+    CIFAR_SPEC, MODELS, SENT_SPEC, ParamSpec,
+    cifar_init, cifar_logits, make_eval_step, make_train_step,
+    sent_init, sent_logits,
+)
+
+
+def test_param_spec_roundtrip():
+    spec = ParamSpec((("a", (2, 3)), ("b", (4,)), ("c", (1, 1, 5))))
+    assert spec.dim == 6 + 4 + 5
+    theta = jnp.arange(spec.dim, dtype=jnp.float32)
+    parts = spec.unflatten(theta)
+    assert parts["a"].shape == (2, 3)
+    assert parts["b"].shape == (4,)
+    back = spec.flatten(parts)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(theta))
+
+
+def test_dims_match_manifest_expectations():
+    assert CIFAR_SPEC.dim == MODELS["cifar_cnn"]["spec"].dim
+    assert SENT_SPEC.dim == MODELS["sent_mlp"]["spec"].dim
+    # Layout changes must be deliberate: they invalidate all artifacts.
+    assert CIFAR_SPEC.dim == 8794
+    assert SENT_SPEC.dim == 33986
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_init_deterministic_and_finite(name):
+    cfg = MODELS[name]
+    seed = jnp.array([42], jnp.uint32)
+    a = np.asarray(cfg["init"](seed))
+    b = np.asarray(cfg["init"](seed))
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (cfg["spec"].dim,)
+    assert np.isfinite(a).all()
+    c = np.asarray(cfg["init"](jnp.array([43], jnp.uint32)))
+    assert not np.array_equal(a, c)
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_logits_shape(name):
+    cfg = MODELS[name]
+    theta = cfg["init"](jnp.array([0], jnp.uint32))
+    rs = np.random.RandomState(0)
+    if cfg["x_dtype"] == jnp.float32:
+        x = jnp.array(rs.randn(*cfg["x_shape"]).astype(np.float32))
+    else:
+        x = jnp.array(rs.randint(0, 2048, cfg["x_shape"]).astype(np.int32))
+    logits = cfg["logits"](theta, x)
+    assert logits.shape == (cfg["batch"], cfg["classes"])
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def _batch(cfg, seed=0):
+    rs = np.random.RandomState(seed)
+    if cfg["x_dtype"] == jnp.float32:
+        x = rs.randn(*cfg["x_shape"]).astype(np.float32)
+    else:
+        x = rs.randint(0, 2048, cfg["x_shape"]).astype(np.int32)
+    y = rs.randint(0, cfg["classes"], (cfg["batch"],)).astype(np.int32)
+    return jnp.array(x), jnp.array(y)
+
+
+@pytest.mark.parametrize("name,lr,steps", [("cifar_cnn", 0.05, 30),
+                                           ("sent_mlp", 1.0, 100)])
+def test_train_step_reduces_loss_on_fixed_batch(name, lr, steps):
+    """Overfit a single batch: loss must drop clearly. The mean-pooled
+    embedding bag has 1/L-scaled embedding gradients, hence the larger lr."""
+    cfg = MODELS[name]
+    step = jax.jit(make_train_step(cfg["logits"]))
+    theta = cfg["init"](jnp.array([7], jnp.uint32))
+    x, y = _batch(cfg)
+    lr = jnp.array([lr], jnp.float32)
+    theta, loss0 = step(theta, x, y, lr)
+    for _ in range(steps):
+        theta, loss = step(theta, x, y, lr)
+    assert float(loss[0]) < float(loss0[0]) * 0.9, (
+        f"{name}: loss {float(loss0[0])} -> {float(loss[0])}")
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_eval_step_counts(name):
+    cfg = MODELS[name]
+    ev = jax.jit(make_eval_step(cfg["logits"]))
+    theta = cfg["init"](jnp.array([1], jnp.uint32))
+    x, y = _batch(cfg, seed=3)
+    loss, ncorrect = ev(theta, x, y)
+    assert loss.shape == (1,) and ncorrect.shape == (1,)
+    assert 0.0 <= float(ncorrect[0]) <= cfg["batch"]
+
+
+def test_train_step_is_pure():
+    """Same inputs -> bitwise same outputs (required for BFT determinism:
+    every honest replica must compute identical aggregates, Lemma 1)."""
+    cfg = MODELS["sent_mlp"]
+    step = jax.jit(make_train_step(cfg["logits"]))
+    theta = cfg["init"](jnp.array([5], jnp.uint32))
+    x, y = _batch(cfg, seed=9)
+    lr = jnp.array([0.1], jnp.float32)
+    t1, l1 = step(theta, x, y, lr)
+    t2, l2 = step(theta, x, y, lr)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))

@@ -1,0 +1,72 @@
+//! Ablation bench for DeFL's two design knobs (DESIGN.md "Key design
+//! decisions"):
+//!
+//! * **τ (retained rounds)** — §4.3 claims storage Mτn. Sweeping τ shows
+//!   pool peak growing ∝ τ while accuracy stays flat, justifying the
+//!   paper's minimal τ=2 (current + last round).
+//! * **GST_LT (local-training stabilization budget)** — Algorithm 1 waits
+//!   GST_LT before committing AGG. Sweeping it shows round pacing is
+//!   GST_LT-bound (sim time ∝ GST_LT·T) while accuracy is unaffected in a
+//!   homogeneous cluster — the budget exists purely to cover stragglers
+//!   (§3.1 partially-synchronous assumption).
+
+mod common;
+
+use defl::config::{ExperimentConfig, Model, Partition, System};
+use defl::sim::run_experiment;
+use defl::util::bench::{fmt_bytes, Table};
+
+fn base() -> ExperimentConfig {
+    ExperimentConfig {
+        system: System::Defl,
+        model: Model::SentMlp,
+        partition: Partition::Dirichlet(1.0),
+        n_nodes: 4,
+        rounds: 8,
+        local_steps: 3,
+        lr: 1.0,
+        train_samples: 768,
+        test_samples: 256,
+        gst_lt_ms: 500,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    common::bench_scale();
+    let engine = common::engine(Model::SentMlp);
+
+    let mut t = Table::new(
+        "Ablation: τ (retained rounds) — storage ∝ τ, accuracy flat",
+        &["tau", "Pool peak/node", "Accuracy", "Rounds"],
+    );
+    for tau in [2usize, 3, 4, 6] {
+        let mut cfg = base();
+        cfg.tau = tau;
+        let r = run_experiment(&cfg, engine.clone()).unwrap();
+        t.row(&[
+            tau.to_string(),
+            fmt_bytes(r.pool_peak_per_node),
+            format!("{:.3}", r.accuracy),
+            r.rounds_done.to_string(),
+        ]);
+    }
+    t.print();
+
+    let mut t = Table::new(
+        "Ablation: GST_LT — paces rounds, does not change accuracy",
+        &["GST_LT (ms)", "Sim time (s)", "Accuracy", "Rounds"],
+    );
+    for gst in [250u64, 500, 1000, 2000] {
+        let mut cfg = base();
+        cfg.gst_lt_ms = gst;
+        let r = run_experiment(&cfg, engine.clone()).unwrap();
+        t.row(&[
+            gst.to_string(),
+            format!("{:.1}", r.sim_time_us as f64 / 1e6),
+            format!("{:.3}", r.accuracy),
+            r.rounds_done.to_string(),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,41 @@
+//! Shared plumbing for the paper-table benches.
+//!
+//! Every bench is a `harness = false` binary (criterion is unavailable
+//! offline) that regenerates one table/figure of the paper at a reduced
+//! scale by default. Env knobs (DEFL_ROUNDS, DEFL_TRAIN_N, DEFL_TEST_N,
+//! DEFL_LOCAL_STEPS, DEFL_GST_MS) select full-fidelity runs; the defaults
+//! here keep `cargo bench` minutes-scale on one CPU core.
+
+use std::sync::Arc;
+
+use defl::config::Model;
+use defl::runtime::Engine;
+
+/// Install the fast bench defaults unless the caller already set them.
+pub fn bench_scale() {
+    for (k, v) in [
+        ("DEFL_ROUNDS", "4"),
+        ("DEFL_TRAIN_N", "384"),
+        ("DEFL_TEST_N", "256"),
+        ("DEFL_LOCAL_STEPS", "3"),
+        ("DEFL_GST_MS", "1000"),
+    ] {
+        if std::env::var(k).is_err() {
+            std::env::set_var(k, v);
+        }
+    }
+    defl::util::logging::init();
+}
+
+pub fn engine(model: Model) -> Arc<Engine> {
+    Arc::new(Engine::load_default(model).expect("run `make artifacts` first"))
+}
+
+pub fn note_scale(bench: &str) {
+    println!(
+        "[{bench}] rounds={} train_n={} local_steps={} (set DEFL_* env for full fidelity)",
+        std::env::var("DEFL_ROUNDS").unwrap(),
+        std::env::var("DEFL_TRAIN_N").unwrap(),
+        std::env::var("DEFL_LOCAL_STEPS").unwrap(),
+    );
+}

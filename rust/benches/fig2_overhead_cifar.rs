@@ -1,0 +1,19 @@
+//! Regenerates paper Figure 2: RAM / storage / network overhead vs scale
+//! (4, 7, 10 nodes) on CIFAR-noniid for all four systems.
+//!
+//! Paper shapes to check: storage ≈ 0 for FL/SL/DeFL but growing for
+//! Biscotti (up to 100×); recv bandwidth quadratic for DeFL/Biscotti with
+//! Biscotti up to 12× DeFL; DeFL sent bandwidth linear (shared pool).
+mod common;
+
+use defl::config::Model;
+use defl::sim::tables;
+
+fn main() {
+    common::bench_scale();
+    common::note_scale("fig2");
+    let engine = common::engine(Model::CifarCnn);
+    let t = tables::overhead_figure(
+        &engine, Model::CifarCnn, "Figure 2 (CIFAR-noniid): overhead of different scales").unwrap();
+    t.print();
+}

@@ -1,0 +1,15 @@
+//! Regenerates paper Figure 3 (appendix A.2): overhead vs scale on
+//! Sentiment-noniid.
+mod common;
+
+use defl::config::Model;
+use defl::sim::tables;
+
+fn main() {
+    common::bench_scale();
+    common::note_scale("fig3");
+    let engine = common::engine(Model::SentMlp);
+    let t = tables::overhead_figure(
+        &engine, Model::SentMlp, "Figure 3 (Sentiment-noniid): overhead of different scales").unwrap();
+    t.print();
+}

@@ -1,0 +1,88 @@
+//! L3 micro-bench: HotStuff consensus throughput and per-view latency in
+//! the simnet (no ML), for the §Perf coordinator numbers.
+mod common;
+
+use std::any::Any;
+
+use defl::crypto::{KeyRegistry, NodeId};
+use defl::hotstuff::{Action, ByzMode, HotStuff, HsConfig, Msg};
+use defl::metrics::Traffic;
+use defl::net::sim::{Actor, Ctx, SimConfig, SimNet};
+use defl::util::bench::bench;
+use defl::util::{Decode, Encode};
+
+struct Node {
+    hs: HotStuff,
+    delivered: u64,
+}
+
+impl Node {
+    fn go(&mut self, ctx: &mut Ctx, out: Vec<Action>) {
+        for act in out {
+            match act {
+                Action::Send { to, msg } => ctx.send(to, Traffic::Consensus, msg.to_bytes()),
+                Action::Broadcast { msg } => ctx.broadcast(Traffic::Consensus, msg.to_bytes()),
+                Action::SetTimer { delay_us, epoch } => ctx.set_timer(delay_us, epoch),
+                Action::Deliver { cmds, .. } => self.delivered += cmds.len() as u64,
+            }
+        }
+    }
+}
+
+impl Actor for Node {
+    fn on_start(&mut self, ctx: &mut Ctx) {
+        let mut out = Vec::new();
+        self.hs.start(&mut out);
+        for _ in 0..4 {
+            self.hs.submit(vec![ctx.node as u8; 45]); // UPD-sized commands
+        }
+        self.go(ctx, out);
+    }
+    fn on_message(&mut self, ctx: &mut Ctx, from: NodeId, _: Traffic, bytes: &[u8]) {
+        let Ok(msg) = Msg::from_bytes(bytes) else { return };
+        let mut out = Vec::new();
+        let _ = self.hs.on_message(from, msg, &mut out);
+        self.hs.submit(vec![ctx.node as u8; 45]); // keep the pipe full
+        self.go(ctx, out);
+    }
+    fn on_timer(&mut self, ctx: &mut Ctx, id: u64) {
+        let mut out = Vec::new();
+        self.hs.on_timeout(id, &mut out);
+        self.go(ctx, out);
+    }
+    fn as_any(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+fn run_views(n: usize, sim_us: u64) -> (u64, u64, u64) {
+    let registry = KeyRegistry::new(n, 1);
+    let actors: Vec<Box<dyn Actor>> = (0..n)
+        .map(|i| {
+            Box::new(Node {
+                hs: HotStuff::new(i as NodeId, n, registry.clone(), HsConfig::default(), ByzMode::Honest),
+                delivered: 0,
+            }) as Box<dyn Actor>
+        })
+        .collect();
+    let mut net = SimNet::new(SimConfig { n_nodes: n, seed: 3, ..Default::default() }, actors);
+    net.run_until(sim_us, u64::MAX);
+    let views = net.actor_as::<Node>(0).unwrap().hs.decided_blocks;
+    let cmds = net.actor_as::<Node>(0).unwrap().delivered;
+    (views, cmds, net.events_processed())
+}
+
+fn main() {
+    common::bench_scale();
+    println!("== micro: HotStuff (simulated 1s of consensus, cmd=45B) ==");
+    for n in [4usize, 7, 10] {
+        let s = bench(&format!("hotstuff n={n} sim-1s"), 1, 5, || {
+            std::hint::black_box(run_views(n, 1_000_000));
+        });
+        let (views, cmds, events) = run_views(n, 1_000_000);
+        println!(
+            "  n={n}: {views} views, {cmds} cmds committed per simulated second, {events} events, wall {:.1} ms/sim-s",
+            s.mean_ms()
+        );
+    }
+}

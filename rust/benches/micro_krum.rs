@@ -1,0 +1,31 @@
+//! L1/L3 micro-bench: Multi-Krum aggregation — AOT artifact (Pallas Gram
+//! kernel through PJRT) vs the native rust implementation, across scales.
+mod common;
+
+use defl::config::Model;
+use defl::krum;
+use defl::runtime::stack_rows;
+use defl::util::bench::bench;
+use defl::util::Pcg;
+
+fn main() {
+    common::bench_scale();
+    let engine = common::engine(Model::CifarCnn);
+    let d = engine.dim();
+    println!("== micro: Multi-Krum over f32[n,{d}] ==");
+    let mut rng = Pcg::seeded(1);
+    for (n, f) in [(4usize, 1usize), (7, 2), (10, 3)] {
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect();
+        let sw = vec![1.0f32; n];
+        let stacked = stack_rows(&rows);
+        let a = bench(&format!("krum artifact n={n} f={f}"), 3, 30, || {
+            std::hint::black_box(engine.krum(n, f, &stacked, &sw).unwrap());
+        });
+        let b = bench(&format!("krum native   n={n} f={f}"), 3, 30, || {
+            std::hint::black_box(krum::multi_krum(&rows, &sw, f, n - f).unwrap());
+        });
+        println!("  n={n}: artifact/native = {:.2}x", a.mean_ms() / b.mean_ms());
+    }
+}

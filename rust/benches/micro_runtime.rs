@@ -1,0 +1,44 @@
+//! L2 micro-bench: PJRT execution latency of the train / eval / init /
+//! fedavg artifacts — the per-round compute costs of every system.
+mod common;
+
+use defl::config::Model;
+use defl::runtime::Batch;
+use defl::util::bench::bench;
+use defl::util::Pcg;
+
+fn main() {
+    common::bench_scale();
+    for model in [Model::CifarCnn, Model::SentMlp] {
+        let engine = common::engine(model);
+        let meta = engine.meta().clone();
+        println!("\n== micro: runtime {} (D={}) ==", model.name(), meta.dim);
+        let theta = engine.init_params(1).unwrap();
+        let mut rng = Pcg::seeded(2);
+        let elems: usize = meta.x_shape.iter().product();
+        let x = match meta.x_dtype {
+            defl::config::manifest::XDtype::F32 => {
+                Batch::F32((0..elems).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            }
+            defl::config::manifest::XDtype::I32 => {
+                Batch::I32((0..elems).map(|_| rng.gen_range(2048) as i32).collect())
+            }
+        };
+        let y: Vec<i32> = (0..meta.batch).map(|_| rng.gen_range(meta.classes as u64) as i32).collect();
+
+        bench("init_params", 2, 20, || {
+            std::hint::black_box(engine.init_params(7).unwrap());
+        });
+        bench("train_step (fwd+bwd+pallas sgd)", 2, 20, || {
+            std::hint::black_box(engine.train_step(&theta, &x, &y, 0.05).unwrap());
+        });
+        bench("eval_batch", 2, 20, || {
+            std::hint::black_box(engine.eval_batch(&theta, &x, &y).unwrap());
+        });
+        let rows: Vec<Vec<f32>> = (0..4).map(|_| theta.clone()).collect();
+        let stacked = defl::runtime::stack_rows(&rows);
+        bench("fedavg n=4", 2, 20, || {
+            std::hint::black_box(engine.fedavg(4, &stacked, &[1.0; 4]).unwrap());
+        });
+    }
+}

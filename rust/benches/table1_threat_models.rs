@@ -1,0 +1,21 @@
+//! Regenerates paper Table 1: accuracy on CIFAR / CIFAR-noniid under the
+//! seven threat models, for FL, SL, Biscotti and DeFL (4 nodes, 1
+//! Byzantine under attack). Paper columns are printed alongside.
+mod common;
+
+use defl::config::{Model, Partition};
+use defl::sim::tables;
+
+fn main() {
+    common::bench_scale();
+    common::note_scale("table1");
+    let engine = common::engine(Model::CifarCnn);
+    let t = tables::threat_table(
+        &engine, Model::CifarCnn, Partition::Iid, &tables::PAPER_TABLE1_IID,
+        "Table 1 (CIFAR, iid): accuracy under threat models").unwrap();
+    t.print();
+    let t = tables::threat_table(
+        &engine, Model::CifarCnn, Partition::Dirichlet(1.0), &tables::PAPER_TABLE1_NONIID,
+        "Table 1 (CIFAR-noniid): accuracy under threat models").unwrap();
+    t.print();
+}

@@ -1,0 +1,16 @@
+//! Regenerates paper Table 2: accuracy vs Byzantine rate β on
+//! CIFAR-noniid under sign-flipping (σ=-2), scaling 4/7/10 nodes.
+mod common;
+
+use defl::config::{Attack, Model};
+use defl::sim::tables;
+
+fn main() {
+    common::bench_scale();
+    common::note_scale("table2");
+    let engine = common::engine(Model::CifarCnn);
+    let t = tables::byzantine_sweep(
+        &engine, Model::CifarCnn, Attack::SignFlip { sigma: -2.0 }, &tables::PAPER_TABLE2,
+        "Table 2 (CIFAR-noniid, sign-flip σ=-2): accuracy vs Byzantine rate").unwrap();
+    t.print();
+}

@@ -1,0 +1,20 @@
+//! Regenerates paper Table 3 (appendix A.1): Sentiment / Sentiment-noniid
+//! accuracy under the seven threat models.
+mod common;
+
+use defl::config::{Model, Partition};
+use defl::sim::tables;
+
+fn main() {
+    common::bench_scale();
+    common::note_scale("table3");
+    let engine = common::engine(Model::SentMlp);
+    let t = tables::threat_table(
+        &engine, Model::SentMlp, Partition::Iid, &tables::PAPER_TABLE3_IID,
+        "Table 3 (Sentiment, iid): accuracy under threat models").unwrap();
+    t.print();
+    let t = tables::threat_table(
+        &engine, Model::SentMlp, Partition::Dirichlet(1.0), &tables::PAPER_TABLE3_NONIID,
+        "Table 3 (Sentiment-noniid): accuracy under threat models").unwrap();
+    t.print();
+}

@@ -1,0 +1,16 @@
+//! Regenerates paper Table 4 (appendix A.1): accuracy vs Byzantine rate on
+//! Sentiment-noniid under Gaussian (σ=1.0).
+mod common;
+
+use defl::config::{Attack, Model};
+use defl::sim::tables;
+
+fn main() {
+    common::bench_scale();
+    common::note_scale("table4");
+    let engine = common::engine(Model::SentMlp);
+    let t = tables::byzantine_sweep(
+        &engine, Model::SentMlp, Attack::Gaussian { sigma: 1.0 }, &tables::PAPER_TABLE4,
+        "Table 4 (Sentiment-noniid, Gaussian σ=1): accuracy vs Byzantine rate").unwrap();
+    t.print();
+}

@@ -1,0 +1,93 @@
+//! Threat models (paper §3.1): the three weight-poisoning attacks, plus
+//! the protocol-level misbehaviours (stale-round UPD, pre-GST_LT AGG)
+//! exercised by the replica tests.
+//!
+//! Poisoning applies to the weights a Byzantine client COMMITS, after its
+//! (honest-looking) local training — matching Fang et al. / Li et al.'s
+//! formulations the paper cites:
+//! * Gaussian(σ): w ← w + ε, ε ∼ N(0, σ²I)
+//! * Sign-flipping(σ): w ← σ·w with σ < 0
+//! * Label-flipping: trains on labels (y+1) mod C (a data attack — see
+//!   [`crate::fl::data::Shard::flip_labels`]); weights pass through here
+//!   unchanged.
+
+use crate::config::Attack;
+use crate::util::Pcg;
+
+/// Apply a weight-poisoning attack in place. `rng` must be the attacker's
+/// own stream so honest nodes' randomness is unaffected.
+pub fn poison_weights(weights: &mut [f32], attack: Attack, rng: &mut Pcg) {
+    match attack {
+        Attack::Gaussian { sigma } => {
+            for w in weights.iter_mut() {
+                *w += rng.normal_f32(0.0, sigma);
+            }
+        }
+        Attack::SignFlip { sigma } => {
+            for w in weights.iter_mut() {
+                *w *= sigma;
+            }
+        }
+        // Data / protocol attacks: no weight transformation here.
+        Attack::None | Attack::LabelFlip | Attack::StaleRound | Attack::EarlyAgg => {}
+    }
+}
+
+/// Does this attack act on the training labels?
+pub fn flips_labels(attack: Attack) -> bool {
+    matches!(attack, Attack::LabelFlip)
+}
+
+/// Does this attack commit UPD transactions with a wrong round number?
+pub fn commits_stale_round(attack: Attack) -> bool {
+    matches!(attack, Attack::StaleRound)
+}
+
+/// Does this attack commit AGG before GST_LT?
+pub fn commits_early_agg(attack: Attack) -> bool {
+    matches!(attack, Attack::EarlyAgg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_perturbs_with_right_scale() {
+        let mut rng = Pcg::seeded(1);
+        let orig = vec![0.0f32; 20_000];
+        let mut w = orig.clone();
+        poison_weights(&mut w, Attack::Gaussian { sigma: 1.0 }, &mut rng);
+        let mean: f64 = w.iter().map(|&x| x as f64).sum::<f64>() / w.len() as f64;
+        let var: f64 = w.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / w.len() as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn sign_flip_scales() {
+        let mut rng = Pcg::seeded(2);
+        let mut w = vec![1.0f32, -2.0, 0.5];
+        poison_weights(&mut w, Attack::SignFlip { sigma: -2.0 }, &mut rng);
+        assert_eq!(w, vec![-2.0, 4.0, -1.0]);
+    }
+
+    #[test]
+    fn none_and_label_flip_leave_weights() {
+        let mut rng = Pcg::seeded(3);
+        let orig = vec![1.0f32, 2.0, 3.0];
+        for atk in [Attack::None, Attack::LabelFlip, Attack::StaleRound, Attack::EarlyAgg] {
+            let mut w = orig.clone();
+            poison_weights(&mut w, atk, &mut rng);
+            assert_eq!(w, orig);
+        }
+    }
+
+    #[test]
+    fn attack_class_predicates() {
+        assert!(flips_labels(Attack::LabelFlip));
+        assert!(!flips_labels(Attack::Gaussian { sigma: 1.0 }));
+        assert!(commits_stale_round(Attack::StaleRound));
+        assert!(commits_early_agg(Attack::EarlyAgg));
+    }
+}

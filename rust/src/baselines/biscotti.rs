@@ -1,0 +1,304 @@
+//! Biscotti baseline (Shayan et al., TPDS'21): blockchain-coordinated FL
+//! with a Multi-Krum defense.
+//!
+//! Modelled costs (DESIGN.md substitution table):
+//! * Updates travel by **flooding gossip**, as on a third-party chain
+//!   platform: the origin broadcasts its update, and every node forwards
+//!   each newly-seen update to all peers once. Every node therefore
+//!   receives every update up to n−1 times — the "unnecessary network
+//!   overhead" §2 attributes to blockchain FL, and the source of DeFL's
+//!   up-to-12× receive-bandwidth win in Figure 2.
+//! * The round leader assembles a block containing ALL n updates (this is
+//!   what Biscotti persists), floods it, and every replica appends it —
+//!   so each node's chain grows by ≈ n·M bytes EVERY round forever, vs
+//!   DeFL's constant Mτn pool: the up-to-100× storage win.
+//! * Aggregation is Multi-Krum over the block's updates, executed by every
+//!   node identically (accuracy matches DeFL, Table 1).
+
+use std::any::Any;
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use crate::attacks::{self, poison_weights};
+use crate::blockchain::{Chain, ChainBlock};
+use crate::config::{Attack, ExperimentConfig};
+use crate::crypto::{Digest, NodeId};
+use crate::defl::WeightBlob;
+use crate::fl::data::{Dataset, Shard};
+use crate::fl::trainer::local_train;
+use crate::krum;
+use crate::metrics::Traffic;
+use crate::net::sim::{Actor, Ctx};
+use crate::runtime::{stack_rows, Engine};
+use crate::util::codec::{decode_list, encode_list};
+use crate::util::{Decode, Encode};
+
+use super::msgs::BlMsg;
+
+const TIMER_SEAL: u64 = 1 << 58;
+
+pub struct BiscottiNode {
+    pub id: NodeId,
+    cfg: ExperimentConfig,
+    engine: Arc<Engine>,
+    data: Arc<Dataset>,
+    shard: Shard,
+    shard_sizes: Vec<f32>,
+    atk_rng: crate::util::Pcg,
+    attack: Attack,
+    is_byzantine: bool,
+
+    round: u64,
+    theta: Vec<f32>,
+    /// Updates seen for the current round (gossip-deduped).
+    updates: Vec<Option<Vec<f32>>>,
+    seen: HashSet<Digest>,
+    sealed: bool,
+    pub chain: Chain,
+
+    pub done: bool,
+    pub final_theta: Option<Vec<f32>>,
+    pub losses: Vec<f32>,
+    pub record_history: bool,
+    pub theta_history: Vec<(u64, Vec<f32>)>,
+}
+
+impl BiscottiNode {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        id: NodeId,
+        cfg: ExperimentConfig,
+        engine: Arc<Engine>,
+        data: Arc<Dataset>,
+        mut shard: Shard,
+        shard_sizes: Vec<f32>,
+        theta0: Vec<f32>,
+    ) -> BiscottiNode {
+        let is_byzantine = (id as usize) < cfg.f_byzantine;
+        let attack = if is_byzantine { cfg.attack } else { Attack::None };
+        if is_byzantine && attacks::flips_labels(attack) {
+            shard.flip_labels = true;
+        }
+        let n = cfg.n_nodes;
+        let mut atk_rng = crate::util::Pcg::new(cfg.seed ^ 0xb15c, id as u64 + 1);
+        atk_rng.next_u64();
+        BiscottiNode {
+            id,
+            engine,
+            data,
+            shard,
+            shard_sizes,
+            atk_rng,
+            attack,
+            is_byzantine,
+            round: 0,
+            theta: theta0,
+            updates: vec![None; n],
+            seen: HashSet::new(),
+            sealed: false,
+            chain: Chain::new(),
+            done: false,
+            final_theta: None,
+            losses: Vec::new(),
+            record_history: false,
+            theta_history: Vec::new(),
+            cfg,
+        }
+    }
+
+    /// Ring leader for a round (seals the block).
+    fn leader(&self, round: u64) -> NodeId {
+        ((round - 1) % self.cfg.n_nodes as u64) as NodeId
+    }
+
+    fn start_round(&mut self, ctx: &mut Ctx, round: u64) {
+        if self.done {
+            return;
+        }
+        self.round = round;
+        self.updates = vec![None; self.cfg.n_nodes];
+        self.sealed = false;
+        if self.record_history {
+            self.theta_history.push((round - 1, self.theta.clone()));
+        }
+        if self.id == self.leader(round) {
+            ctx.set_timer(self.cfg.gst_lt_ms * 1000 * 2, TIMER_SEAL | round);
+        }
+        match local_train(
+            &self.engine,
+            &self.data,
+            &mut self.shard,
+            self.theta.clone(),
+            self.cfg.local_steps,
+            self.cfg.lr_at(round - 1),
+        ) {
+            Ok((theta, loss)) => {
+                self.theta = theta;
+                self.losses.push(loss);
+            }
+            Err(e) => {
+                log::error!("n{}: train failed: {e:#}", self.id);
+                return;
+            }
+        }
+        let mut committed = self.theta.clone();
+        if self.is_byzantine {
+            poison_weights(&mut committed, self.attack, &mut self.atk_rng);
+        }
+        let blob = WeightBlob { node: self.id, round, weights: committed.clone() };
+        self.note_update(&blob);
+        // Flood origin: broadcast to all peers.
+        ctx.broadcast(Traffic::Weights, BlMsg::Update(blob).to_bytes());
+        self.maybe_seal(ctx);
+    }
+
+    /// Record an update; true if it was new (→ forward it).
+    fn note_update(&mut self, blob: &WeightBlob) -> bool {
+        if blob.round != self.round || self.done {
+            return false;
+        }
+        let d = Digest::of_weights(&blob.weights);
+        if !self.seen.insert(d) {
+            return false;
+        }
+        if blob.weights.len() == self.engine.dim() {
+            self.updates[blob.node as usize] = Some(blob.weights.clone());
+        }
+        true
+    }
+
+    fn have(&self) -> usize {
+        self.updates.iter().filter(|u| u.is_some()).count()
+    }
+
+    /// Leader seals once it has all updates (or on timeout).
+    fn maybe_seal(&mut self, ctx: &mut Ctx) {
+        if self.sealed || self.done || self.id != self.leader(self.round) {
+            return;
+        }
+        if self.have() == self.cfg.n_nodes {
+            self.seal(ctx);
+        }
+    }
+
+    fn seal(&mut self, ctx: &mut Ctx) {
+        if self.sealed || self.done {
+            return;
+        }
+        self.sealed = true;
+        // Block payload: every update of the round (Biscotti persists the
+        // accepted updates in the ledger).
+        let blobs: Vec<WeightBlob> = self
+            .updates
+            .iter()
+            .enumerate()
+            .filter_map(|(i, u)| {
+                u.as_ref().map(|w| WeightBlob {
+                    node: i as NodeId,
+                    round: self.round,
+                    weights: w.clone(),
+                })
+            })
+            .collect();
+        let mut payload = Vec::new();
+        self.round.encode(&mut payload);
+        encode_list(&blobs, &mut payload);
+        let block = ChainBlock {
+            height: self.chain.height() + 1,
+            parent: self.chain.tip(),
+            proposer: self.id,
+            payload,
+        };
+        // Flood the block.
+        ctx.broadcast(Traffic::Blocks, BlMsg::Block(block.clone()).to_bytes());
+        self.apply_block(ctx, block);
+    }
+
+    /// Append the block and deterministically aggregate its updates with
+    /// Multi-Krum — every node computes the identical global model.
+    fn apply_block(&mut self, ctx: &mut Ctx, block: ChainBlock) {
+        match self.chain.append_if_new(block.clone()) {
+            Ok(true) => {}
+            _ => return,
+        }
+        let mut cur = crate::util::codec::Cursor::new(&block.payload);
+        let Ok(round) = u64::decode(&mut cur) else { return };
+        let Ok(blobs) = decode_list::<WeightBlob>(&mut cur) else { return };
+        if round != self.round {
+            return;
+        }
+        let mut rows = Vec::new();
+        let mut sw = Vec::new();
+        for b in &blobs {
+            if b.weights.len() == self.engine.dim() {
+                rows.push(b.weights.clone());
+                sw.push(self.shard_sizes[b.node as usize]);
+            }
+        }
+        if rows.is_empty() {
+            return;
+        }
+        let n = rows.len();
+        let f = self.cfg.krum_f().min(n.saturating_sub(3));
+        let global = if f >= 1 && n >= f + 3 {
+            if self.engine.has_krum(n, f) {
+                self.engine
+                    .krum(n, f, &stack_rows(&rows), &sw)
+                    .map(|o| o.aggregate)
+                    .unwrap_or_else(|_| {
+                        krum::multi_krum(&rows, &sw, f, n - f).expect("krum").aggregate
+                    })
+            } else {
+                krum::multi_krum(&rows, &sw, f, n - f).expect("krum").aggregate
+            }
+        } else {
+            krum::fedavg(&rows, &sw).expect("fedavg")
+        };
+        self.theta = global;
+        if round >= self.cfg.rounds as u64 {
+            self.done = true;
+            self.final_theta = Some(self.theta.clone());
+            return;
+        }
+        self.start_round(ctx, round + 1);
+    }
+}
+
+impl Actor for BiscottiNode {
+    fn on_start(&mut self, ctx: &mut Ctx) {
+        self.start_round(ctx, 1);
+    }
+
+    fn on_message(&mut self, ctx: &mut Ctx, from: NodeId, _class: Traffic, bytes: &[u8]) {
+        let Ok(msg) = BlMsg::from_bytes(bytes) else { return };
+        match msg {
+            BlMsg::Update(blob) => {
+                if self.note_update(&blob) {
+                    // Flood-forward newly seen updates to everyone but the
+                    // sender and origin (each node forwards each item once).
+                    for to in 0..ctx.n_nodes() as NodeId {
+                        if to != ctx.node && to != from && to != blob.node {
+                            ctx.send(to, Traffic::Weights, BlMsg::Update(blob.clone()).to_bytes());
+                        }
+                    }
+                    self.maybe_seal(ctx);
+                }
+            }
+            BlMsg::Block(block) => self.apply_block(ctx, block),
+            BlMsg::Global { .. } => {}
+        }
+    }
+
+    fn on_timer(&mut self, ctx: &mut Ctx, id: u64) {
+        if id & TIMER_SEAL != 0 {
+            let round = id & !TIMER_SEAL;
+            if round == self.round && !self.sealed && self.have() >= 1 {
+                self.seal(ctx);
+            }
+        }
+    }
+
+    fn as_any(&mut self) -> &mut dyn Any {
+        self
+    }
+}

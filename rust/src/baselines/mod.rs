@@ -1,0 +1,11 @@
+//! Baseline systems the paper compares against (§5.1): FL (central
+//! parameter server), Swarm Learning (blockchain leader election), and
+//! Biscotti (blockchain-stored weights + Multi-Krum).
+
+pub mod biscotti;
+pub mod msgs;
+pub mod server_fl;
+
+pub use biscotti::BiscottiNode;
+pub use msgs::BlMsg;
+pub use server_fl::ServerFlNode;

@@ -1,0 +1,81 @@
+//! Wire messages shared by the baseline systems.
+
+use anyhow::Result;
+
+use crate::blockchain::ChainBlock;
+use crate::defl::WeightBlob;
+use crate::util::codec::{Cursor, Decode, Encode};
+
+/// Baseline protocol messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BlMsg {
+    /// Client → aggregator: a locally trained update.
+    Update(WeightBlob),
+    /// Aggregator → clients: the new global model.
+    Global { round: u64, weights: Vec<f32> },
+    /// Blockchain gossip (SL metadata blocks / Biscotti full blocks).
+    Block(ChainBlock),
+}
+
+impl Encode for BlMsg {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            BlMsg::Update(b) => {
+                1u8.encode(out);
+                b.encode(out);
+            }
+            BlMsg::Global { round, weights } => {
+                2u8.encode(out);
+                round.encode(out);
+                weights.encode(out);
+            }
+            BlMsg::Block(b) => {
+                3u8.encode(out);
+                b.encode(out);
+            }
+        }
+    }
+    fn encoded_len(&self) -> usize {
+        1 + match self {
+            BlMsg::Update(b) => b.encoded_len(),
+            BlMsg::Global { weights, .. } => 8 + weights.encoded_len(),
+            BlMsg::Block(b) => b.encoded_len(),
+        }
+    }
+}
+
+impl Decode for BlMsg {
+    fn decode(cur: &mut Cursor<'_>) -> Result<Self> {
+        Ok(match u8::decode(cur)? {
+            1 => BlMsg::Update(WeightBlob::decode(cur)?),
+            2 => BlMsg::Global { round: u64::decode(cur)?, weights: Vec::<f32>::decode(cur)? },
+            3 => BlMsg::Block(ChainBlock::decode(cur)?),
+            t => anyhow::bail!("bad baseline msg tag {t}"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::Digest;
+
+    #[test]
+    fn msgs_roundtrip() {
+        let msgs = vec![
+            BlMsg::Update(WeightBlob { node: 1, round: 2, weights: vec![1.0, 2.0] }),
+            BlMsg::Global { round: 3, weights: vec![-1.0; 5] },
+            BlMsg::Block(ChainBlock {
+                height: 1,
+                parent: Digest::zero(),
+                proposer: 2,
+                payload: vec![9; 10],
+            }),
+        ];
+        for m in msgs {
+            let b = m.to_bytes();
+            assert_eq!(b.len(), m.encoded_len());
+            assert_eq!(BlMsg::from_bytes(&b).unwrap(), m);
+        }
+    }
+}

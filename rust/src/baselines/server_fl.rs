@@ -1,0 +1,264 @@
+//! FL and Swarm Learning baselines (paper §5.1).
+//!
+//! * **FL** (McMahan et al.): a central parameter server — colocated on
+//!   node 0, as in a single-testbed deployment — collects every client's
+//!   update each round, FedAvg-aggregates, and unicasts the global model
+//!   back. No defense against poisoning.
+//! * **SL** (Swarm Learning): identical data plane, but the aggregator is
+//!   a per-round *elected leader* (hash-schedule over the cluster seed,
+//!   standing in for the permissioned-blockchain election), and each round
+//!   the leader appends a metadata block (round, global-model digest) that
+//!   is gossiped and stored by every node. Weights never enter the chain,
+//!   hence SL's ≈0 storage in Figure 2 — but the leader's bandwidth is
+//!   n× every other node's, the detectability problem §2 cites.
+
+use std::any::Any;
+use std::sync::Arc;
+
+use crate::attacks::{self, poison_weights};
+use crate::blockchain::{elect_leader, Chain, ChainBlock};
+use crate::config::{Attack, ExperimentConfig, System};
+use crate::crypto::{Digest, NodeId};
+use crate::fl::data::{Dataset, Shard};
+use crate::fl::trainer::local_train;
+use crate::krum;
+use crate::metrics::Traffic;
+use crate::net::sim::{Actor, Ctx};
+use crate::runtime::{stack_rows, Engine};
+use crate::util::{Decode, Encode};
+
+use super::msgs::BlMsg;
+
+const TIMER_AGG_TIMEOUT: u64 = 1 << 59;
+
+/// One node of the FL or SL baseline.
+pub struct ServerFlNode {
+    pub id: NodeId,
+    cfg: ExperimentConfig,
+    system: System,
+    engine: Arc<Engine>,
+    data: Arc<Dataset>,
+    shard: Shard,
+    shard_sizes: Vec<f32>,
+    atk_rng: crate::util::Pcg,
+    attack: Attack,
+    is_byzantine: bool,
+
+    /// Round currently being trained (1-based).
+    round: u64,
+    theta: Vec<f32>,
+    /// Aggregator state: updates collected for `round`.
+    collected: Vec<Option<Vec<f32>>>,
+    aggregated_this_round: bool,
+    /// SL: every node's copy of the metadata chain.
+    pub chain: Chain,
+
+    pub done: bool,
+    pub final_theta: Option<Vec<f32>>,
+    pub losses: Vec<f32>,
+    pub record_history: bool,
+    pub theta_history: Vec<(u64, Vec<f32>)>,
+}
+
+impl ServerFlNode {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        id: NodeId,
+        cfg: ExperimentConfig,
+        system: System,
+        engine: Arc<Engine>,
+        data: Arc<Dataset>,
+        mut shard: Shard,
+        shard_sizes: Vec<f32>,
+        theta0: Vec<f32>,
+    ) -> ServerFlNode {
+        assert!(matches!(system, System::Fl | System::Swarm));
+        let is_byzantine = (id as usize) < cfg.f_byzantine;
+        let attack = if is_byzantine { cfg.attack } else { Attack::None };
+        if is_byzantine && attacks::flips_labels(attack) {
+            shard.flip_labels = true;
+        }
+        let n = cfg.n_nodes;
+        let mut atk_rng = crate::util::Pcg::new(cfg.seed ^ 0xb1b1, id as u64 + 1);
+        atk_rng.next_u64();
+        ServerFlNode {
+            id,
+            system,
+            engine,
+            data,
+            shard,
+            shard_sizes,
+            atk_rng,
+            attack,
+            is_byzantine,
+            round: 0,
+            theta: theta0,
+            collected: vec![None; n],
+            aggregated_this_round: false,
+            chain: Chain::new(),
+            done: false,
+            final_theta: None,
+            losses: Vec::new(),
+            record_history: false,
+            theta_history: Vec::new(),
+            cfg,
+        }
+    }
+
+    /// The aggregator for a round: node 0 for FL, hash-elected for SL.
+    fn aggregator(&self, round: u64) -> NodeId {
+        match self.system {
+            System::Fl => 0,
+            System::Swarm => {
+                elect_leader(&Digest::of_bytes(&self.cfg.seed.to_le_bytes()), round, self.cfg.n_nodes)
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Train the next round and ship the update to the aggregator.
+    fn start_round(&mut self, ctx: &mut Ctx, round: u64) {
+        if self.done {
+            return;
+        }
+        self.round = round;
+        self.aggregated_this_round = false;
+        if self.record_history {
+            self.theta_history.push((round - 1, self.theta.clone()));
+        }
+        let agg_node = self.aggregator(round);
+        if self.id == agg_node {
+            self.collected = vec![None; self.cfg.n_nodes];
+            // Partial-aggregation fallback if some client never reports.
+            ctx.set_timer(self.cfg.gst_lt_ms * 1000 * 2, TIMER_AGG_TIMEOUT | round);
+        }
+
+        match local_train(
+            &self.engine,
+            &self.data,
+            &mut self.shard,
+            self.theta.clone(),
+            self.cfg.local_steps,
+            self.cfg.lr_at(round - 1),
+        ) {
+            Ok((theta, loss)) => {
+                self.theta = theta;
+                self.losses.push(loss);
+            }
+            Err(e) => {
+                log::error!("n{}: train failed: {e:#}", self.id);
+                return;
+            }
+        }
+        let mut committed = self.theta.clone();
+        if self.is_byzantine {
+            poison_weights(&mut committed, self.attack, &mut self.atk_rng);
+        }
+        let blob = crate::defl::WeightBlob { node: self.id, round, weights: committed };
+        if self.id == agg_node {
+            self.accept_update(ctx, blob);
+        } else {
+            ctx.send(agg_node, Traffic::Weights, BlMsg::Update(blob).to_bytes());
+        }
+    }
+
+    fn accept_update(&mut self, ctx: &mut Ctx, blob: crate::defl::WeightBlob) {
+        if blob.round != self.round || self.aggregated_this_round || self.done {
+            return;
+        }
+        self.collected[blob.node as usize] = Some(blob.weights);
+        let have = self.collected.iter().filter(|c| c.is_some()).count();
+        if have == self.cfg.n_nodes {
+            self.aggregate_and_publish(ctx);
+        }
+    }
+
+    fn aggregate_and_publish(&mut self, ctx: &mut Ctx) {
+        if self.aggregated_this_round || self.done {
+            return;
+        }
+        self.aggregated_this_round = true;
+        let mut rows = Vec::new();
+        let mut sw = Vec::new();
+        for (i, c) in self.collected.iter_mut().enumerate() {
+            if let Some(w) = c.take() {
+                rows.push(w);
+                sw.push(self.shard_sizes[i]);
+            }
+        }
+        if rows.is_empty() {
+            return;
+        }
+        // FedAvg over everything — no defense (the Table 1 failure mode).
+        let n = rows.len();
+        let global = if n == self.cfg.n_nodes && self.engine.dim() == rows[0].len() {
+            self.engine
+                .fedavg(n, &stack_rows(&rows), &sw)
+                .unwrap_or_else(|_| krum::fedavg(&rows, &sw).expect("fedavg"))
+        } else {
+            krum::fedavg(&rows, &sw).expect("fedavg")
+        };
+
+        let round = self.round;
+        if self.system == System::Swarm {
+            // Metadata block: round + digest of the global model.
+            let mut payload = Vec::new();
+            round.encode(&mut payload);
+            Digest::of_weights(&global).encode(&mut payload);
+            let block = ChainBlock {
+                height: self.chain.height() + 1,
+                parent: self.chain.tip(),
+                proposer: self.id,
+                payload,
+            };
+            ctx.broadcast(Traffic::Blocks, BlMsg::Block(block.clone()).to_bytes());
+            let _ = self.chain.append(block);
+        }
+        let msg = BlMsg::Global { round, weights: global.clone() };
+        ctx.broadcast(Traffic::Weights, msg.to_bytes());
+        self.adopt_global(ctx, round, global);
+    }
+
+    fn adopt_global(&mut self, ctx: &mut Ctx, round: u64, global: Vec<f32>) {
+        if self.done || round < self.round {
+            return;
+        }
+        self.theta = global;
+        if round >= self.cfg.rounds as u64 {
+            self.done = true;
+            self.final_theta = Some(self.theta.clone());
+            return;
+        }
+        self.start_round(ctx, round + 1);
+    }
+}
+
+impl Actor for ServerFlNode {
+    fn on_start(&mut self, ctx: &mut Ctx) {
+        self.start_round(ctx, 1);
+    }
+
+    fn on_message(&mut self, ctx: &mut Ctx, _from: NodeId, _class: Traffic, bytes: &[u8]) {
+        let Ok(msg) = BlMsg::from_bytes(bytes) else { return };
+        match msg {
+            BlMsg::Update(blob) => self.accept_update(ctx, blob),
+            BlMsg::Global { round, weights } => self.adopt_global(ctx, round, weights),
+            BlMsg::Block(block) => {
+                let _ = self.chain.append_if_new(block);
+            }
+        }
+    }
+
+    fn on_timer(&mut self, ctx: &mut Ctx, id: u64) {
+        if id & TIMER_AGG_TIMEOUT != 0 {
+            let round = id & !TIMER_AGG_TIMEOUT;
+            if round == self.round && !self.aggregated_this_round {
+                self.aggregate_and_publish(ctx);
+            }
+        }
+    }
+
+    fn as_any(&mut self) -> &mut dyn Any {
+        self
+    }
+}

@@ -1,0 +1,214 @@
+//! Reader for `artifacts/manifest.txt` (written by python/compile/aot.py).
+//!
+//! The manifest pins the static shape metadata both sides must agree on:
+//! model dimension D, batch size, class count, input shape/dtype, and the
+//! (n, f) aggregation combos that were exported.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::Model;
+
+/// Input element type of a model's data batches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum XDtype {
+    F32,
+    I32,
+}
+
+/// Static metadata for one model track.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    /// Flat parameter dimension D.
+    pub dim: usize,
+    pub batch: usize,
+    pub classes: usize,
+    /// Batch input shape including the leading batch dim.
+    pub x_shape: Vec<usize>,
+    pub x_dtype: XDtype,
+}
+
+impl ModelMeta {
+    /// Elements per single example (x_shape without the batch dim).
+    pub fn example_elems(&self) -> usize {
+        self.x_shape[1..].iter().product()
+    }
+
+    /// Weight blob wire size in bytes (the M of §4.3).
+    pub fn weight_bytes(&self) -> usize {
+        self.dim * 4
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelMeta>,
+    /// Exported Multi-Krum (n, f) combos.
+    pub nf_combos: Vec<(usize, usize)>,
+    /// Exported FedAvg n values.
+    pub ns: Vec<usize>,
+    /// Directory the manifest was read from.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir.to_path_buf())
+    }
+
+    /// Default artifacts directory: $DEFL_ARTIFACTS or ./artifacts.
+    pub fn load_default() -> Result<Manifest> {
+        let dir = std::env::var("DEFL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load(Path::new(&dir))
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let mut kv = BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("manifest: malformed line `{line}`");
+            };
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+
+        let mut models = BTreeMap::new();
+        let names: Vec<String> = kv
+            .keys()
+            .filter_map(|k| k.strip_suffix(".dim").map(|s| s.to_string()))
+            .collect();
+        for name in names {
+            let get = |suffix: &str| -> Result<&String> {
+                kv.get(&format!("{name}.{suffix}"))
+                    .with_context(|| format!("manifest: missing {name}.{suffix}"))
+            };
+            let x_shape: Vec<usize> = get("x_shape")?
+                .split('x')
+                .map(|s| s.parse().context("x_shape"))
+                .collect::<Result<_>>()?;
+            let x_dtype = match get("x_dtype")?.as_str() {
+                "f32" => XDtype::F32,
+                "i32" => XDtype::I32,
+                other => bail!("manifest: unknown x_dtype {other}"),
+            };
+            models.insert(
+                name.clone(),
+                ModelMeta {
+                    name: name.clone(),
+                    dim: get("dim")?.parse()?,
+                    batch: get("batch")?.parse()?,
+                    classes: get("classes")?.parse()?,
+                    x_shape,
+                    x_dtype,
+                },
+            );
+        }
+
+        let nf_combos = kv
+            .get("nf_combos")
+            .context("manifest: missing nf_combos")?
+            .split(',')
+            .map(|pair| {
+                let (n, f) = pair.split_once(':').context("nf pair")?;
+                Ok((n.parse()?, f.parse()?))
+            })
+            .collect::<Result<_>>()?;
+        let ns = kv
+            .get("ns")
+            .context("manifest: missing ns")?
+            .split(',')
+            .map(|s| s.parse().context("ns"))
+            .collect::<Result<_>>()?;
+
+        Ok(Manifest { models, nf_combos, ns, dir })
+    }
+
+    pub fn model(&self, m: Model) -> Result<&ModelMeta> {
+        self.models
+            .get(m.name())
+            .with_context(|| format!("manifest: model {} not exported", m.name()))
+    }
+
+    /// Path of an artifact by stem, verified to exist.
+    pub fn artifact(&self, stem: &str) -> Result<PathBuf> {
+        let p = self.dir.join(format!("{stem}.hlo.txt"));
+        if !p.exists() {
+            bail!("artifact {} missing (run `make artifacts`)", p.display());
+        }
+        Ok(p)
+    }
+
+    /// Does the manifest cover the (n, f) needed by a config?
+    pub fn has_krum(&self, n: usize, f: usize) -> bool {
+        self.nf_combos.contains(&(n, f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+cifar_cnn.dim=8794
+cifar_cnn.batch=32
+cifar_cnn.classes=10
+cifar_cnn.x_shape=32x32x32x3
+cifar_cnn.x_dtype=f32
+sent_mlp.dim=33986
+sent_mlp.batch=64
+sent_mlp.classes=2
+sent_mlp.x_shape=64x32
+sent_mlp.x_dtype=i32
+nf_combos=4:0,4:1,7:0,7:1,7:2,10:0,10:1,10:2,10:3
+ns=4,7,10
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.models.len(), 2);
+        let c = m.model(Model::CifarCnn).unwrap();
+        assert_eq!(c.dim, 8794);
+        assert_eq!(c.batch, 32);
+        assert_eq!(c.x_shape, vec![32, 32, 32, 3]);
+        assert_eq!(c.x_dtype, XDtype::F32);
+        assert_eq!(c.example_elems(), 32 * 32 * 3);
+        assert_eq!(c.weight_bytes(), 8794 * 4);
+        let s = m.model(Model::SentMlp).unwrap();
+        assert_eq!(s.x_dtype, XDtype::I32);
+        assert!(m.has_krum(10, 3));
+        assert!(!m.has_krum(5, 1));
+        assert_eq!(m.ns, vec![4, 7, 10]);
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        assert!(Manifest::parse("cifar_cnn.dim=10\n", PathBuf::new()).is_err());
+        assert!(Manifest::parse("nf_combos=4:1\n", PathBuf::new()).is_err());
+        assert!(Manifest::parse("foo\n", PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // Integration-level check against the actual artifacts dir; skipped
+        // silently when artifacts haven't been generated yet.
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.models.contains_key("cifar_cnn"));
+            assert!(m.models.contains_key("sent_mlp"));
+            assert!(m.artifact("train_cifar_cnn").is_ok());
+        }
+    }
+}

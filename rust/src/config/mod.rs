@@ -1,0 +1,355 @@
+//! Experiment configuration: typed config structs, the artifact manifest
+//! reader, and a TOML-subset parser for config files.
+
+pub mod manifest;
+pub mod toml;
+
+use anyhow::{bail, Result};
+
+/// Which model track an experiment runs (paper §5.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Model {
+    /// Compact CNN standing in for DenseNet-100 on CIFAR-10.
+    CifarCnn,
+    /// EmbeddingBag MLP standing in for Bi-LSTM on Sentiment140.
+    SentMlp,
+}
+
+impl Model {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Model::CifarCnn => "cifar_cnn",
+            Model::SentMlp => "sent_mlp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Model> {
+        match s {
+            "cifar_cnn" | "cifar" => Ok(Model::CifarCnn),
+            "sent_mlp" | "sentiment" => Ok(Model::SentMlp),
+            _ => bail!("unknown model `{s}` (cifar_cnn | sent_mlp)"),
+        }
+    }
+
+    /// Default client learning rate (tuned in python/tests/test_model.py;
+    /// the embedding bag needs a larger step due to 1/L pooling).
+    pub fn default_lr(&self) -> f32 {
+        match self {
+            Model::CifarCnn => 0.05,
+            Model::SentMlp => 0.8,
+        }
+    }
+}
+
+/// Data partition across silos (paper §5.1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Partition {
+    /// Uniform iid split.
+    Iid,
+    /// Dirichlet(α) label-distribution skew; the paper uses α = 1.
+    Dirichlet(f64),
+}
+
+impl Partition {
+    pub fn parse(s: &str) -> Result<Partition> {
+        if s == "iid" {
+            return Ok(Partition::Iid);
+        }
+        if let Some(a) = s.strip_prefix("dirichlet:") {
+            return Ok(Partition::Dirichlet(a.parse()?));
+        }
+        if s == "noniid" {
+            return Ok(Partition::Dirichlet(1.0));
+        }
+        bail!("unknown partition `{s}` (iid | noniid | dirichlet:<alpha>)");
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Partition::Iid => "iid".into(),
+            Partition::Dirichlet(a) => format!("dirichlet({a})"),
+        }
+    }
+}
+
+/// Which system stack to run (paper §5.1 baselines + DeFL).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum System {
+    /// Standard FL: central parameter server, FedAvg, no defense.
+    Fl,
+    /// Swarm Learning: blockchain leader election, leader aggregates.
+    Swarm,
+    /// Biscotti: blockchain stores all history weights, Multi-Krum filter.
+    Biscotti,
+    /// DeFL: per-node aggregation, HotStuff sync, τ-round storage.
+    Defl,
+}
+
+impl System {
+    pub const ALL: [System; 4] = [System::Fl, System::Swarm, System::Biscotti, System::Defl];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            System::Fl => "FL",
+            System::Swarm => "SL",
+            System::Biscotti => "Biscotti",
+            System::Defl => "DeFL",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<System> {
+        match s.to_ascii_lowercase().as_str() {
+            "fl" => Ok(System::Fl),
+            "sl" | "swarm" => Ok(System::Swarm),
+            "biscotti" => Ok(System::Biscotti),
+            "defl" => Ok(System::Defl),
+            _ => bail!("unknown system `{s}` (fl | sl | biscotti | defl)"),
+        }
+    }
+
+    /// FedAvg-based (FL, SL) vs Multi-Krum-based (Biscotti, DeFL).
+    pub fn uses_krum(&self) -> bool {
+        matches!(self, System::Biscotti | System::Defl)
+    }
+}
+
+/// Threat models of §3.1 / Table 1. `None` is the no-attack control.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Attack {
+    None,
+    /// Add N(0, σ²) noise to the committed weights.
+    Gaussian { sigma: f32 },
+    /// Commit σ·w (σ < 0) instead of w.
+    SignFlip { sigma: f32 },
+    /// Train on labels permuted c → (c+1) mod C.
+    LabelFlip,
+    /// Commit UPD with a stale round number (§3.1 "weights of the wrong
+    /// round"); exercises the replica's round checks rather than accuracy.
+    StaleRound,
+    /// Commit AGG before GST_LT (§3.1); exercises quorum timing.
+    EarlyAgg,
+}
+
+impl Attack {
+    pub fn name(&self) -> String {
+        match self {
+            Attack::None => "No".into(),
+            Attack::Gaussian { sigma } => format!("Gaussian(s={sigma})"),
+            Attack::SignFlip { sigma } => format!("Sign-flipping(s={sigma})"),
+            Attack::LabelFlip => "Label-flipping".into(),
+            Attack::StaleRound => "Stale-round".into(),
+            Attack::EarlyAgg => "Early-AGG".into(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Attack> {
+        if s == "none" {
+            return Ok(Attack::None);
+        }
+        if s == "label-flip" {
+            return Ok(Attack::LabelFlip);
+        }
+        if s == "stale-round" {
+            return Ok(Attack::StaleRound);
+        }
+        if s == "early-agg" {
+            return Ok(Attack::EarlyAgg);
+        }
+        if let Some(v) = s.strip_prefix("gaussian:") {
+            return Ok(Attack::Gaussian { sigma: v.parse()? });
+        }
+        if let Some(v) = s.strip_prefix("sign-flip:") {
+            return Ok(Attack::SignFlip { sigma: v.parse()? });
+        }
+        bail!("unknown attack `{s}`");
+    }
+}
+
+/// One experiment = system × model × scale × attack × schedule.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub system: System,
+    pub model: Model,
+    pub partition: Partition,
+    /// Total nodes n (honest + byzantine).
+    pub n_nodes: usize,
+    /// Byzantine nodes f (the first f node ids are adversarial).
+    pub f_byzantine: usize,
+    pub attack: Attack,
+    /// Global training rounds T.
+    pub rounds: usize,
+    /// Local SGD steps per round per client.
+    pub local_steps: usize,
+    pub lr: f32,
+    /// Training samples in the whole federation.
+    pub train_samples: usize,
+    /// Held-out evaluation samples.
+    pub test_samples: usize,
+    /// Weight rounds cached by the DeFL storage layer (τ ≥ 2, §4.3).
+    pub tau: usize,
+    /// Experiment RNG seed.
+    pub seed: u64,
+    /// Simulated per-hop latency in microseconds.
+    pub link_latency_us: u64,
+    /// GST_LT: local-training stabilization budget in simulated ms.
+    pub gst_lt_ms: u64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            system: System::Defl,
+            model: Model::CifarCnn,
+            partition: Partition::Iid,
+            n_nodes: 4,
+            f_byzantine: 0,
+            attack: Attack::None,
+            rounds: 20,
+            local_steps: 4,
+            lr: 0.05,
+            train_samples: 4096,
+            test_samples: 1024,
+            tau: 2,
+            seed: 42,
+            link_latency_us: 200,
+            gst_lt_ms: 2_000,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Validate the BFT sizing constraints the analysis assumes (§4.1:
+    /// n ≥ 3f + 3 for DeFL's combined client+replica fault budget, and
+    /// the Krum arity n − f − 2 ≥ 1).
+    pub fn validate(&self) -> Result<()> {
+        if self.n_nodes == 0 {
+            bail!("n_nodes must be positive");
+        }
+        if self.f_byzantine >= self.n_nodes {
+            bail!("f must be < n");
+        }
+        if self.system.uses_krum() && self.n_nodes < self.f_byzantine + 3 {
+            bail!(
+                "multi-krum needs n - f - 2 >= 1 (n={}, f={})",
+                self.n_nodes, self.f_byzantine
+            );
+        }
+        if self.tau < 2 {
+            bail!("tau must be >= 2 (current + last round)");
+        }
+        if self.rounds == 0 || self.local_steps == 0 {
+            bail!("rounds and local_steps must be positive");
+        }
+        Ok(())
+    }
+
+    /// Per-round learning rate: 1/(1+0.15·r) decay stabilizes the final
+    /// rounds so Table-1 style endpoint accuracies aren't oscillation
+    /// noise (the paper averages 10 repetitions instead; see DESIGN.md).
+    pub fn lr_at(&self, round: u64) -> f32 {
+        self.lr / (1.0 + 0.15 * round as f32)
+    }
+
+    /// Krum parameter f used by aggregation artifacts: at least 1 so the
+    /// filter is active even in 0-byzantine control runs (matching the
+    /// paper's "Multi-Krum filters outliers even with no attack" effect).
+    pub fn krum_f(&self) -> usize {
+        self.f_byzantine.max(1).min((self.n_nodes.saturating_sub(3)).max(1))
+    }
+
+    /// HotStuff replica quorum: n − f_tolerated where f_tolerated = ⌊(n−1)/3⌋.
+    pub fn hotstuff_quorum(&self) -> usize {
+        let f_tol = (self.n_nodes - 1) / 3;
+        self.n_nodes - f_tol
+    }
+
+    /// AGG vote quorum from Algorithm 2 (f + 1).
+    pub fn agg_quorum(&self) -> usize {
+        self.f_byzantine + 1
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "{}-{}-{}-n{}f{}-{}",
+            self.system.name(),
+            self.model.name(),
+            self.partition.name(),
+            self.n_nodes,
+            self.f_byzantine,
+            self.attack.name()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips() {
+        assert_eq!(Model::parse("cifar_cnn").unwrap(), Model::CifarCnn);
+        assert_eq!(Model::parse("sentiment").unwrap(), Model::SentMlp);
+        assert!(Model::parse("bert").is_err());
+        assert_eq!(System::parse("defl").unwrap(), System::Defl);
+        assert_eq!(System::parse("SL").unwrap(), System::Swarm);
+        assert_eq!(Partition::parse("noniid").unwrap(), Partition::Dirichlet(1.0));
+        assert_eq!(
+            Attack::parse("gaussian:0.03").unwrap(),
+            Attack::Gaussian { sigma: 0.03 }
+        );
+        assert_eq!(
+            Attack::parse("sign-flip:-2").unwrap(),
+            Attack::SignFlip { sigma: -2.0 }
+        );
+    }
+
+    #[test]
+    fn default_config_is_valid() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn validation_catches_bad_sizing() {
+        let mut c = ExperimentConfig::default();
+        c.n_nodes = 4;
+        c.f_byzantine = 2; // krum arity: 4-2-2 = 0
+        assert!(c.validate().is_err());
+        c.f_byzantine = 4;
+        assert!(c.validate().is_err());
+        c = ExperimentConfig::default();
+        c.tau = 1;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn quorums_match_paper() {
+        let mut c = ExperimentConfig::default();
+        c.n_nodes = 4;
+        c.f_byzantine = 1;
+        assert_eq!(c.hotstuff_quorum(), 3); // n - floor((n-1)/3) = 4 - 1
+        assert_eq!(c.agg_quorum(), 2); // f + 1
+        c.n_nodes = 10;
+        c.f_byzantine = 3;
+        assert_eq!(c.hotstuff_quorum(), 7);
+        assert_eq!(c.agg_quorum(), 4);
+    }
+
+    #[test]
+    fn krum_f_clamped() {
+        let mut c = ExperimentConfig::default();
+        c.n_nodes = 4;
+        c.f_byzantine = 0;
+        assert_eq!(c.krum_f(), 1); // active filter even without byzantine
+        c.n_nodes = 10;
+        c.f_byzantine = 3;
+        assert_eq!(c.krum_f(), 3);
+    }
+
+    #[test]
+    fn uses_krum_split() {
+        assert!(!System::Fl.uses_krum());
+        assert!(!System::Swarm.uses_krum());
+        assert!(System::Biscotti.uses_krum());
+        assert!(System::Defl.uses_krum());
+    }
+}

@@ -1,0 +1,160 @@
+//! TOML-subset parser for experiment config files (the `toml` crate is
+//! unavailable offline).
+//!
+//! Supported: `[section]` headers, `key = value` with string / integer /
+//! float / boolean values, `#` comments. Values are stored flat as
+//! `section.key` strings; typed access goes through the getters. This is
+//! all the `defl run --config exp.toml` path needs.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    values: BTreeMap<String, String>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                let name = name.trim();
+                if name.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                section = name.to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected key = value, got `{line}`", lineno + 1);
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let val = parse_value(v.trim())
+                .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+            if values.insert(key.clone(), val).is_some() {
+                bail!("line {}: duplicate key `{key}`", lineno + 1);
+            }
+        }
+        Ok(TomlDoc { values })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<TomlDoc> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(s) => s.parse().map(Some).map_err(|e| anyhow!("{key}={s}: {e}")),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Don't strip '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<String> {
+    if v.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(s) = v.strip_prefix('"') {
+        let Some(inner) = s.strip_suffix('"') else {
+            bail!("unterminated string");
+        };
+        return Ok(inner.to_string());
+    }
+    // bare scalar: bool / number / identifier-ish token
+    if v.contains(' ') {
+        bail!("unquoted value with spaces: `{v}`");
+    }
+    Ok(v.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+# experiment
+rounds = 30
+[model]
+name = "cifar_cnn"
+lr = 0.05
+[attack]
+kind = "gaussian:1.0"
+enabled = true
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("rounds"), Some("30"));
+        assert_eq!(doc.get("model.name"), Some("cifar_cnn"));
+        assert_eq!(doc.get_parse::<f32>("model.lr").unwrap(), Some(0.05));
+        assert_eq!(doc.get_parse::<bool>("attack.enabled").unwrap(), Some(true));
+        assert_eq!(doc.get("missing"), None);
+    }
+
+    #[test]
+    fn comments_and_hash_in_strings() {
+        let doc = TomlDoc::parse("key = \"a#b\" # trailing\n").unwrap();
+        assert_eq!(doc.get("key"), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(TomlDoc::parse("just a line\n").is_err());
+        assert!(TomlDoc::parse("[]\nk = 1\n").is_err());
+        assert!(TomlDoc::parse("k = \"unterminated\n").is_err());
+        assert!(TomlDoc::parse("k = 1\nk = 2\n").is_err());
+        assert!(TomlDoc::parse("k = two words\n").is_err());
+    }
+
+    #[test]
+    fn typed_errors_name_key() {
+        let doc = TomlDoc::parse("k = abc\n").unwrap();
+        let err = doc.get_parse::<u32>("k").unwrap_err().to_string();
+        assert!(err.contains("k=abc"), "{err}");
+    }
+}

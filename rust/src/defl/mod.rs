@@ -1,0 +1,13 @@
+//! DeFL proper: the paper's contribution. Each node is simultaneously a
+//! client (Algorithm 1: Multi-Krum filter → local training → UPD commit →
+//! GST_LT wait → AGG commit) and a replica (Algorithm 2: executing
+//! HotStuff-ordered UPD/AGG transactions over round_id, W^CUR, W^LAST),
+//! with weight blobs decoupled into the storage layer (§3.4).
+
+pub mod node;
+pub mod replica;
+pub mod tx;
+
+pub use node::{DeflNode, NodeStats};
+pub use replica::{ReplicaState, TxResponse};
+pub use tx::{Tx, WeightBlob};

@@ -1,0 +1,366 @@
+//! The DeFL node actor: one process playing both roles of Figure 1 —
+//! a **client** running Algorithm 1 (train → UPD → wait GST_LT → AGG) and
+//! a **replica** running Algorithm 2 over HotStuff-ordered transactions,
+//! with the decoupled storage layer ([`WeightPool`]) underneath.
+
+use std::any::Any;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::attacks::{self, poison_weights};
+use crate::config::{Attack, ExperimentConfig};
+use crate::crypto::NodeId;
+use crate::fl::data::{Dataset, Shard};
+use crate::fl::trainer::local_train;
+use crate::hotstuff::{Action, ByzMode, HotStuff, HsConfig};
+use crate::krum;
+use crate::mempool::WeightPool;
+use crate::metrics::Traffic;
+use crate::net::sim::{Actor, Ctx};
+use crate::runtime::Engine;
+use crate::util::{Decode, Encode};
+
+use super::replica::{ReplicaState, TxResponse};
+use super::tx::{Tx, WeightBlob};
+
+/// Timer namespaces (HotStuff epochs vs client GST_LT deadlines).
+const TIMER_HS: u64 = 1 << 62;
+const TIMER_GST: u64 = 1 << 61;
+
+/// Per-node observable results, extracted by the experiment driver.
+#[derive(Debug, Default, Clone)]
+pub struct NodeStats {
+    pub rounds_done: u64,
+    pub losses: Vec<f32>,
+    pub upd_ok: u64,
+    pub upd_rejected: u64,
+    pub pool_peak_bytes: u64,
+    pub pool_bytes: u64,
+    /// Aggregations served by the AOT krum/fedavg artifact vs native rust.
+    pub agg_artifact: u64,
+    pub agg_native: u64,
+}
+
+pub struct DeflNode {
+    pub id: NodeId,
+    cfg: ExperimentConfig,
+    engine: Arc<Engine>,
+    data: Arc<Dataset>,
+    shard: Shard,
+    /// FedAvg weights ∝ local dataset sizes, known cluster-wide.
+    shard_sizes: Vec<f32>,
+
+    hs: HotStuff,
+    pub replica: ReplicaState,
+    pool: WeightPool,
+    atk_rng: crate::util::Pcg,
+
+    l_round: u64,
+    theta: Vec<f32>,
+    round_in_flight: Option<u64>,
+    attack: Attack,
+    is_byzantine: bool,
+
+    pub stats: NodeStats,
+    pub done: bool,
+    pub final_theta: Option<Vec<f32>>,
+    /// (round, theta) history for loss-curve examples (off by default).
+    pub record_history: bool,
+    pub theta_history: Vec<(u64, Vec<f32>)>,
+}
+
+impl DeflNode {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        id: NodeId,
+        cfg: ExperimentConfig,
+        engine: Arc<Engine>,
+        data: Arc<Dataset>,
+        mut shard: Shard,
+        shard_sizes: Vec<f32>,
+        registry: crate::crypto::KeyRegistry,
+        theta0: Vec<f32>,
+    ) -> DeflNode {
+        let is_byzantine = (id as usize) < cfg.f_byzantine;
+        let attack = if is_byzantine { cfg.attack } else { Attack::None };
+        if is_byzantine && attacks::flips_labels(attack) {
+            shard.flip_labels = true;
+        }
+        let hs_cfg = HsConfig {
+            propose_empty: false,
+            timeout_base_us: 100_000,
+            ..Default::default()
+        };
+        let n = cfg.n_nodes;
+        let agg_quorum = cfg.agg_quorum();
+        let mut atk_rng = crate::util::Pcg::new(cfg.seed ^ 0xa77a, id as u64 + 1);
+        atk_rng.next_u64();
+        DeflNode {
+            id,
+            hs: HotStuff::new(id, n, registry, hs_cfg, ByzMode::Honest),
+            replica: ReplicaState::new(n, agg_quorum),
+            pool: WeightPool::new(cfg.tau),
+            atk_rng,
+            l_round: 0,
+            theta: theta0,
+            round_in_flight: None,
+            attack,
+            is_byzantine,
+            stats: NodeStats::default(),
+            done: false,
+            final_theta: None,
+            record_history: false,
+            theta_history: Vec::new(),
+            engine,
+            data,
+            shard,
+            shard_sizes,
+            cfg,
+        }
+    }
+
+    fn apply_actions(&mut self, ctx: &mut Ctx, actions: Vec<Action>) {
+        for act in actions {
+            match act {
+                Action::Send { to, msg } => ctx.send(to, Traffic::Consensus, msg.to_bytes()),
+                Action::Broadcast { msg } => ctx.broadcast(Traffic::Consensus, msg.to_bytes()),
+                Action::SetTimer { delay_us, epoch } => ctx.set_timer(delay_us, TIMER_HS | epoch),
+                Action::Deliver { cmds, .. } => {
+                    // Algorithm 2: execute the ordered transactions.
+                    let advanced = self.execute_cmds(&cmds);
+                    if advanced {
+                        self.pool.gc(self.replica.r_round);
+                        self.stats.pool_bytes = self.pool.bytes();
+                        self.stats.pool_peak_bytes = self.pool.peak_bytes();
+                    }
+                }
+            }
+        }
+    }
+
+    /// Returns true if r_round advanced.
+    fn execute_cmds(&mut self, cmds: &[Vec<u8>]) -> bool {
+        let before = self.replica.r_round;
+        for raw in cmds {
+            let Ok(tx) = Tx::from_bytes(raw) else { continue };
+            let resp = self.replica.apply(&tx);
+            if let Tx::Upd { id, target_round, .. } = tx {
+                if id == self.id {
+                    match resp {
+                        TxResponse::Ok => {
+                            // Algorithm 1 line 7.
+                            self.l_round = target_round;
+                            self.stats.upd_ok += 1;
+                        }
+                        _ => {
+                            // Our UPD raced a round change: retrain at the
+                            // new round.
+                            self.stats.upd_rejected += 1;
+                            self.round_in_flight = None;
+                        }
+                    }
+                }
+            }
+        }
+        self.replica.r_round > before
+    }
+
+    /// Multi-Krum aggregation over W^LAST (Algorithm 1 line 3). Falls back
+    /// to the node's own weights when no last-round weights exist yet
+    /// (round 1 bootstrap: all nodes share the same seed-0 init).
+    fn aggregate_last(&mut self) -> Result<Vec<f32>> {
+        let digs = self.replica.last_round_digests();
+        // Perf (§Perf iteration 2): stack blobs straight out of the pool
+        // into the artifact's row-major input — the intermediate
+        // Vec<Vec<f32>> (an extra n·D copy per round) only exists on the
+        // native-fallback path.
+        let dim = self.engine.dim();
+        let mut present: Vec<(NodeId, &[f32])> = Vec::new();
+        for (node, digest) in &digs {
+            if let Ok(w) = self.pool.get(digest) {
+                if w.len() == dim {
+                    present.push((*node, w));
+                }
+            }
+        }
+        if present.is_empty() {
+            return Ok(self.theta.clone());
+        }
+        if present.len() == 1 {
+            return Ok(present[0].1.to_vec());
+        }
+        let n = present.len();
+        let sw: Vec<f32> = present
+            .iter()
+            .map(|(node, _)| self.shard_sizes[*node as usize])
+            .collect();
+        let f = self.cfg.krum_f().min(n.saturating_sub(3));
+        if f >= 1 && n >= f + 3 && self.engine.has_krum(n, f) {
+            // Hot path: AOT artifact (L1 Pallas Gram kernel).
+            let mut stacked = Vec::with_capacity(n * dim);
+            for (_, w) in &present {
+                stacked.extend_from_slice(w);
+            }
+            let out = self.engine.krum(n, f, &stacked, &sw)?;
+            self.stats.agg_artifact += 1;
+            return Ok(out.aggregate);
+        }
+        // Fallback: native Multi-Krum (combos outside the exported set)
+        // or weighted average when too few rows for Krum.
+        let rows: Vec<Vec<f32>> = present.iter().map(|(_, w)| w.to_vec()).collect();
+        self.stats.agg_native += 1;
+        if f >= 1 && n >= f + 3 {
+            Ok(krum::multi_krum(&rows, &sw, f, n - f)?.aggregate)
+        } else {
+            krum::fedavg(&rows, &sw)
+        }
+    }
+
+    /// Algorithm 1: aggregate → local train → UPD → (GST_LT) → AGG.
+    fn try_start_round(&mut self, ctx: &mut Ctx) {
+        if self.done || self.l_round > self.replica.r_round {
+            return;
+        }
+        let target = self.replica.r_round + 1;
+        if self.round_in_flight == Some(target) {
+            return;
+        }
+        if self.replica.r_round >= self.cfg.rounds as u64 {
+            self.finish();
+            return;
+        }
+        self.round_in_flight = Some(target);
+
+        let agg = match self.aggregate_last() {
+            Ok(a) => a,
+            Err(e) => {
+                log::warn!("n{}: aggregation failed: {e:#}", self.id);
+                self.theta.clone()
+            }
+        };
+        if self.record_history {
+            self.theta_history.push((self.replica.r_round, agg.clone()));
+        }
+        let lr = self.cfg.lr_at(target - 1);
+        let steps = self.cfg.local_steps;
+        match local_train(&self.engine, &self.data, &mut self.shard, agg, steps, lr) {
+            Ok((theta_new, loss)) => {
+                self.theta = theta_new;
+                self.stats.losses.push(loss);
+            }
+            Err(e) => {
+                log::error!("n{}: local training failed: {e:#}", self.id);
+                return;
+            }
+        }
+
+        // Poisoning attacks transform the weights the node COMMITS.
+        let mut committed = self.theta.clone();
+        if self.is_byzantine {
+            poison_weights(&mut committed, self.attack, &mut self.atk_rng);
+        }
+
+        // Storage layer: blob to every pool (single-send accounting).
+        let blob = WeightBlob { node: self.id, round: target, weights: committed.clone() };
+        let digest = blob.digest();
+        self.pool.put(target, committed);
+        ctx.multicast(Traffic::Weights, blob.to_bytes());
+
+        // UPD transaction through consensus (digest only).
+        let tx_round = if self.is_byzantine && attacks::commits_stale_round(self.attack) {
+            self.replica.r_round // deliberately wrong (§3.1)
+        } else {
+            target
+        };
+        let upd = Tx::Upd { id: self.id, target_round: tx_round, digest };
+        let mut out = Vec::new();
+        self.hs.submit_and_gossip(upd.to_bytes(), &mut out);
+
+        // AGG: immediately for the early-AGG attack, after GST_LT otherwise.
+        if self.is_byzantine && attacks::commits_early_agg(self.attack) {
+            let agg_tx = Tx::Agg { id: self.id, target_round: target };
+            self.hs.submit_and_gossip(agg_tx.to_bytes(), &mut out);
+        } else {
+            ctx.set_timer(self.cfg.gst_lt_ms * 1000, TIMER_GST | target);
+        }
+        self.apply_actions(ctx, out);
+    }
+
+    fn finish(&mut self) {
+        if self.done {
+            return;
+        }
+        self.done = true;
+        self.stats.rounds_done = self.replica.r_round;
+        self.final_theta = Some(match self.aggregate_last() {
+            Ok(a) => a,
+            Err(_) => self.theta.clone(),
+        });
+        self.stats.pool_peak_bytes = self.pool.peak_bytes();
+        self.stats.pool_bytes = self.pool.bytes();
+    }
+
+    pub fn pool(&self) -> &WeightPool {
+        &self.pool
+    }
+
+    pub fn hotstuff(&self) -> &HotStuff {
+        &self.hs
+    }
+}
+
+impl Actor for DeflNode {
+    fn on_start(&mut self, ctx: &mut Ctx) {
+        let mut out = Vec::new();
+        self.hs.start(&mut out);
+        self.apply_actions(ctx, out);
+        self.try_start_round(ctx);
+    }
+
+    fn on_message(&mut self, ctx: &mut Ctx, from: NodeId, class: Traffic, bytes: &[u8]) {
+        match class {
+            Traffic::Weights => {
+                if let Ok(blob) = WeightBlob::from_bytes(bytes) {
+                    self.pool.put(blob.round, blob.weights);
+                    self.stats.pool_peak_bytes = self.pool.peak_bytes();
+                }
+            }
+            Traffic::Consensus => {
+                if let Ok(msg) = crate::hotstuff::Msg::from_bytes(bytes) {
+                    let mut out = Vec::new();
+                    if let Err(e) = self.hs.on_message(from, msg, &mut out) {
+                        log::debug!("n{}: hotstuff rejected msg from {from}: {e}", self.id);
+                    }
+                    self.apply_actions(ctx, out);
+                    self.try_start_round(ctx);
+                }
+            }
+            Traffic::Blocks => {}
+        }
+    }
+
+    fn on_timer(&mut self, ctx: &mut Ctx, id: u64) {
+        if id & TIMER_HS != 0 {
+            let mut out = Vec::new();
+            self.hs.on_timeout(id & !TIMER_HS, &mut out);
+            self.apply_actions(ctx, out);
+            self.try_start_round(ctx);
+        } else if id & TIMER_GST != 0 {
+            let target = id & !TIMER_GST;
+            if self.done {
+                return;
+            }
+            // Algorithm 1 line 10: commit AGG after GST_LT.
+            let agg_tx = Tx::Agg { id: self.id, target_round: target };
+            let mut out = Vec::new();
+            self.hs.submit_and_gossip(agg_tx.to_bytes(), &mut out);
+            self.apply_actions(ctx, out);
+            self.try_start_round(ctx);
+        }
+    }
+
+    fn as_any(&mut self) -> &mut dyn Any {
+        self
+    }
+}

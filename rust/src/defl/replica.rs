@@ -1,0 +1,245 @@
+//! The replica role: Algorithm 2 — execution of UPD/AGG transactions over
+//! the synchronized global state (round_id, W^CUR, W^LAST).
+//!
+//! This is a pure state machine: HotStuff (Lemma 1) guarantees every
+//! honest node executes the same transaction sequence, so every honest
+//! replica's state here is identical — which is exactly what lets each
+//! node act as its own parameter server.
+
+use std::collections::BTreeSet;
+
+use crate::crypto::{Digest, NodeId};
+
+use super::tx::Tx;
+
+/// Responses of Algorithm 2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TxResponse {
+    Ok,
+    /// UPD with a round ≠ r_round + 1 (stale or future).
+    AlreadyUpdError,
+    /// AGG accepted but quorum not met yet.
+    NotMeetQuorumWarning,
+    /// AGG with a round ≠ r_round + 1.
+    AlreadyAggError,
+}
+
+/// Synchronized replica state.
+#[derive(Debug, Clone)]
+pub struct ReplicaState {
+    n: usize,
+    /// AGG quorum: f + 1 (Algorithm 2 line 10).
+    agg_quorum: usize,
+    /// Global training round r_round_id.
+    pub r_round: u64,
+    /// W^CUR: digests committed for round r_round + 1, per node.
+    pub w_cur: Vec<Option<Digest>>,
+    /// W^LAST: digests of round r_round (what clients aggregate).
+    pub w_last: Vec<Option<Digest>>,
+    votes: BTreeSet<NodeId>,
+    /// Executed transaction count (metrics).
+    pub executed: u64,
+    /// Rejected transaction count (stale-round attacks land here).
+    pub rejected: u64,
+}
+
+impl ReplicaState {
+    pub fn new(n: usize, agg_quorum: usize) -> ReplicaState {
+        assert!(agg_quorum >= 1 && agg_quorum <= n);
+        ReplicaState {
+            n,
+            agg_quorum,
+            r_round: 0,
+            w_cur: vec![None; n],
+            w_last: vec![None; n],
+            votes: BTreeSet::new(),
+            executed: 0,
+            rejected: 0,
+        }
+    }
+
+    /// Execute one ordered transaction (Algorithm 2).
+    pub fn apply(&mut self, tx: &Tx) -> TxResponse {
+        self.executed += 1;
+        match tx {
+            Tx::Upd { id, target_round, digest } => {
+                if *target_round == self.r_round + 1 {
+                    self.w_cur[*id as usize] = Some(*digest);
+                    TxResponse::Ok
+                } else {
+                    self.rejected += 1;
+                    TxResponse::AlreadyUpdError
+                }
+            }
+            Tx::Agg { id, target_round } => {
+                if *target_round == self.r_round + 1 {
+                    self.votes.insert(*id);
+                    if self.votes.len() >= self.agg_quorum {
+                        self.r_round = *target_round;
+                        self.votes.clear();
+                        self.w_last = std::mem::replace(&mut self.w_cur, vec![None; self.n]);
+                        TxResponse::Ok
+                    } else {
+                        TxResponse::NotMeetQuorumWarning
+                    }
+                } else {
+                    self.rejected += 1;
+                    TxResponse::AlreadyAggError
+                }
+            }
+        }
+    }
+
+    /// Digests available for aggregation (node id, digest of W^LAST).
+    pub fn last_round_digests(&self) -> Vec<(NodeId, Digest)> {
+        self.w_last
+            .iter()
+            .enumerate()
+            .filter_map(|(i, d)| d.map(|d| (i as NodeId, d)))
+            .collect()
+    }
+
+    pub fn agg_votes(&self) -> usize {
+        self.votes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn d(tag: u8) -> Digest {
+        Digest::of_bytes(&[tag])
+    }
+
+    #[test]
+    fn upd_only_for_next_round() {
+        let mut r = ReplicaState::new(4, 2);
+        assert_eq!(r.apply(&Tx::Upd { id: 0, target_round: 1, digest: d(1) }), TxResponse::Ok);
+        assert_eq!(r.w_cur[0], Some(d(1)));
+        // wrong rounds rejected
+        assert_eq!(
+            r.apply(&Tx::Upd { id: 1, target_round: 2, digest: d(2) }),
+            TxResponse::AlreadyUpdError
+        );
+        assert_eq!(
+            r.apply(&Tx::Upd { id: 1, target_round: 0, digest: d(2) }),
+            TxResponse::AlreadyUpdError
+        );
+        assert_eq!(r.rejected, 2);
+    }
+
+    #[test]
+    fn agg_quorum_rotates_round() {
+        let mut r = ReplicaState::new(4, 2);
+        r.apply(&Tx::Upd { id: 0, target_round: 1, digest: d(1) });
+        r.apply(&Tx::Upd { id: 1, target_round: 1, digest: d(2) });
+        assert_eq!(
+            r.apply(&Tx::Agg { id: 0, target_round: 1 }),
+            TxResponse::NotMeetQuorumWarning
+        );
+        assert_eq!(r.agg_votes(), 1);
+        assert_eq!(r.apply(&Tx::Agg { id: 1, target_round: 1 }), TxResponse::Ok);
+        assert_eq!(r.r_round, 1);
+        assert_eq!(r.agg_votes(), 0);
+        // W^LAST now holds round-1 digests; W^CUR empty.
+        assert_eq!(r.w_last[0], Some(d(1)));
+        assert_eq!(r.w_last[1], Some(d(2)));
+        assert!(r.w_cur.iter().all(|x| x.is_none()));
+        assert_eq!(
+            r.last_round_digests(),
+            vec![(0, d(1)), (1, d(2))]
+        );
+    }
+
+    #[test]
+    fn duplicate_agg_votes_dont_double_count() {
+        let mut r = ReplicaState::new(4, 3);
+        r.apply(&Tx::Agg { id: 0, target_round: 1 });
+        r.apply(&Tx::Agg { id: 0, target_round: 1 });
+        r.apply(&Tx::Agg { id: 0, target_round: 1 });
+        assert_eq!(r.r_round, 0, "one node must not advance the round alone");
+        r.apply(&Tx::Agg { id: 1, target_round: 1 });
+        assert_eq!(r.apply(&Tx::Agg { id: 2, target_round: 1 }), TxResponse::Ok);
+        assert_eq!(r.r_round, 1);
+    }
+
+    #[test]
+    fn stale_agg_rejected() {
+        let mut r = ReplicaState::new(4, 1);
+        r.apply(&Tx::Agg { id: 0, target_round: 1 });
+        assert_eq!(r.r_round, 1);
+        assert_eq!(
+            r.apply(&Tx::Agg { id: 1, target_round: 1 }),
+            TxResponse::AlreadyAggError
+        );
+    }
+
+    #[test]
+    fn late_upd_for_old_round_does_not_pollute() {
+        let mut r = ReplicaState::new(4, 1);
+        r.apply(&Tx::Upd { id: 0, target_round: 1, digest: d(1) });
+        r.apply(&Tx::Agg { id: 0, target_round: 1 });
+        // round now 1; a straggler committing for round 1 is rejected
+        assert_eq!(
+            r.apply(&Tx::Upd { id: 2, target_round: 1, digest: d(9) }),
+            TxResponse::AlreadyUpdError
+        );
+        assert_eq!(r.w_last[2], None);
+        assert_eq!(r.w_cur[2], None);
+    }
+
+    #[test]
+    fn identical_sequences_produce_identical_state() {
+        // Lemma 1 consequence: determinism of the state machine.
+        let txs = vec![
+            Tx::Upd { id: 0, target_round: 1, digest: d(1) },
+            Tx::Upd { id: 1, target_round: 1, digest: d(2) },
+            Tx::Agg { id: 0, target_round: 1 },
+            Tx::Agg { id: 1, target_round: 1 },
+            Tx::Upd { id: 2, target_round: 2, digest: d(3) },
+        ];
+        let run = || {
+            let mut r = ReplicaState::new(4, 2);
+            let resp: Vec<TxResponse> = txs.iter().map(|t| r.apply(t)).collect();
+            (r.r_round, r.w_cur.clone(), r.w_last.clone(), resp)
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn prop_round_monotone_nondecreasing() {
+        use crate::util::prop::forall;
+        use crate::util::Pcg;
+        forall("round-monotone", 3, 60, 50, |rng: &mut Pcg, size| {
+            let n = 4 + rng.gen_usize(6);
+            let q = 1 + rng.gen_usize(n);
+            let txs: Vec<Tx> = (0..size * 4)
+                .map(|_| {
+                    let id = rng.gen_usize(n) as NodeId;
+                    let round = rng.gen_range(6);
+                    if rng.f64() < 0.5 {
+                        Tx::Upd { id, target_round: round, digest: d(rng.next_u32() as u8) }
+                    } else {
+                        Tx::Agg { id, target_round: round }
+                    }
+                })
+                .collect();
+            (n, q, txs)
+        }, |(n, q, txs)| {
+            let mut r = ReplicaState::new(*n, *q);
+            let mut last = 0u64;
+            for tx in txs {
+                r.apply(tx);
+                if r.r_round < last {
+                    return Err(format!("round went backwards: {} -> {}", last, r.r_round));
+                }
+                if r.r_round > last + 1 {
+                    return Err("round skipped".into());
+                }
+                last = r.r_round;
+            }
+            Ok(())
+        });
+    }
+}

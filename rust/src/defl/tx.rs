@@ -1,0 +1,149 @@
+//! DeFL transactions and storage-layer messages.
+//!
+//! Consensus carries only fixed-size transactions — UPD with the weight
+//! *digest*, AGG with just a round number (§3.4 decoupling). The weight
+//! blobs travel on the storage layer as [`WeightBlob`] multicasts.
+
+use anyhow::Result;
+
+use crate::crypto::{Digest, NodeId};
+use crate::util::codec::{Cursor, Decode, Encode};
+
+/// A DeFL transaction ordered by HotStuff (Algorithm 1 commits these;
+/// Algorithm 2 executes them).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tx {
+    /// "UPD": node `id` trained weights for round `target_round`; the blob
+    /// with this digest is in the storage layer.
+    Upd { id: NodeId, target_round: u64, digest: Digest },
+    /// "AGG": node `id` believes local training for `target_round` is done
+    /// (sent after GST_LT).
+    Agg { id: NodeId, target_round: u64 },
+}
+
+impl Tx {
+    pub fn sender(&self) -> NodeId {
+        match self {
+            Tx::Upd { id, .. } | Tx::Agg { id, .. } => *id,
+        }
+    }
+
+    pub fn target_round(&self) -> u64 {
+        match self {
+            Tx::Upd { target_round, .. } | Tx::Agg { target_round, .. } => *target_round,
+        }
+    }
+}
+
+impl Encode for Tx {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Tx::Upd { id, target_round, digest } => {
+                1u8.encode(out);
+                id.encode(out);
+                target_round.encode(out);
+                digest.encode(out);
+            }
+            Tx::Agg { id, target_round } => {
+                2u8.encode(out);
+                id.encode(out);
+                target_round.encode(out);
+            }
+        }
+    }
+    fn encoded_len(&self) -> usize {
+        match self {
+            Tx::Upd { .. } => 1 + 4 + 8 + 32,
+            Tx::Agg { .. } => 1 + 4 + 8,
+        }
+    }
+}
+
+impl Decode for Tx {
+    fn decode(cur: &mut Cursor<'_>) -> Result<Self> {
+        Ok(match u8::decode(cur)? {
+            1 => Tx::Upd {
+                id: NodeId::decode(cur)?,
+                target_round: u64::decode(cur)?,
+                digest: Digest::decode(cur)?,
+            },
+            2 => Tx::Agg { id: NodeId::decode(cur)?, target_round: u64::decode(cur)? },
+            t => anyhow::bail!("bad tx tag {t}"),
+        })
+    }
+}
+
+/// Storage-layer blob: the weights behind an UPD digest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WeightBlob {
+    pub node: NodeId,
+    pub round: u64,
+    pub weights: Vec<f32>,
+}
+
+impl WeightBlob {
+    pub fn digest(&self) -> Digest {
+        Digest::of_weights(&self.weights)
+    }
+}
+
+impl Encode for WeightBlob {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.node.encode(out);
+        self.round.encode(out);
+        self.weights.encode(out);
+    }
+    fn encoded_len(&self) -> usize {
+        4 + 8 + self.weights.encoded_len()
+    }
+}
+
+impl Decode for WeightBlob {
+    fn decode(cur: &mut Cursor<'_>) -> Result<Self> {
+        Ok(WeightBlob {
+            node: NodeId::decode(cur)?,
+            round: u64::decode(cur)?,
+            weights: Vec::<f32>::decode(cur)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tx_roundtrip() {
+        let txs = vec![
+            Tx::Upd { id: 3, target_round: 9, digest: Digest::of_bytes(b"w") },
+            Tx::Agg { id: 1, target_round: 2 },
+        ];
+        for tx in txs {
+            let bytes = tx.to_bytes();
+            assert_eq!(bytes.len(), tx.encoded_len());
+            assert_eq!(Tx::from_bytes(&bytes).unwrap(), tx);
+        }
+    }
+
+    #[test]
+    fn upd_is_fixed_size_independent_of_model() {
+        // The decoupling claim: consensus payload never contains weights.
+        let tx = Tx::Upd { id: 0, target_round: 1, digest: Digest::zero() };
+        assert_eq!(tx.encoded_len(), 45);
+    }
+
+    #[test]
+    fn blob_roundtrip_and_digest() {
+        let blob = WeightBlob { node: 2, round: 5, weights: vec![1.5, -2.0, 0.25] };
+        let bytes = blob.to_bytes();
+        assert_eq!(bytes.len(), blob.encoded_len());
+        let back = WeightBlob::from_bytes(&bytes).unwrap();
+        assert_eq!(back, blob);
+        assert_eq!(back.digest(), Digest::of_weights(&blob.weights));
+    }
+
+    #[test]
+    fn bad_tag_rejected() {
+        assert!(Tx::from_bytes(&[9]).is_err());
+    }
+}

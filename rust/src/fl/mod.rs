@@ -1,0 +1,8 @@
+//! Federated-learning core: synthetic datasets, the Dirichlet(α)
+//! partitioner, local training and evaluation over the PJRT engine.
+
+pub mod data;
+pub mod trainer;
+
+pub use data::{partition_dirichlet, partition_iid, synth_cifar, synth_for, synth_sent, Dataset, Shard};
+pub use trainer::{evaluate, local_train};

@@ -1,0 +1,82 @@
+//! Local training + evaluation drivers over the PJRT engine.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::data::{Dataset, Shard};
+use crate::runtime::Engine;
+
+/// Run `steps` local SGD steps on a shard. Returns new params + mean loss.
+pub fn local_train(
+    engine: &Arc<Engine>,
+    data: &Dataset,
+    shard: &mut Shard,
+    theta: Vec<f32>,
+    steps: usize,
+    lr: f32,
+) -> Result<(Vec<f32>, f32)> {
+    let batch = engine.batch_size();
+    let mut theta = theta;
+    let mut loss_sum = 0.0f64;
+    for _ in 0..steps {
+        let (x, y) = shard.next_batch(data, batch);
+        let out = engine.train_step(&theta, &x, &y, lr)?;
+        theta = out.theta;
+        loss_sum += out.loss as f64;
+    }
+    Ok((theta, (loss_sum / steps.max(1) as f64) as f32))
+}
+
+/// Evaluate params over (up to) the whole test set; returns (accuracy, loss).
+pub fn evaluate(engine: &Arc<Engine>, test: &Dataset, theta: &[f32]) -> Result<(f64, f64)> {
+    let batch = engine.batch_size();
+    let mut shard = Shard::new((0..test.len()).collect());
+    let batches = (test.len() / batch).max(1);
+    let mut correct = 0.0f64;
+    let mut loss_sum = 0.0f64;
+    let mut seen = 0usize;
+    for _ in 0..batches {
+        let (x, y) = shard.next_batch(test, batch);
+        let (loss, ncorrect) = engine.eval_batch(theta, &x, &y)?;
+        correct += ncorrect as f64;
+        loss_sum += loss as f64;
+        seen += batch;
+    }
+    Ok((correct / seen as f64, loss_sum / batches as f64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::manifest::Manifest;
+    use crate::config::Model;
+    use crate::fl::data::{partition_iid, synth_cifar};
+    use crate::util::Pcg;
+
+    fn engine() -> Option<Arc<Engine>> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.txt").exists() {
+            return None;
+        }
+        Some(Arc::new(Engine::new(Manifest::load(&dir).unwrap(), Model::CifarCnn).unwrap()))
+    }
+
+    #[test]
+    fn local_training_learns_synth_cifar() {
+        let Some(e) = engine() else { return };
+        let (train, test) = synth_cifar(768, 21).split(512);
+        let mut rng = Pcg::seeded(1);
+        let mut shards = partition_iid(&train, 1, &mut rng);
+        let theta0 = e.init_params(7).unwrap();
+
+        let (acc0, _) = evaluate(&e, &test, &theta0).unwrap();
+        let (theta, loss) = local_train(&e, &train, &mut shards[0], theta0, 120, 0.05).unwrap();
+        let (acc1, _) = evaluate(&e, &test, &theta).unwrap();
+        assert!(loss.is_finite());
+        assert!(
+            acc1 > acc0 + 0.2 && acc1 > 0.5,
+            "training did not learn: {acc0} -> {acc1}"
+        );
+    }
+}

@@ -1,0 +1,10 @@
+//! Basic HotStuff BFT state-machine replication (Yin et al. 2019) — the
+//! substrate of the DeFL synchronizer (§3.3). Linear communication per
+//! view, optimistic responsiveness via the added PRE-COMMIT phase,
+//! round-robin pacemaker with exponential backoff.
+
+pub mod replica;
+pub mod types;
+
+pub use replica::{Action, ByzMode, HotStuff, HsConfig};
+pub use types::{leader_of, vote_digest, Block, Msg, Phase, Qc};

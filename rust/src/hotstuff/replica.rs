@@ -1,0 +1,757 @@
+//! Basic HotStuff replica engine (Yin et al. 2019).
+//!
+//! Transport-agnostic: the engine consumes decoded [`Msg`]s and emits
+//! [`Action`]s (sends, broadcasts, timer requests, command deliveries)
+//! that the embedding node actor translates onto its transport — the same
+//! engine runs inside the discrete-event simulator and over TCP.
+//!
+//! Per view v with leader L = v mod n:
+//! 1. PREPARE — replicas send `NewView(v, prepareQC)` to L; L picks the
+//!    high QC from a quorum of NewViews and proposes a block extending it;
+//!    replicas vote if `safe_node` passes.
+//! 2. PRE-COMMIT — L aggregates n−f prepare votes into prepareQC and
+//!    broadcasts it; replicas adopt it and vote.
+//! 3. COMMIT — L aggregates into precommitQC; replicas LOCK on it, vote.
+//! 4. DECIDE — L aggregates into commitQC and broadcasts with the block;
+//!    replicas execute the block's commands and enter view v+1.
+//!
+//! The pacemaker is exponential-backoff round-robin: a view that fails to
+//! decide within its timeout advances, doubling the timeout (capped),
+//! which guarantees eventual overlap after GST (§4.2 Lemma 3).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use super::types::{leader_of, vote_digest, Block, Msg, Phase, Qc};
+use crate::crypto::{Digest, KeyRegistry, NodeId, QuorumCert, Signature, Signer};
+
+/// Side effects for the embedding actor to execute.
+#[derive(Debug)]
+pub enum Action {
+    Send { to: NodeId, msg: Msg },
+    Broadcast { msg: Msg },
+    /// (Re)arm the view timer. `epoch` disambiguates stale timers: the
+    /// embedder passes it back to `on_timeout` and the engine ignores
+    /// epochs it has moved past.
+    SetTimer { delay_us: u64, epoch: u64 },
+    /// A block was decided: apply its commands, in order, exactly once.
+    Deliver { view: u64, cmds: Vec<Vec<u8>> },
+}
+
+/// Byzantine behaviours injected in tests (§3.1 faulty/adversarial nodes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ByzMode {
+    #[default]
+    Honest,
+    /// Sends nothing at all (crash-faulty).
+    Silent,
+    /// As leader, proposes conflicting blocks to the two halves of the
+    /// cluster (equivocation); as replica, behaves honestly.
+    Equivocate,
+}
+
+/// Tuning knobs.
+#[derive(Debug, Clone)]
+pub struct HsConfig {
+    /// Base view timeout (µs); doubles per consecutive failure, capped.
+    pub timeout_base_us: u64,
+    pub timeout_cap_us: u64,
+    /// Max commands bundled into one block.
+    pub max_batch: usize,
+    /// Propose empty blocks to keep views ticking when idle.
+    pub propose_empty: bool,
+}
+
+impl Default for HsConfig {
+    fn default() -> Self {
+        HsConfig {
+            timeout_base_us: 50_000,
+            timeout_cap_us: 3_200_000,
+            max_batch: 128,
+            propose_empty: true,
+        }
+    }
+}
+
+/// Leader-side per-view aggregation state.
+#[derive(Default)]
+struct LeaderState {
+    new_views: Vec<(NodeId, Qc)>,
+    proposed: Option<Block>,
+    votes: HashMap<Phase, QuorumCert>,
+    /// Phases already certified this view (don't re-broadcast QCs).
+    done: Vec<Phase>,
+}
+
+pub struct HotStuff {
+    pub id: NodeId,
+    n: usize,
+    quorum: usize,
+    registry: KeyRegistry,
+    signer: Signer,
+    cfg: HsConfig,
+    byz: ByzMode,
+
+    view: u64,
+    prepare_qc: Qc,
+    locked_qc: Qc,
+    /// Block accepted in the current view (replica side).
+    current_block: Option<Block>,
+    last_decided_view: u64,
+    consecutive_timeouts: u32,
+    timer_epoch: u64,
+
+    leader: LeaderState,
+    pending: Vec<Vec<u8>>,
+    /// Digests of commands already decided (dedup for re-gossip; bounded).
+    delivered: std::collections::VecDeque<Digest>,
+    delivered_set: std::collections::HashSet<Digest>,
+
+    /// Decided views counter (metrics).
+    pub decided_blocks: u64,
+    pub view_changes: u64,
+}
+
+impl HotStuff {
+    pub fn new(id: NodeId, n: usize, registry: KeyRegistry, cfg: HsConfig, byz: ByzMode) -> Self {
+        let quorum = n - (n - 1) / 3; // n − f_tol, f_tol = ⌊(n−1)/3⌋
+        let signer = registry.signer(id);
+        HotStuff {
+            id,
+            n,
+            quorum,
+            registry,
+            signer,
+            cfg,
+            byz,
+            view: 0,
+            prepare_qc: Qc::genesis(),
+            locked_qc: Qc::genesis(),
+            current_block: None,
+            last_decided_view: 0,
+            consecutive_timeouts: 0,
+            timer_epoch: 0,
+            leader: LeaderState::default(),
+            pending: Vec::new(),
+            delivered: std::collections::VecDeque::new(),
+            delivered_set: std::collections::HashSet::new(),
+            decided_blocks: 0,
+            view_changes: 0,
+        }
+    }
+
+    pub fn view(&self) -> u64 {
+        self.view
+    }
+
+    pub fn quorum(&self) -> usize {
+        self.quorum
+    }
+
+    pub fn is_leader(&self) -> bool {
+        leader_of(self.view, self.n) == self.id
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Queue a command for ordering (local pool only; tests / single-node).
+    pub fn submit(&mut self, cmd: Vec<u8>) {
+        self.enqueue(cmd);
+    }
+
+    /// Submit a command AND gossip it so the current (or any future)
+    /// leader can propose it. This is the SMR client path DeFL uses.
+    pub fn submit_and_gossip(&mut self, cmd: Vec<u8>, out: &mut Vec<Action>) {
+        self.broadcast(out, Msg::Submit { cmd: cmd.clone() });
+        self.enqueue(cmd);
+        let _ = self.try_propose(out);
+    }
+
+    fn enqueue(&mut self, cmd: Vec<u8>) {
+        let d = Digest::of_bytes(&cmd);
+        if self.delivered_set.contains(&d) {
+            return;
+        }
+        if self.pending.iter().any(|c| Digest::of_bytes(c) == d) {
+            return;
+        }
+        self.pending.push(cmd);
+    }
+
+    fn mark_delivered(&mut self, cmds: &[Vec<u8>]) {
+        for cmd in cmds {
+            let d = Digest::of_bytes(cmd);
+            self.pending.retain(|c| Digest::of_bytes(c) != d);
+            if self.delivered_set.insert(d) {
+                self.delivered.push_back(d);
+                if self.delivered.len() > 4096 {
+                    if let Some(old) = self.delivered.pop_front() {
+                        self.delivered_set.remove(&old);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Enter the protocol (view 1).
+    pub fn start(&mut self, out: &mut Vec<Action>) {
+        self.enter_view(1, out);
+    }
+
+    fn timeout_us(&self) -> u64 {
+        let mult = 1u64 << self.consecutive_timeouts.min(16);
+        (self.cfg.timeout_base_us * mult).min(self.cfg.timeout_cap_us)
+    }
+
+    fn send(&self, out: &mut Vec<Action>, to: NodeId, msg: Msg) {
+        if self.byz == ByzMode::Silent {
+            return;
+        }
+        if to == self.id {
+            // Local loopback is handled inline by the caller.
+            return;
+        }
+        out.push(Action::Send { to, msg });
+    }
+
+    fn broadcast(&self, out: &mut Vec<Action>, msg: Msg) {
+        if self.byz == ByzMode::Silent {
+            return;
+        }
+        out.push(Action::Broadcast { msg });
+    }
+
+    fn enter_view(&mut self, view: u64, out: &mut Vec<Action>) {
+        self.view = view;
+        self.current_block = None;
+        self.leader = LeaderState::default();
+        self.timer_epoch += 1;
+        out.push(Action::SetTimer { delay_us: self.timeout_us(), epoch: self.timer_epoch });
+
+        let leader = leader_of(view, self.n);
+        let nv = Msg::NewView { view, prepare_qc: self.prepare_qc.clone() };
+        if leader == self.id {
+            // Deliver own NewView inline.
+            let own = nv.clone();
+            let _ = self.handle(self.id, own, out);
+        } else {
+            self.send(out, leader, nv);
+        }
+    }
+
+    /// The embedder's view timer fired. Stale epochs are ignored.
+    pub fn on_timeout(&mut self, epoch: u64, out: &mut Vec<Action>) {
+        if epoch != self.timer_epoch {
+            return;
+        }
+        self.consecutive_timeouts += 1;
+        self.view_changes += 1;
+        let next = self.view + 1;
+        self.enter_view(next, out);
+    }
+
+    /// Process one protocol message.
+    pub fn on_message(&mut self, from: NodeId, msg: Msg, out: &mut Vec<Action>) -> Result<()> {
+        self.handle(from, msg, out)
+    }
+
+    fn handle(&mut self, from: NodeId, msg: Msg, out: &mut Vec<Action>) -> Result<()> {
+        match msg {
+            Msg::NewView { view, prepare_qc } => self.on_new_view(from, view, prepare_qc, out),
+            Msg::Prepare { view, block, high_qc } => {
+                self.on_prepare(from, view, block, high_qc, out)
+            }
+            Msg::Vote { phase, view, block, sig } => {
+                self.on_vote(from, phase, view, block, sig, out)
+            }
+            Msg::PreCommit { view, qc } => self.on_phase_qc(view, qc, Phase::Prepare, out),
+            Msg::Commit { view, qc } => self.on_phase_qc(view, qc, Phase::PreCommit, out),
+            Msg::Decide { view, qc, block } => self.on_decide(view, qc, block, out),
+            Msg::Submit { cmd } => {
+                self.enqueue(cmd);
+                self.try_propose(out)
+            }
+        }
+    }
+
+    // ---------------- leader side ----------------
+
+    fn on_new_view(
+        &mut self,
+        from: NodeId,
+        view: u64,
+        prepare_qc: Qc,
+        out: &mut Vec<Action>,
+    ) -> Result<()> {
+        if view != self.view || leader_of(view, self.n) != self.id {
+            return Ok(()); // stale or not our view to lead
+        }
+        prepare_qc.verify(&self.registry, self.quorum)?;
+        if self.leader.new_views.iter().any(|(n, _)| *n == from) {
+            return Ok(());
+        }
+        self.leader.new_views.push((from, prepare_qc));
+        self.try_propose(out)
+    }
+
+    /// Propose if we lead the current view, hold a NewView quorum, have
+    /// not proposed yet, and there is something (or permission) to batch.
+    fn try_propose(&mut self, out: &mut Vec<Action>) -> Result<()> {
+        let view = self.view;
+        if leader_of(view, self.n) != self.id
+            || self.leader.new_views.len() < self.quorum
+            || self.leader.proposed.is_some()
+        {
+            return Ok(());
+        }
+        if self.pending.is_empty() && !self.cfg.propose_empty {
+            return Ok(());
+        }
+        let high_qc = self
+            .leader
+            .new_views
+            .iter()
+            .map(|(_, qc)| qc)
+            .max_by_key(|qc| qc.view)
+            .unwrap()
+            .clone();
+        let take = self.pending.len().min(self.cfg.max_batch);
+        let cmds: Vec<Vec<u8>> = self.pending.drain(..take).collect();
+        let block = Block { view, parent: high_qc.block, cmds };
+
+        if self.byz == ByzMode::Equivocate {
+            // Conflicting proposal to the upper half of the cluster.
+            let mut other = block.clone();
+            other.cmds.push(b"equivocation".to_vec());
+            for to in 0..self.n as NodeId {
+                if to == self.id {
+                    continue;
+                }
+                let b = if (to as usize) < self.n / 2 { block.clone() } else { other.clone() };
+                out.push(Action::Send {
+                    to,
+                    msg: Msg::Prepare { view, block: b, high_qc: high_qc.clone() },
+                });
+            }
+            self.leader.proposed = Some(block);
+            return Ok(());
+        }
+
+        self.leader.proposed = Some(block.clone());
+        let msg = Msg::Prepare { view, block: block.clone(), high_qc: high_qc.clone() };
+        self.broadcast(out, msg);
+        // Leader votes for its own proposal via the replica path.
+        self.on_prepare(self.id, view, block, high_qc, out)
+    }
+
+    fn on_vote(
+        &mut self,
+        from: NodeId,
+        phase: Phase,
+        view: u64,
+        block: Digest,
+        sig: Signature,
+        out: &mut Vec<Action>,
+    ) -> Result<()> {
+        if view != self.view || leader_of(view, self.n) != self.id {
+            return Ok(());
+        }
+        let Some(proposed) = self.leader.proposed.clone() else {
+            return Ok(());
+        };
+        if proposed.digest() != block {
+            bail!("vote for foreign block from {from}");
+        }
+        if sig.node != from {
+            bail!("vote signature node mismatch");
+        }
+        let vd = vote_digest(phase, view, &block);
+        if !self.registry.verify(&vd, &sig) {
+            bail!("bad vote signature from {from}");
+        }
+        if self.leader.done.contains(&phase) {
+            return Ok(()); // already certified
+        }
+        let qc_entry = self
+            .leader
+            .votes
+            .entry(phase)
+            .or_insert_with(|| QuorumCert::new(vd));
+        let count = qc_entry.add(sig);
+        if count >= self.quorum {
+            self.leader.done.push(phase);
+            let qc = Qc { phase, view, block, cert: qc_entry.clone() };
+            let msg = match phase {
+                Phase::Prepare => Msg::PreCommit { view, qc: qc.clone() },
+                Phase::PreCommit => Msg::Commit { view, qc: qc.clone() },
+                Phase::Commit => Msg::Decide { view, qc: qc.clone(), block: proposed.clone() },
+            };
+            self.broadcast(out, msg.clone());
+            // Leader applies the phase transition locally too.
+            self.handle(self.id, msg, out)?;
+        }
+        Ok(())
+    }
+
+    // ---------------- replica side ----------------
+
+    /// safe_node predicate from the paper: accept if the proposal extends
+    /// our lock, or the justification is fresher than our lock.
+    fn safe_node(&self, block: &Block, high_qc: &Qc) -> bool {
+        block.parent == high_qc.block
+            && (high_qc.block == self.locked_qc.block || high_qc.view > self.locked_qc.view)
+    }
+
+    fn vote(&mut self, phase: Phase, block: Digest, out: &mut Vec<Action>) -> Result<()> {
+        let vd = vote_digest(phase, self.view, &block);
+        let sig = self.signer.sign(&vd);
+        let leader = leader_of(self.view, self.n);
+        let msg = Msg::Vote { phase, view: self.view, block, sig };
+        if leader == self.id {
+            self.handle(self.id, msg, out)?;
+        } else {
+            self.send(out, leader, msg);
+        }
+        Ok(())
+    }
+
+    fn on_prepare(
+        &mut self,
+        from: NodeId,
+        view: u64,
+        block: Block,
+        high_qc: Qc,
+        out: &mut Vec<Action>,
+    ) -> Result<()> {
+        if view != self.view || from != leader_of(view, self.n) {
+            return Ok(());
+        }
+        if self.current_block.is_some() {
+            return Ok(()); // one proposal per view
+        }
+        if block.view != view {
+            bail!("prepare: block view mismatch");
+        }
+        high_qc.verify(&self.registry, self.quorum)?;
+        if !self.safe_node(&block, &high_qc) {
+            log::debug!("n{}: rejecting unsafe proposal in view {view}", self.id);
+            return Ok(());
+        }
+        let digest = block.digest();
+        self.current_block = Some(block);
+        self.vote(Phase::Prepare, digest, out)
+    }
+
+    /// PreCommit(prepareQC) and Commit(precommitQC) share a shape: verify
+    /// the QC for `expect_phase`, update prepare/locked QC, vote next.
+    fn on_phase_qc(
+        &mut self,
+        view: u64,
+        qc: Qc,
+        expect_phase: Phase,
+        out: &mut Vec<Action>,
+    ) -> Result<()> {
+        if view != self.view {
+            return Ok(());
+        }
+        if qc.phase != expect_phase || qc.view != view {
+            bail!("phase qc mismatch: got {:?}@{} want {:?}@{view}", qc.phase, qc.view, expect_phase);
+        }
+        qc.verify(&self.registry, self.quorum)?;
+        match expect_phase {
+            Phase::Prepare => {
+                // Adopt as prepareQC, vote PRE-COMMIT.
+                self.prepare_qc = qc.clone();
+                self.vote(Phase::PreCommit, qc.block, out)
+            }
+            Phase::PreCommit => {
+                // Lock, vote COMMIT.
+                self.locked_qc = qc.clone();
+                self.vote(Phase::Commit, qc.block, out)
+            }
+            Phase::Commit => unreachable!("commit QCs arrive via Decide"),
+        }
+    }
+
+    fn on_decide(&mut self, view: u64, qc: Qc, block: Block, out: &mut Vec<Action>) -> Result<()> {
+        if view != self.view {
+            return Ok(());
+        }
+        if qc.phase != Phase::Commit || qc.view != view || qc.block != block.digest() {
+            bail!("decide: qc does not certify block");
+        }
+        qc.verify(&self.registry, self.quorum)?;
+        if self.last_decided_view >= view {
+            return Ok(());
+        }
+        self.last_decided_view = view;
+        self.decided_blocks += 1;
+        self.consecutive_timeouts = 0;
+        self.mark_delivered(&block.cmds);
+        if !block.cmds.is_empty() {
+            out.push(Action::Deliver { view, cmds: block.cmds });
+        }
+        self.enter_view(view + 1, out);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Traffic;
+    use crate::net::sim::{Actor, Ctx, SimConfig, SimNet};
+    use crate::util::{Decode, Encode};
+    use std::any::Any;
+
+    /// Minimal node actor hosting a HotStuff engine; applies delivered
+    /// commands to a local log.
+    struct HsNode {
+        hs: HotStuff,
+        log: Vec<Vec<u8>>,
+        decided_views: Vec<u64>,
+        inject_every_view: bool,
+    }
+
+    impl HsNode {
+        fn apply(&mut self, ctx: &mut Ctx, actions: Vec<Action>) {
+            for act in actions {
+                match act {
+                    Action::Send { to, msg } => {
+                        ctx.send(to, Traffic::Consensus, msg.to_bytes())
+                    }
+                    Action::Broadcast { msg } => {
+                        ctx.broadcast(Traffic::Consensus, msg.to_bytes())
+                    }
+                    Action::SetTimer { delay_us, epoch } => ctx.set_timer(delay_us, epoch),
+                    Action::Deliver { view, cmds } => {
+                        self.decided_views.push(view);
+                        self.log.extend(cmds);
+                    }
+                }
+            }
+        }
+    }
+
+    impl Actor for HsNode {
+        fn on_start(&mut self, ctx: &mut Ctx) {
+            self.hs.submit(format!("cmd-from-{}", ctx.node).into_bytes());
+            let mut out = Vec::new();
+            self.hs.start(&mut out);
+            self.apply(ctx, out);
+        }
+        fn on_message(&mut self, ctx: &mut Ctx, from: NodeId, _: Traffic, bytes: &[u8]) {
+            let Ok(msg) = Msg::from_bytes(bytes) else { return };
+            let mut out = Vec::new();
+            let _ = self.hs.on_message(from, msg, &mut out);
+            if self.inject_every_view {
+                self.hs.submit(format!("n{}-v{}", ctx.node, self.hs.view()).into_bytes());
+            }
+            self.apply(ctx, out);
+        }
+        fn on_timer(&mut self, ctx: &mut Ctx, id: u64) {
+            let mut out = Vec::new();
+            self.hs.on_timeout(id, &mut out);
+            self.apply(ctx, out);
+        }
+        fn as_any(&mut self) -> &mut dyn Any {
+            self
+        }
+    }
+
+    fn cluster(n: usize, byz: Vec<ByzMode>, inject: bool) -> SimNet {
+        let registry = KeyRegistry::new(n, 99);
+        let actors: Vec<Box<dyn Actor>> = (0..n)
+            .map(|i| {
+                let mode = byz.get(i).copied().unwrap_or(ByzMode::Honest);
+                Box::new(HsNode {
+                    hs: HotStuff::new(i as NodeId, n, registry.clone(), HsConfig::default(), mode),
+                    log: Vec::new(),
+                    decided_views: Vec::new(),
+                    inject_every_view: inject,
+                }) as Box<dyn Actor>
+            })
+            .collect();
+        SimNet::new(SimConfig { n_nodes: n, seed: 5, ..Default::default() }, actors)
+    }
+
+    fn logs(net: &mut SimNet, n: usize) -> Vec<Vec<Vec<u8>>> {
+        (0..n as NodeId)
+            .map(|i| net.actor_as::<HsNode>(i).unwrap().log.clone())
+            .collect()
+    }
+
+    #[test]
+    fn four_honest_nodes_agree_on_order() {
+        let n = 4;
+        let mut net = cluster(n, vec![], false);
+        net.run_until(2_000_000, 200_000);
+        let logs = logs(&mut net, n);
+        assert!(
+            logs[0].len() >= n,
+            "expected all {} initial cmds decided, got {}", n, logs[0].len()
+        );
+        for i in 1..n {
+            assert_eq!(logs[i], logs[0], "log divergence at node {i}");
+        }
+    }
+
+    #[test]
+    fn progress_with_f_silent_nodes() {
+        let n = 4; // tolerates f=1
+        let mut net = cluster(n, vec![ByzMode::Silent], false);
+        net.run_until(20_000_000, 500_000);
+        let logs = logs(&mut net, n);
+        // Honest nodes agree and decided the honest nodes' commands.
+        for i in 2..n {
+            assert_eq!(logs[i], logs[1]);
+        }
+        assert!(logs[1].len() >= n - 1, "decided only {} cmds", logs[1].len());
+        // Views led by the silent node time out and advance.
+        let hs = &net.actor_as::<HsNode>(1).unwrap().hs;
+        assert!(hs.view_changes > 0, "expected view changes past silent leader");
+    }
+
+    #[test]
+    fn equivocating_leader_cannot_split_honest_nodes() {
+        let n = 4;
+        let mut net = cluster(n, vec![ByzMode::Equivocate], false);
+        net.run_until(20_000_000, 500_000);
+        let logs = logs(&mut net, n);
+        for i in 2..n {
+            assert_eq!(logs[i], logs[1], "equivocation split the log");
+        }
+        // No honest log contains the equivocation marker AND an honest
+        // sibling missing it (agreement); stronger: the conflicting cmd
+        // can commit at most in one version.
+        let marker = b"equivocation".to_vec();
+        let with: usize = (1..n)
+            .filter(|&i| logs[i].contains(&marker))
+            .count();
+        assert!(with == 0 || with == n - 1);
+    }
+
+    #[test]
+    fn seven_nodes_sustained_throughput() {
+        let n = 7;
+        let mut net = cluster(n, vec![], true);
+        net.run_until(5_000_000, 400_000);
+        let logs = logs(&mut net, n);
+        for i in 1..n {
+            assert_eq!(logs[i], logs[0]);
+        }
+        assert!(logs[0].len() > 20, "sustained pipeline too slow: {}", logs[0].len());
+        let hs = &net.actor_as::<HsNode>(0).unwrap().hs;
+        assert!(hs.decided_blocks > 5);
+    }
+
+    #[test]
+    fn deterministic_consensus_runs() {
+        let run = || {
+            let mut net = cluster(4, vec![], true);
+            net.run_until(1_000_000, 100_000);
+            (net.meter.total_sent(), logs(&mut net, 4))
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
+    }
+
+    /// Node that gossips one command from a non-leader, with empty
+    /// proposals disabled — exercises the Submit mempool path DeFL uses.
+    struct GossipNode {
+        hs: HotStuff,
+        log: Vec<Vec<u8>>,
+    }
+    impl Actor for GossipNode {
+        fn on_start(&mut self, ctx: &mut Ctx) {
+            let mut out = Vec::new();
+            self.hs.start(&mut out);
+            if ctx.node == 2 {
+                self.hs.submit_and_gossip(b"from-node-2".to_vec(), &mut out);
+            }
+            for act in out {
+                match act {
+                    Action::Send { to, msg } => ctx.send(to, Traffic::Consensus, msg.to_bytes()),
+                    Action::Broadcast { msg } => ctx.broadcast(Traffic::Consensus, msg.to_bytes()),
+                    Action::SetTimer { delay_us, epoch } => ctx.set_timer(delay_us, epoch),
+                    Action::Deliver { cmds, .. } => self.log.extend(cmds),
+                }
+            }
+        }
+        fn on_message(&mut self, ctx: &mut Ctx, from: NodeId, _: Traffic, bytes: &[u8]) {
+            let Ok(msg) = Msg::from_bytes(bytes) else { return };
+            let mut out = Vec::new();
+            let _ = self.hs.on_message(from, msg, &mut out);
+            for act in out {
+                match act {
+                    Action::Send { to, msg } => ctx.send(to, Traffic::Consensus, msg.to_bytes()),
+                    Action::Broadcast { msg } => ctx.broadcast(Traffic::Consensus, msg.to_bytes()),
+                    Action::SetTimer { delay_us, epoch } => ctx.set_timer(delay_us, epoch),
+                    Action::Deliver { cmds, .. } => self.log.extend(cmds),
+                }
+            }
+        }
+        fn on_timer(&mut self, ctx: &mut Ctx, id: u64) {
+            let mut out = Vec::new();
+            self.hs.on_timeout(id, &mut out);
+            for act in out {
+                match act {
+                    Action::Send { to, msg } => ctx.send(to, Traffic::Consensus, msg.to_bytes()),
+                    Action::Broadcast { msg } => ctx.broadcast(Traffic::Consensus, msg.to_bytes()),
+                    Action::SetTimer { delay_us, epoch } => ctx.set_timer(delay_us, epoch),
+                    Action::Deliver { cmds, .. } => self.log.extend(cmds),
+                }
+            }
+        }
+        fn as_any(&mut self) -> &mut dyn Any {
+            self
+        }
+    }
+
+    #[test]
+    fn gossiped_command_from_non_leader_decides_without_empty_blocks() {
+        let n = 4;
+        let registry = KeyRegistry::new(n, 44);
+        let cfg = HsConfig { propose_empty: false, ..Default::default() };
+        let actors: Vec<Box<dyn Actor>> = (0..n)
+            .map(|i| {
+                Box::new(GossipNode {
+                    hs: HotStuff::new(i as NodeId, n, registry.clone(), cfg.clone(), ByzMode::Honest),
+                    log: Vec::new(),
+                }) as Box<dyn Actor>
+            })
+            .collect();
+        let mut net = SimNet::new(SimConfig { n_nodes: n, seed: 6, ..Default::default() }, actors);
+        net.run_until(5_000_000, 200_000);
+        for i in 0..n as NodeId {
+            let log = &net.actor_as::<GossipNode>(i).unwrap().log;
+            assert_eq!(log.len(), 1, "node {i} log {:?}", log);
+            assert_eq!(log[0], b"from-node-2".to_vec());
+        }
+        // No empty-block churn: decided views should be tiny.
+        assert!(net.actor_as::<GossipNode>(0).unwrap().hs.decided_blocks <= 2);
+    }
+
+    #[test]
+    fn communication_is_linear_per_view() {
+        // O(n) messages per view (the HotStuff headline property §3.3):
+        // leader broadcasts + replica votes, no all-to-all.
+        let mut msgs_per_view = Vec::new();
+        for n in [4usize, 7, 10] {
+            let mut net = cluster(n, vec![], false);
+            net.run_until(2_000_000, 200_000);
+            let views: u64 = net.actor_as::<HsNode>(0).unwrap().hs.view();
+            let total_msgs: u64 = (0..n as NodeId).map(|i| net.meter.msgs_sent_by(i)).sum();
+            msgs_per_view.push(total_msgs as f64 / views as f64);
+        }
+        // per-view message count should scale ~linearly: ratio between
+        // n=10 and n=4 stays well under the quadratic ratio (6.25).
+        let ratio = msgs_per_view[2] / msgs_per_view[0];
+        assert!(ratio < 4.0, "per-view msgs ratio {ratio} suggests superlinear");
+    }
+}

@@ -1,0 +1,332 @@
+//! HotStuff wire types: blocks, phases, votes, protocol messages.
+//!
+//! Basic (non-chained) HotStuff per Yin et al. 2019 §4: each view runs
+//! PREPARE → PRE-COMMIT → COMMIT → DECIDE, each phase certified by a
+//! quorum certificate over `(phase, view, block_digest)`.
+
+use anyhow::Result;
+
+use crate::crypto::{Digest, NodeId, QuorumCert, Signature};
+use crate::util::codec::{decode_list, encode_list, Cursor, Decode, Encode};
+
+/// Protocol phase a vote/QC certifies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Phase {
+    Prepare = 1,
+    PreCommit = 2,
+    Commit = 3,
+}
+
+impl Encode for Phase {
+    fn encode(&self, out: &mut Vec<u8>) {
+        (*self as u8).encode(out);
+    }
+    fn encoded_len(&self) -> usize {
+        1
+    }
+}
+
+impl Decode for Phase {
+    fn decode(cur: &mut Cursor<'_>) -> Result<Self> {
+        Ok(match u8::decode(cur)? {
+            1 => Phase::Prepare,
+            2 => Phase::PreCommit,
+            3 => Phase::Commit,
+            b => anyhow::bail!("bad phase {b}"),
+        })
+    }
+}
+
+/// A proposal: ordered batch of opaque commands extending a parent.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Block {
+    pub view: u64,
+    pub parent: Digest,
+    pub cmds: Vec<Vec<u8>>,
+}
+
+impl Block {
+    pub fn digest(&self) -> Digest {
+        Digest::of_bytes(&self.to_bytes())
+    }
+}
+
+impl Encode for Block {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.view.encode(out);
+        self.parent.encode(out);
+        encode_list(&self.cmds, out);
+    }
+    fn encoded_len(&self) -> usize {
+        8 + 32 + 4 + self.cmds.iter().map(|c| c.encoded_len()).sum::<usize>()
+    }
+}
+
+impl Decode for Block {
+    fn decode(cur: &mut Cursor<'_>) -> Result<Self> {
+        Ok(Block {
+            view: u64::decode(cur)?,
+            parent: Digest::decode(cur)?,
+            cmds: decode_list(cur)?,
+        })
+    }
+}
+
+/// What a vote signs: domain-separated (phase, view, block digest).
+pub fn vote_digest(phase: Phase, view: u64, block: &Digest) -> Digest {
+    let mut buf = Vec::with_capacity(1 + 8 + 32);
+    (phase as u8).encode(&mut buf);
+    view.encode(&mut buf);
+    block.encode(&mut buf);
+    Digest::of_bytes(&buf)
+}
+
+/// A quorum certificate bound to its phase/view/block (the QC's inner
+/// digest is `vote_digest(phase, view, block)`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Qc {
+    pub phase: Phase,
+    pub view: u64,
+    pub block: Digest,
+    pub cert: QuorumCert,
+}
+
+impl Qc {
+    /// The genesis QC everything chains from.
+    pub fn genesis() -> Qc {
+        Qc {
+            phase: Phase::Prepare,
+            view: 0,
+            block: Digest::zero(),
+            cert: QuorumCert::new(vote_digest(Phase::Prepare, 0, &Digest::zero())),
+        }
+    }
+
+    pub fn is_genesis(&self) -> bool {
+        self.view == 0
+    }
+
+    /// Structural + cryptographic validity (genesis is valid by fiat).
+    pub fn verify(&self, registry: &crate::crypto::KeyRegistry, quorum: usize) -> Result<()> {
+        if self.is_genesis() {
+            return Ok(());
+        }
+        let want = vote_digest(self.phase, self.view, &self.block);
+        if self.cert.msg != want {
+            anyhow::bail!("qc digest does not bind phase/view/block");
+        }
+        self.cert.verify(registry, quorum)
+    }
+}
+
+impl Encode for Qc {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.phase.encode(out);
+        self.view.encode(out);
+        self.block.encode(out);
+        self.cert.encode(out);
+    }
+    fn encoded_len(&self) -> usize {
+        1 + 8 + 32 + self.cert.encoded_len()
+    }
+}
+
+impl Decode for Qc {
+    fn decode(cur: &mut Cursor<'_>) -> Result<Self> {
+        Ok(Qc {
+            phase: Phase::decode(cur)?,
+            view: u64::decode(cur)?,
+            block: Digest::decode(cur)?,
+            cert: QuorumCert::decode(cur)?,
+        })
+    }
+}
+
+/// Protocol messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Replica → next leader: enter view `view`; carries the replica's
+    /// prepareQC (the leader picks the highest).
+    NewView { view: u64, prepare_qc: Qc },
+    /// Leader → replicas: the view's proposal, justified by high_qc.
+    Prepare { view: u64, block: Block, high_qc: Qc },
+    /// Replica → leader: signed vote for `phase` on `block`.
+    Vote { phase: Phase, view: u64, block: Digest, sig: Signature },
+    /// Leader → replicas: the QC finishing phase (PreCommit carries
+    /// prepareQC, Commit carries precommitQC, Decide carries commitQC).
+    PreCommit { view: u64, qc: Qc },
+    Commit { view: u64, qc: Qc },
+    Decide { view: u64, qc: Qc, block: Block },
+    /// Mempool gossip: a command submitted on one node, rebroadcast so the
+    /// current (and any future) leader can include it in a proposal.
+    Submit { cmd: Vec<u8> },
+}
+
+impl Msg {
+    fn tag(&self) -> u8 {
+        match self {
+            Msg::NewView { .. } => 1,
+            Msg::Prepare { .. } => 2,
+            Msg::Vote { .. } => 3,
+            Msg::PreCommit { .. } => 4,
+            Msg::Commit { .. } => 5,
+            Msg::Decide { .. } => 6,
+            Msg::Submit { .. } => 7,
+        }
+    }
+
+    pub fn view(&self) -> u64 {
+        match self {
+            Msg::NewView { view, .. }
+            | Msg::Prepare { view, .. }
+            | Msg::Vote { view, .. }
+            | Msg::PreCommit { view, .. }
+            | Msg::Commit { view, .. }
+            | Msg::Decide { view, .. } => *view,
+            Msg::Submit { .. } => 0,
+        }
+    }
+}
+
+impl Encode for Msg {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.tag().encode(out);
+        match self {
+            Msg::NewView { view, prepare_qc } => {
+                view.encode(out);
+                prepare_qc.encode(out);
+            }
+            Msg::Prepare { view, block, high_qc } => {
+                view.encode(out);
+                block.encode(out);
+                high_qc.encode(out);
+            }
+            Msg::Vote { phase, view, block, sig } => {
+                phase.encode(out);
+                view.encode(out);
+                block.encode(out);
+                sig.encode(out);
+            }
+            Msg::PreCommit { view, qc } | Msg::Commit { view, qc } => {
+                view.encode(out);
+                qc.encode(out);
+            }
+            Msg::Decide { view, qc, block } => {
+                view.encode(out);
+                qc.encode(out);
+                block.encode(out);
+            }
+            Msg::Submit { cmd } => {
+                cmd.encode(out);
+            }
+        }
+    }
+}
+
+impl Decode for Msg {
+    fn decode(cur: &mut Cursor<'_>) -> Result<Self> {
+        Ok(match u8::decode(cur)? {
+            1 => Msg::NewView { view: u64::decode(cur)?, prepare_qc: Qc::decode(cur)? },
+            2 => Msg::Prepare {
+                view: u64::decode(cur)?,
+                block: Block::decode(cur)?,
+                high_qc: Qc::decode(cur)?,
+            },
+            3 => Msg::Vote {
+                phase: Phase::decode(cur)?,
+                view: u64::decode(cur)?,
+                block: Digest::decode(cur)?,
+                sig: Signature::decode(cur)?,
+            },
+            4 => Msg::PreCommit { view: u64::decode(cur)?, qc: Qc::decode(cur)? },
+            5 => Msg::Commit { view: u64::decode(cur)?, qc: Qc::decode(cur)? },
+            6 => Msg::Decide {
+                view: u64::decode(cur)?,
+                qc: Qc::decode(cur)?,
+                block: Block::decode(cur)?,
+            },
+            7 => Msg::Submit { cmd: Vec::<u8>::decode(cur)? },
+            t => anyhow::bail!("bad hotstuff msg tag {t}"),
+        })
+    }
+}
+
+/// Round-robin leader schedule.
+pub fn leader_of(view: u64, n: usize) -> NodeId {
+    (view % n as u64) as NodeId
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::KeyRegistry;
+
+    #[test]
+    fn block_digest_sensitive_to_content() {
+        let b1 = Block { view: 1, parent: Digest::zero(), cmds: vec![vec![1, 2]] };
+        let mut b2 = b1.clone();
+        b2.cmds[0][0] = 9;
+        assert_ne!(b1.digest(), b2.digest());
+        assert_eq!(b1.digest(), b1.clone().digest());
+    }
+
+    #[test]
+    fn msgs_roundtrip() {
+        let reg = KeyRegistry::new(4, 1);
+        let block = Block { view: 3, parent: Digest::zero(), cmds: vec![vec![1], vec![2, 3]] };
+        let vd = vote_digest(Phase::Prepare, 3, &block.digest());
+        let mut cert = QuorumCert::new(vd);
+        cert.add(reg.signer(0).sign(&vd));
+        cert.add(reg.signer(1).sign(&vd));
+        let qc = Qc { phase: Phase::Prepare, view: 3, block: block.digest(), cert };
+
+        let msgs = vec![
+            Msg::NewView { view: 4, prepare_qc: qc.clone() },
+            Msg::Prepare { view: 3, block: block.clone(), high_qc: Qc::genesis() },
+            Msg::Vote {
+                phase: Phase::Commit,
+                view: 3,
+                block: block.digest(),
+                sig: reg.signer(2).sign(&vd),
+            },
+            Msg::PreCommit { view: 3, qc: qc.clone() },
+            Msg::Commit { view: 3, qc: qc.clone() },
+            Msg::Decide { view: 3, qc: qc.clone(), block },
+        ];
+        for m in msgs {
+            let bytes = m.to_bytes();
+            assert_eq!(bytes.len(), m.encoded_len(), "len mismatch for {m:?}");
+            assert_eq!(Msg::from_bytes(&bytes).unwrap(), m);
+            assert_eq!(m.view(), if matches!(m, Msg::NewView { .. }) { 4 } else { 3 });
+        }
+    }
+
+    #[test]
+    fn qc_verify_binds_phase_view_block() {
+        let reg = KeyRegistry::new(4, 2);
+        let block = Digest::of_bytes(b"b");
+        let vd = vote_digest(Phase::PreCommit, 5, &block);
+        let mut cert = QuorumCert::new(vd);
+        for i in 0..3 {
+            cert.add(reg.signer(i).sign(&vd));
+        }
+        let qc = Qc { phase: Phase::PreCommit, view: 5, block, cert: cert.clone() };
+        assert!(qc.verify(&reg, 3).is_ok());
+        // Rebinding the same cert to another view must fail.
+        let forged = Qc { phase: Phase::PreCommit, view: 6, block, cert };
+        assert!(forged.verify(&reg, 3).is_err());
+    }
+
+    #[test]
+    fn genesis_verifies() {
+        let reg = KeyRegistry::new(4, 3);
+        assert!(Qc::genesis().verify(&reg, 3).is_ok());
+    }
+
+    #[test]
+    fn leader_rotation() {
+        assert_eq!(leader_of(0, 4), 0);
+        assert_eq!(leader_of(5, 4), 1);
+        assert_eq!(leader_of(7, 7), 0);
+    }
+}

@@ -1,0 +1,268 @@
+//! Native Krum / Multi-Krum (Blanchard et al. 2017), the DeFL weight
+//! filter (§3.2).
+//!
+//! The hot path uses the AOT artifact (L1 Pallas Gram kernel inside the L2
+//! aggregation graph, executed through [`crate::runtime`]); this module is
+//! the arbitrary-(n, f) reference used for (a) cross-checking the artifact
+//! in tests, (b) configurations outside the exported combos, and (c) the
+//! pure-rust baselines.
+
+use anyhow::{bail, Result};
+
+/// Result of a Multi-Krum aggregation.
+#[derive(Debug, Clone)]
+pub struct KrumOutput {
+    /// Weighted mean of the selected rows.
+    pub aggregate: Vec<f32>,
+    /// Krum score per row (lower = more trustworthy).
+    pub scores: Vec<f32>,
+    /// 1.0 for selected rows, 0.0 for filtered rows.
+    pub mask: Vec<f32>,
+}
+
+/// Pairwise squared distances between rows (n × n, symmetric, zero diag).
+pub fn pairwise_sq_dists(rows: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let n = rows.len();
+    let mut d2 = vec![vec![0.0f32; n]; n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let mut acc = 0.0f64;
+            for (a, b) in rows[i].iter().zip(rows[j].iter()) {
+                let d = (*a - *b) as f64;
+                acc += d * d;
+            }
+            d2[i][j] = acc as f32;
+            d2[j][i] = acc as f32;
+        }
+    }
+    d2
+}
+
+/// Krum scores: for each row, the sum of squared distances to its
+/// n − f − 2 closest other rows.
+pub fn krum_scores(rows: &[Vec<f32>], f: usize) -> Result<Vec<f32>> {
+    let n = rows.len();
+    if n < f + 3 {
+        bail!("krum needs n - f - 2 >= 1 (n={n}, f={f})");
+    }
+    if let Some(bad) = rows.iter().position(|r| r.len() != rows[0].len()) {
+        bail!("krum: row {bad} has dim {} != {}", rows[bad].len(), rows[0].len());
+    }
+    let closest = n - f - 2;
+    let d2 = pairwise_sq_dists(rows);
+    let mut scores = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut dists: Vec<f32> = (0..n).filter(|&j| j != i).map(|j| d2[i][j]).collect();
+        dists.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        scores.push(dists[..closest].iter().sum());
+    }
+    Ok(scores)
+}
+
+/// Multi-Krum: FedAvg (weighted by `sample_weights`) over the `m` rows
+/// with the smallest Krum scores. Matches python/compile/aggregate.py
+/// (ties broken by index, like argsort).
+pub fn multi_krum(
+    rows: &[Vec<f32>],
+    sample_weights: &[f32],
+    f: usize,
+    m: usize,
+) -> Result<KrumOutput> {
+    let n = rows.len();
+    if m == 0 || m > n {
+        bail!("multi-krum: m={m} out of range 1..={n}");
+    }
+    if sample_weights.len() != n {
+        bail!("multi-krum: {} sample weights for {n} rows", sample_weights.len());
+    }
+    let scores = krum_scores(rows, f)?;
+
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        scores[a]
+            .partial_cmp(&scores[b])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut mask = vec![0.0f32; n];
+    for &i in &order[..m] {
+        mask[i] = 1.0;
+    }
+
+    let dim = rows[0].len();
+    let mut aggregate = vec![0.0f32; dim];
+    let mut total_w = 0.0f64;
+    for i in 0..n {
+        if mask[i] == 0.0 {
+            continue;
+        }
+        let w = sample_weights[i] as f64;
+        total_w += w;
+        for (acc, x) in aggregate.iter_mut().zip(rows[i].iter()) {
+            *acc += (w * *x as f64) as f32;
+        }
+    }
+    let denom = total_w.max(1e-12) as f32;
+    for a in aggregate.iter_mut() {
+        *a /= denom;
+    }
+    Ok(KrumOutput { aggregate, scores, mask })
+}
+
+/// Plain FedAvg over all rows (the FL/SL aggregation rule).
+pub fn fedavg(rows: &[Vec<f32>], sample_weights: &[f32]) -> Result<Vec<f32>> {
+    let n = rows.len();
+    if n == 0 {
+        bail!("fedavg: no rows");
+    }
+    if sample_weights.len() != n {
+        bail!("fedavg: weight arity");
+    }
+    let dim = rows[0].len();
+    let mut out = vec![0.0f64; dim];
+    let mut total = 0.0f64;
+    for (row, &w) in rows.iter().zip(sample_weights.iter()) {
+        if row.len() != dim {
+            bail!("fedavg: ragged rows");
+        }
+        total += w as f64;
+        for (acc, x) in out.iter_mut().zip(row.iter()) {
+            *acc += w as f64 * *x as f64;
+        }
+    }
+    let denom = total.max(1e-12);
+    Ok(out.into_iter().map(|x| (x / denom) as f32).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::{forall, gens};
+    use crate::util::Pcg;
+
+    fn cluster(rng: &mut Pcg, n: usize, d: usize, spread: f32) -> Vec<Vec<f32>> {
+        let center = gens::f32_vec(rng, d, 1.0);
+        (0..n)
+            .map(|_| {
+                center
+                    .iter()
+                    .map(|c| c + rng.normal_f32(0.0, spread))
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn distances_symmetric_zero_diag() {
+        let mut rng = Pcg::seeded(1);
+        let rows = cluster(&mut rng, 6, 50, 1.0);
+        let d2 = pairwise_sq_dists(&rows);
+        for i in 0..6 {
+            assert_eq!(d2[i][i], 0.0);
+            for j in 0..6 {
+                assert!((d2[i][j] - d2[j][i]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn outlier_gets_worst_score() {
+        let mut rng = Pcg::seeded(2);
+        let mut rows = cluster(&mut rng, 7, 64, 0.1);
+        rows[3] = gens::f32_vec(&mut rng, 64, 50.0);
+        let scores = krum_scores(&rows, 1).unwrap();
+        let worst = scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(worst, 3);
+    }
+
+    #[test]
+    fn multi_krum_filters_outlier_and_averages_rest() {
+        let mut rng = Pcg::seeded(3);
+        let mut rows = cluster(&mut rng, 4, 32, 0.01);
+        rows[0] = rows[0].iter().map(|x| -3.0 * x).collect();
+        let out = multi_krum(&rows, &[1.0; 4], 1, 3).unwrap();
+        assert_eq!(out.mask[0], 0.0);
+        assert_eq!(out.mask.iter().sum::<f32>(), 3.0);
+        // aggregate ≈ mean of rows 1..3
+        let manual = fedavg(&rows[1..], &[1.0; 3]).unwrap();
+        for (a, b) in out.aggregate.iter().zip(manual.iter()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn fedavg_weighted() {
+        let rows = vec![vec![1.0f32; 4], vec![4.0f32; 4]];
+        let avg = fedavg(&rows, &[3.0, 1.0]).unwrap();
+        for x in avg {
+            assert!((x - 1.75).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn arity_errors() {
+        let rows = vec![vec![0.0f32; 4]; 4];
+        assert!(krum_scores(&rows, 2).is_err()); // n-f-2 = 0
+        assert!(multi_krum(&rows, &[1.0; 3], 1, 3).is_err()); // weights arity
+        assert!(multi_krum(&rows, &[1.0; 4], 1, 0).is_err()); // m = 0
+        assert!(multi_krum(&rows, &[1.0; 4], 1, 5).is_err()); // m > n
+        let ragged = vec![vec![0.0f32; 4], vec![0.0f32; 3]];
+        assert!(krum_scores(&ragged, 0).is_err());
+    }
+
+    #[test]
+    fn prop_mask_selects_exactly_m() {
+        forall("mask-m", 11, 40, 10, |rng, size| {
+            let n = 4 + rng.gen_usize(7);
+            let f = rng.gen_usize((n - 3).max(1).min(n / 2) + 1);
+            let m = 1 + rng.gen_usize(n - f.max(1));
+            let d = 4 + size;
+            let rows: Vec<Vec<f32>> = (0..n).map(|_| gens::f32_vec(rng, d, 1.0)).collect();
+            (rows, f, m)
+        }, |(rows, f, m)| {
+            let out = match multi_krum(rows, &vec![1.0; rows.len()], *f, *m) {
+                Ok(o) => o,
+                Err(e) => return Err(format!("unexpected error: {e}")),
+            };
+            prop_assert!(
+                out.mask.iter().sum::<f32>() as usize == *m,
+                "mask selected {} != m {}", out.mask.iter().sum::<f32>(), m
+            );
+            prop_assert!(out.aggregate.iter().all(|x| x.is_finite()), "non-finite agg");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_aggregate_within_selected_hull_bounds() {
+        forall("agg-bounds", 13, 30, 8, |rng, size| {
+            let n = 5 + rng.gen_usize(5);
+            let d = 2 + size;
+            let rows: Vec<Vec<f32>> = (0..n).map(|_| gens::f32_vec(rng, d, 2.0)).collect();
+            rows
+        }, |rows| {
+            let n = rows.len();
+            let out = multi_krum(rows, &vec![1.0; n], 1, n - 1).map_err(|e| e.to_string())?;
+            for k in 0..rows[0].len() {
+                let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+                for i in 0..n {
+                    if out.mask[i] > 0.0 {
+                        lo = lo.min(rows[i][k]);
+                        hi = hi.max(rows[i][k]);
+                    }
+                }
+                prop_assert!(
+                    out.aggregate[k] >= lo - 1e-4 && out.aggregate[k] <= hi + 1e-4,
+                    "coordinate {k} escapes hull"
+                );
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,35 @@
+//! # DeFL — Decentralized Weight Aggregation for Cross-silo Federated Learning
+//!
+//! Reproduction of Han et al. (2022). DeFL removes the central parameter
+//! server of cross-silo FL: every node aggregates weights itself with a
+//! Multi-Krum weight filter (§3.2) and keeps `round_id` plus the weights of
+//! only the current and last round consistent via a HotStuff-based
+//! synchronizer (§3.3), with weight storage decoupled from consensus
+//! (§3.4).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * L3 (this crate): coordination — consensus, round state machine,
+//!   storage layer, baselines, experiment drivers.
+//! * L2 (python/compile, build time): jax train/eval/aggregation graphs,
+//!   AOT-lowered to `artifacts/*.hlo.txt`.
+//! * L1 (python/compile/kernels, build time): Pallas kernels (Gram-matrix
+//!   Multi-Krum hot spot, fused SGD) lowered inside the L2 graphs.
+//!
+//! The [`runtime`] module loads the artifacts through PJRT (`xla` crate);
+//! Python never runs on the request path.
+
+pub mod attacks;
+pub mod baselines;
+pub mod blockchain;
+pub mod config;
+pub mod crypto;
+pub mod defl;
+pub mod fl;
+pub mod hotstuff;
+pub mod krum;
+pub mod mempool;
+pub mod metrics;
+pub mod net;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,16 @@
+//! `defl` CLI — leader entrypoint for experiments and cluster runs.
+//!
+//! Subcommands:
+//!   run        one experiment (system × model × attack × scale), prints
+//!              accuracy + overhead summary
+//!   table      regenerate a paper table/figure (table1..table4, fig2, fig3)
+//!   inspect    print artifact + manifest info
+//!   help       usage
+
+fn main() {
+    defl::util::logging::init();
+    if let Err(e) = defl::sim::cli::main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

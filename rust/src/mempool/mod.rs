@@ -1,0 +1,184 @@
+//! Decoupled storage layer (DeFL §3.4): a digest-addressed weight pool.
+//!
+//! Consensus transactions carry only `Digest`s; the blobs themselves live
+//! here. The pool retains weights for at most τ ≥ 2 training rounds
+//! (current + last, §4.3), so storage is Mτn regardless of T — the 100×
+//! win over chain-based baselines in Figure 2. `gc(round)` drops
+//! everything older than `round − τ + 1`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::crypto::Digest;
+
+/// A stored weight blob, tagged with the round it belongs to.
+#[derive(Debug, Clone)]
+struct Entry {
+    round: u64,
+    weights: Vec<f32>,
+}
+
+/// Content-addressed, round-tagged weight pool with τ-round retention.
+#[derive(Debug)]
+pub struct WeightPool {
+    tau: u64,
+    entries: BTreeMap<Digest, Entry>,
+    /// Running byte gauge (4 bytes per f32 element).
+    bytes: u64,
+    /// Peak bytes ever resident (RAM model input).
+    peak_bytes: u64,
+}
+
+impl WeightPool {
+    pub fn new(tau: usize) -> WeightPool {
+        assert!(tau >= 2, "tau must cover current + last round");
+        WeightPool {
+            tau: tau as u64,
+            entries: BTreeMap::new(),
+            bytes: 0,
+            peak_bytes: 0,
+        }
+    }
+
+    /// Insert a blob under its content digest. Returns the digest.
+    /// Re-inserting identical content is a no-op (content addressing).
+    pub fn put(&mut self, round: u64, weights: Vec<f32>) -> Digest {
+        let digest = Digest::of_weights(&weights);
+        if let Some(prev) = self.entries.get_mut(&digest) {
+            // Same content seen again (e.g. re-broadcast): keep the newest
+            // round tag so GC doesn't reap a still-referenced blob.
+            prev.round = prev.round.max(round);
+            return digest;
+        }
+        self.bytes += (weights.len() * 4) as u64;
+        self.peak_bytes = self.peak_bytes.max(self.bytes);
+        self.entries.insert(digest, Entry { round, weights });
+        digest
+    }
+
+    /// Fetch and integrity-check a blob.
+    pub fn get(&self, digest: &Digest) -> Result<&[f32]> {
+        match self.entries.get(digest) {
+            Some(e) => Ok(&e.weights),
+            None => bail!("mempool: {} not present", digest.short()),
+        }
+    }
+
+    pub fn contains(&self, digest: &Digest) -> bool {
+        self.entries.contains_key(digest)
+    }
+
+    /// Drop all blobs older than `current_round − τ + 1`.
+    pub fn gc(&mut self, current_round: u64) {
+        let keep_from = current_round.saturating_sub(self.tau - 1);
+        let before = self.entries.len();
+        self.entries.retain(|_, e| e.round >= keep_from);
+        if self.entries.len() != before {
+            self.bytes = self
+                .entries
+                .values()
+                .map(|e| (e.weights.len() * 4) as u64)
+                .sum();
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob(tag: f32, len: usize) -> Vec<f32> {
+        (0..len).map(|i| tag + i as f32).collect()
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut p = WeightPool::new(2);
+        let w = blob(1.0, 100);
+        let d = p.put(0, w.clone());
+        assert_eq!(p.get(&d).unwrap(), &w[..]);
+        assert!(p.contains(&d));
+        assert_eq!(p.bytes(), 400);
+    }
+
+    #[test]
+    fn missing_digest_errors() {
+        let p = WeightPool::new(2);
+        assert!(p.get(&Digest::zero()).is_err());
+    }
+
+    #[test]
+    fn content_addressing_dedups() {
+        let mut p = WeightPool::new(2);
+        let d1 = p.put(0, blob(1.0, 10));
+        let d2 = p.put(1, blob(1.0, 10));
+        assert_eq!(d1, d2);
+        assert_eq!(p.len(), 1);
+        assert_eq!(p.bytes(), 40);
+    }
+
+    #[test]
+    fn gc_enforces_tau_rounds() {
+        let mut p = WeightPool::new(2);
+        let d0 = p.put(0, blob(0.0, 10));
+        let d1 = p.put(1, blob(1.0, 10));
+        let d2 = p.put(2, blob(2.0, 10));
+        p.gc(2); // keep rounds >= 1
+        assert!(!p.contains(&d0));
+        assert!(p.contains(&d1));
+        assert!(p.contains(&d2));
+        assert_eq!(p.bytes(), 80);
+    }
+
+    #[test]
+    fn storage_bounded_regardless_of_rounds() {
+        // The §4.3 claim: Mτn storage, independent of T.
+        let n = 4;
+        let tau = 2u64;
+        let mut p = WeightPool::new(tau as usize);
+        for round in 0..200u64 {
+            for node in 0..n {
+                p.put(round, blob(round as f32 * 10.0 + node as f32, 50));
+            }
+            p.gc(round);
+            assert!(
+                p.len() as u64 <= tau * n as u64,
+                "round {round}: {} entries > tau*n", p.len()
+            );
+        }
+        assert_eq!(p.bytes(), p.len() as u64 * 200);
+        assert!(p.peak_bytes() <= (tau * n as u64 + n as u64) * 200);
+    }
+
+    #[test]
+    fn reinsert_bumps_round_protects_from_gc() {
+        let mut p = WeightPool::new(2);
+        let d = p.put(0, blob(7.0, 10));
+        p.put(5, blob(7.0, 10)); // same content at a later round
+        p.gc(5);
+        assert!(p.contains(&d));
+    }
+
+    #[test]
+    #[should_panic(expected = "tau")]
+    fn tau_one_rejected() {
+        WeightPool::new(1);
+    }
+}

@@ -1,0 +1,313 @@
+//! Measurement instrumentation for the paper's Figure 2/3 overheads:
+//! per-node network bytes (split by traffic class), storage gauges
+//! (blockchain vs mempool), a RAM model, and latency histograms.
+
+use std::collections::BTreeMap;
+
+use crate::crypto::NodeId;
+
+/// Traffic classes so experiments can report consensus vs weight-transfer
+/// bandwidth separately (DeFL's sending-bandwidth win comes from the
+/// shared storage layer, §5.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Traffic {
+    /// Consensus / control-plane messages (HotStuff, server RPCs).
+    Consensus,
+    /// Weight blob transfers (storage layer / parameter push-pull).
+    Weights,
+    /// Blockchain block gossip (baselines).
+    Blocks,
+}
+
+impl Traffic {
+    pub const ALL: [Traffic; 3] = [Traffic::Consensus, Traffic::Weights, Traffic::Blocks];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Traffic::Consensus => "consensus",
+            Traffic::Weights => "weights",
+            Traffic::Blocks => "blocks",
+        }
+    }
+}
+
+/// Per-node send/receive byte meters.
+#[derive(Debug, Clone, Default)]
+pub struct NetMeter {
+    sent: BTreeMap<(NodeId, Traffic), u64>,
+    recv: BTreeMap<(NodeId, Traffic), u64>,
+    msgs_sent: BTreeMap<NodeId, u64>,
+}
+
+impl NetMeter {
+    pub fn new() -> NetMeter {
+        NetMeter::default()
+    }
+
+    pub fn on_send(&mut self, node: NodeId, class: Traffic, bytes: u64) {
+        *self.sent.entry((node, class)).or_default() += bytes;
+        *self.msgs_sent.entry(node).or_default() += 1;
+    }
+
+    pub fn on_recv(&mut self, node: NodeId, class: Traffic, bytes: u64) {
+        *self.recv.entry((node, class)).or_default() += bytes;
+    }
+
+    pub fn sent_by(&self, node: NodeId) -> u64 {
+        Traffic::ALL
+            .iter()
+            .map(|c| self.sent.get(&(node, *c)).copied().unwrap_or(0))
+            .sum()
+    }
+
+    pub fn recv_by(&self, node: NodeId) -> u64 {
+        Traffic::ALL
+            .iter()
+            .map(|c| self.recv.get(&(node, *c)).copied().unwrap_or(0))
+            .sum()
+    }
+
+    pub fn sent_class(&self, class: Traffic) -> u64 {
+        self.sent
+            .iter()
+            .filter(|((_, c), _)| *c == class)
+            .map(|(_, v)| *v)
+            .sum()
+    }
+
+    pub fn total_sent(&self) -> u64 {
+        self.sent.values().sum()
+    }
+
+    pub fn total_recv(&self) -> u64 {
+        self.recv.values().sum()
+    }
+
+    pub fn msgs_sent_by(&self, node: NodeId) -> u64 {
+        self.msgs_sent.get(&node).copied().unwrap_or(0)
+    }
+
+    /// Max over nodes of sent bytes — the "leader hot spot" detectability
+    /// signal the paper cites against Swarm Learning (§2).
+    pub fn max_node_sent(&self) -> u64 {
+        let nodes: std::collections::BTreeSet<NodeId> =
+            self.sent.keys().map(|(n, _)| *n).collect();
+        nodes.into_iter().map(|n| self.sent_by(n)).max().unwrap_or(0)
+    }
+
+    pub fn merge(&mut self, other: &NetMeter) {
+        for (k, v) in &other.sent {
+            *self.sent.entry(*k).or_default() += v;
+        }
+        for (k, v) in &other.recv {
+            *self.recv.entry(*k).or_default() += v;
+        }
+        for (k, v) in &other.msgs_sent {
+            *self.msgs_sent.entry(*k).or_default() += v;
+        }
+    }
+}
+
+/// Storage gauges per node: persistent chain bytes vs transient pool bytes.
+#[derive(Debug, Clone, Default)]
+pub struct StorageMeter {
+    chain: BTreeMap<NodeId, u64>,
+    pool: BTreeMap<NodeId, u64>,
+    pool_peak: BTreeMap<NodeId, u64>,
+}
+
+impl StorageMeter {
+    pub fn new() -> StorageMeter {
+        StorageMeter::default()
+    }
+
+    pub fn chain_grow(&mut self, node: NodeId, bytes: u64) {
+        *self.chain.entry(node).or_default() += bytes;
+    }
+
+    pub fn pool_set(&mut self, node: NodeId, bytes: u64) {
+        self.pool.insert(node, bytes);
+        let peak = self.pool_peak.entry(node).or_default();
+        *peak = (*peak).max(bytes);
+    }
+
+    pub fn chain_bytes(&self, node: NodeId) -> u64 {
+        self.chain.get(&node).copied().unwrap_or(0)
+    }
+
+    pub fn pool_bytes(&self, node: NodeId) -> u64 {
+        self.pool.get(&node).copied().unwrap_or(0)
+    }
+
+    pub fn pool_peak(&self, node: NodeId) -> u64 {
+        self.pool_peak.get(&node).copied().unwrap_or(0)
+    }
+
+    pub fn total_chain(&self) -> u64 {
+        self.chain.values().sum()
+    }
+
+    /// Persistent storage per node averaged (the Figure 2 "Storage" bar:
+    /// only the blockchain is measured, "for fairness" per §5.3).
+    pub fn avg_chain(&self, n_nodes: usize) -> u64 {
+        if n_nodes == 0 {
+            0
+        } else {
+            self.total_chain() / n_nodes as u64
+        }
+    }
+}
+
+/// Resident-memory model: the paper's Figure 2 RAM bar. Counted parts:
+/// weights resident per node (model + per-peer cached rounds) plus fixed
+/// process overhead. GPU memory in the paper is identical across systems
+/// (same model); we report the model bytes for completeness.
+#[derive(Debug, Clone, Copy)]
+pub struct RamModel {
+    /// Fixed per-process overhead (runtime, executables, buffers).
+    pub fixed_bytes: u64,
+    /// One model's weight bytes (M).
+    pub weight_bytes: u64,
+}
+
+impl RamModel {
+    /// Resident bytes for a node holding `cached_weight_copies` weight
+    /// vectors (e.g. DeFL: τ·n copies; FL client: 2).
+    pub fn resident(&self, cached_weight_copies: usize) -> u64 {
+        self.fixed_bytes + self.weight_bytes * cached_weight_copies as u64
+    }
+}
+
+/// Fixed-boundary latency histogram (µs) with p50/p95/p99.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    bounds: Vec<u64>,
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        // exponential bounds 1us .. ~17min
+        let bounds: Vec<u64> = (0..40).map(|i| 1u64 << i).collect();
+        Histogram {
+            counts: vec![0; 41],
+            bounds,
+            total: 0,
+            sum: 0,
+            max: 0,
+        }
+    }
+
+    pub fn record(&mut self, value_us: u64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|b| value_us <= *b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += value_us as u128;
+        self.max = self.max.max(value_us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i < self.bounds.len() { self.bounds[i] } else { self.max };
+            }
+        }
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn net_meter_accumulates_by_class() {
+        let mut m = NetMeter::new();
+        m.on_send(0, Traffic::Consensus, 100);
+        m.on_send(0, Traffic::Weights, 4000);
+        m.on_send(1, Traffic::Weights, 500);
+        m.on_recv(1, Traffic::Weights, 4000);
+        assert_eq!(m.sent_by(0), 4100);
+        assert_eq!(m.sent_by(1), 500);
+        assert_eq!(m.recv_by(1), 4000);
+        assert_eq!(m.sent_class(Traffic::Weights), 4500);
+        assert_eq!(m.total_sent(), 4600);
+        assert_eq!(m.msgs_sent_by(0), 2);
+        assert_eq!(m.max_node_sent(), 4100);
+    }
+
+    #[test]
+    fn net_meter_merge() {
+        let mut a = NetMeter::new();
+        a.on_send(0, Traffic::Blocks, 10);
+        let mut b = NetMeter::new();
+        b.on_send(0, Traffic::Blocks, 5);
+        b.on_recv(2, Traffic::Consensus, 7);
+        a.merge(&b);
+        assert_eq!(a.sent_by(0), 15);
+        assert_eq!(a.recv_by(2), 7);
+    }
+
+    #[test]
+    fn storage_meter_chain_vs_pool() {
+        let mut s = StorageMeter::new();
+        s.chain_grow(0, 1000);
+        s.chain_grow(0, 1000);
+        s.pool_set(0, 300);
+        s.pool_set(0, 120); // pool can shrink (τ-round GC)
+        assert_eq!(s.chain_bytes(0), 2000);
+        assert_eq!(s.pool_bytes(0), 120);
+        assert_eq!(s.pool_peak(0), 300);
+        assert_eq!(s.avg_chain(2), 1000);
+    }
+
+    #[test]
+    fn ram_model_counts_copies() {
+        let ram = RamModel { fixed_bytes: 1_000_000, weight_bytes: 40_000 };
+        assert_eq!(ram.resident(2), 1_080_000);
+        assert!(ram.resident(20) > ram.resident(2));
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = Histogram::new();
+        for v in [1u64, 2, 3, 10, 100, 1000, 10_000, 100_000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 8);
+        assert!(h.quantile(0.5) <= h.quantile(0.95));
+        assert!(h.quantile(0.95) <= h.quantile(1.0));
+        assert!(h.mean() > 0.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Networking: a deterministic discrete-event simulator (the default
+//! experiment substrate, with exact byte accounting for Figures 2/3 and
+//! fault injection for the threat models) and a real TCP transport that
+//! runs the same actor code over localhost sockets.
+
+pub mod sim;
+pub mod tcp;
+
+pub use sim::{Actor, Ctx, SimConfig, SimNet};

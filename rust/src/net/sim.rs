@@ -1,0 +1,530 @@
+//! Deterministic discrete-event network simulator.
+//!
+//! Every protocol in this repo (HotStuff replicas, DeFL clients, the
+//! central-server / Swarm / Biscotti baselines) is written as an [`Actor`]
+//! state machine driven by messages and timers. The simulator provides:
+//!
+//! * a virtual clock (µs) and an ordered event queue — runs are exactly
+//!   reproducible from the seed;
+//! * per-link latency with optional jitter and drop probability;
+//! * per-node crash / partition / slowdown fault injection (the §3.1
+//!   faulty-node model);
+//! * exact per-node byte meters split by traffic class ([`NetMeter`]),
+//!   which is what Figures 2/3 report;
+//! * `multicast` with single-send accounting, modelling DeFL's shared
+//!   memory pool (§5.3: DeFL's *sending* bandwidth stays linear in n
+//!   while everyone still receives every blob).
+
+use std::any::Any;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashSet};
+
+use crate::crypto::NodeId;
+use crate::metrics::{NetMeter, Traffic};
+use crate::util::Pcg;
+
+/// Per-message wire overhead we account besides the payload (frame header,
+/// addressing, auth tag) — keeps byte meters honest for tiny messages.
+pub const HEADER_BYTES: u64 = 48;
+
+/// Simulation parameters.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub n_nodes: usize,
+    /// Base one-way link latency in µs.
+    pub latency_us: u64,
+    /// Uniform extra jitter in [0, jitter_us].
+    pub jitter_us: u64,
+    /// Probability a unicast message is dropped (faulty network).
+    pub drop_prob: f64,
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            n_nodes: 4,
+            latency_us: 200,
+            jitter_us: 50,
+            drop_prob: 0.0,
+            seed: 7,
+        }
+    }
+}
+
+/// A protocol state machine hosted by the simulator.
+pub trait Actor {
+    /// Called once at t=0 (schedule initial timers, send first messages).
+    fn on_start(&mut self, ctx: &mut Ctx);
+    /// A message from `from` arrived.
+    fn on_message(&mut self, ctx: &mut Ctx, from: NodeId, class: Traffic, bytes: &[u8]);
+    /// A timer set via `ctx.set_timer` fired.
+    fn on_timer(&mut self, ctx: &mut Ctx, timer_id: u64);
+    /// Downcast hook so experiments can extract actor state after a run.
+    fn as_any(&mut self) -> &mut dyn Any;
+}
+
+/// Side-effect collector handed to actors; the simulator applies the
+/// queued sends/timers after the callback returns.
+pub struct Ctx {
+    pub node: NodeId,
+    now_us: u64,
+    n_nodes: usize,
+    pub rng: Pcg,
+    sends: Vec<(NodeId, Traffic, Vec<u8>)>,
+    multicasts: Vec<(Traffic, Vec<u8>)>,
+    timers: Vec<(u64, u64)>, // (delay_us, id)
+    halted: bool,
+}
+
+impl Ctx {
+    pub fn now_us(&self) -> u64 {
+        self.now_us
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    /// Unicast `bytes` to `to`.
+    pub fn send(&mut self, to: NodeId, class: Traffic, bytes: Vec<u8>) {
+        self.sends.push((to, class, bytes));
+    }
+
+    /// Unicast to every other node (n−1 sends, each metered).
+    pub fn broadcast(&mut self, class: Traffic, bytes: Vec<u8>) {
+        for to in 0..self.n_nodes as NodeId {
+            if to != self.node {
+                self.sends.push((to, class, bytes.clone()));
+            }
+        }
+    }
+
+    /// Publish to the shared storage layer: metered as ONE send at the
+    /// publisher, but delivered to (and metered at) every other node.
+    pub fn multicast(&mut self, class: Traffic, bytes: Vec<u8>) {
+        self.multicasts.push((class, bytes));
+    }
+
+    /// Schedule `on_timer(id)` after `delay_us`.
+    pub fn set_timer(&mut self, delay_us: u64, id: u64) {
+        self.timers.push((delay_us, id));
+    }
+
+    /// Stop the whole simulation (experiment finished).
+    pub fn halt(&mut self) {
+        self.halted = true;
+    }
+}
+
+#[derive(Debug)]
+enum EventKind {
+    Start,
+    Deliver { from: NodeId, class: Traffic, bytes: Vec<u8> },
+    Timer { id: u64 },
+}
+
+struct Event {
+    at_us: u64,
+    seq: u64,
+    node: NodeId,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        (self.at_us, self.seq) == (other.at_us, other.seq)
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at_us, self.seq).cmp(&(other.at_us, other.seq))
+    }
+}
+
+/// The simulator.
+pub struct SimNet {
+    cfg: SimConfig,
+    time_us: u64,
+    seq: u64,
+    queue: BinaryHeap<Reverse<Event>>,
+    actors: Vec<Box<dyn Actor>>,
+    pub meter: NetMeter,
+    crashed: HashSet<NodeId>,
+    /// Nodes whose message processing is delayed by a factor (slow nodes).
+    slowdown: Vec<f64>,
+    /// Partitioned node pairs (messages silently dropped both ways).
+    cut_links: HashSet<(NodeId, NodeId)>,
+    rng: Pcg,
+    halted: bool,
+    events_processed: u64,
+}
+
+impl SimNet {
+    pub fn new(cfg: SimConfig, actors: Vec<Box<dyn Actor>>) -> SimNet {
+        assert_eq!(cfg.n_nodes, actors.len(), "one actor per node");
+        let rng = Pcg::new(cfg.seed, 0x5151);
+        let n = cfg.n_nodes;
+        let mut net = SimNet {
+            cfg,
+            time_us: 0,
+            seq: 0,
+            queue: BinaryHeap::new(),
+            actors,
+            meter: NetMeter::new(),
+            crashed: HashSet::new(),
+            slowdown: vec![1.0; n],
+            cut_links: HashSet::new(),
+            rng,
+            halted: false,
+            events_processed: 0,
+        };
+        for node in 0..n as NodeId {
+            net.push(0, node, EventKind::Start);
+        }
+        net
+    }
+
+    pub fn now_us(&self) -> u64 {
+        self.time_us
+    }
+
+    pub fn events_processed(&self) -> u64 {
+        self.events_processed
+    }
+
+    /// Crash a node: it stops receiving events from now on.
+    pub fn crash(&mut self, node: NodeId) {
+        self.crashed.insert(node);
+    }
+
+    pub fn is_crashed(&self, node: NodeId) -> bool {
+        self.crashed.contains(&node)
+    }
+
+    /// Slow a node's timer/compute handling by `factor` (≥ 1.0).
+    pub fn set_slowdown(&mut self, node: NodeId, factor: f64) {
+        assert!(factor >= 1.0);
+        self.slowdown[node as usize] = factor;
+    }
+
+    /// Cut both directions between a and b.
+    pub fn partition(&mut self, a: NodeId, b: NodeId) {
+        self.cut_links.insert((a.min(b), a.max(b)));
+    }
+
+    pub fn heal(&mut self, a: NodeId, b: NodeId) {
+        self.cut_links.remove(&(a.min(b), a.max(b)));
+    }
+
+    fn link_cut(&self, a: NodeId, b: NodeId) -> bool {
+        self.cut_links.contains(&(a.min(b), a.max(b)))
+    }
+
+    fn push(&mut self, at_us: u64, node: NodeId, kind: EventKind) {
+        self.seq += 1;
+        self.queue.push(Reverse(Event { at_us, seq: self.seq, node, kind }));
+    }
+
+    fn link_delay(&mut self) -> u64 {
+        let jitter = if self.cfg.jitter_us > 0 {
+            self.rng.gen_range(self.cfg.jitter_us + 1)
+        } else {
+            0
+        };
+        self.cfg.latency_us + jitter
+    }
+
+    fn route(&mut self, from: NodeId, to: NodeId, class: Traffic, bytes: Vec<u8>, meter_send: bool) {
+        let wire = bytes.len() as u64 + HEADER_BYTES;
+        if meter_send {
+            self.meter.on_send(from, class, wire);
+        }
+        if self.link_cut(from, to) || self.crashed.contains(&to) {
+            return; // bytes left the sender but never arrive
+        }
+        if self.cfg.drop_prob > 0.0 && self.rng.f64() < self.cfg.drop_prob {
+            return;
+        }
+        let delay = self.link_delay();
+        self.push(self.time_us + delay, to, EventKind::Deliver { from, class, bytes });
+    }
+
+    fn apply_ctx(&mut self, node: NodeId, ctx: Ctx) {
+        let slow = self.slowdown[node as usize];
+        for (to, class, bytes) in ctx.sends {
+            self.route(node, to, class, bytes, true);
+        }
+        for (class, bytes) in ctx.multicasts {
+            // Single-send accounting at the publisher…
+            let wire = bytes.len() as u64 + HEADER_BYTES;
+            self.meter.on_send(node, class, wire);
+            // …delivery (and receive accounting) at every peer.
+            for to in 0..self.cfg.n_nodes as NodeId {
+                if to != node {
+                    self.route(node, to, class, bytes.clone(), false);
+                }
+            }
+        }
+        for (delay, id) in ctx.timers {
+            let scaled = (delay as f64 * slow) as u64;
+            self.push(self.time_us + scaled, node, EventKind::Timer { id });
+        }
+        if ctx.halted {
+            self.halted = true;
+        }
+    }
+
+    fn dispatch(&mut self, ev: Event) {
+        if self.crashed.contains(&ev.node) {
+            return;
+        }
+        let mut ctx = Ctx {
+            node: ev.node,
+            now_us: self.time_us,
+            n_nodes: self.cfg.n_nodes,
+            rng: self.rng.fork(ev.seq),
+            sends: Vec::new(),
+            multicasts: Vec::new(),
+            timers: Vec::new(),
+            halted: false,
+        };
+        // Temporarily move the actor out to satisfy the borrow checker.
+        let mut actor = std::mem::replace(&mut self.actors[ev.node as usize], Box::new(Noop));
+        match ev.kind {
+            EventKind::Start => actor.on_start(&mut ctx),
+            EventKind::Deliver { from, class, bytes } => {
+                let wire = bytes.len() as u64 + HEADER_BYTES;
+                self.meter.on_recv(ev.node, class, wire);
+                actor.on_message(&mut ctx, from, class, &bytes);
+            }
+            EventKind::Timer { id } => actor.on_timer(&mut ctx, id),
+        }
+        self.actors[ev.node as usize] = actor;
+        self.apply_ctx(ev.node, ctx);
+        self.events_processed += 1;
+    }
+
+    /// Run until the queue drains, an actor halts, or `max_events`.
+    pub fn run(&mut self, max_events: u64) {
+        while !self.halted && self.events_processed < max_events {
+            let Some(Reverse(ev)) = self.queue.pop() else { break };
+            debug_assert!(ev.at_us >= self.time_us, "time went backwards");
+            self.time_us = ev.at_us;
+            self.dispatch(ev);
+        }
+    }
+
+    /// Run until the virtual clock passes `deadline_us` (or halt/drain).
+    pub fn run_until(&mut self, deadline_us: u64, max_events: u64) {
+        while !self.halted && self.events_processed < max_events {
+            let Some(Reverse(ev)) = self.queue.peek() else { break };
+            if ev.at_us > deadline_us {
+                self.time_us = deadline_us;
+                break;
+            }
+            let Reverse(ev) = self.queue.pop().unwrap();
+            self.time_us = ev.at_us;
+            self.dispatch(ev);
+        }
+    }
+
+    pub fn halted(&self) -> bool {
+        self.halted
+    }
+
+    /// Borrow an actor back as its concrete type (post-run extraction).
+    pub fn actor_as<T: 'static>(&mut self, node: NodeId) -> Option<&mut T> {
+        self.actors[node as usize].as_any().downcast_mut::<T>()
+    }
+}
+
+/// Placeholder actor used during dispatch swaps.
+struct Noop;
+
+impl Actor for Noop {
+    fn on_start(&mut self, _: &mut Ctx) {}
+    fn on_message(&mut self, _: &mut Ctx, _: NodeId, _: Traffic, _: &[u8]) {}
+    fn on_timer(&mut self, _: &mut Ctx, _: u64) {}
+    fn as_any(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Ping-pong actor: counts round trips.
+    struct Pinger {
+        peer: NodeId,
+        initiator: bool,
+        pings: u32,
+        max: u32,
+    }
+
+    impl Actor for Pinger {
+        fn on_start(&mut self, ctx: &mut Ctx) {
+            if self.initiator {
+                ctx.send(self.peer, Traffic::Consensus, vec![0]);
+            }
+        }
+        fn on_message(&mut self, ctx: &mut Ctx, from: NodeId, _: Traffic, bytes: &[u8]) {
+            self.pings += 1;
+            if self.pings >= self.max {
+                ctx.halt();
+                return;
+            }
+            ctx.send(from, Traffic::Consensus, bytes.to_vec());
+        }
+        fn on_timer(&mut self, _: &mut Ctx, _: u64) {}
+        fn as_any(&mut self) -> &mut dyn Any {
+            self
+        }
+    }
+
+    fn two_pingers(max: u32) -> SimNet {
+        let cfg = SimConfig { n_nodes: 2, latency_us: 100, jitter_us: 0, ..Default::default() };
+        SimNet::new(cfg, vec![
+            Box::new(Pinger { peer: 1, initiator: true, pings: 0, max }),
+            Box::new(Pinger { peer: 0, initiator: false, pings: 0, max }),
+        ])
+    }
+
+    #[test]
+    fn pingpong_advances_virtual_time() {
+        let mut net = two_pingers(10);
+        net.run(10_000);
+        assert!(net.halted());
+        // node1 receives on odd hops; its 10th receipt is hop 19, and each
+        // one-way hop takes exactly 100us.
+        assert_eq!(net.now_us(), 19 * 100);
+    }
+
+    #[test]
+    fn byte_meters_count_header_plus_payload() {
+        let mut net = two_pingers(3);
+        net.run(10_000);
+        // Hops until node1's 3rd receipt: 0->1, 1->0, 0->1, 1->0, 0->1.
+        assert_eq!(net.meter.sent_by(0), 3 * (1 + HEADER_BYTES));
+        assert_eq!(net.meter.sent_by(1), 2 * (1 + HEADER_BYTES));
+        assert_eq!(net.meter.recv_by(1), 3 * (1 + HEADER_BYTES));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            let mut net = two_pingers(50);
+            net.run(1_000_000);
+            (net.now_us(), net.meter.total_sent(), net.events_processed())
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn crash_stops_delivery() {
+        let mut net = two_pingers(1000);
+        net.crash(1);
+        net.run(10_000);
+        assert!(!net.halted());
+        assert_eq!(net.meter.recv_by(1), 0);
+    }
+
+    #[test]
+    fn partition_drops_both_ways() {
+        let mut net = two_pingers(1000);
+        net.partition(0, 1);
+        net.run(10_000);
+        // send metered, nothing received
+        assert!(net.meter.sent_by(0) > 0);
+        assert_eq!(net.meter.recv_by(1), 0);
+        net.heal(0, 1);
+    }
+
+    /// Broadcaster for multicast accounting.
+    struct Caster {
+        got: u32,
+    }
+    impl Actor for Caster {
+        fn on_start(&mut self, ctx: &mut Ctx) {
+            if ctx.node == 0 {
+                ctx.multicast(Traffic::Weights, vec![0u8; 1000]);
+                ctx.broadcast(Traffic::Consensus, vec![0u8; 10]);
+            }
+        }
+        fn on_message(&mut self, _: &mut Ctx, _: NodeId, _: Traffic, _: &[u8]) {
+            self.got += 1;
+        }
+        fn on_timer(&mut self, _: &mut Ctx, _: u64) {}
+        fn as_any(&mut self) -> &mut dyn Any {
+            self
+        }
+    }
+
+    #[test]
+    fn multicast_single_send_all_receive() {
+        let cfg = SimConfig { n_nodes: 5, ..Default::default() };
+        let actors: Vec<Box<dyn Actor>> = (0..5).map(|_| Box::new(Caster { got: 0 }) as Box<dyn Actor>).collect();
+        let mut net = SimNet::new(cfg, actors);
+        net.run(1_000);
+        let blob = 1000 + HEADER_BYTES;
+        let ctl = 10 + HEADER_BYTES;
+        // one multicast send + 4 broadcast unicasts
+        assert_eq!(net.meter.sent_by(0), blob + 4 * ctl);
+        for n in 1..5 {
+            assert_eq!(net.meter.recv_by(n), blob + ctl);
+            assert_eq!(net.actor_as::<Caster>(n).unwrap().got, 2);
+        }
+    }
+
+    #[test]
+    fn slowdown_delays_timers() {
+        struct T {
+            fired_at: u64,
+        }
+        impl Actor for T {
+            fn on_start(&mut self, ctx: &mut Ctx) {
+                ctx.set_timer(1000, 1);
+            }
+            fn on_message(&mut self, _: &mut Ctx, _: NodeId, _: Traffic, _: &[u8]) {}
+            fn on_timer(&mut self, ctx: &mut Ctx, _: u64) {
+                self.fired_at = ctx.now_us();
+                ctx.halt();
+            }
+            fn as_any(&mut self) -> &mut dyn Any {
+                self
+            }
+        }
+        let cfg = SimConfig { n_nodes: 1, ..Default::default() };
+        let mut net = SimNet::new(cfg.clone(), vec![Box::new(T { fired_at: 0 })]);
+        net.set_slowdown(0, 3.0);
+        net.run(100);
+        assert_eq!(net.actor_as::<T>(0).unwrap().fired_at, 3000);
+    }
+
+    #[test]
+    fn run_until_respects_deadline() {
+        let mut net = two_pingers(1_000_000);
+        net.run_until(550, u64::MAX);
+        assert!(net.now_us() <= 550);
+        assert!(net.events_processed() > 0);
+    }
+
+    #[test]
+    fn drop_prob_loses_messages() {
+        let cfg = SimConfig { n_nodes: 2, drop_prob: 1.0, ..Default::default() };
+        let mut net = SimNet::new(cfg, vec![
+            Box::new(Pinger { peer: 1, initiator: true, pings: 0, max: 10 }),
+            Box::new(Pinger { peer: 0, initiator: false, pings: 0, max: 10 }),
+        ]);
+        net.run(1000);
+        assert_eq!(net.meter.recv_by(1), 0);
+        assert!(net.meter.sent_by(0) > 0);
+    }
+}

@@ -1,0 +1,215 @@
+//! TCP transport: the same framed messages the simulator carries, over
+//! real sockets. Used by `examples/tcp_cluster.rs` to demonstrate that the
+//! actor code is transport-agnostic (deployment path), and by the
+//! integration tests over localhost.
+//!
+//! Frame layout (little-endian): `from: u32, class: u8, len: u32, payload`.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::crypto::NodeId;
+use crate::metrics::Traffic;
+
+fn class_to_u8(c: Traffic) -> u8 {
+    match c {
+        Traffic::Consensus => 0,
+        Traffic::Weights => 1,
+        Traffic::Blocks => 2,
+    }
+}
+
+fn class_from_u8(b: u8) -> Result<Traffic> {
+    Ok(match b {
+        0 => Traffic::Consensus,
+        1 => Traffic::Weights,
+        2 => Traffic::Blocks,
+        _ => bail!("bad traffic class {b}"),
+    })
+}
+
+/// An inbound message.
+#[derive(Debug)]
+pub struct Inbound {
+    pub from: NodeId,
+    pub class: Traffic,
+    pub bytes: Vec<u8>,
+}
+
+fn write_frame(stream: &mut TcpStream, from: NodeId, class: Traffic, bytes: &[u8]) -> Result<()> {
+    let mut hdr = [0u8; 9];
+    hdr[..4].copy_from_slice(&from.to_le_bytes());
+    hdr[4] = class_to_u8(class);
+    hdr[5..9].copy_from_slice(&(bytes.len() as u32).to_le_bytes());
+    stream.write_all(&hdr)?;
+    stream.write_all(bytes)?;
+    Ok(())
+}
+
+fn read_frame(stream: &mut TcpStream) -> Result<Inbound> {
+    let mut hdr = [0u8; 9];
+    stream.read_exact(&mut hdr)?;
+    let from = NodeId::from_le_bytes(hdr[..4].try_into().unwrap());
+    let class = class_from_u8(hdr[4])?;
+    let len = u32::from_le_bytes(hdr[5..9].try_into().unwrap()) as usize;
+    if len > 1 << 30 {
+        bail!("frame too large: {len}");
+    }
+    let mut bytes = vec![0u8; len];
+    stream.read_exact(&mut bytes)?;
+    Ok(Inbound { from, class, bytes })
+}
+
+/// One node's endpoint in a fully-connected TCP mesh.
+pub struct TcpNode {
+    pub id: NodeId,
+    peers: Vec<Option<Arc<Mutex<TcpStream>>>>,
+    rx: Receiver<Inbound>,
+    _threads: Vec<JoinHandle<()>>,
+}
+
+impl TcpNode {
+    /// Join a mesh: listen on `addrs[id]`, accept connections from lower
+    /// ids, dial higher ids. Returns once fully connected to all peers.
+    pub fn connect_mesh(id: NodeId, addrs: &[SocketAddr]) -> Result<TcpNode> {
+        let n = addrs.len();
+        let listener = TcpListener::bind(addrs[id as usize])
+            .with_context(|| format!("bind {}", addrs[id as usize]))?;
+        let (tx, rx) = channel::<Inbound>();
+        let mut peers: Vec<Option<Arc<Mutex<TcpStream>>>> = (0..n).map(|_| None).collect();
+        let mut threads = Vec::new();
+
+        // Accept from lower ids; they identify themselves with a hello byte
+        // frame (from field of the first frame).
+        let mut expected_accepts = id as usize;
+        while expected_accepts > 0 {
+            let (mut stream, _) = listener.accept()?;
+            stream.set_nodelay(true).ok();
+            let hello = read_frame(&mut stream)?;
+            let peer_id = hello.from;
+            if peer_id as usize >= n || peer_id >= id {
+                bail!("unexpected hello from {peer_id}");
+            }
+            peers[peer_id as usize] = Some(Arc::new(Mutex::new(stream.try_clone()?)));
+            threads.push(Self::reader(stream, tx.clone()));
+            expected_accepts -= 1;
+        }
+
+        // Dial higher ids (retry while they come up).
+        for peer in (id as usize + 1)..n {
+            let stream = Self::dial(addrs[peer], Duration::from_secs(10))?;
+            stream.set_nodelay(true).ok();
+            let mut s = stream.try_clone()?;
+            write_frame(&mut s, id, Traffic::Consensus, b"hello")?; // hello frame
+            peers[peer] = Some(Arc::new(Mutex::new(stream.try_clone()?)));
+            threads.push(Self::reader(stream, tx.clone()));
+        }
+
+        Ok(TcpNode { id, peers, rx, _threads: threads })
+    }
+
+    fn dial(addr: SocketAddr, budget: Duration) -> Result<TcpStream> {
+        let deadline = std::time::Instant::now() + budget;
+        loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => return Ok(s),
+                Err(e) => {
+                    if std::time::Instant::now() > deadline {
+                        bail!("dial {addr}: {e}");
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        }
+    }
+
+    fn reader(mut stream: TcpStream, tx: Sender<Inbound>) -> JoinHandle<()> {
+        std::thread::spawn(move || loop {
+            match read_frame(&mut stream) {
+                Ok(msg) => {
+                    // Swallow the handshake frame.
+                    if msg.bytes == b"hello" && msg.class == Traffic::Consensus {
+                        continue;
+                    }
+                    if tx.send(msg).is_err() {
+                        return;
+                    }
+                }
+                Err(_) => return, // peer closed
+            }
+        })
+    }
+
+    pub fn send(&self, to: NodeId, class: Traffic, bytes: &[u8]) -> Result<()> {
+        let Some(peer) = self.peers.get(to as usize).and_then(|p| p.as_ref()) else {
+            bail!("no connection to {to}");
+        };
+        let mut stream = peer.lock().unwrap();
+        write_frame(&mut stream, self.id, class, bytes)
+    }
+
+    pub fn broadcast(&self, class: Traffic, bytes: &[u8]) -> Result<()> {
+        for (peer, conn) in self.peers.iter().enumerate() {
+            if conn.is_some() {
+                self.send(peer as NodeId, class, bytes)?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<Inbound> {
+        self.rx.recv_timeout(timeout).ok()
+    }
+}
+
+/// Allocate n consecutive localhost addresses starting at `base_port`.
+pub fn local_addrs(n: usize, base_port: u16) -> Vec<SocketAddr> {
+    (0..n)
+        .map(|i| format!("127.0.0.1:{}", base_port + i as u16).parse().unwrap())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn three_node_mesh_roundtrip() {
+        let addrs = local_addrs(3, 39115);
+        let mut handles = Vec::new();
+        for id in 0..3u32 {
+            let addrs = addrs.clone();
+            handles.push(std::thread::spawn(move || {
+                let node = TcpNode::connect_mesh(id, &addrs).unwrap();
+                // Everyone broadcasts its id, then collects 2 messages.
+                node.broadcast(Traffic::Weights, &[id as u8; 16]).unwrap();
+                let mut got = Vec::new();
+                while got.len() < 2 {
+                    let m = node.recv_timeout(Duration::from_secs(10)).expect("recv");
+                    assert_eq!(m.bytes.len(), 16);
+                    assert_eq!(m.bytes[0] as u32, m.from);
+                    assert_eq!(m.class, Traffic::Weights);
+                    got.push(m.from);
+                }
+                got.sort_unstable();
+                got
+            }));
+        }
+        let results: Vec<Vec<u32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(results[0], vec![1, 2]);
+        assert_eq!(results[1], vec![0, 2]);
+        assert_eq!(results[2], vec![0, 1]);
+    }
+
+    #[test]
+    fn bad_class_rejected() {
+        assert!(class_from_u8(9).is_err());
+        assert_eq!(class_from_u8(1).unwrap(), Traffic::Weights);
+    }
+}

@@ -1,0 +1,402 @@
+//! The `Engine`: one PJRT CPU client plus a cache of compiled executables
+//! for a model track (train / eval / init / krum_{n,f} / fedavg_n).
+//!
+//! Executables compile lazily on first use and are cached for the process
+//! lifetime; every simulated node shares the engine (they would each own
+//! one in a real deployment — weights are still passed explicitly, so
+//! sharing changes no observable behaviour, only memory).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::manifest::{Manifest, ModelMeta, XDtype};
+use crate::config::Model;
+
+/// A data batch in the model's input dtype.
+#[derive(Debug, Clone)]
+pub enum Batch {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Batch {
+    pub fn len_elems(&self) -> usize {
+        match self {
+            Batch::F32(v) => v.len(),
+            Batch::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Output of one local SGD step.
+#[derive(Debug)]
+pub struct TrainOutput {
+    pub theta: Vec<f32>,
+    pub loss: f32,
+}
+
+/// Output of the Multi-Krum artifact.
+#[derive(Debug)]
+pub struct KrumResult {
+    pub aggregate: Vec<f32>,
+    pub scores: Vec<f32>,
+    pub mask: Vec<f32>,
+}
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    meta: ModelMeta,
+    model: Model,
+    exes: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// Executions performed, by artifact stem (profiling hook).
+    exec_counts: Mutex<HashMap<String, u64>>,
+}
+
+impl Engine {
+    /// Create an engine for one model track from the artifact manifest.
+    pub fn new(manifest: Manifest, model: Model) -> Result<Engine> {
+        let meta = manifest.model(model)?.clone();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Engine {
+            client,
+            manifest,
+            meta,
+            model,
+            exes: Mutex::new(HashMap::new()),
+            exec_counts: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Engine over the default artifacts directory.
+    pub fn load_default(model: Model) -> Result<Engine> {
+        Engine::new(Manifest::load_default()?, model)
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    pub fn model(&self) -> Model {
+        self.model
+    }
+
+    /// Flat parameter dimension D.
+    pub fn dim(&self) -> usize {
+        self.meta.dim
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.meta.batch
+    }
+
+    fn run(&self, stem: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        // Compile-on-first-use under the cache lock; execution afterwards.
+        {
+            let mut exes = self.exes.lock().unwrap();
+            if !exes.contains_key(stem) {
+                let path = self.manifest.artifact(stem)?;
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("artifact path utf8")?,
+                )
+                .map_err(|e| anyhow!("parse {stem}: {e:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compile {stem}: {e:?}"))?;
+                exes.insert(stem.to_string(), exe);
+            }
+        }
+        let exes = self.exes.lock().unwrap();
+        let exe = exes.get(stem).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {stem}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {stem}: {e:?}"))?;
+        *self
+            .exec_counts
+            .lock()
+            .unwrap()
+            .entry(stem.to_string())
+            .or_default() += 1;
+        // aot.py lowers with return_tuple=True: always a tuple literal.
+        lit.to_tuple().map_err(|e| anyhow!("untuple {stem}: {e:?}"))
+    }
+
+    pub fn exec_counts(&self) -> HashMap<String, u64> {
+        self.exec_counts.lock().unwrap().clone()
+    }
+
+    fn lit_f32(v: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        xla::Literal::vec1(v)
+            .reshape(dims)
+            .map_err(|e| anyhow!("reshape f32 {dims:?}: {e:?}"))
+    }
+
+    fn lit_i32(v: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+        xla::Literal::vec1(v)
+            .reshape(dims)
+            .map_err(|e| anyhow!("reshape i32 {dims:?}: {e:?}"))
+    }
+
+    fn batch_literal(&self, x: &Batch) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.meta.x_shape.iter().map(|&d| d as i64).collect();
+        let want: usize = self.meta.x_shape.iter().product();
+        match (x, self.meta.x_dtype) {
+            (Batch::F32(v), XDtype::F32) => {
+                if v.len() != want {
+                    bail!("batch len {} != {}", v.len(), want);
+                }
+                Self::lit_f32(v, &dims)
+            }
+            (Batch::I32(v), XDtype::I32) => {
+                if v.len() != want {
+                    bail!("batch len {} != {}", v.len(), want);
+                }
+                Self::lit_i32(v, &dims)
+            }
+            _ => bail!("batch dtype mismatch for model {}", self.meta.name),
+        }
+    }
+
+    fn check_theta(&self, theta: &[f32]) -> Result<()> {
+        if theta.len() != self.meta.dim {
+            bail!("theta dim {} != {}", theta.len(), self.meta.dim);
+        }
+        Ok(())
+    }
+
+    /// Deterministic parameter init from a seed (init artifact).
+    pub fn init_params(&self, seed: u32) -> Result<Vec<f32>> {
+        let seed_lit = xla::Literal::vec1(&[seed]);
+        let outs = self.run(&format!("init_{}", self.meta.name), &[seed_lit])?;
+        let theta = outs[0].to_vec::<f32>().map_err(|e| anyhow!("init out: {e:?}"))?;
+        if theta.len() != self.meta.dim {
+            bail!("init artifact produced dim {}", theta.len());
+        }
+        Ok(theta)
+    }
+
+    /// One SGD minibatch step (train artifact; fwd+bwd+fused Pallas update).
+    pub fn train_step(&self, theta: &[f32], x: &Batch, y: &[i32], lr: f32) -> Result<TrainOutput> {
+        self.check_theta(theta)?;
+        if y.len() != self.meta.batch {
+            bail!("y len {} != batch {}", y.len(), self.meta.batch);
+        }
+        let inputs = [
+            xla::Literal::vec1(theta),
+            self.batch_literal(x)?,
+            xla::Literal::vec1(y),
+            xla::Literal::vec1(&[lr]),
+        ];
+        let outs = self.run(&format!("train_{}", self.meta.name), &inputs)?;
+        let theta = outs[0].to_vec::<f32>().map_err(|e| anyhow!("theta out: {e:?}"))?;
+        let loss = outs[1].to_vec::<f32>().map_err(|e| anyhow!("loss out: {e:?}"))?[0];
+        Ok(TrainOutput { theta, loss })
+    }
+
+    /// Evaluate one batch: (loss, n_correct).
+    pub fn eval_batch(&self, theta: &[f32], x: &Batch, y: &[i32]) -> Result<(f32, f32)> {
+        self.check_theta(theta)?;
+        let inputs = [
+            xla::Literal::vec1(theta),
+            self.batch_literal(x)?,
+            xla::Literal::vec1(y),
+        ];
+        let outs = self.run(&format!("eval_{}", self.meta.name), &inputs)?;
+        let loss = outs[0].to_vec::<f32>().map_err(|e| anyhow!("loss: {e:?}"))?[0];
+        let correct = outs[1].to_vec::<f32>().map_err(|e| anyhow!("correct: {e:?}"))?[0];
+        Ok((loss, correct))
+    }
+
+    /// Does the artifact set cover Multi-Krum at (n, f)?
+    pub fn has_krum(&self, n: usize, f: usize) -> bool {
+        self.manifest.has_krum(n, f)
+    }
+
+    /// Multi-Krum over n stacked flat weight vectors (krum artifact: the
+    /// L1 Pallas Gram kernel inside the L2 selection graph).
+    ///
+    /// `stacked` is row-major (n × D); `sample_weights` has length n.
+    pub fn krum(
+        &self,
+        n: usize,
+        f: usize,
+        stacked: &[f32],
+        sample_weights: &[f32],
+    ) -> Result<KrumResult> {
+        if stacked.len() != n * self.meta.dim {
+            bail!("stacked len {} != n*D {}", stacked.len(), n * self.meta.dim);
+        }
+        if sample_weights.len() != n {
+            bail!("sample_weights len {} != n {}", sample_weights.len(), n);
+        }
+        if !self.has_krum(n, f) {
+            bail!("no krum artifact for n={n} f={f} (see manifest nf_combos)");
+        }
+        let w = Self::lit_f32(stacked, &[n as i64, self.meta.dim as i64])?;
+        let sw = xla::Literal::vec1(sample_weights);
+        let outs = self.run(&format!("krum_{}_n{n}_f{f}", self.meta.name), &[w, sw])?;
+        Ok(KrumResult {
+            aggregate: outs[0].to_vec::<f32>().map_err(|e| anyhow!("agg: {e:?}"))?,
+            scores: outs[1].to_vec::<f32>().map_err(|e| anyhow!("scores: {e:?}"))?,
+            mask: outs[2].to_vec::<f32>().map_err(|e| anyhow!("mask: {e:?}"))?,
+        })
+    }
+
+    /// FedAvg over n stacked flat weight vectors (fedavg artifact).
+    pub fn fedavg(&self, n: usize, stacked: &[f32], sample_weights: &[f32]) -> Result<Vec<f32>> {
+        if stacked.len() != n * self.meta.dim {
+            bail!("stacked len {} != n*D {}", stacked.len(), n * self.meta.dim);
+        }
+        let w = Self::lit_f32(stacked, &[n as i64, self.meta.dim as i64])?;
+        let sw = xla::Literal::vec1(sample_weights);
+        let outs = self.run(&format!("fedavg_{}_n{n}", self.meta.name), &[w, sw])?;
+        outs[0].to_vec::<f32>().map_err(|e| anyhow!("agg: {e:?}"))
+    }
+}
+
+/// Stack per-node flat weight vectors row-major for the aggregation
+/// artifacts. All rows must share the engine's dimension.
+pub fn stack_rows(rows: &[Vec<f32>]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(rows.iter().map(|r| r.len()).sum());
+    for r in rows {
+        out.extend_from_slice(r);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine(model: Model) -> Option<Engine> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Engine::new(Manifest::load(&dir).unwrap(), model).unwrap())
+    }
+
+    fn fake_batch(e: &Engine, seed: u64) -> (Batch, Vec<i32>) {
+        let mut rng = crate::util::Pcg::seeded(seed);
+        let elems: usize = e.meta().x_shape.iter().product();
+        let x = match e.meta().x_dtype {
+            XDtype::F32 => Batch::F32((0..elems).map(|_| rng.normal_f32(0.0, 1.0)).collect()),
+            XDtype::I32 => {
+                Batch::I32((0..elems).map(|_| rng.gen_range(2048) as i32).collect())
+            }
+        };
+        let y: Vec<i32> = (0..e.batch_size())
+            .map(|_| rng.gen_range(e.meta().classes as u64) as i32)
+            .collect();
+        (x, y)
+    }
+
+    #[test]
+    fn init_is_deterministic() {
+        let Some(e) = engine(Model::CifarCnn) else { return };
+        let a = e.init_params(7).unwrap();
+        let b = e.init_params(7).unwrap();
+        let c = e.init_params(8).unwrap();
+        assert_eq!(a.len(), e.dim());
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(a.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn train_step_changes_params_and_yields_finite_loss() {
+        let Some(e) = engine(Model::CifarCnn) else { return };
+        let theta = e.init_params(1).unwrap();
+        let (x, y) = fake_batch(&e, 2);
+        let out = e.train_step(&theta, &x, &y, 0.05).unwrap();
+        assert_eq!(out.theta.len(), e.dim());
+        assert!(out.loss.is_finite());
+        assert_ne!(out.theta, theta);
+        // lr = 0 must be the identity (fused Pallas SGD kernel property).
+        let frozen = e.train_step(&theta, &x, &y, 0.0).unwrap();
+        assert_eq!(frozen.theta, theta);
+    }
+
+    #[test]
+    fn train_step_deterministic() {
+        let Some(e) = engine(Model::SentMlp) else { return };
+        let theta = e.init_params(3).unwrap();
+        let (x, y) = fake_batch(&e, 4);
+        let a = e.train_step(&theta, &x, &y, 0.5).unwrap();
+        let b = e.train_step(&theta, &x, &y, 0.5).unwrap();
+        assert_eq!(a.theta, b.theta);
+        assert_eq!(a.loss, b.loss);
+    }
+
+    #[test]
+    fn eval_counts_in_range() {
+        let Some(e) = engine(Model::CifarCnn) else { return };
+        let theta = e.init_params(5).unwrap();
+        let (x, y) = fake_batch(&e, 6);
+        let (loss, correct) = e.eval_batch(&theta, &x, &y).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert!((0.0..=e.batch_size() as f32).contains(&correct));
+    }
+
+    #[test]
+    fn krum_artifact_matches_native() {
+        let Some(e) = engine(Model::CifarCnn) else { return };
+        let (n, f) = (4usize, 1usize);
+        let mut rng = crate::util::Pcg::seeded(11);
+        let mut rows: Vec<Vec<f32>> = Vec::new();
+        let center: Vec<f32> = (0..e.dim()).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        for _ in 0..n {
+            rows.push(center.iter().map(|c| c + rng.normal_f32(0.0, 0.05)).collect());
+        }
+        rows[2] = rows[2].iter().map(|x| x * -4.0).collect(); // outlier
+        let sw = vec![1.0f32; n];
+
+        let art = e.krum(n, f, &stack_rows(&rows), &sw).unwrap();
+        let nat = crate::krum::multi_krum(&rows, &sw, f, n - f).unwrap();
+
+        assert_eq!(art.mask, nat.mask, "selection disagrees");
+        assert_eq!(art.mask[2], 0.0, "outlier not filtered");
+        for (a, b) in art.aggregate.iter().zip(nat.aggregate.iter()) {
+            assert!((a - b).abs() < 1e-3, "agg diverges: {a} vs {b}");
+        }
+        for (a, b) in art.scores.iter().zip(nat.scores.iter()) {
+            let tol = 1e-3 * b.abs().max(1.0);
+            assert!((a - b).abs() < tol, "score diverges: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn fedavg_artifact_matches_native() {
+        let Some(e) = engine(Model::CifarCnn) else { return };
+        let n = 4;
+        let mut rng = crate::util::Pcg::seeded(13);
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..e.dim()).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect();
+        let sw = [1.0f32, 2.0, 3.0, 4.0];
+        let art = e.fedavg(n, &stack_rows(&rows), &sw).unwrap();
+        let nat = crate::krum::fedavg(&rows, &sw).unwrap();
+        for (a, b) in art.iter().zip(nat.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn shape_errors_are_reported() {
+        let Some(e) = engine(Model::CifarCnn) else { return };
+        let theta = vec![0.0f32; 3];
+        let (x, y) = fake_batch(&e, 1);
+        assert!(e.train_step(&theta, &x, &y, 0.1).is_err());
+        let theta = e.init_params(1).unwrap();
+        assert!(e.train_step(&theta, &x, &y[..4].to_vec(), 0.1).is_err());
+        assert!(e.krum(5, 1, &vec![0.0; 5 * e.dim()], &[1.0; 5]).is_err()); // no artifact
+    }
+}

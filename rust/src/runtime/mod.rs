@@ -1,0 +1,12 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`) and execute
+//! them on the hot path — Python never runs after `make artifacts`.
+//!
+//! Flow per artifact (see /opt/xla-example/load_hlo and aot_recipe):
+//! HLO text → `HloModuleProto::from_text_file` → `XlaComputation` →
+//! `PjRtClient::compile` → `execute`. Text is the interchange format
+//! because jax ≥ 0.5 emits 64-bit instruction ids that the pinned
+//! xla_extension 0.5.1 proto path rejects.
+
+mod engine;
+
+pub use engine::{stack_rows, Batch, Engine, KrumResult, TrainOutput};

@@ -1,0 +1,261 @@
+//! The `defl` binary: run single experiments, regenerate paper tables,
+//! inspect artifacts.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{manifest::Manifest, Attack, ExperimentConfig, Model, Partition, System};
+use crate::runtime::Engine;
+use crate::util::bench::fmt_bytes;
+use crate::util::cli::Args;
+
+use super::experiment::run_experiment;
+use super::tables;
+
+const USAGE: &str = "\
+defl — decentralized weight aggregation for cross-silo FL (paper reproduction)
+
+USAGE:
+  defl run [--system fl|sl|biscotti|defl] [--model cifar_cnn|sent_mlp]
+           [--nodes N] [--byzantine F] [--attack A] [--partition iid|noniid]
+           [--rounds R] [--local-steps S] [--lr LR] [--train-n N] [--test-n N]
+           [--gst-ms MS] [--seed S] [--config file.toml]
+  defl table <table1|table2|table3|table4|fig2|fig3>
+  defl inspect            # artifact + manifest summary
+  defl help
+
+Attacks: none | gaussian:<sigma> | sign-flip:<sigma> | label-flip |
+         stale-round | early-agg
+Env: DEFL_ARTIFACTS, DEFL_ROUNDS, DEFL_TRAIN_N, DEFL_TEST_N,
+     DEFL_LOCAL_STEPS, DEFL_GST_MS, DEFL_LOG
+";
+
+pub fn main() -> Result<()> {
+    let args = Args::from_env(&["run", "table", "inspect", "help"])?;
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("table") => cmd_table(&args),
+        Some("inspect") => cmd_inspect(),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+/// Build an ExperimentConfig from CLI options (over a TOML file if given).
+pub fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = ExperimentConfig::default();
+    // Precedence: CLI > config file > per-model default.
+    let mut lr_set = false;
+
+    if let Some(path) = args.get("config") {
+        let doc = crate::config::toml::TomlDoc::load(std::path::Path::new(path))
+            .with_context(|| format!("loading {path}"))?;
+        if let Some(v) = doc.get("experiment.system") {
+            cfg.system = System::parse(v)?;
+        }
+        if let Some(v) = doc.get("experiment.model") {
+            cfg.model = Model::parse(v)?;
+        }
+        if let Some(v) = doc.get("experiment.partition") {
+            cfg.partition = Partition::parse(v)?;
+        }
+        if let Some(v) = doc.get("experiment.attack") {
+            cfg.attack = Attack::parse(v)?;
+        }
+        cfg.n_nodes = doc.get_parse("experiment.nodes")?.unwrap_or(cfg.n_nodes);
+        cfg.f_byzantine = doc.get_parse("experiment.byzantine")?.unwrap_or(cfg.f_byzantine);
+        cfg.rounds = doc.get_parse("experiment.rounds")?.unwrap_or(cfg.rounds);
+        cfg.local_steps = doc.get_parse("experiment.local_steps")?.unwrap_or(cfg.local_steps);
+        if let Some(v) = doc.get_parse("experiment.lr")? {
+            cfg.lr = v;
+            lr_set = true;
+        }
+        cfg.train_samples = doc.get_parse("experiment.train_n")?.unwrap_or(cfg.train_samples);
+        cfg.test_samples = doc.get_parse("experiment.test_n")?.unwrap_or(cfg.test_samples);
+        cfg.seed = doc.get_parse("experiment.seed")?.unwrap_or(cfg.seed);
+        cfg.gst_lt_ms = doc.get_parse("experiment.gst_ms")?.unwrap_or(cfg.gst_lt_ms);
+    }
+
+    if let Some(v) = args.get("system") {
+        cfg.system = System::parse(v)?;
+    }
+    if let Some(v) = args.get("model") {
+        cfg.model = Model::parse(v)?;
+    }
+    if let Some(v) = args.get("partition") {
+        cfg.partition = Partition::parse(v)?;
+    }
+    if let Some(v) = args.get("attack") {
+        cfg.attack = Attack::parse(v)?;
+    }
+    cfg.n_nodes = args.get_parse("nodes")?.unwrap_or(cfg.n_nodes);
+    cfg.f_byzantine = args.get_parse("byzantine")?.unwrap_or(cfg.f_byzantine);
+    cfg.rounds = args.get_parse("rounds")?.unwrap_or(cfg.rounds);
+    cfg.local_steps = args.get_parse("local-steps")?.unwrap_or(cfg.local_steps);
+    if let Some(v) = args.get_parse("lr")? {
+        cfg.lr = v;
+    } else if !lr_set {
+        cfg.lr = cfg.model.default_lr();
+    }
+    cfg.train_samples = args.get_parse("train-n")?.unwrap_or(cfg.train_samples);
+    cfg.test_samples = args.get_parse("test-n")?.unwrap_or(cfg.test_samples);
+    cfg.seed = args.get_parse("seed")?.unwrap_or(cfg.seed);
+    cfg.gst_lt_ms = args.get_parse("gst-ms")?.unwrap_or(cfg.gst_lt_ms);
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let engine = Arc::new(Engine::load_default(cfg.model)?);
+    println!("running {} …", cfg.label());
+    let r = run_experiment(&cfg, engine)?;
+    println!("\n== {} ==", r.label);
+    println!("accuracy          {:.4}", r.accuracy);
+    println!("test loss         {:.4}", r.test_loss);
+    println!("rounds            {}", r.rounds_done);
+    println!("sim time          {:.1}s", r.sim_time_us as f64 / 1e6);
+    println!("wall time         {:.1}s", r.wall_ms as f64 / 1e3);
+    println!("sent/node         {}", fmt_bytes(r.sent_per_node));
+    println!("recv/node         {}", fmt_bytes(r.recv_per_node));
+    println!("max node sent     {}", fmt_bytes(r.max_node_sent));
+    println!("chain/node        {}", fmt_bytes(r.chain_per_node));
+    println!("pool peak/node    {}", fmt_bytes(r.pool_peak_per_node));
+    println!("RAM model/node    {}", fmt_bytes(r.ram_per_node));
+    if r.agg_artifact + r.agg_native > 0 {
+        println!("aggregations      {} artifact / {} native", r.agg_artifact, r.agg_native);
+    }
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> Result<()> {
+    let Some(which) = args.positional.first() else {
+        bail!("table: which one? (table1|table2|table3|table4|fig2|fig3)");
+    };
+    let (model, needs) = match which.as_str() {
+        "table1" | "table2" | "fig2" => (Model::CifarCnn, ()),
+        "table3" | "table4" | "fig3" => (Model::SentMlp, ()),
+        other => bail!("unknown table `{other}`"),
+    };
+    let _ = needs;
+    let engine = Arc::new(Engine::load_default(model)?);
+    let table = match which.as_str() {
+        "table1" => {
+            let iid = tables::threat_table(
+                &engine, model, Partition::Iid, &tables::PAPER_TABLE1_IID,
+                "Table 1 (CIFAR, iid): accuracy under threat models")?;
+            iid.print();
+            tables::threat_table(
+                &engine, model, Partition::Dirichlet(1.0), &tables::PAPER_TABLE1_NONIID,
+                "Table 1 (CIFAR-noniid): accuracy under threat models")?
+        }
+        "table2" => tables::byzantine_sweep(
+            &engine, model, Attack::SignFlip { sigma: -2.0 }, &tables::PAPER_TABLE2,
+            "Table 2 (CIFAR-noniid, sign-flip σ=-2): accuracy vs Byzantine rate")?,
+        "table3" => {
+            let iid = tables::threat_table(
+                &engine, model, Partition::Iid, &tables::PAPER_TABLE3_IID,
+                "Table 3 (Sentiment, iid): accuracy under threat models")?;
+            iid.print();
+            tables::threat_table(
+                &engine, model, Partition::Dirichlet(1.0), &tables::PAPER_TABLE3_NONIID,
+                "Table 3 (Sentiment-noniid): accuracy under threat models")?
+        }
+        "table4" => tables::byzantine_sweep(
+            &engine, model, Attack::Gaussian { sigma: 1.0 }, &tables::PAPER_TABLE4,
+            "Table 4 (Sentiment-noniid, Gaussian σ=1): accuracy vs Byzantine rate")?,
+        "fig2" => tables::overhead_figure(
+            &engine, model, "Figure 2 (CIFAR-noniid): overhead of different scales")?,
+        "fig3" => tables::overhead_figure(
+            &engine, model, "Figure 3 (Sentiment-noniid): overhead of different scales")?,
+        _ => unreachable!(),
+    };
+    table.print();
+    Ok(())
+}
+
+fn cmd_inspect() -> Result<()> {
+    let manifest = Manifest::load_default()?;
+    println!("artifacts dir: {}", manifest.dir.display());
+    for (name, meta) in &manifest.models {
+        println!(
+            "  {name}: D={} batch={} classes={} x={:?} ({:?})",
+            meta.dim, meta.batch, meta.classes, meta.x_shape, meta.x_dtype
+        );
+    }
+    println!("  krum combos: {:?}", manifest.nf_combos);
+    println!("  fedavg ns:   {:?}", manifest.ns);
+    let entries = std::fs::read_dir(&manifest.dir)?;
+    let (mut count, mut bytes) = (0u64, 0u64);
+    for e in entries.flatten() {
+        if e.path().extension().map_or(false, |x| x == "txt") {
+            count += 1;
+            bytes += e.metadata().map(|m| m.len()).unwrap_or(0);
+        }
+    }
+    println!("  {count} artifacts, {}", fmt_bytes(bytes));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(tokens: &[&str]) -> Args {
+        Args::parse_tokens(tokens.iter().map(|s| s.to_string()), &["run"]).unwrap()
+    }
+
+    #[test]
+    fn config_from_cli_options() {
+        let a = args(&[
+            "run", "--system", "biscotti", "--model", "sentiment", "--nodes", "7",
+            "--byzantine", "2", "--attack", "gaussian:1.0", "--partition", "noniid",
+            "--rounds", "9", "--lr", "0.25", "--seed", "77",
+        ]);
+        let cfg = config_from_args(&a).unwrap();
+        assert_eq!(cfg.system, System::Biscotti);
+        assert_eq!(cfg.model, Model::SentMlp);
+        assert_eq!(cfg.n_nodes, 7);
+        assert_eq!(cfg.f_byzantine, 2);
+        assert_eq!(cfg.attack, Attack::Gaussian { sigma: 1.0 });
+        assert_eq!(cfg.partition, Partition::Dirichlet(1.0));
+        assert_eq!(cfg.rounds, 9);
+        assert_eq!(cfg.lr, 0.25);
+        assert_eq!(cfg.seed, 77);
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_combo() {
+        // n=4 with f=2 breaks the Krum arity (n-f-2 >= 1).
+        let a = args(&["run", "--nodes", "4", "--byzantine", "2"]);
+        assert!(config_from_args(&a).is_err());
+    }
+
+    #[test]
+    fn config_from_toml_file_with_cli_override() {
+        let dir = std::env::temp_dir().join("defl-cli-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("exp.toml");
+        std::fs::write(
+            &path,
+            "[experiment]\nsystem = \"sl\"\nrounds = 30\nnodes = 10\nlr = 0.01\n",
+        )
+        .unwrap();
+        let a = args(&["run", "--config", path.to_str().unwrap(), "--rounds", "3"]);
+        let cfg = config_from_args(&a).unwrap();
+        assert_eq!(cfg.system, System::Swarm);
+        assert_eq!(cfg.rounds, 3, "CLI overrides the file");
+        assert_eq!(cfg.n_nodes, 10);
+        assert_eq!(cfg.lr, 0.01);
+    }
+
+    #[test]
+    fn default_lr_follows_model() {
+        let a = args(&["run", "--model", "sentiment"]);
+        let cfg = config_from_args(&a).unwrap();
+        assert_eq!(cfg.lr, Model::SentMlp.default_lr());
+    }
+}

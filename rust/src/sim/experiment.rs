@@ -1,0 +1,262 @@
+//! One experiment = build a cluster for (system × model × scale × attack),
+//! run it to completion on the simnet, evaluate the trained model, and
+//! collect the Figure-2/3 overhead metrics.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::baselines::{BiscottiNode, ServerFlNode};
+use crate::config::{ExperimentConfig, System};
+use crate::crypto::{KeyRegistry, NodeId};
+use crate::defl::DeflNode;
+use crate::fl::data::{partition_dirichlet, partition_iid, synth_for, Dataset};
+use crate::fl::trainer::evaluate;
+use crate::net::sim::{Actor, SimConfig, SimNet};
+use crate::runtime::Engine;
+use crate::util::Pcg;
+
+/// Everything a table/figure needs from one run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub label: String,
+    pub accuracy: f64,
+    pub test_loss: f64,
+    pub rounds_done: u64,
+    pub sim_time_us: u64,
+    pub wall_ms: u128,
+    /// Mean per-node totals (what Figure 2 plots).
+    pub sent_per_node: u64,
+    pub recv_per_node: u64,
+    /// Max single-node sent bytes (the SL leader-detectability signal).
+    pub max_node_sent: u64,
+    /// Persistent chain bytes per node (Figure 2 "Storage").
+    pub chain_per_node: u64,
+    /// Transient weight-pool peak per node (DeFL storage layer).
+    pub pool_peak_per_node: u64,
+    /// Modelled resident memory per node (fixed + held weight bytes).
+    pub ram_per_node: u64,
+    /// Honest node 's per-round local losses (loss curves).
+    pub losses: Vec<f32>,
+    /// Aggregations through the AOT artifact vs native fallback (DeFL).
+    pub agg_artifact: u64,
+    pub agg_native: u64,
+}
+
+/// Fixed per-process RAM overhead in the RAM model (runtime, buffers).
+const RAM_FIXED: u64 = 512 * 1024 * 1024;
+
+/// Build train/test datasets + shards for a config.
+pub fn build_data(
+    cfg: &ExperimentConfig,
+    engine: &Engine,
+) -> (Arc<Dataset>, Arc<Dataset>, Vec<crate::fl::Shard>, Vec<f32>) {
+    let meta = engine.meta();
+    let full = synth_for(meta, cfg.train_samples + cfg.test_samples, cfg.seed);
+    let (train, test) = full.split(cfg.train_samples);
+    let (train, test) = (Arc::new(train), Arc::new(test));
+    let mut rng = Pcg::new(cfg.seed, 0xda7a);
+    let shards = match cfg.partition {
+        crate::config::Partition::Iid => partition_iid(&train, cfg.n_nodes, &mut rng),
+        crate::config::Partition::Dirichlet(a) => {
+            partition_dirichlet(&train, cfg.n_nodes, a, &mut rng)
+        }
+    };
+    let sizes: Vec<f32> = shards.iter().map(|s| s.len() as f32).collect();
+    (train, test, shards, sizes)
+}
+
+fn build_actors(
+    cfg: &ExperimentConfig,
+    engine: &Arc<Engine>,
+    train: &Arc<Dataset>,
+    shards: Vec<crate::fl::Shard>,
+    sizes: &[f32],
+    theta0: &[f32],
+) -> Vec<Box<dyn Actor>> {
+    let registry = KeyRegistry::new(cfg.n_nodes, cfg.seed);
+    shards
+        .into_iter()
+        .enumerate()
+        .map(|(i, shard)| -> Box<dyn Actor> {
+            let id = i as NodeId;
+            match cfg.system {
+                System::Defl => Box::new(DeflNode::new(
+                    id,
+                    cfg.clone(),
+                    engine.clone(),
+                    train.clone(),
+                    shard,
+                    sizes.to_vec(),
+                    registry.clone(),
+                    theta0.to_vec(),
+                )),
+                System::Fl | System::Swarm => Box::new(ServerFlNode::new(
+                    id,
+                    cfg.clone(),
+                    cfg.system,
+                    engine.clone(),
+                    train.clone(),
+                    shard,
+                    sizes.to_vec(),
+                    theta0.to_vec(),
+                )),
+                System::Biscotti => Box::new(BiscottiNode::new(
+                    id,
+                    cfg.clone(),
+                    engine.clone(),
+                    train.clone(),
+                    shard,
+                    sizes.to_vec(),
+                    theta0.to_vec(),
+                )),
+            }
+        })
+        .collect()
+}
+
+fn node_done(net: &mut SimNet, system: System, id: NodeId) -> bool {
+    match system {
+        System::Defl => net.actor_as::<DeflNode>(id).map(|n| n.done),
+        System::Fl | System::Swarm => net.actor_as::<ServerFlNode>(id).map(|n| n.done),
+        System::Biscotti => net.actor_as::<BiscottiNode>(id).map(|n| n.done),
+    }
+    .unwrap_or(false)
+}
+
+fn node_final_theta(net: &mut SimNet, system: System, id: NodeId) -> Option<Vec<f32>> {
+    match system {
+        System::Defl => net.actor_as::<DeflNode>(id).and_then(|n| n.final_theta.clone()),
+        System::Fl | System::Swarm => {
+            net.actor_as::<ServerFlNode>(id).and_then(|n| n.final_theta.clone())
+        }
+        System::Biscotti => net.actor_as::<BiscottiNode>(id).and_then(|n| n.final_theta.clone()),
+    }
+}
+
+fn node_losses(net: &mut SimNet, system: System, id: NodeId) -> Vec<f32> {
+    match system {
+        System::Defl => net
+            .actor_as::<DeflNode>(id)
+            .map(|n| n.stats.losses.clone())
+            .unwrap_or_default(),
+        System::Fl | System::Swarm => net
+            .actor_as::<ServerFlNode>(id)
+            .map(|n| n.losses.clone())
+            .unwrap_or_default(),
+        System::Biscotti => net
+            .actor_as::<BiscottiNode>(id)
+            .map(|n| n.losses.clone())
+            .unwrap_or_default(),
+    }
+}
+
+fn node_chain_bytes(net: &mut SimNet, system: System, id: NodeId) -> u64 {
+    match system {
+        System::Defl | System::Fl => 0,
+        System::Swarm => net.actor_as::<ServerFlNode>(id).map(|n| n.chain.bytes()).unwrap_or(0),
+        System::Biscotti => net.actor_as::<BiscottiNode>(id).map(|n| n.chain.bytes()).unwrap_or(0),
+    }
+}
+
+fn node_pool_peak(net: &mut SimNet, system: System, id: NodeId) -> u64 {
+    match system {
+        System::Defl => net
+            .actor_as::<DeflNode>(id)
+            .map(|n| n.pool().peak_bytes())
+            .unwrap_or(0),
+        _ => 0,
+    }
+}
+
+/// Run one experiment end to end.
+pub fn run_experiment(cfg: &ExperimentConfig, engine: Arc<Engine>) -> Result<RunResult> {
+    cfg.validate()?;
+    let wall0 = Instant::now();
+    let (train, test, shards, sizes) = build_data(cfg, &engine);
+    let theta0 = engine
+        .init_params(cfg.seed as u32)
+        .context("init params")?;
+    let actors = build_actors(cfg, &engine, &train, shards, &sizes, &theta0);
+
+    let sim_cfg = SimConfig {
+        n_nodes: cfg.n_nodes,
+        latency_us: cfg.link_latency_us,
+        jitter_us: cfg.link_latency_us / 4,
+        drop_prob: 0.0,
+        seed: cfg.seed,
+    };
+    let mut net = SimNet::new(sim_cfg, actors);
+
+    // Generous cap: rounds × (GST_LT + slack) + startup.
+    let cap_us = (cfg.rounds as u64 + 4) * (cfg.gst_lt_ms * 1000 * 6 + 2_000_000);
+    let chunk_us = 1_000_000;
+    let mut t = 0u64;
+    loop {
+        t += chunk_us;
+        net.run_until(t, u64::MAX);
+        let all_done = (0..cfg.n_nodes as NodeId).all(|i| node_done(&mut net, cfg.system, i));
+        if all_done || t >= cap_us {
+            break;
+        }
+        // If the queue drained without completion something deadlocked.
+        if !net.halted() && net.events_processed() > 0 && t > cap_us {
+            break;
+        }
+    }
+
+    // First honest node's model is the one we grade.
+    let honest = cfg.f_byzantine as NodeId;
+    let theta = node_final_theta(&mut net, cfg.system, honest)
+        .or_else(|| node_final_theta(&mut net, cfg.system, cfg.n_nodes as NodeId - 1));
+    let Some(theta) = theta else {
+        bail!(
+            "experiment {} did not finish: sim_time={}s events={}",
+            cfg.label(),
+            net.now_us() / 1_000_000,
+            net.events_processed()
+        );
+    };
+    let (accuracy, test_loss) = evaluate(&engine, &test, &theta)?;
+
+    let n = cfg.n_nodes as u64;
+    let sent_total = net.meter.total_sent();
+    let recv_total = net.meter.total_recv();
+    let chain_total: u64 = (0..cfg.n_nodes as NodeId)
+        .map(|i| node_chain_bytes(&mut net, cfg.system, i))
+        .sum();
+    let pool_total: u64 = (0..cfg.n_nodes as NodeId)
+        .map(|i| node_pool_peak(&mut net, cfg.system, i))
+        .sum();
+    let (agg_artifact, agg_native) = if cfg.system == System::Defl {
+        let s = &net.actor_as::<DeflNode>(honest).unwrap().stats;
+        (s.agg_artifact, s.agg_native)
+    } else {
+        (0, 0)
+    };
+    let rounds_done = match cfg.system {
+        System::Defl => net.actor_as::<DeflNode>(honest).unwrap().replica.r_round,
+        _ => cfg.rounds as u64,
+    };
+
+    Ok(RunResult {
+        label: cfg.label(),
+        accuracy,
+        test_loss,
+        rounds_done,
+        sim_time_us: net.now_us(),
+        wall_ms: wall0.elapsed().as_millis(),
+        sent_per_node: sent_total / n,
+        recv_per_node: recv_total / n,
+        max_node_sent: net.meter.max_node_sent(),
+        chain_per_node: chain_total / n,
+        pool_peak_per_node: pool_total / n,
+        ram_per_node: RAM_FIXED
+            + (chain_total + pool_total) / n
+            + 2 * engine.meta().weight_bytes() as u64,
+        losses: node_losses(&mut net, cfg.system, honest),
+        agg_artifact,
+        agg_native,
+    })
+}

@@ -1,0 +1,8 @@
+//! Experiment drivers: single-run execution, paper table/figure
+//! generators, and the `defl` CLI.
+
+pub mod cli;
+pub mod experiment;
+pub mod tables;
+
+pub use experiment::{build_data, run_experiment, RunResult};

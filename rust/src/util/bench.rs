@@ -1,0 +1,187 @@
+//! Benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets are plain binaries (`harness = false`) that call
+//! into this module. It provides warmup + timed iterations with mean /
+//! p50 / p95 statistics, throughput reporting, and the paper-table
+//! printer every `rust/benches/*` target uses to emit the same rows the
+//! paper reports next to the measured values.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>7} iters  mean {:>10.3?}  p50 {:>10.3?}  p95 {:>10.3?}",
+            self.name, self.iters, self.mean, self.p50, self.p95
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort_unstable();
+    let total: Duration = samples.iter().sum();
+    let stats = Stats {
+        name: name.to_string(),
+        iters,
+        mean: total / iters.max(1) as u32,
+        p50: samples[samples.len() / 2],
+        p95: samples[(samples.len() * 95 / 100).min(samples.len() - 1)],
+        min: *samples.first().unwrap(),
+        max: *samples.last().unwrap(),
+    };
+    println!("{stats}");
+    stats
+}
+
+/// Adaptive variant: run for roughly `budget` wall-clock.
+pub fn bench_for<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> Stats {
+    // Calibrate with one run.
+    let t0 = Instant::now();
+    f();
+    let one = t0.elapsed().max(Duration::from_nanos(100));
+    let iters = (budget.as_secs_f64() / one.as_secs_f64()).clamp(1.0, 10_000.0) as usize;
+    bench(name, (iters / 10).min(3), iters.max(1), f)
+}
+
+/// Paper-table printer: aligned rows with a "paper" column next to the
+/// measured column, used by every table/figure bench.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let hdr: Vec<String> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| format!("{:<w$}", h, w = widths[i]))
+            .collect();
+        println!("| {} |", hdr.join(" | "));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("|-{}-|", sep.join("-|-"));
+        for row in &self.rows {
+            let cells: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect();
+            println!("| {} |", cells.join(" | "));
+        }
+    }
+
+    /// Render to a markdown string (EXPERIMENTS.md generation).
+    pub fn to_markdown(&self) -> String {
+        let mut s = format!("### {}\n\n", self.title);
+        s += &format!("| {} |\n", self.headers.join(" | "));
+        s += &format!("|{}|\n", vec!["---"; self.headers.len()].join("|"));
+        for row in &self.rows {
+            s += &format!("| {} |\n", row.join(" | "));
+        }
+        s
+    }
+}
+
+/// Format bytes human-readably (figures report GB/MB).
+pub fn fmt_bytes(b: u64) -> String {
+    const KB: f64 = 1024.0;
+    let b = b as f64;
+    if b >= KB * KB * KB {
+        format!("{:.2} GiB", b / (KB * KB * KB))
+    } else if b >= KB * KB {
+        format!("{:.2} MiB", b / (KB * KB))
+    } else if b >= KB {
+        format!("{:.2} KiB", b / KB)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_ordered_stats() {
+        let s = bench("noop", 2, 50, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.max);
+        assert_eq!(s.iters, 50);
+    }
+
+    #[test]
+    fn table_rows_align() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn fmt_bytes_scales() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert!(fmt_bytes(5 * 1024 * 1024).contains("MiB"));
+        assert!(fmt_bytes(3 * 1024 * 1024 * 1024).contains("GiB"));
+    }
+}

@@ -1,0 +1,151 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports the shapes the `defl` binary and the examples need:
+//! `prog <subcommand> --key value --flag positional…`, typed getters with
+//! defaults, and a generated usage string.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Parsed command line: subcommand, `--key value` options, bare flags,
+/// positional arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token is NOT the program).
+    pub fn parse_tokens<I, S>(tokens: I, subcommands: &[&str]) -> Result<Args>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().map(Into::into).peekable();
+
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') && subcommands.contains(&first.as_str()) {
+                args.subcommand = Some(it.next().unwrap());
+            }
+        }
+
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare `--` not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    args.options.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from std::env::args(), skipping the program name.
+    pub fn from_env(subcommands: &[&str]) -> Result<Args> {
+        Self::parse_tokens(std::env::args().skip(1), subcommands)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow!("--{name}={s}: {e}")),
+        }
+    }
+
+    pub fn get_parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parse(name)?.unwrap_or(default))
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name).with_context(|| format!("missing required --{name}"))
+    }
+}
+
+/// Environment-variable override helper: experiments read e.g. DEFL_ROUNDS.
+pub fn env_parse_or<T: std::str::FromStr>(var: &str, default: T) -> T {
+    std::env::var(var)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse_tokens(
+            ["run", "--nodes", "7", "--verbose", "--model=cifar_cnn", "extra"],
+            &["run", "bench"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("nodes"), Some("7"));
+        assert_eq!(a.get("model"), Some("cifar_cnn"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn unknown_first_token_is_positional() {
+        let a = Args::parse_tokens(["zap", "--x", "1"], &["run"]).unwrap();
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.positional, vec!["zap"]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = Args::parse_tokens(["--n", "42", "--lr", "0.5"], &[]).unwrap();
+        assert_eq!(a.get_parse_or::<u32>("n", 0).unwrap(), 42);
+        assert_eq!(a.get_parse_or::<f64>("lr", 1.0).unwrap(), 0.5);
+        assert_eq!(a.get_parse_or::<u32>("missing", 9).unwrap(), 9);
+        assert!(a.get_parse::<u32>("lr").is_err());
+    }
+
+    #[test]
+    fn require_reports_missing() {
+        let a = Args::parse_tokens(Vec::<String>::new(), &[]).unwrap();
+        assert!(a.require("nodes").is_err());
+    }
+
+    #[test]
+    fn trailing_flag_no_value() {
+        let a = Args::parse_tokens(["--dry-run"], &[]).unwrap();
+        assert!(a.flag("dry-run"));
+    }
+}

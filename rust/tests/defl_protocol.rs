@@ -1,0 +1,133 @@
+//! Whole-system integration tests of the DeFL protocol under the §3.1
+//! threat models that target the PROTOCOL rather than the weights:
+//! stale-round UPDs, pre-GST_LT AGGs, and crash faults — plus determinism
+//! and accuracy-defense smoke checks.
+
+use std::sync::Arc;
+
+use defl::config::{Attack, ExperimentConfig, Model, Partition, System};
+use defl::runtime::Engine;
+use defl::sim::run_experiment;
+
+fn engine() -> Option<Arc<Engine>> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Arc::new(
+        Engine::new(defl::config::manifest::Manifest::load(&dir).unwrap(), Model::SentMlp).unwrap(),
+    ))
+}
+
+fn cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        system: System::Defl,
+        model: Model::SentMlp,
+        partition: Partition::Iid,
+        n_nodes: 4,
+        f_byzantine: 1,
+        rounds: 5,
+        local_steps: 4,
+        lr: 1.0,
+        train_samples: 1024,
+        test_samples: 256,
+        gst_lt_ms: 500,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn stale_round_upds_are_rejected_and_training_completes() {
+    let Some(e) = engine() else { return };
+    let mut c = cfg();
+    c.attack = Attack::StaleRound;
+    let r = run_experiment(&c, e).unwrap();
+    assert_eq!(r.rounds_done, 5, "stale-round attacker must not stall rounds");
+    assert!(r.accuracy > 0.4, "federation should still learn: {}", r.accuracy);
+}
+
+#[test]
+fn early_agg_advances_rounds_without_stalling() {
+    let Some(e) = engine() else { return };
+    let mut c = cfg();
+    c.attack = Attack::EarlyAgg;
+    let r = run_experiment(&c, e).unwrap();
+    assert_eq!(r.rounds_done, 5);
+    assert!(r.accuracy > 0.4, "acc {}", r.accuracy);
+}
+
+#[test]
+fn sign_flip_defended_on_sentiment() {
+    let Some(e) = engine() else { return };
+    let mut c = cfg();
+    c.rounds = 12;
+    c.attack = Attack::SignFlip { sigma: -4.0 };
+    let defl = run_experiment(&c, e.clone()).unwrap();
+    c.system = System::Fl;
+    let fl = run_experiment(&c, e).unwrap();
+    assert!(
+        defl.accuracy > fl.accuracy + 0.1,
+        "DeFL {} should beat FL {} under sign-flip",
+        defl.accuracy,
+        fl.accuracy
+    );
+    assert!(defl.accuracy > 0.6, "DeFL holds accuracy: {}", defl.accuracy);
+}
+
+#[test]
+fn runs_are_deterministic() {
+    let Some(e) = engine() else { return };
+    let c = cfg();
+    let a = run_experiment(&c, e.clone()).unwrap();
+    let b = run_experiment(&c, e).unwrap();
+    assert_eq!(a.accuracy, b.accuracy);
+    assert_eq!(a.sent_per_node, b.sent_per_node);
+    assert_eq!(a.recv_per_node, b.recv_per_node);
+    assert_eq!(a.sim_time_us, b.sim_time_us);
+    assert_eq!(a.losses, b.losses);
+}
+
+#[test]
+fn seed_changes_the_run() {
+    let Some(e) = engine() else { return };
+    let mut c = cfg();
+    let a = run_experiment(&c, e.clone()).unwrap();
+    c.seed = 43;
+    let b = run_experiment(&c, e).unwrap();
+    assert_ne!(a.losses, b.losses);
+}
+
+#[test]
+fn scales_to_ten_nodes_with_three_byzantine() {
+    let Some(e) = engine() else { return };
+    let mut c = cfg();
+    c.n_nodes = 10;
+    c.f_byzantine = 3;
+    c.attack = Attack::Gaussian { sigma: 1.0 };
+    c.rounds = 4;
+    let r = run_experiment(&c, e).unwrap();
+    assert_eq!(r.rounds_done, 4);
+    assert!(r.accuracy > 0.4, "10-node defense failed: {}", r.accuracy);
+    // All aggregations at (10,3) come from the exported artifact.
+    assert!(r.agg_artifact > 0);
+}
+
+#[test]
+fn all_four_systems_complete_and_learn_without_attack() {
+    let Some(e) = engine() else { return };
+    for system in System::ALL {
+        let mut c = cfg();
+        c.system = system;
+        c.f_byzantine = 0;
+        c.attack = Attack::None;
+        c.rounds = 12;
+        let r = run_experiment(&c, e.clone()).unwrap();
+        assert!(
+            r.accuracy > 0.55,
+            "{} failed to learn: {}",
+            system.name(),
+            r.accuracy
+        );
+    }
+}
