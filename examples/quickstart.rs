@@ -11,7 +11,7 @@ use std::sync::Arc;
 
 use defl::config::{ExperimentConfig, Model, System};
 use defl::fl::{self, Shard};
-use defl::runtime::{stack_rows, Engine};
+use defl::runtime::Engine;
 use defl::sim::run_experiment;
 
 fn main() -> anyhow::Result<()> {
@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
         }
     }
     rows[2].iter_mut().for_each(|w| *w *= -2.0); // Byzantine node 2
-    let out = engine.krum(4, 1, &stack_rows(&rows), &[1.0; 4])?;
+    let out = engine.krum(1, &rows, &[1.0; 4])?;
     println!("multi-krum mask: {:?} (node 2 filtered)", out.mask);
     assert_eq!(out.mask[2], 0.0);
 

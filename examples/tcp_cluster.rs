@@ -1,84 +1,115 @@
-//! Deployment-path demo: the same weight-exchange + Multi-Krum round the
-//! simulator runs, over REAL localhost TCP sockets.
+//! Deployment-path demo: the FULL DeFL node — Algorithm 1 client,
+//! Algorithm 2 replica, HotStuff synchronizer, weight pool — over REAL
+//! localhost TCP sockets, driven by the same transport-agnostic actor
+//! the simulator runs (`net::transport` + `net::tcp::run_actor`).
 //!
-//! Spawns 4 node threads that each locally train one round, broadcast
-//! their (one poisoned) weights through the storage-layer mesh, run the
-//! Multi-Krum filter on what they received, and verify that all honest
-//! nodes computed the IDENTICAL aggregate — the Lemma-1 property that
-//! lets every node act as its own parameter server.
+//! Spawns 4 node threads (one Byzantine sign-flipper). Each locally
+//! trains, multicasts its weight blob through the storage-layer mesh,
+//! commits digest-only UPD/AGG transactions through HotStuff, and
+//! Multi-Krum-aggregates straight out of its pool — for several rounds.
+//! At the end every honest node must have reached the same round with
+//! the IDENTICAL final-model digest: the Lemma-1 property that lets each
+//! node act as its own parameter server, demonstrated on real sockets.
 //!
 //! Run: `cargo run --release --example tcp_cluster`
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use defl::config::Model;
-use defl::crypto::Digest;
-use defl::defl::WeightBlob;
-use defl::fl::{self, Shard};
-use defl::krum;
-use defl::metrics::Traffic;
-use defl::net::tcp::{local_addrs, TcpNode};
+use defl::config::{Attack, ExperimentConfig, Model, System};
+use defl::crypto::{Digest, KeyRegistry, NodeId};
+use defl::defl::DeflNode;
+use defl::net::tcp::{local_addrs, run_actor, TcpNode};
 use defl::runtime::Engine;
-use defl::util::{Decode, Encode};
+use defl::sim::build_data;
 
 fn main() -> anyhow::Result<()> {
     defl::util::logging::init();
-    let n = 4usize;
-    let (train, _test) = fl::synth_cifar(1024 + 256, 11).split(1024);
-    let train = Arc::new(train);
+    let cfg = ExperimentConfig {
+        system: System::Defl,
+        model: Model::CifarCnn,
+        n_nodes: 4,
+        f_byzantine: 1,
+        attack: Attack::SignFlip { sigma: -2.0 },
+        rounds: 2,
+        local_steps: 4,
+        train_samples: 1024,
+        test_samples: 256,
+        // Wall-clock GST_LT: generous enough for every peer's local
+        // training + consensus to land before the AGG quorum forms.
+        gst_lt_ms: 2_000,
+        ..Default::default()
+    };
+    cfg.validate()?;
+    let n = cfg.n_nodes;
     let addrs = local_addrs(n, 42150);
+    let registry = KeyRegistry::new(n, cfg.seed);
 
-    println!("spawning {n} TCP nodes on 127.0.0.1:42150..{}", 42150 + n - 1);
+    println!("spawning {n} TCP DeFL nodes on 127.0.0.1:42150..{}", 42150 + n - 1);
     let mut handles = Vec::new();
-    for id in 0..n as u32 {
-        let (train, addrs) = (train.clone(), addrs.clone());
-        handles.push(std::thread::spawn(move || -> anyhow::Result<Digest> {
-            // PJRT clients are not Send: each node thread owns its engine,
+    for id in 0..n as NodeId {
+        let (cfg, addrs, registry) = (cfg.clone(), addrs.clone(), registry.clone());
+        handles.push(std::thread::spawn(move || -> anyhow::Result<(u64, Digest)> {
+            // PJRT clients are not Send: each node thread owns its engine
+            // and rebuilds the (deterministic) dataset from the seed,
             // exactly as separate silo processes would in deployment.
-            let engine = Arc::new(Engine::load_default(Model::CifarCnn)?);
-            let theta0 = engine.init_params(42)?;
-            let node = TcpNode::connect_mesh(id, &addrs)?;
-            // Local round: train from the shared init.
-            let per = train.len() / 4;
-            let mut shard = Shard::new((id as usize * per..(id as usize + 1) * per).collect());
-            let (mut theta, loss) =
-                fl::local_train(&engine, &train, &mut shard, theta0, 4, 0.05)?;
-            if id == 3 {
-                // Node 3 is Byzantine: sign-flipping attack.
-                theta.iter_mut().for_each(|w| *w *= -2.0);
-            }
-            println!("node {id}: trained (loss {loss:.3}), broadcasting {} f32", theta.len());
-            let blob = WeightBlob { node: id, round: 1, weights: theta.clone() };
-            node.broadcast(Traffic::Weights, &blob.to_bytes())?;
+            let engine = Arc::new(Engine::load_default(cfg.model)?);
+            let (train, _test, mut shards, sizes) = build_data(&cfg, &engine);
+            let theta0 = engine.init_params(cfg.seed as u32)?;
+            let shard = shards.remove(id as usize);
 
-            // Collect the other 3 blobs from the mesh.
-            let mut rows: Vec<Option<Vec<f32>>> = vec![None; 4];
-            rows[id as usize] = Some(theta);
-            let mut have = 1;
-            while have < 4 {
-                let msg = node
-                    .recv_timeout(Duration::from_secs(30))
-                    .ok_or_else(|| anyhow::anyhow!("node {id}: timed out"))?;
-                let blob = WeightBlob::from_bytes(&msg.bytes)?;
-                if rows[blob.node as usize].is_none() {
-                    rows[blob.node as usize] = Some(blob.weights);
-                    have += 1;
-                }
-            }
-            let rows: Vec<Vec<f32>> = rows.into_iter().map(|r| r.unwrap()).collect();
-            let out = krum::multi_krum(&rows, &[1.0; 4], 1, 3)?;
-            assert_eq!(out.mask[3], 0.0, "byzantine node escaped the filter");
-            Ok(Digest::of_weights(&out.aggregate))
+            let mesh = TcpNode::connect_mesh(id, &addrs)?;
+            let mut node = DeflNode::new(
+                id,
+                cfg,
+                engine,
+                train,
+                shard,
+                sizes,
+                registry,
+                theta0,
+            );
+            // Linger after `done` so peers still finalizing their last
+            // round keep getting this node's consensus votes.
+            run_actor(
+                &mesh,
+                &mut node,
+                Duration::from_secs(120),
+                |n| n.done,
+                Duration::from_secs(3),
+            )?;
+
+            let digest = node
+                .final_theta
+                .as_ref()
+                .map(|w| w.digest())
+                .ok_or_else(|| anyhow::anyhow!("node {id}: finished without a final model"))?;
+            println!(
+                "node {id}: done after {} rounds, final digest {}",
+                node.stats.rounds_done,
+                digest.short()
+            );
+            Ok((node.stats.rounds_done, digest))
         }));
     }
 
-    let digests: Vec<Digest> = handles
+    let results: Vec<(u64, Digest)> = handles
         .into_iter()
         .map(|h| h.join().expect("thread panicked"))
         .collect::<anyhow::Result<_>>()?;
-    println!("aggregate digests: {:?}", digests.iter().map(|d| d.short()).collect::<Vec<_>>());
-    assert!(digests.windows(2).all(|w| w[0] == w[1]), "nodes disagree!");
-    println!("all {n} nodes agree on the filtered aggregate ✓ (byzantine node 3 excluded)");
+
+    // Honest nodes (ids ≥ f_byzantine) must agree exactly.
+    let honest = &results[cfg.f_byzantine..];
+    assert!(
+        honest.windows(2).all(|w| w[0] == w[1]),
+        "honest nodes disagree: {results:?}"
+    );
+    assert_eq!(honest[0].0, cfg.rounds as u64, "rounds incomplete");
+    println!(
+        "all {} honest nodes agree: {} rounds, digest {} ✓ (byzantine node 0 filtered)",
+        honest.len(),
+        honest[0].0,
+        honest[0].1.short()
+    );
     Ok(())
 }

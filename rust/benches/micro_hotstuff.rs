@@ -17,7 +17,7 @@ struct Node {
 }
 
 impl Node {
-    fn go(&mut self, ctx: &mut Ctx, out: Vec<Action>) {
+    fn go(&mut self, ctx: &mut dyn Ctx, out: Vec<Action>) {
         for act in out {
             match act {
                 Action::Send { to, msg } => ctx.send(to, Traffic::Consensus, msg.to_bytes()),
@@ -30,22 +30,22 @@ impl Node {
 }
 
 impl Actor for Node {
-    fn on_start(&mut self, ctx: &mut Ctx) {
+    fn on_start(&mut self, ctx: &mut dyn Ctx) {
         let mut out = Vec::new();
         self.hs.start(&mut out);
         for _ in 0..4 {
-            self.hs.submit(vec![ctx.node as u8; 45]); // UPD-sized commands
+            self.hs.submit(vec![ctx.node() as u8; 45]); // UPD-sized commands
         }
         self.go(ctx, out);
     }
-    fn on_message(&mut self, ctx: &mut Ctx, from: NodeId, _: Traffic, bytes: &[u8]) {
+    fn on_message(&mut self, ctx: &mut dyn Ctx, from: NodeId, _: Traffic, bytes: &[u8]) {
         let Ok(msg) = Msg::from_bytes(bytes) else { return };
         let mut out = Vec::new();
         let _ = self.hs.on_message(from, msg, &mut out);
-        self.hs.submit(vec![ctx.node as u8; 45]); // keep the pipe full
+        self.hs.submit(vec![ctx.node() as u8; 45]); // keep the pipe full
         self.go(ctx, out);
     }
-    fn on_timer(&mut self, ctx: &mut Ctx, id: u64) {
+    fn on_timer(&mut self, ctx: &mut dyn Ctx, id: u64) {
         let mut out = Vec::new();
         self.hs.on_timeout(id, &mut out);
         self.go(ctx, out);

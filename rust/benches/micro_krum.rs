@@ -4,28 +4,38 @@ mod common;
 
 use defl::config::Model;
 use defl::krum;
-use defl::runtime::stack_rows;
 use defl::util::bench::bench;
 use defl::util::Pcg;
+use defl::weights::Weights;
 
 fn main() {
     common::bench_scale();
     let engine = common::engine(Model::CifarCnn);
     let d = engine.dim();
     println!("== micro: Multi-Krum over f32[n,{d}] ==");
+    println!("(rows enter as shared Weights handles — the pool path: no");
+    println!(" per-row to_vec; the artifact pays one stack into its input)");
     let mut rng = Pcg::seeded(1);
     for (n, f) in [(4usize, 1usize), (7, 2), (10, 3)] {
-        let rows: Vec<Vec<f32>> = (0..n)
-            .map(|_| (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+        // Shared handles, exactly what DeflNode::aggregate_last reads out
+        // of the WeightPool.
+        let rows: Vec<Weights> = (0..n)
+            .map(|_| Weights::new((0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect()))
             .collect();
         let sw = vec![1.0f32; n];
-        let stacked = stack_rows(&rows);
         let a = bench(&format!("krum artifact n={n} f={f}"), 3, 30, || {
-            std::hint::black_box(engine.krum(n, f, &stacked, &sw).unwrap());
+            std::hint::black_box(engine.krum(f, &rows, &sw).unwrap());
         });
         let b = bench(&format!("krum native   n={n} f={f}"), 3, 30, || {
             std::hint::black_box(krum::multi_krum(&rows, &sw, f, n - f).unwrap());
         });
         println!("  n={n}: artifact/native = {:.2}x", a.mean_ms() / b.mean_ms());
+        let c = bench(&format!("pairwise seq  n={n}"), 3, 30, || {
+            std::hint::black_box(krum::pairwise_sq_dists_seq(&rows));
+        });
+        let p = bench(&format!("pairwise par  n={n}"), 3, 30, || {
+            std::hint::black_box(krum::pairwise_sq_dists(&rows));
+        });
+        println!("  n={n}: pairwise par/seq = {:.2}x", p.mean_ms() / c.mean_ms());
     }
 }

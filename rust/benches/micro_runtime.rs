@@ -36,9 +36,8 @@ fn main() {
             std::hint::black_box(engine.eval_batch(&theta, &x, &y).unwrap());
         });
         let rows: Vec<Vec<f32>> = (0..4).map(|_| theta.clone()).collect();
-        let stacked = defl::runtime::stack_rows(&rows);
         bench("fedavg n=4", 2, 20, || {
-            std::hint::black_box(engine.fedavg(4, &stacked, &[1.0; 4]).unwrap());
+            std::hint::black_box(engine.fedavg(&rows, &[1.0; 4]).unwrap());
         });
     }
 }

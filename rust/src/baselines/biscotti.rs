@@ -28,8 +28,9 @@ use crate::fl::data::{Dataset, Shard};
 use crate::fl::trainer::local_train;
 use crate::krum;
 use crate::metrics::Traffic;
-use crate::net::sim::{Actor, Ctx};
-use crate::runtime::{stack_rows, Engine};
+use crate::net::transport::{Actor, Ctx};
+use crate::runtime::Engine;
+use crate::weights::Weights;
 use crate::util::codec::{decode_list, encode_list};
 use crate::util::{Decode, Encode};
 
@@ -50,8 +51,9 @@ pub struct BiscottiNode {
 
     round: u64,
     theta: Vec<f32>,
-    /// Updates seen for the current round (gossip-deduped).
-    updates: Vec<Option<Vec<f32>>>,
+    /// Updates seen for the current round (gossip-deduped); shared
+    /// handles, so gossip forwarding and block assembly never copy.
+    updates: Vec<Option<Weights>>,
     seen: HashSet<Digest>,
     sealed: bool,
     pub chain: Chain,
@@ -111,7 +113,7 @@ impl BiscottiNode {
         ((round - 1) % self.cfg.n_nodes as u64) as NodeId
     }
 
-    fn start_round(&mut self, ctx: &mut Ctx, round: u64) {
+    fn start_round(&mut self, ctx: &mut dyn Ctx, round: u64) {
         if self.done {
             return;
         }
@@ -145,7 +147,7 @@ impl BiscottiNode {
         if self.is_byzantine {
             poison_weights(&mut committed, self.attack, &mut self.atk_rng);
         }
-        let blob = WeightBlob { node: self.id, round, weights: committed.clone() };
+        let blob = WeightBlob { node: self.id, round, weights: committed.into() };
         self.note_update(&blob);
         // Flood origin: broadcast to all peers.
         ctx.broadcast(Traffic::Weights, BlMsg::Update(blob).to_bytes());
@@ -157,7 +159,7 @@ impl BiscottiNode {
         if blob.round != self.round || self.done {
             return false;
         }
-        let d = Digest::of_weights(&blob.weights);
+        let d = blob.digest(); // cached on the tensor
         if !self.seen.insert(d) {
             return false;
         }
@@ -172,7 +174,7 @@ impl BiscottiNode {
     }
 
     /// Leader seals once it has all updates (or on timeout).
-    fn maybe_seal(&mut self, ctx: &mut Ctx) {
+    fn maybe_seal(&mut self, ctx: &mut dyn Ctx) {
         if self.sealed || self.done || self.id != self.leader(self.round) {
             return;
         }
@@ -181,13 +183,13 @@ impl BiscottiNode {
         }
     }
 
-    fn seal(&mut self, ctx: &mut Ctx) {
+    fn seal(&mut self, ctx: &mut dyn Ctx) {
         if self.sealed || self.done {
             return;
         }
         self.sealed = true;
         // Block payload: every update of the round (Biscotti persists the
-        // accepted updates in the ledger).
+        // accepted updates in the ledger); w.clone() shares the tensor.
         let blobs: Vec<WeightBlob> = self
             .updates
             .iter()
@@ -216,7 +218,7 @@ impl BiscottiNode {
 
     /// Append the block and deterministically aggregate its updates with
     /// Multi-Krum — every node computes the identical global model.
-    fn apply_block(&mut self, ctx: &mut Ctx, block: ChainBlock) {
+    fn apply_block(&mut self, ctx: &mut dyn Ctx, block: ChainBlock) {
         match self.chain.append_if_new(block.clone()) {
             Ok(true) => {}
             _ => return,
@@ -227,7 +229,7 @@ impl BiscottiNode {
         if round != self.round {
             return;
         }
-        let mut rows = Vec::new();
+        let mut rows: Vec<Weights> = Vec::new();
         let mut sw = Vec::new();
         for b in &blobs {
             if b.weights.len() == self.engine.dim() {
@@ -243,7 +245,7 @@ impl BiscottiNode {
         let global = if f >= 1 && n >= f + 3 {
             if self.engine.has_krum(n, f) {
                 self.engine
-                    .krum(n, f, &stack_rows(&rows), &sw)
+                    .krum(f, &rows, &sw)
                     .map(|o| o.aggregate)
                     .unwrap_or_else(|_| {
                         krum::multi_krum(&rows, &sw, f, n - f).expect("krum").aggregate
@@ -265,11 +267,11 @@ impl BiscottiNode {
 }
 
 impl Actor for BiscottiNode {
-    fn on_start(&mut self, ctx: &mut Ctx) {
+    fn on_start(&mut self, ctx: &mut dyn Ctx) {
         self.start_round(ctx, 1);
     }
 
-    fn on_message(&mut self, ctx: &mut Ctx, from: NodeId, _class: Traffic, bytes: &[u8]) {
+    fn on_message(&mut self, ctx: &mut dyn Ctx, from: NodeId, _class: Traffic, bytes: &[u8]) {
         let Ok(msg) = BlMsg::from_bytes(bytes) else { return };
         match msg {
             BlMsg::Update(blob) => {
@@ -277,7 +279,7 @@ impl Actor for BiscottiNode {
                     // Flood-forward newly seen updates to everyone but the
                     // sender and origin (each node forwards each item once).
                     for to in 0..ctx.n_nodes() as NodeId {
-                        if to != ctx.node && to != from && to != blob.node {
+                        if to != ctx.node() && to != from && to != blob.node {
                             ctx.send(to, Traffic::Weights, BlMsg::Update(blob.clone()).to_bytes());
                         }
                     }
@@ -289,7 +291,7 @@ impl Actor for BiscottiNode {
         }
     }
 
-    fn on_timer(&mut self, ctx: &mut Ctx, id: u64) {
+    fn on_timer(&mut self, ctx: &mut dyn Ctx, id: u64) {
         if id & TIMER_SEAL != 0 {
             let round = id & !TIMER_SEAL;
             if round == self.round && !self.sealed && self.have() >= 1 {

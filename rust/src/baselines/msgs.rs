@@ -63,7 +63,7 @@ mod tests {
     #[test]
     fn msgs_roundtrip() {
         let msgs = vec![
-            BlMsg::Update(WeightBlob { node: 1, round: 2, weights: vec![1.0, 2.0] }),
+            BlMsg::Update(WeightBlob { node: 1, round: 2, weights: vec![1.0, 2.0].into() }),
             BlMsg::Global { round: 3, weights: vec![-1.0; 5] },
             BlMsg::Block(ChainBlock {
                 height: 1,

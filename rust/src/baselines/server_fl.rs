@@ -23,8 +23,9 @@ use crate::fl::data::{Dataset, Shard};
 use crate::fl::trainer::local_train;
 use crate::krum;
 use crate::metrics::Traffic;
-use crate::net::sim::{Actor, Ctx};
-use crate::runtime::{stack_rows, Engine};
+use crate::net::transport::{Actor, Ctx};
+use crate::runtime::Engine;
+use crate::weights::Weights;
 use crate::util::{Decode, Encode};
 
 use super::msgs::BlMsg;
@@ -47,8 +48,9 @@ pub struct ServerFlNode {
     /// Round currently being trained (1-based).
     round: u64,
     theta: Vec<f32>,
-    /// Aggregator state: updates collected for `round`.
-    collected: Vec<Option<Vec<f32>>>,
+    /// Aggregator state: updates collected for `round` (shared handles
+    /// straight off the wire — no copy per accepted update).
+    collected: Vec<Option<Weights>>,
     aggregated_this_round: bool,
     /// SL: every node's copy of the metadata chain.
     pub chain: Chain,
@@ -117,7 +119,7 @@ impl ServerFlNode {
     }
 
     /// Train the next round and ship the update to the aggregator.
-    fn start_round(&mut self, ctx: &mut Ctx, round: u64) {
+    fn start_round(&mut self, ctx: &mut dyn Ctx, round: u64) {
         if self.done {
             return;
         }
@@ -154,7 +156,7 @@ impl ServerFlNode {
         if self.is_byzantine {
             poison_weights(&mut committed, self.attack, &mut self.atk_rng);
         }
-        let blob = crate::defl::WeightBlob { node: self.id, round, weights: committed };
+        let blob = crate::defl::WeightBlob { node: self.id, round, weights: committed.into() };
         if self.id == agg_node {
             self.accept_update(ctx, blob);
         } else {
@@ -162,7 +164,7 @@ impl ServerFlNode {
         }
     }
 
-    fn accept_update(&mut self, ctx: &mut Ctx, blob: crate::defl::WeightBlob) {
+    fn accept_update(&mut self, ctx: &mut dyn Ctx, blob: crate::defl::WeightBlob) {
         if blob.round != self.round || self.aggregated_this_round || self.done {
             return;
         }
@@ -173,7 +175,7 @@ impl ServerFlNode {
         }
     }
 
-    fn aggregate_and_publish(&mut self, ctx: &mut Ctx) {
+    fn aggregate_and_publish(&mut self, ctx: &mut dyn Ctx) {
         if self.aggregated_this_round || self.done {
             return;
         }
@@ -193,7 +195,7 @@ impl ServerFlNode {
         let n = rows.len();
         let global = if n == self.cfg.n_nodes && self.engine.dim() == rows[0].len() {
             self.engine
-                .fedavg(n, &stack_rows(&rows), &sw)
+                .fedavg(&rows, &sw)
                 .unwrap_or_else(|_| krum::fedavg(&rows, &sw).expect("fedavg"))
         } else {
             krum::fedavg(&rows, &sw).expect("fedavg")
@@ -219,7 +221,7 @@ impl ServerFlNode {
         self.adopt_global(ctx, round, global);
     }
 
-    fn adopt_global(&mut self, ctx: &mut Ctx, round: u64, global: Vec<f32>) {
+    fn adopt_global(&mut self, ctx: &mut dyn Ctx, round: u64, global: Vec<f32>) {
         if self.done || round < self.round {
             return;
         }
@@ -234,11 +236,11 @@ impl ServerFlNode {
 }
 
 impl Actor for ServerFlNode {
-    fn on_start(&mut self, ctx: &mut Ctx) {
+    fn on_start(&mut self, ctx: &mut dyn Ctx) {
         self.start_round(ctx, 1);
     }
 
-    fn on_message(&mut self, ctx: &mut Ctx, _from: NodeId, _class: Traffic, bytes: &[u8]) {
+    fn on_message(&mut self, ctx: &mut dyn Ctx, _from: NodeId, _class: Traffic, bytes: &[u8]) {
         let Ok(msg) = BlMsg::from_bytes(bytes) else { return };
         match msg {
             BlMsg::Update(blob) => self.accept_update(ctx, blob),
@@ -249,7 +251,7 @@ impl Actor for ServerFlNode {
         }
     }
 
-    fn on_timer(&mut self, ctx: &mut Ctx, id: u64) {
+    fn on_timer(&mut self, ctx: &mut dyn Ctx, id: u64) {
         if id & TIMER_AGG_TIMEOUT != 0 {
             let round = id & !TIMER_AGG_TIMEOUT;
             if round == self.round && !self.aggregated_this_round {

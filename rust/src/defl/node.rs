@@ -2,6 +2,20 @@
 //! a **client** running Algorithm 1 (train → UPD → wait GST_LT → AGG) and
 //! a **replica** running Algorithm 2 over HotStuff-ordered transactions,
 //! with the decoupled storage layer ([`WeightPool`]) underneath.
+//!
+//! The node is written against [`crate::net::transport`], so the same
+//! state machine runs on the discrete-event simulator
+//! ([`crate::net::sim::SimNet`]) and on real sockets
+//! ([`crate::net::tcp::run_actor`]) — the deployment path of
+//! `examples/tcp_cluster.rs`.
+//!
+//! Commit-path copy discipline: one training round produces ONE owned
+//! tensor (the trainer output). Honest nodes wrap it into a shared
+//! [`Weights`] handle that the node state, the pool entry, the multicast
+//! [`WeightBlob`], and the UPD digest all reuse — zero further full-model
+//! copies (Byzantine nodes pay exactly one extra copy to poison the
+//! committed tensor while keeping their honest model). The SHA-256
+//! content digest is computed once per tensor and cached.
 
 use std::any::Any;
 use std::sync::Arc;
@@ -17,9 +31,10 @@ use crate::hotstuff::{Action, ByzMode, HotStuff, HsConfig};
 use crate::krum;
 use crate::mempool::WeightPool;
 use crate::metrics::Traffic;
-use crate::net::sim::{Actor, Ctx};
+use crate::net::transport::{Actor, Ctx};
 use crate::runtime::Engine;
 use crate::util::{Decode, Encode};
+use crate::weights::Weights;
 
 use super::replica::{ReplicaState, TxResponse};
 use super::tx::{Tx, WeightBlob};
@@ -57,17 +72,17 @@ pub struct DeflNode {
     atk_rng: crate::util::Pcg,
 
     l_round: u64,
-    theta: Vec<f32>,
+    theta: Weights,
     round_in_flight: Option<u64>,
     attack: Attack,
     is_byzantine: bool,
 
     pub stats: NodeStats,
     pub done: bool,
-    pub final_theta: Option<Vec<f32>>,
+    pub final_theta: Option<Weights>,
     /// (round, theta) history for loss-curve examples (off by default).
     pub record_history: bool,
-    pub theta_history: Vec<(u64, Vec<f32>)>,
+    pub theta_history: Vec<(u64, Weights)>,
 }
 
 impl DeflNode {
@@ -103,7 +118,7 @@ impl DeflNode {
             pool: WeightPool::new(cfg.tau),
             atk_rng,
             l_round: 0,
-            theta: theta0,
+            theta: Weights::new(theta0),
             round_in_flight: None,
             attack,
             is_byzantine,
@@ -120,7 +135,7 @@ impl DeflNode {
         }
     }
 
-    fn apply_actions(&mut self, ctx: &mut Ctx, actions: Vec<Action>) {
+    fn apply_actions(&mut self, ctx: &mut dyn Ctx, actions: Vec<Action>) {
         for act in actions {
             match act {
                 Action::Send { to, msg } => ctx.send(to, Traffic::Consensus, msg.to_bytes()),
@@ -171,12 +186,12 @@ impl DeflNode {
     /// (round 1 bootstrap: all nodes share the same seed-0 init).
     fn aggregate_last(&mut self) -> Result<Vec<f32>> {
         let digs = self.replica.last_round_digests();
-        // Perf (§Perf iteration 2): stack blobs straight out of the pool
-        // into the artifact's row-major input — the intermediate
-        // Vec<Vec<f32>> (an extra n·D copy per round) only exists on the
-        // native-fallback path.
+        // Rows leave the pool as shared Weights handles — no per-row copy
+        // on either the artifact or the native path; the only full-model
+        // write is the aggregation output itself (a fresh tensor the next
+        // training round consumes by move).
         let dim = self.engine.dim();
-        let mut present: Vec<(NodeId, &[f32])> = Vec::new();
+        let mut present: Vec<(NodeId, Weights)> = Vec::new();
         for (node, digest) in &digs {
             if let Ok(w) = self.pool.get(digest) {
                 if w.len() == dim {
@@ -185,30 +200,27 @@ impl DeflNode {
             }
         }
         if present.is_empty() {
-            return Ok(self.theta.clone());
+            return Ok(self.theta.to_vec());
         }
         if present.len() == 1 {
-            return Ok(present[0].1.to_vec());
+            return Ok(present.remove(0).1.to_vec());
         }
         let n = present.len();
         let sw: Vec<f32> = present
             .iter()
             .map(|(node, _)| self.shard_sizes[*node as usize])
             .collect();
+        let rows: Vec<Weights> = present.into_iter().map(|(_, w)| w).collect();
         let f = self.cfg.krum_f().min(n.saturating_sub(3));
         if f >= 1 && n >= f + 3 && self.engine.has_krum(n, f) {
-            // Hot path: AOT artifact (L1 Pallas Gram kernel).
-            let mut stacked = Vec::with_capacity(n * dim);
-            for (_, w) in &present {
-                stacked.extend_from_slice(w);
-            }
-            let out = self.engine.krum(n, f, &stacked, &sw)?;
+            // Hot path: AOT artifact (L1 Pallas Gram kernel); rows stack
+            // straight into the artifact's row-major input buffer.
+            let out = self.engine.krum(f, &rows, &sw)?;
             self.stats.agg_artifact += 1;
             return Ok(out.aggregate);
         }
         // Fallback: native Multi-Krum (combos outside the exported set)
         // or weighted average when too few rows for Krum.
-        let rows: Vec<Vec<f32>> = present.iter().map(|(_, w)| w.to_vec()).collect();
         self.stats.agg_native += 1;
         if f >= 1 && n >= f + 3 {
             Ok(krum::multi_krum(&rows, &sw, f, n - f)?.aggregate)
@@ -218,7 +230,7 @@ impl DeflNode {
     }
 
     /// Algorithm 1: aggregate → local train → UPD → (GST_LT) → AGG.
-    fn try_start_round(&mut self, ctx: &mut Ctx) {
+    fn try_start_round(&mut self, ctx: &mut dyn Ctx) {
         if self.done || self.l_round > self.replica.r_round {
             return;
         }
@@ -236,17 +248,17 @@ impl DeflNode {
             Ok(a) => a,
             Err(e) => {
                 log::warn!("n{}: aggregation failed: {e:#}", self.id);
-                self.theta.clone()
+                self.theta.to_vec()
             }
         };
         if self.record_history {
-            self.theta_history.push((self.replica.r_round, agg.clone()));
+            self.theta_history.push((self.replica.r_round, Weights::new(agg.clone())));
         }
         let lr = self.cfg.lr_at(target - 1);
         let steps = self.cfg.local_steps;
         match local_train(&self.engine, &self.data, &mut self.shard, agg, steps, lr) {
             Ok((theta_new, loss)) => {
-                self.theta = theta_new;
+                self.theta = Weights::new(theta_new);
                 self.stats.losses.push(loss);
             }
             Err(e) => {
@@ -255,15 +267,20 @@ impl DeflNode {
             }
         }
 
-        // Poisoning attacks transform the weights the node COMMITS.
-        let mut committed = self.theta.clone();
-        if self.is_byzantine {
-            poison_weights(&mut committed, self.attack, &mut self.atk_rng);
-        }
+        // Poisoning attacks transform the weights the node COMMITS; honest
+        // nodes commit the very tensor they keep (zero-copy).
+        let committed = if self.is_byzantine {
+            let mut poisoned = self.theta.to_vec();
+            poison_weights(&mut poisoned, self.attack, &mut self.atk_rng);
+            Weights::new(poisoned)
+        } else {
+            self.theta.clone()
+        };
 
-        // Storage layer: blob to every pool (single-send accounting).
+        // Storage layer: ONE shared tensor backs the pool entry, the blob
+        // multicast, and (via the cached digest) the UPD transaction.
+        let digest = committed.digest();
         let blob = WeightBlob { node: self.id, round: target, weights: committed.clone() };
-        let digest = blob.digest();
         self.pool.put(target, committed);
         ctx.multicast(Traffic::Weights, blob.to_bytes());
 
@@ -294,7 +311,7 @@ impl DeflNode {
         self.done = true;
         self.stats.rounds_done = self.replica.r_round;
         self.final_theta = Some(match self.aggregate_last() {
-            Ok(a) => a,
+            Ok(a) => Weights::new(a),
             Err(_) => self.theta.clone(),
         });
         self.stats.pool_peak_bytes = self.pool.peak_bytes();
@@ -311,14 +328,14 @@ impl DeflNode {
 }
 
 impl Actor for DeflNode {
-    fn on_start(&mut self, ctx: &mut Ctx) {
+    fn on_start(&mut self, ctx: &mut dyn Ctx) {
         let mut out = Vec::new();
         self.hs.start(&mut out);
         self.apply_actions(ctx, out);
         self.try_start_round(ctx);
     }
 
-    fn on_message(&mut self, ctx: &mut Ctx, from: NodeId, class: Traffic, bytes: &[u8]) {
+    fn on_message(&mut self, ctx: &mut dyn Ctx, from: NodeId, class: Traffic, bytes: &[u8]) {
         match class {
             Traffic::Weights => {
                 if let Ok(blob) = WeightBlob::from_bytes(bytes) {
@@ -340,7 +357,7 @@ impl Actor for DeflNode {
         }
     }
 
-    fn on_timer(&mut self, ctx: &mut Ctx, id: u64) {
+    fn on_timer(&mut self, ctx: &mut dyn Ctx, id: u64) {
         if id & TIMER_HS != 0 {
             let mut out = Vec::new();
             self.hs.on_timeout(id & !TIMER_HS, &mut out);

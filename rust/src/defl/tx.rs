@@ -2,12 +2,16 @@
 //!
 //! Consensus carries only fixed-size transactions — UPD with the weight
 //! *digest*, AGG with just a round number (§3.4 decoupling). The weight
-//! blobs travel on the storage layer as [`WeightBlob`] multicasts.
+//! blobs travel on the storage layer as [`WeightBlob`] multicasts; the
+//! blob holds a shared [`Weights`] handle, so building one from the
+//! trainer output or pool entry never copies the tensor, and encoding
+//! it streams the tensor's zero-copy byte view straight into the frame.
 
 use anyhow::Result;
 
 use crate::crypto::{Digest, NodeId};
 use crate::util::codec::{Cursor, Decode, Encode};
+use crate::weights::Weights;
 
 /// A DeFL transaction ordered by HotStuff (Algorithm 1 commits these;
 /// Algorithm 2 executes them).
@@ -73,17 +77,20 @@ impl Decode for Tx {
     }
 }
 
-/// Storage-layer blob: the weights behind an UPD digest.
+/// Storage-layer blob: the weights behind an UPD digest. Cloning a blob
+/// (gossip forwarding, block assembly) shares the tensor.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WeightBlob {
     pub node: NodeId,
     pub round: u64,
-    pub weights: Vec<f32>,
+    pub weights: Weights,
 }
 
 impl WeightBlob {
+    /// Content digest of the carried weights (cached on the tensor: the
+    /// pool insert and the UPD transaction reuse the same hash).
     pub fn digest(&self) -> Digest {
-        Digest::of_weights(&self.weights)
+        self.weights.digest()
     }
 }
 
@@ -103,7 +110,7 @@ impl Decode for WeightBlob {
         Ok(WeightBlob {
             node: NodeId::decode(cur)?,
             round: u64::decode(cur)?,
-            weights: Vec::<f32>::decode(cur)?,
+            weights: Weights::decode(cur)?,
         })
     }
 }
@@ -111,6 +118,7 @@ impl Decode for WeightBlob {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::{forall, gens};
 
     #[test]
     fn tx_roundtrip() {
@@ -134,12 +142,63 @@ mod tests {
 
     #[test]
     fn blob_roundtrip_and_digest() {
-        let blob = WeightBlob { node: 2, round: 5, weights: vec![1.5, -2.0, 0.25] };
+        let blob = WeightBlob { node: 2, round: 5, weights: vec![1.5, -2.0, 0.25].into() };
         let bytes = blob.to_bytes();
         assert_eq!(bytes.len(), blob.encoded_len());
         let back = WeightBlob::from_bytes(&bytes).unwrap();
         assert_eq!(back, blob);
         assert_eq!(back.digest(), Digest::of_weights(&blob.weights));
+    }
+
+    #[test]
+    fn blob_construction_shares_the_tensor() {
+        // Commit path: pool entry, blob, and the node's handle are one
+        // allocation (the ≤1-copy acceptance criterion).
+        let w = Weights::new(vec![0.5f32; 128]);
+        let blob = WeightBlob { node: 0, round: 1, weights: w.clone() };
+        assert!(Weights::ptr_eq(&w, &blob.weights));
+        let again = blob.clone();
+        assert!(Weights::ptr_eq(&w, &again.weights));
+    }
+
+    #[test]
+    fn prop_blob_codec_roundtrip_via_zero_copy_bytes() {
+        // Random dims/rounds/node ids through the `as_bytes` encode path:
+        // wire image matches the legacy Vec<f32> layout, decode inverts
+        // encode, and the digest survives the trip (content addressing —
+        // what UPD verification depends on).
+        forall("blob-roundtrip", 17, 120, 600, |rng, size| {
+            let dim = rng.gen_usize(size + 1);
+            WeightBlob {
+                node: rng.next_u32(),
+                round: rng.next_u64(),
+                weights: gens::f32_vec(rng, dim, 10.0).into(),
+            }
+        }, |blob| {
+            let bytes = blob.to_bytes();
+            if bytes.len() != blob.encoded_len() {
+                return Err(format!("encoded_len {} != {}", blob.encoded_len(), bytes.len()));
+            }
+            // Legacy layout compatibility.
+            let legacy = {
+                let mut out = Vec::new();
+                blob.node.encode(&mut out);
+                blob.round.encode(&mut out);
+                blob.weights.to_vec().encode(&mut out);
+                out
+            };
+            if bytes != legacy {
+                return Err("wire image diverged from Vec<f32> layout".into());
+            }
+            let back = WeightBlob::from_bytes(&bytes).map_err(|e| e.to_string())?;
+            if back != *blob {
+                return Err("decode(encode(blob)) != blob".into());
+            }
+            if back.digest() != blob.digest() {
+                return Err("digest not stable across the wire".into());
+            }
+            Ok(())
+        });
     }
 
     #[test]

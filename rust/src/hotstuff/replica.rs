@@ -503,7 +503,8 @@ impl HotStuff {
 mod tests {
     use super::*;
     use crate::metrics::Traffic;
-    use crate::net::sim::{Actor, Ctx, SimConfig, SimNet};
+    use crate::net::sim::{SimConfig, SimNet};
+    use crate::net::transport::{Actor, Ctx};
     use crate::util::{Decode, Encode};
     use std::any::Any;
 
@@ -517,7 +518,7 @@ mod tests {
     }
 
     impl HsNode {
-        fn apply(&mut self, ctx: &mut Ctx, actions: Vec<Action>) {
+        fn apply(&mut self, ctx: &mut dyn Ctx, actions: Vec<Action>) {
             for act in actions {
                 match act {
                     Action::Send { to, msg } => {
@@ -537,22 +538,22 @@ mod tests {
     }
 
     impl Actor for HsNode {
-        fn on_start(&mut self, ctx: &mut Ctx) {
-            self.hs.submit(format!("cmd-from-{}", ctx.node).into_bytes());
+        fn on_start(&mut self, ctx: &mut dyn Ctx) {
+            self.hs.submit(format!("cmd-from-{}", ctx.node()).into_bytes());
             let mut out = Vec::new();
             self.hs.start(&mut out);
             self.apply(ctx, out);
         }
-        fn on_message(&mut self, ctx: &mut Ctx, from: NodeId, _: Traffic, bytes: &[u8]) {
+        fn on_message(&mut self, ctx: &mut dyn Ctx, from: NodeId, _: Traffic, bytes: &[u8]) {
             let Ok(msg) = Msg::from_bytes(bytes) else { return };
             let mut out = Vec::new();
             let _ = self.hs.on_message(from, msg, &mut out);
             if self.inject_every_view {
-                self.hs.submit(format!("n{}-v{}", ctx.node, self.hs.view()).into_bytes());
+                self.hs.submit(format!("n{}-v{}", ctx.node(), self.hs.view()).into_bytes());
             }
             self.apply(ctx, out);
         }
-        fn on_timer(&mut self, ctx: &mut Ctx, id: u64) {
+        fn on_timer(&mut self, ctx: &mut dyn Ctx, id: u64) {
             let mut out = Vec::new();
             self.hs.on_timeout(id, &mut out);
             self.apply(ctx, out);
@@ -668,10 +669,10 @@ mod tests {
         log: Vec<Vec<u8>>,
     }
     impl Actor for GossipNode {
-        fn on_start(&mut self, ctx: &mut Ctx) {
+        fn on_start(&mut self, ctx: &mut dyn Ctx) {
             let mut out = Vec::new();
             self.hs.start(&mut out);
-            if ctx.node == 2 {
+            if ctx.node() == 2 {
                 self.hs.submit_and_gossip(b"from-node-2".to_vec(), &mut out);
             }
             for act in out {
@@ -683,7 +684,7 @@ mod tests {
                 }
             }
         }
-        fn on_message(&mut self, ctx: &mut Ctx, from: NodeId, _: Traffic, bytes: &[u8]) {
+        fn on_message(&mut self, ctx: &mut dyn Ctx, from: NodeId, _: Traffic, bytes: &[u8]) {
             let Ok(msg) = Msg::from_bytes(bytes) else { return };
             let mut out = Vec::new();
             let _ = self.hs.on_message(from, msg, &mut out);
@@ -696,7 +697,7 @@ mod tests {
                 }
             }
         }
-        fn on_timer(&mut self, ctx: &mut Ctx, id: u64) {
+        fn on_timer(&mut self, ctx: &mut dyn Ctx, id: u64) {
             let mut out = Vec::new();
             self.hs.on_timeout(id, &mut out);
             for act in out {

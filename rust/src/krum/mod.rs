@@ -6,6 +6,14 @@
 //! the arbitrary-(n, f) reference used for (a) cross-checking the artifact
 //! in tests, (b) configurations outside the exported combos, and (c) the
 //! pure-rust baselines.
+//!
+//! Rows are accepted as any `AsRef<[f32]>` (e.g. `Vec<f32>`, `&[f32]`,
+//! [`crate::weights::Weights`]), so the DeFL node aggregates straight out
+//! of the weight pool without a per-row copy. The O(n²·D) distance matrix
+//! — the dominant cost of the native fallback — is computed on multiple
+//! threads for large inputs, with results bit-identical to the sequential
+//! reference (each pair's f64 accumulation is untouched; only the pairs
+//! are distributed).
 
 use anyhow::{bail, Result};
 
@@ -20,33 +28,92 @@ pub struct KrumOutput {
     pub mask: Vec<f32>,
 }
 
-/// Pairwise squared distances between rows (n × n, symmetric, zero diag).
-pub fn pairwise_sq_dists(rows: &[Vec<f32>]) -> Vec<Vec<f32>> {
+/// One pair's squared distance, f64-accumulated exactly like the original
+/// sequential loop (shared by the sequential and parallel drivers so the
+/// two are bit-identical by construction).
+#[inline]
+fn pair_sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b.iter()) {
+        let d = (*x - *y) as f64;
+        acc += d * d;
+    }
+    acc as f32
+}
+
+/// Sequential reference for the pairwise distance matrix (kept public so
+/// tests can pin the parallel path against it).
+pub fn pairwise_sq_dists_seq<R: AsRef<[f32]>>(rows: &[R]) -> Vec<Vec<f32>> {
     let n = rows.len();
     let mut d2 = vec![vec![0.0f32; n]; n];
     for i in 0..n {
         for j in (i + 1)..n {
-            let mut acc = 0.0f64;
-            for (a, b) in rows[i].iter().zip(rows[j].iter()) {
-                let d = (*a - *b) as f64;
-                acc += d * d;
-            }
-            d2[i][j] = acc as f32;
-            d2[j][i] = acc as f32;
+            let d = pair_sq_dist(rows[i].as_ref(), rows[j].as_ref());
+            d2[i][j] = d;
+            d2[j][i] = d;
         }
+    }
+    d2
+}
+
+/// Below this many multiply-adds the thread-spawn overhead dominates and
+/// the sequential path wins.
+const PAR_WORK_THRESHOLD: usize = 1 << 21;
+
+/// Pairwise squared distances between rows (n × n, symmetric, zero diag).
+///
+/// Large inputs are chunked over `std::thread::scope` worker threads;
+/// per-pair arithmetic is identical to [`pairwise_sq_dists_seq`], so the
+/// result is bit-identical regardless of thread count.
+pub fn pairwise_sq_dists<R: AsRef<[f32]> + Sync>(rows: &[R]) -> Vec<Vec<f32>> {
+    let n = rows.len();
+    if n < 2 {
+        return pairwise_sq_dists_seq(rows);
+    }
+    let dim = rows[0].as_ref().len();
+    let n_pairs = n * (n - 1) / 2;
+    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+    if n_pairs * dim < PAR_WORK_THRESHOLD || threads < 2 || n_pairs < 2 {
+        return pairwise_sq_dists_seq(rows);
+    }
+
+    // Enumerate the upper triangle and stripe it across workers; every
+    // worker writes disjoint (i, j) results into its own chunk.
+    let pairs: Vec<(usize, usize)> = (0..n)
+        .flat_map(|i| ((i + 1)..n).map(move |j| (i, j)))
+        .collect();
+    let workers = threads.min(n_pairs);
+    let chunk = n_pairs.div_ceil(workers);
+    let mut dists = vec![0.0f32; n_pairs];
+
+    std::thread::scope(|scope| {
+        for (pair_chunk, out_chunk) in pairs.chunks(chunk).zip(dists.chunks_mut(chunk)) {
+            scope.spawn(move || {
+                for ((i, j), out) in pair_chunk.iter().zip(out_chunk.iter_mut()) {
+                    *out = pair_sq_dist(rows[*i].as_ref(), rows[*j].as_ref());
+                }
+            });
+        }
+    });
+
+    let mut d2 = vec![vec![0.0f32; n]; n];
+    for ((i, j), d) in pairs.into_iter().zip(dists) {
+        d2[i][j] = d;
+        d2[j][i] = d;
     }
     d2
 }
 
 /// Krum scores: for each row, the sum of squared distances to its
 /// n − f − 2 closest other rows.
-pub fn krum_scores(rows: &[Vec<f32>], f: usize) -> Result<Vec<f32>> {
+pub fn krum_scores<R: AsRef<[f32]> + Sync>(rows: &[R], f: usize) -> Result<Vec<f32>> {
     let n = rows.len();
     if n < f + 3 {
         bail!("krum needs n - f - 2 >= 1 (n={n}, f={f})");
     }
-    if let Some(bad) = rows.iter().position(|r| r.len() != rows[0].len()) {
-        bail!("krum: row {bad} has dim {} != {}", rows[bad].len(), rows[0].len());
+    let dim = rows[0].as_ref().len();
+    if let Some(bad) = rows.iter().position(|r| r.as_ref().len() != dim) {
+        bail!("krum: row {bad} has dim {} != {dim}", rows[bad].as_ref().len());
     }
     let closest = n - f - 2;
     let d2 = pairwise_sq_dists(rows);
@@ -62,8 +129,8 @@ pub fn krum_scores(rows: &[Vec<f32>], f: usize) -> Result<Vec<f32>> {
 /// Multi-Krum: FedAvg (weighted by `sample_weights`) over the `m` rows
 /// with the smallest Krum scores. Matches python/compile/aggregate.py
 /// (ties broken by index, like argsort).
-pub fn multi_krum(
-    rows: &[Vec<f32>],
+pub fn multi_krum<R: AsRef<[f32]> + Sync>(
+    rows: &[R],
     sample_weights: &[f32],
     f: usize,
     m: usize,
@@ -89,7 +156,7 @@ pub fn multi_krum(
         mask[i] = 1.0;
     }
 
-    let dim = rows[0].len();
+    let dim = rows[0].as_ref().len();
     let mut aggregate = vec![0.0f32; dim];
     let mut total_w = 0.0f64;
     for i in 0..n {
@@ -98,7 +165,7 @@ pub fn multi_krum(
         }
         let w = sample_weights[i] as f64;
         total_w += w;
-        for (acc, x) in aggregate.iter_mut().zip(rows[i].iter()) {
+        for (acc, x) in aggregate.iter_mut().zip(rows[i].as_ref().iter()) {
             *acc += (w * *x as f64) as f32;
         }
     }
@@ -110,7 +177,7 @@ pub fn multi_krum(
 }
 
 /// Plain FedAvg over all rows (the FL/SL aggregation rule).
-pub fn fedavg(rows: &[Vec<f32>], sample_weights: &[f32]) -> Result<Vec<f32>> {
+pub fn fedavg<R: AsRef<[f32]>>(rows: &[R], sample_weights: &[f32]) -> Result<Vec<f32>> {
     let n = rows.len();
     if n == 0 {
         bail!("fedavg: no rows");
@@ -118,10 +185,11 @@ pub fn fedavg(rows: &[Vec<f32>], sample_weights: &[f32]) -> Result<Vec<f32>> {
     if sample_weights.len() != n {
         bail!("fedavg: weight arity");
     }
-    let dim = rows[0].len();
+    let dim = rows[0].as_ref().len();
     let mut out = vec![0.0f64; dim];
     let mut total = 0.0f64;
     for (row, &w) in rows.iter().zip(sample_weights.iter()) {
+        let row = row.as_ref();
         if row.len() != dim {
             bail!("fedavg: ragged rows");
         }
@@ -140,6 +208,7 @@ mod tests {
     use crate::prop_assert;
     use crate::util::prop::{forall, gens};
     use crate::util::Pcg;
+    use crate::weights::Weights;
 
     fn cluster(rng: &mut Pcg, n: usize, d: usize, spread: f32) -> Vec<Vec<f32>> {
         let center = gens::f32_vec(rng, d, 1.0);
@@ -164,6 +233,49 @@ mod tests {
                 assert!((d2[i][j] - d2[j][i]).abs() < 1e-6);
             }
         }
+    }
+
+    #[test]
+    fn parallel_distances_bit_identical_to_sequential() {
+        // Force the parallel path (work > PAR_WORK_THRESHOLD) and compare
+        // bit patterns, not approximate values.
+        let mut rng = Pcg::seeded(44);
+        let n = 12;
+        let d = PAR_WORK_THRESHOLD / (12 * 11 / 2) + 17;
+        let rows = cluster(&mut rng, n, d, 1.0);
+        let par = pairwise_sq_dists(&rows);
+        let seq = pairwise_sq_dists_seq(&rows);
+        for i in 0..n {
+            for j in 0..n {
+                assert_eq!(
+                    par[i][j].to_bits(),
+                    seq[i][j].to_bits(),
+                    "bit mismatch at ({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn small_inputs_take_the_sequential_path_identically() {
+        let mut rng = Pcg::seeded(45);
+        let rows = cluster(&mut rng, 5, 64, 0.5);
+        let a = pairwise_sq_dists(&rows);
+        let b = pairwise_sq_dists_seq(&rows);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rows_may_be_weights_handles() {
+        // The pool path: aggregate straight from Weights without to_vec.
+        let mut rng = Pcg::seeded(46);
+        let vecs = cluster(&mut rng, 5, 32, 0.1);
+        let handles: Vec<Weights> = vecs.iter().map(|v| Weights::new(v.clone())).collect();
+        let a = multi_krum(&vecs, &[1.0; 5], 1, 4).unwrap();
+        let b = multi_krum(&handles, &[1.0; 5], 1, 4).unwrap();
+        assert_eq!(a.aggregate, b.aggregate);
+        assert_eq!(a.scores, b.scores);
+        assert_eq!(a.mask, b.mask);
     }
 
     #[test]

@@ -33,3 +33,4 @@ pub mod net;
 pub mod runtime;
 pub mod sim;
 pub mod util;
+pub mod weights;

@@ -5,18 +5,25 @@
 //! (current + last, §4.3), so storage is Mτn regardless of T — the 100×
 //! win over chain-based baselines in Figure 2. `gc(round)` drops
 //! everything older than `round − τ + 1`.
+//!
+//! Entries are [`Weights`] handles: inserting a tensor the caller also
+//! holds (trainer output, decoded blob) shares the allocation instead of
+//! copying it, the content digest is taken from the tensor's cache (one
+//! SHA-256 per tensor per process, not per layer), and `get` hands back
+//! a cheap clone the aggregation path can keep across pool mutations.
 
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
 use crate::crypto::Digest;
+use crate::weights::Weights;
 
 /// A stored weight blob, tagged with the round it belongs to.
 #[derive(Debug, Clone)]
 struct Entry {
     round: u64,
-    weights: Vec<f32>,
+    weights: Weights,
 }
 
 /// Content-addressed, round-tagged weight pool with τ-round retention.
@@ -24,7 +31,8 @@ struct Entry {
 pub struct WeightPool {
     tau: u64,
     entries: BTreeMap<Digest, Entry>,
-    /// Running byte gauge (4 bytes per f32 element).
+    /// Running byte gauge (4 bytes per f32 element), maintained
+    /// incrementally by `put`/`gc`.
     bytes: u64,
     /// Peak bytes ever resident (RAM model input).
     peak_bytes: u64,
@@ -41,10 +49,11 @@ impl WeightPool {
         }
     }
 
-    /// Insert a blob under its content digest. Returns the digest.
+    /// Insert a blob under its (cached) content digest. Returns the digest.
     /// Re-inserting identical content is a no-op (content addressing).
-    pub fn put(&mut self, round: u64, weights: Vec<f32>) -> Digest {
-        let digest = Digest::of_weights(&weights);
+    pub fn put(&mut self, round: u64, weights: impl Into<Weights>) -> Digest {
+        let weights = weights.into();
+        let digest = weights.digest();
         if let Some(prev) = self.entries.get_mut(&digest) {
             // Same content seen again (e.g. re-broadcast): keep the newest
             // round tag so GC doesn't reap a still-referenced blob.
@@ -57,10 +66,11 @@ impl WeightPool {
         digest
     }
 
-    /// Fetch and integrity-check a blob.
-    pub fn get(&self, digest: &Digest) -> Result<&[f32]> {
+    /// Fetch a blob: a cheap handle clone that stays valid across later
+    /// pool mutations (so aggregation never copies rows out).
+    pub fn get(&self, digest: &Digest) -> Result<Weights> {
         match self.entries.get(digest) {
-            Some(e) => Ok(&e.weights),
+            Some(e) => Ok(e.weights.clone()),
             None => bail!("mempool: {} not present", digest.short()),
         }
     }
@@ -69,18 +79,21 @@ impl WeightPool {
         self.entries.contains_key(digest)
     }
 
-    /// Drop all blobs older than `current_round − τ + 1`.
+    /// Drop all blobs older than `current_round − τ + 1`. The byte gauge
+    /// is maintained incrementally (subtract what was reaped) instead of
+    /// re-summing every surviving entry.
     pub fn gc(&mut self, current_round: u64) {
         let keep_from = current_round.saturating_sub(self.tau - 1);
-        let before = self.entries.len();
-        self.entries.retain(|_, e| e.round >= keep_from);
-        if self.entries.len() != before {
-            self.bytes = self
-                .entries
-                .values()
-                .map(|e| (e.weights.len() * 4) as u64)
-                .sum();
-        }
+        let mut reaped = 0u64;
+        self.entries.retain(|_, e| {
+            if e.round >= keep_from {
+                true
+            } else {
+                reaped += (e.weights.len() * 4) as u64;
+                false
+            }
+        });
+        self.bytes -= reaped;
     }
 
     pub fn len(&self) -> usize {
@@ -113,9 +126,22 @@ mod tests {
         let mut p = WeightPool::new(2);
         let w = blob(1.0, 100);
         let d = p.put(0, w.clone());
-        assert_eq!(p.get(&d).unwrap(), &w[..]);
+        assert_eq!(p.get(&d).unwrap().as_slice(), &w[..]);
         assert!(p.contains(&d));
         assert_eq!(p.bytes(), 400);
+    }
+
+    #[test]
+    fn put_and_get_share_storage_zero_copy() {
+        // The commit path's zero-copy contract: the tensor the node keeps,
+        // the pool entry, and what aggregation reads are ONE allocation.
+        let mut p = WeightPool::new(2);
+        let w = Weights::new(blob(3.0, 64));
+        let d = p.put(1, w.clone());
+        let got = p.get(&d).unwrap();
+        assert!(Weights::ptr_eq(&w, &got), "pool copied the tensor");
+        // The digest came from the tensor's cache — same value either way.
+        assert_eq!(got.digest(), d);
     }
 
     #[test]
@@ -145,6 +171,21 @@ mod tests {
         assert!(p.contains(&d1));
         assert!(p.contains(&d2));
         assert_eq!(p.bytes(), 80);
+    }
+
+    #[test]
+    fn gc_keeps_byte_gauge_consistent_incrementally() {
+        // Mixed sizes so a stale gauge would be caught exactly.
+        let mut p = WeightPool::new(2);
+        for round in 0..20u64 {
+            p.put(round, blob(round as f32, 10 + (round as usize % 3) * 5));
+            p.gc(round);
+            let expected: u64 = (0..=round)
+                .filter(|r| *r + 1 >= round)
+                .map(|r| (10 + (r as usize % 3) * 5) as u64 * 4)
+                .sum();
+            assert_eq!(p.bytes(), expected, "gauge drifted at round {round}");
+        }
     }
 
     #[test]

@@ -1,9 +1,13 @@
-//! Networking: a deterministic discrete-event simulator (the default
-//! experiment substrate, with exact byte accounting for Figures 2/3 and
-//! fault injection for the threat models) and a real TCP transport that
-//! runs the same actor code over localhost sockets.
+//! Networking: the transport-agnostic [`Actor`]/[`Ctx`] interface every
+//! protocol state machine is written against, plus its two hosts — a
+//! deterministic discrete-event simulator (the default experiment
+//! substrate, with exact byte accounting for Figures 2/3 and fault
+//! injection for the threat models) and a real TCP transport whose
+//! [`tcp::run_actor`] drives the same actor code over localhost sockets.
 
 pub mod sim;
 pub mod tcp;
+pub mod transport;
 
-pub use sim::{Actor, Ctx, SimConfig, SimNet};
+pub use sim::{SimConfig, SimNet};
+pub use transport::{Actor, Ctx};

@@ -1,8 +1,10 @@
 //! Deterministic discrete-event network simulator.
 //!
 //! Every protocol in this repo (HotStuff replicas, DeFL clients, the
-//! central-server / Swarm / Biscotti baselines) is written as an [`Actor`]
-//! state machine driven by messages and timers. The simulator provides:
+//! central-server / Swarm / Biscotti baselines) is written against the
+//! transport-agnostic [`Actor`]/[`Ctx`] interface in
+//! [`crate::net::transport`]; this module is the simulator host. It
+//! provides:
 //!
 //! * a virtual clock (µs) and an ordered event queue — runs are exactly
 //!   reproducible from the seed;
@@ -15,13 +17,14 @@
 //!   memory pool (§5.3: DeFL's *sending* bandwidth stays linear in n
 //!   while everyone still receives every blob).
 
-use std::any::Any;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashSet};
 
 use crate::crypto::NodeId;
 use crate::metrics::{NetMeter, Traffic};
 use crate::util::Pcg;
+
+pub use crate::net::transport::{Actor, Ctx};
 
 /// Per-message wire overhead we account besides the payload (frame header,
 /// addressing, auth tag) — keeps byte meters honest for tiny messages.
@@ -52,24 +55,15 @@ impl Default for SimConfig {
     }
 }
 
-/// A protocol state machine hosted by the simulator.
-pub trait Actor {
-    /// Called once at t=0 (schedule initial timers, send first messages).
-    fn on_start(&mut self, ctx: &mut Ctx);
-    /// A message from `from` arrived.
-    fn on_message(&mut self, ctx: &mut Ctx, from: NodeId, class: Traffic, bytes: &[u8]);
-    /// A timer set via `ctx.set_timer` fired.
-    fn on_timer(&mut self, ctx: &mut Ctx, timer_id: u64);
-    /// Downcast hook so experiments can extract actor state after a run.
-    fn as_any(&mut self) -> &mut dyn Any;
-}
-
-/// Side-effect collector handed to actors; the simulator applies the
-/// queued sends/timers after the callback returns.
-pub struct Ctx {
-    pub node: NodeId,
+/// The simulator's side-effect collector: buffers an actor callback's
+/// sends/multicasts/timers; [`SimNet`] applies them with link latency and
+/// byte accounting after the callback returns.
+pub struct SimCtx {
+    node: NodeId,
     now_us: u64,
     n_nodes: usize,
+    /// Per-event forked stream, kept so adding/removing actor-side RNG use
+    /// never perturbs the simulator's own link-jitter stream.
     pub rng: Pcg,
     sends: Vec<(NodeId, Traffic, Vec<u8>)>,
     multicasts: Vec<(Traffic, Vec<u8>)>,
@@ -77,42 +71,32 @@ pub struct Ctx {
     halted: bool,
 }
 
-impl Ctx {
-    pub fn now_us(&self) -> u64 {
-        self.now_us
+impl Ctx for SimCtx {
+    fn node(&self) -> NodeId {
+        self.node
     }
 
-    pub fn n_nodes(&self) -> usize {
+    fn n_nodes(&self) -> usize {
         self.n_nodes
     }
 
-    /// Unicast `bytes` to `to`.
-    pub fn send(&mut self, to: NodeId, class: Traffic, bytes: Vec<u8>) {
+    fn now_us(&self) -> u64 {
+        self.now_us
+    }
+
+    fn send(&mut self, to: NodeId, class: Traffic, bytes: Vec<u8>) {
         self.sends.push((to, class, bytes));
     }
 
-    /// Unicast to every other node (n−1 sends, each metered).
-    pub fn broadcast(&mut self, class: Traffic, bytes: Vec<u8>) {
-        for to in 0..self.n_nodes as NodeId {
-            if to != self.node {
-                self.sends.push((to, class, bytes.clone()));
-            }
-        }
-    }
-
-    /// Publish to the shared storage layer: metered as ONE send at the
-    /// publisher, but delivered to (and metered at) every other node.
-    pub fn multicast(&mut self, class: Traffic, bytes: Vec<u8>) {
+    fn multicast(&mut self, class: Traffic, bytes: Vec<u8>) {
         self.multicasts.push((class, bytes));
     }
 
-    /// Schedule `on_timer(id)` after `delay_us`.
-    pub fn set_timer(&mut self, delay_us: u64, id: u64) {
+    fn set_timer(&mut self, delay_us: u64, id: u64) {
         self.timers.push((delay_us, id));
     }
 
-    /// Stop the whole simulation (experiment finished).
-    pub fn halt(&mut self) {
+    fn halt(&mut self) {
         self.halted = true;
     }
 }
@@ -256,7 +240,7 @@ impl SimNet {
         self.push(self.time_us + delay, to, EventKind::Deliver { from, class, bytes });
     }
 
-    fn apply_ctx(&mut self, node: NodeId, ctx: Ctx) {
+    fn apply_ctx(&mut self, node: NodeId, ctx: SimCtx) {
         let slow = self.slowdown[node as usize];
         for (to, class, bytes) in ctx.sends {
             self.route(node, to, class, bytes, true);
@@ -285,7 +269,7 @@ impl SimNet {
         if self.crashed.contains(&ev.node) {
             return;
         }
-        let mut ctx = Ctx {
+        let mut ctx = SimCtx {
             node: ev.node,
             now_us: self.time_us,
             n_nodes: self.cfg.n_nodes,
@@ -349,10 +333,10 @@ impl SimNet {
 struct Noop;
 
 impl Actor for Noop {
-    fn on_start(&mut self, _: &mut Ctx) {}
-    fn on_message(&mut self, _: &mut Ctx, _: NodeId, _: Traffic, _: &[u8]) {}
-    fn on_timer(&mut self, _: &mut Ctx, _: u64) {}
-    fn as_any(&mut self) -> &mut dyn Any {
+    fn on_start(&mut self, _: &mut dyn Ctx) {}
+    fn on_message(&mut self, _: &mut dyn Ctx, _: NodeId, _: Traffic, _: &[u8]) {}
+    fn on_timer(&mut self, _: &mut dyn Ctx, _: u64) {}
+    fn as_any(&mut self) -> &mut dyn std::any::Any {
         self
     }
 }
@@ -360,6 +344,7 @@ impl Actor for Noop {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::any::Any;
 
     /// Ping-pong actor: counts round trips.
     struct Pinger {
@@ -370,12 +355,12 @@ mod tests {
     }
 
     impl Actor for Pinger {
-        fn on_start(&mut self, ctx: &mut Ctx) {
+        fn on_start(&mut self, ctx: &mut dyn Ctx) {
             if self.initiator {
                 ctx.send(self.peer, Traffic::Consensus, vec![0]);
             }
         }
-        fn on_message(&mut self, ctx: &mut Ctx, from: NodeId, _: Traffic, bytes: &[u8]) {
+        fn on_message(&mut self, ctx: &mut dyn Ctx, from: NodeId, _: Traffic, bytes: &[u8]) {
             self.pings += 1;
             if self.pings >= self.max {
                 ctx.halt();
@@ -383,7 +368,7 @@ mod tests {
             }
             ctx.send(from, Traffic::Consensus, bytes.to_vec());
         }
-        fn on_timer(&mut self, _: &mut Ctx, _: u64) {}
+        fn on_timer(&mut self, _: &mut dyn Ctx, _: u64) {}
         fn as_any(&mut self) -> &mut dyn Any {
             self
         }
@@ -452,16 +437,16 @@ mod tests {
         got: u32,
     }
     impl Actor for Caster {
-        fn on_start(&mut self, ctx: &mut Ctx) {
-            if ctx.node == 0 {
+        fn on_start(&mut self, ctx: &mut dyn Ctx) {
+            if ctx.node() == 0 {
                 ctx.multicast(Traffic::Weights, vec![0u8; 1000]);
                 ctx.broadcast(Traffic::Consensus, vec![0u8; 10]);
             }
         }
-        fn on_message(&mut self, _: &mut Ctx, _: NodeId, _: Traffic, _: &[u8]) {
+        fn on_message(&mut self, _: &mut dyn Ctx, _: NodeId, _: Traffic, _: &[u8]) {
             self.got += 1;
         }
-        fn on_timer(&mut self, _: &mut Ctx, _: u64) {}
+        fn on_timer(&mut self, _: &mut dyn Ctx, _: u64) {}
         fn as_any(&mut self) -> &mut dyn Any {
             self
         }
@@ -489,11 +474,11 @@ mod tests {
             fired_at: u64,
         }
         impl Actor for T {
-            fn on_start(&mut self, ctx: &mut Ctx) {
+            fn on_start(&mut self, ctx: &mut dyn Ctx) {
                 ctx.set_timer(1000, 1);
             }
-            fn on_message(&mut self, _: &mut Ctx, _: NodeId, _: Traffic, _: &[u8]) {}
-            fn on_timer(&mut self, ctx: &mut Ctx, _: u64) {
+            fn on_message(&mut self, _: &mut dyn Ctx, _: NodeId, _: Traffic, _: &[u8]) {}
+            fn on_timer(&mut self, ctx: &mut dyn Ctx, _: u64) {
                 self.fired_at = ctx.now_us();
                 ctx.halt();
             }

@@ -1,21 +1,27 @@
 //! TCP transport: the same framed messages the simulator carries, over
-//! real sockets. Used by `examples/tcp_cluster.rs` to demonstrate that the
-//! actor code is transport-agnostic (deployment path), and by the
+//! real sockets — plus [`run_actor`], the deployment-side host that
+//! drives any [`Actor`] (the very same `DeflNode` the simulator runs)
+//! over a socket mesh with wall-clock timers.
+//!
+//! Used by `examples/tcp_cluster.rs` for the deployment path and by the
 //! integration tests over localhost.
 //!
 //! Frame layout (little-endian): `from: u32, class: u8, len: u32, payload`.
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use crate::crypto::NodeId;
 use crate::metrics::Traffic;
+use crate::net::transport::{Actor, Ctx};
 
 fn class_to_u8(c: Traffic) -> u8 {
     match c {
@@ -146,6 +152,11 @@ impl TcpNode {
         })
     }
 
+    /// Mesh size (peers + self).
+    pub fn n_nodes(&self) -> usize {
+        self.peers.len()
+    }
+
     pub fn send(&self, to: NodeId, class: Traffic, bytes: &[u8]) -> Result<()> {
         let Some(peer) = self.peers.get(to as usize).and_then(|p| p.as_ref()) else {
             bail!("no connection to {to}");
@@ -175,9 +186,167 @@ pub fn local_addrs(n: usize, base_port: u16) -> Vec<SocketAddr> {
         .collect()
 }
 
+/// Side-effect collector for the TCP host: buffers an actor callback's
+/// requests exactly like the simulator's `SimCtx`, so the actor cannot
+/// tell which transport is underneath.
+struct TcpCtx {
+    node: NodeId,
+    n_nodes: usize,
+    now_us: u64,
+    sends: Vec<(NodeId, Traffic, Vec<u8>)>,
+    multicasts: Vec<(Traffic, Vec<u8>)>,
+    timers: Vec<(u64, u64)>, // (delay_us, id)
+    halted: bool,
+}
+
+impl TcpCtx {
+    fn new(node: NodeId, n_nodes: usize, now_us: u64) -> TcpCtx {
+        TcpCtx {
+            node,
+            n_nodes,
+            now_us,
+            sends: Vec::new(),
+            multicasts: Vec::new(),
+            timers: Vec::new(),
+            halted: false,
+        }
+    }
+}
+
+impl Ctx for TcpCtx {
+    fn node(&self) -> NodeId {
+        self.node
+    }
+    fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+    fn now_us(&self) -> u64 {
+        self.now_us
+    }
+    fn send(&mut self, to: NodeId, class: Traffic, bytes: Vec<u8>) {
+        self.sends.push((to, class, bytes));
+    }
+    fn multicast(&mut self, class: Traffic, bytes: Vec<u8>) {
+        self.multicasts.push((class, bytes));
+    }
+    fn set_timer(&mut self, delay_us: u64, id: u64) {
+        self.timers.push((delay_us, id));
+    }
+    fn halt(&mut self) {
+        self.halted = true;
+    }
+}
+
+/// Granularity of the idle wait when no timer is due soon.
+const IDLE_TICK: Duration = Duration::from_millis(20);
+
+/// Drive `actor` over a connected TCP mesh until `done` returns true,
+/// the actor halts, or `deadline` (wall clock) expires.
+///
+/// This is the deployment counterpart of [`crate::net::sim::SimNet`]:
+/// messages come off the mesh's reader threads, timers fire on the wall
+/// clock, and each callback's buffered sends/multicasts are flushed to
+/// the sockets afterwards (a multicast becomes a mesh broadcast — the
+/// storage layer of a real silo deployment).
+///
+/// After `done` first returns true the loop keeps serving messages and
+/// timers for `linger`, then exits. Unlike the simulator — which hosts
+/// every actor until the whole experiment ends — a real process that
+/// returns the moment IT is finished goes silent, and peers still
+/// finalizing their last consensus views can lose quorum. Lingering
+/// keeps this node voting (without restarting it: `on_start` runs
+/// exactly once) so stragglers can complete. Pass `Duration::ZERO` when
+/// peers don't depend on this node.
+///
+/// Sends to peers whose connection already dropped are logged and
+/// skipped, matching the simulator's crashed-node semantics.
+pub fn run_actor<A: Actor>(
+    net: &TcpNode,
+    actor: &mut A,
+    deadline: Duration,
+    mut done: impl FnMut(&mut A) -> bool,
+    linger: Duration,
+) -> Result<()> {
+    let start = Instant::now();
+    let n_nodes = net.n_nodes();
+    // (due_us, seq, id): seq keeps equal-deadline timers FIFO.
+    let mut timers: BinaryHeap<Reverse<(u64, u64, u64)>> = BinaryHeap::new();
+    let mut timer_seq = 0u64;
+    let mut halted = false;
+
+    let flush = |ctx: TcpCtx,
+                     timers: &mut BinaryHeap<Reverse<(u64, u64, u64)>>,
+                     timer_seq: &mut u64,
+                     halted: &mut bool| {
+        for (to, class, bytes) in ctx.sends {
+            if let Err(e) = net.send(to, class, &bytes) {
+                log::debug!("tcp n{}: send to {to} failed: {e}", net.id);
+            }
+        }
+        for (class, bytes) in ctx.multicasts {
+            if let Err(e) = net.broadcast(class, &bytes) {
+                log::debug!("tcp n{}: broadcast failed: {e}", net.id);
+            }
+        }
+        for (delay_us, id) in ctx.timers {
+            *timer_seq += 1;
+            timers.push(Reverse((ctx.now_us + delay_us, *timer_seq, id)));
+        }
+        if ctx.halted {
+            *halted = true;
+        }
+    };
+
+    let mut ctx = TcpCtx::new(net.id, n_nodes, 0);
+    actor.on_start(&mut ctx);
+    flush(ctx, &mut timers, &mut timer_seq, &mut halted);
+
+    let mut done_at: Option<Instant> = None;
+    while !halted {
+        if done_at.is_none() && done(actor) {
+            done_at = Some(Instant::now());
+        }
+        match done_at {
+            Some(t) if t.elapsed() >= linger => break,
+            None if start.elapsed() > deadline => {
+                bail!("tcp n{}: deadline after {:?}", net.id, deadline);
+            }
+            _ => {}
+        }
+        let now_us = start.elapsed().as_micros() as u64;
+
+        // Fire one due timer (re-checking `done` between fires).
+        if let Some(Reverse((due, _, _))) = timers.peek().copied() {
+            if due <= now_us {
+                let Reverse((_, _, id)) = timers.pop().unwrap();
+                let mut ctx = TcpCtx::new(net.id, n_nodes, now_us);
+                actor.on_timer(&mut ctx, id);
+                flush(ctx, &mut timers, &mut timer_seq, &mut halted);
+                continue;
+            }
+        }
+
+        // Wait for a message until the next timer is due (capped so the
+        // deadline and `done` predicate are re-checked regularly).
+        let wait = timers
+            .peek()
+            .map(|Reverse((due, _, _))| Duration::from_micros(due.saturating_sub(now_us)))
+            .unwrap_or(IDLE_TICK)
+            .min(IDLE_TICK);
+        if let Some(msg) = net.recv_timeout(wait) {
+            let now_us = start.elapsed().as_micros() as u64;
+            let mut ctx = TcpCtx::new(net.id, n_nodes, now_us);
+            actor.on_message(&mut ctx, msg.from, msg.class, &msg.bytes);
+            flush(ctx, &mut timers, &mut timer_seq, &mut halted);
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::any::Any;
 
     #[test]
     fn three_node_mesh_roundtrip() {
@@ -211,5 +380,60 @@ mod tests {
     fn bad_class_rejected() {
         assert!(class_from_u8(9).is_err());
         assert_eq!(class_from_u8(1).unwrap(), Traffic::Weights);
+    }
+
+    /// Transport-agnostic ping-pong actor: proves `run_actor` hosts the
+    /// same state machines the simulator does (messages + timers).
+    struct Pinger {
+        pongs: u32,
+        max: u32,
+        timer_fired: bool,
+    }
+
+    impl Actor for Pinger {
+        fn on_start(&mut self, ctx: &mut dyn Ctx) {
+            ctx.set_timer(1_000, 7);
+            if ctx.node() == 0 {
+                ctx.send(1, Traffic::Consensus, vec![0]);
+            }
+        }
+        fn on_message(&mut self, ctx: &mut dyn Ctx, from: NodeId, _: Traffic, bytes: &[u8]) {
+            self.pongs += 1;
+            // Always reply; the driver's `done` predicate ends the run, and
+            // a reply to an already-finished peer is logged and dropped.
+            ctx.send(from, Traffic::Consensus, bytes.to_vec());
+        }
+        fn on_timer(&mut self, _: &mut dyn Ctx, id: u64) {
+            assert_eq!(id, 7);
+            self.timer_fired = true;
+        }
+        fn as_any(&mut self) -> &mut dyn Any {
+            self
+        }
+    }
+
+    #[test]
+    fn run_actor_drives_messages_and_timers() {
+        let addrs = local_addrs(2, 39315);
+        let mut handles = Vec::new();
+        for id in 0..2u32 {
+            let addrs = addrs.clone();
+            handles.push(std::thread::spawn(move || {
+                let node = TcpNode::connect_mesh(id, &addrs).unwrap();
+                let mut actor = Pinger { pongs: 0, max: 5, timer_fired: false };
+                run_actor(
+                    &node,
+                    &mut actor,
+                    Duration::from_secs(20),
+                    |a| a.pongs >= a.max && a.timer_fired,
+                    Duration::ZERO,
+                )
+                .unwrap();
+                actor.pongs
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 5);
+        }
     }
 }

@@ -1,0 +1,113 @@
+//! Transport-agnostic actor interface (the oskr-style facade).
+//!
+//! Every protocol node in this repo — DeFL clients/replicas, the
+//! HotStuff test harnesses, the FL/SL/Biscotti baselines — is a pure
+//! state machine: it reacts to `on_start` / `on_message` / `on_timer`
+//! and emits sends, multicasts, and timer requests through a [`Ctx`].
+//! The state machines know NOTHING about who hosts them.
+//!
+//! Two hosts drive the same actors today:
+//!
+//! * [`crate::net::sim::SimNet`] — the deterministic discrete-event
+//!   simulator (virtual clock, byte meters, fault injection);
+//! * [`crate::net::tcp`] — real framed sockets over a fully-connected
+//!   mesh, driven by [`crate::net::tcp::run_actor`] with wall-clock
+//!   timers.
+//!
+//! This is what lets `examples/tcp_cluster.rs` deploy the exact
+//! `DeflNode` the figures are simulated with, and is the seam for future
+//! hosts (multi-process clusters, sharded pools).
+
+use std::any::Any;
+
+use crate::crypto::NodeId;
+use crate::metrics::Traffic;
+
+/// Side-effect interface handed to actors. Implementations buffer the
+/// requested effects and apply them after the callback returns (so an
+/// actor never re-enters itself).
+pub trait Ctx {
+    /// This actor's node id.
+    fn node(&self) -> NodeId;
+
+    /// Cluster size.
+    fn n_nodes(&self) -> usize;
+
+    /// Current time in µs (virtual on the simulator, wall-clock since
+    /// start on real transports). Only meaningful for relative measures.
+    fn now_us(&self) -> u64;
+
+    /// Unicast `bytes` to `to`.
+    fn send(&mut self, to: NodeId, class: Traffic, bytes: Vec<u8>);
+
+    /// Publish to the shared storage layer: delivered to every other
+    /// node, accounted as ONE send at the publisher (DeFL §5.3 — the
+    /// shared memory pool keeps sending bandwidth linear in n).
+    fn multicast(&mut self, class: Traffic, bytes: Vec<u8>);
+
+    /// Schedule `on_timer(id)` after `delay_us`.
+    fn set_timer(&mut self, delay_us: u64, id: u64);
+
+    /// Stop the whole run (experiment finished).
+    fn halt(&mut self);
+
+    /// Unicast to every other node (n−1 sends, each metered separately).
+    fn broadcast(&mut self, class: Traffic, bytes: Vec<u8>) {
+        for to in 0..self.n_nodes() as NodeId {
+            if to != self.node() {
+                self.send(to, class, bytes.clone());
+            }
+        }
+    }
+}
+
+/// A protocol state machine hosted by some transport.
+pub trait Actor {
+    /// Called once at t=0 (schedule initial timers, send first messages).
+    fn on_start(&mut self, ctx: &mut dyn Ctx);
+    /// A message from `from` arrived.
+    fn on_message(&mut self, ctx: &mut dyn Ctx, from: NodeId, class: Traffic, bytes: &[u8]);
+    /// A timer set via `ctx.set_timer` fired.
+    fn on_timer(&mut self, ctx: &mut dyn Ctx, timer_id: u64);
+    /// Downcast hook so experiments can extract actor state after a run.
+    fn as_any(&mut self) -> &mut dyn Any;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A Ctx stub recording effects, to pin the default `broadcast`.
+    struct Rec {
+        node: NodeId,
+        n: usize,
+        sends: Vec<(NodeId, Traffic, Vec<u8>)>,
+    }
+
+    impl Ctx for Rec {
+        fn node(&self) -> NodeId {
+            self.node
+        }
+        fn n_nodes(&self) -> usize {
+            self.n
+        }
+        fn now_us(&self) -> u64 {
+            0
+        }
+        fn send(&mut self, to: NodeId, class: Traffic, bytes: Vec<u8>) {
+            self.sends.push((to, class, bytes));
+        }
+        fn multicast(&mut self, _: Traffic, _: Vec<u8>) {}
+        fn set_timer(&mut self, _: u64, _: u64) {}
+        fn halt(&mut self) {}
+    }
+
+    #[test]
+    fn default_broadcast_skips_self() {
+        let mut c = Rec { node: 2, n: 4, sends: Vec::new() };
+        c.broadcast(Traffic::Consensus, vec![7]);
+        let tos: Vec<NodeId> = c.sends.iter().map(|(t, _, _)| *t).collect();
+        assert_eq!(tos, vec![0, 1, 3]);
+        assert!(c.sends.iter().all(|(_, _, b)| b == &[7]));
+    }
+}

@@ -219,27 +219,43 @@ impl Engine {
         self.manifest.has_krum(n, f)
     }
 
-    /// Multi-Krum over n stacked flat weight vectors (krum artifact: the
-    /// L1 Pallas Gram kernel inside the L2 selection graph).
+    /// Stack rows into the artifact's row-major (n × D) input buffer,
+    /// validating every row against the model dimension. This is the ONE
+    /// copy the aggregation path pays (the PJRT literal needs contiguous
+    /// input); rows come straight from the weight pool without per-row
+    /// `to_vec` staging.
+    fn stack_checked(&self, rows: &[impl AsRef<[f32]>]) -> Result<Vec<f32>> {
+        let mut stacked = Vec::with_capacity(rows.len() * self.meta.dim);
+        for (i, row) in rows.iter().enumerate() {
+            let row = row.as_ref();
+            if row.len() != self.meta.dim {
+                bail!("row {i} dim {} != D {}", row.len(), self.meta.dim);
+            }
+            stacked.extend_from_slice(row);
+        }
+        Ok(stacked)
+    }
+
+    /// Multi-Krum over n flat weight rows (krum artifact: the L1 Pallas
+    /// Gram kernel inside the L2 selection graph).
     ///
-    /// `stacked` is row-major (n × D); `sample_weights` has length n.
+    /// Rows are any `AsRef<[f32]>` (pool [`crate::weights::Weights`]
+    /// handles, `Vec<f32>`, slices); `sample_weights` has length n.
     pub fn krum(
         &self,
-        n: usize,
         f: usize,
-        stacked: &[f32],
+        rows: &[impl AsRef<[f32]>],
         sample_weights: &[f32],
     ) -> Result<KrumResult> {
-        if stacked.len() != n * self.meta.dim {
-            bail!("stacked len {} != n*D {}", stacked.len(), n * self.meta.dim);
-        }
+        let n = rows.len();
         if sample_weights.len() != n {
             bail!("sample_weights len {} != n {}", sample_weights.len(), n);
         }
         if !self.has_krum(n, f) {
             bail!("no krum artifact for n={n} f={f} (see manifest nf_combos)");
         }
-        let w = Self::lit_f32(stacked, &[n as i64, self.meta.dim as i64])?;
+        let stacked = self.stack_checked(rows)?;
+        let w = Self::lit_f32(&stacked, &[n as i64, self.meta.dim as i64])?;
         let sw = xla::Literal::vec1(sample_weights);
         let outs = self.run(&format!("krum_{}_n{n}_f{f}", self.meta.name), &[w, sw])?;
         Ok(KrumResult {
@@ -249,24 +265,26 @@ impl Engine {
         })
     }
 
-    /// FedAvg over n stacked flat weight vectors (fedavg artifact).
-    pub fn fedavg(&self, n: usize, stacked: &[f32], sample_weights: &[f32]) -> Result<Vec<f32>> {
-        if stacked.len() != n * self.meta.dim {
-            bail!("stacked len {} != n*D {}", stacked.len(), n * self.meta.dim);
+    /// FedAvg over n flat weight rows (fedavg artifact).
+    pub fn fedavg(&self, rows: &[impl AsRef<[f32]>], sample_weights: &[f32]) -> Result<Vec<f32>> {
+        let n = rows.len();
+        if sample_weights.len() != n {
+            bail!("sample_weights len {} != n {}", sample_weights.len(), n);
         }
-        let w = Self::lit_f32(stacked, &[n as i64, self.meta.dim as i64])?;
+        let stacked = self.stack_checked(rows)?;
+        let w = Self::lit_f32(&stacked, &[n as i64, self.meta.dim as i64])?;
         let sw = xla::Literal::vec1(sample_weights);
         let outs = self.run(&format!("fedavg_{}_n{n}", self.meta.name), &[w, sw])?;
         outs[0].to_vec::<f32>().map_err(|e| anyhow!("agg: {e:?}"))
     }
 }
 
-/// Stack per-node flat weight vectors row-major for the aggregation
-/// artifacts. All rows must share the engine's dimension.
-pub fn stack_rows(rows: &[Vec<f32>]) -> Vec<f32> {
-    let mut out = Vec::with_capacity(rows.iter().map(|r| r.len()).sum());
+/// Stack per-node flat weight rows row-major for external consumers of
+/// the artifact format. All rows must share the engine's dimension.
+pub fn stack_rows<R: AsRef<[f32]>>(rows: &[R]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(rows.iter().map(|r| r.as_ref().len()).sum());
     for r in rows {
-        out.extend_from_slice(r);
+        out.extend_from_slice(r.as_ref());
     }
     out
 }
@@ -359,7 +377,7 @@ mod tests {
         rows[2] = rows[2].iter().map(|x| x * -4.0).collect(); // outlier
         let sw = vec![1.0f32; n];
 
-        let art = e.krum(n, f, &stack_rows(&rows), &sw).unwrap();
+        let art = e.krum(f, &rows, &sw).unwrap();
         let nat = crate::krum::multi_krum(&rows, &sw, f, n - f).unwrap();
 
         assert_eq!(art.mask, nat.mask, "selection disagrees");
@@ -382,7 +400,7 @@ mod tests {
             .map(|_| (0..e.dim()).map(|_| rng.normal_f32(0.0, 1.0)).collect())
             .collect();
         let sw = [1.0f32, 2.0, 3.0, 4.0];
-        let art = e.fedavg(n, &stack_rows(&rows), &sw).unwrap();
+        let art = e.fedavg(&rows, &sw).unwrap();
         let nat = crate::krum::fedavg(&rows, &sw).unwrap();
         for (a, b) in art.iter().zip(nat.iter()) {
             assert!((a - b).abs() < 1e-4);
@@ -397,6 +415,9 @@ mod tests {
         assert!(e.train_step(&theta, &x, &y, 0.1).is_err());
         let theta = e.init_params(1).unwrap();
         assert!(e.train_step(&theta, &x, &y[..4].to_vec(), 0.1).is_err());
-        assert!(e.krum(5, 1, &vec![0.0; 5 * e.dim()], &[1.0; 5]).is_err()); // no artifact
+        let rows = vec![vec![0.0f32; e.dim()]; 5];
+        assert!(e.krum(1, &rows, &[1.0; 5]).is_err()); // no artifact for n=5
+        let ragged = vec![vec![0.0f32; 3]; 4];
+        assert!(e.krum(1, &ragged, &[1.0; 4]).is_err()); // wrong row dim
     }
 }

@@ -127,7 +127,11 @@ fn node_done(net: &mut SimNet, system: System, id: NodeId) -> bool {
 
 fn node_final_theta(net: &mut SimNet, system: System, id: NodeId) -> Option<Vec<f32>> {
     match system {
-        System::Defl => net.actor_as::<DeflNode>(id).and_then(|n| n.final_theta.clone()),
+        // DeFL's final theta is a shared Weights handle; copy out once for
+        // evaluation.
+        System::Defl => net
+            .actor_as::<DeflNode>(id)
+            .and_then(|n| n.final_theta.as_ref().map(|w| w.to_vec())),
         System::Fl | System::Swarm => {
             net.actor_as::<ServerFlNode>(id).and_then(|n| n.final_theta.clone())
         }

@@ -372,6 +372,7 @@ mod fuzz_tests {
         let _ = crate::hotstuff::Qc::from_bytes(bytes);
         let _ = crate::defl::Tx::from_bytes(bytes);
         let _ = crate::defl::WeightBlob::from_bytes(bytes);
+        let _ = crate::weights::Weights::from_bytes(bytes);
         let _ = crate::blockchain::ChainBlock::from_bytes(bytes);
     }
 

@@ -1,0 +1,236 @@
+//! Shared, immutable weight tensors (the storage-layer currency).
+//!
+//! DeFL's headline numbers are storage/network overhead (§4.3), yet a
+//! model update used to be copied 4–5× per round on its way from the
+//! trainer into the pool, the blob multicast, and the aggregation input.
+//! [`Weights`] makes the flat `f32` tensor an `Arc<[f32]>` so every layer
+//! (mempool, consensus tx, node, codec) shares ONE allocation:
+//!
+//! * `clone()` is two reference-count bumps, never a tensor copy;
+//! * the SHA-256 content [`Digest`] is computed once and cached — the
+//!   pool insert, the `WeightBlob`, and the UPD transaction all reuse it;
+//! * `as_bytes()` exposes the little-endian wire image without copying
+//!   (on little-endian hosts), so encoding a blob is a single `memcpy`
+//!   into the output buffer instead of a per-element loop.
+//!
+//! The byte layout on the wire is identical to the old `Vec<f32>` codec
+//! (`u32` element count + packed LE `f32`s), so digests and the byte
+//! meters are unchanged.
+
+use std::borrow::Cow;
+use std::sync::{Arc, OnceLock};
+
+use anyhow::Result;
+
+use crate::crypto::Digest;
+use crate::util::codec::{Cursor, Decode, Encode};
+
+/// An immutable, cheaply clonable flat weight tensor with a cached
+/// content digest. See the module docs for the sharing contract.
+#[derive(Clone)]
+pub struct Weights {
+    data: Arc<[f32]>,
+    /// Shared across clones: whoever computes the digest first caches it
+    /// for every other holder of the same tensor.
+    digest: Arc<OnceLock<Digest>>,
+}
+
+impl Weights {
+    pub fn new(data: Vec<f32>) -> Weights {
+        Weights { data: data.into(), digest: Arc::new(OnceLock::new()) }
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Copy out into an owned `Vec` (the one deliberate copy, for callers
+    /// that need to mutate, e.g. the poisoning attacks).
+    pub fn to_vec(&self) -> Vec<f32> {
+        self.data.to_vec()
+    }
+
+    /// Content digest, computed on first use and cached for the lifetime
+    /// of the tensor (shared by all clones).
+    pub fn digest(&self) -> Digest {
+        *self
+            .digest
+            .get_or_init(|| Digest::of_bytes(&self.as_bytes()))
+    }
+
+    /// The tensor's wire image: packed little-endian `f32`s. Zero-copy on
+    /// little-endian hosts; big-endian hosts pay one conversion copy.
+    pub fn as_bytes(&self) -> Cow<'_, [u8]> {
+        #[cfg(target_endian = "little")]
+        {
+            // SAFETY: `[f32]` has no padding, 4-byte elements, and u8 has
+            // weaker alignment; on an LE host the in-memory bytes ARE the
+            // LE wire bytes the codec and `Digest::of_weights` use.
+            let bytes = unsafe {
+                std::slice::from_raw_parts(
+                    self.data.as_ptr().cast::<u8>(),
+                    self.data.len() * 4,
+                )
+            };
+            Cow::Borrowed(bytes)
+        }
+        #[cfg(target_endian = "big")]
+        {
+            let mut out = Vec::with_capacity(self.data.len() * 4);
+            for x in self.data.iter() {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+            Cow::Owned(out)
+        }
+    }
+
+    /// Rebuild a tensor from its wire image (one copy off the wire).
+    pub fn from_le_bytes(bytes: &[u8]) -> Result<Weights> {
+        if bytes.len() % 4 != 0 {
+            anyhow::bail!("weights: {} wire bytes not a multiple of 4", bytes.len());
+        }
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Weights::new(data))
+    }
+
+    /// Do two handles share the same underlying allocation? (Used by
+    /// tests to assert the zero-copy property of the commit path.)
+    pub fn ptr_eq(a: &Weights, b: &Weights) -> bool {
+        Arc::ptr_eq(&a.data, &b.data)
+    }
+}
+
+impl From<Vec<f32>> for Weights {
+    fn from(v: Vec<f32>) -> Weights {
+        Weights::new(v)
+    }
+}
+
+impl From<&[f32]> for Weights {
+    fn from(v: &[f32]) -> Weights {
+        Weights::new(v.to_vec())
+    }
+}
+
+impl std::ops::Deref for Weights {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+impl AsRef<[f32]> for Weights {
+    fn as_ref(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+impl PartialEq for Weights {
+    fn eq(&self, other: &Weights) -> bool {
+        Weights::ptr_eq(self, other) || self.data == other.data
+    }
+}
+
+impl std::fmt::Debug for Weights {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Weights[{}; {}]", self.data.len(), self.digest().short())
+    }
+}
+
+/// Same wire layout as `Vec<f32>`: `u32` count + packed LE elements.
+impl Encode for Weights {
+    fn encode(&self, out: &mut Vec<u8>) {
+        (self.data.len() as u32).encode(out);
+        out.extend_from_slice(&self.as_bytes());
+    }
+    fn encoded_len(&self) -> usize {
+        4 + self.data.len() * 4
+    }
+}
+
+impl Decode for Weights {
+    fn decode(cur: &mut Cursor<'_>) -> Result<Self> {
+        let n = u32::decode(cur)? as usize;
+        Weights::from_le_bytes(cur.take(n * 4)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clone_shares_storage() {
+        let w = Weights::new(vec![1.0, 2.0, 3.0]);
+        let c = w.clone();
+        assert!(Weights::ptr_eq(&w, &c));
+        assert_eq!(w, c);
+    }
+
+    #[test]
+    fn digest_matches_of_weights_and_is_shared_by_clones() {
+        let v = vec![0.5f32, -1.25, 3.0e-8, f32::MAX];
+        let w = Weights::new(v.clone());
+        let c = w.clone();
+        assert_eq!(w.digest(), Digest::of_weights(&v));
+        // The cache is shared: the clone sees the already-computed value.
+        assert_eq!(c.digest(), w.digest());
+    }
+
+    #[test]
+    fn wire_layout_matches_vec_f32_codec() {
+        let v = vec![1.5f32, -2.0, 0.25, 1.0e-30];
+        let w = Weights::new(v.clone());
+        assert_eq!(w.to_bytes(), v.to_bytes());
+        assert_eq!(w.encoded_len(), v.encoded_len());
+        let back = Weights::from_bytes(&v.to_bytes()).unwrap();
+        assert_eq!(back.as_slice(), &v[..]);
+    }
+
+    #[test]
+    fn as_bytes_is_the_le_image() {
+        let w = Weights::new(vec![1.0f32, -0.5]);
+        let mut manual = Vec::new();
+        for x in w.iter() {
+            manual.extend_from_slice(&x.to_le_bytes());
+        }
+        assert_eq!(&*w.as_bytes(), &manual[..]);
+    }
+
+    #[test]
+    fn from_le_bytes_rejects_ragged_input() {
+        assert!(Weights::from_le_bytes(&[0, 0, 0]).is_err());
+        assert!(Weights::from_le_bytes(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn decode_rejects_truncation_and_trailing() {
+        let bytes = Weights::new(vec![1.0; 8]).to_bytes();
+        assert!(Weights::from_bytes(&bytes[..bytes.len() - 1]).is_err());
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(Weights::from_bytes(&extra).is_err());
+        assert!(Weights::from_bytes(&bytes).is_ok());
+    }
+
+    #[test]
+    fn deref_and_as_ref_views() {
+        let w = Weights::new(vec![3.0f32, 4.0]);
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[1], 4.0);
+        assert_eq!(w.iter().sum::<f32>(), 7.0);
+        let r: &[f32] = w.as_ref();
+        assert_eq!(r, &[3.0, 4.0]);
+    }
+}

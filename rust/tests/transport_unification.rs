@@ -1,0 +1,155 @@
+//! Transport unification: the SAME `DeflNode` state machine, hosted once
+//! by the discrete-event simulator and once by the TCP mesh driver, must
+//! reach the same number of rounds with the identical final-model digest.
+//!
+//! This pins the tentpole refactor's contract: `net::transport` is the
+//! only surface the node sees, so the simulator results (every figure and
+//! table) and the deployment path are the same code.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use defl::config::{Attack, ExperimentConfig, Model, Partition, System};
+use defl::crypto::{Digest, KeyRegistry, NodeId};
+use defl::defl::DeflNode;
+use defl::net::sim::{SimConfig, SimNet};
+use defl::net::tcp::{local_addrs, run_actor, TcpNode};
+use defl::net::Actor;
+use defl::runtime::Engine;
+use defl::sim::build_data;
+
+fn artifacts_present() -> bool {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.txt")
+        .exists()
+}
+
+fn cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        system: System::Defl,
+        model: Model::SentMlp,
+        partition: Partition::Iid,
+        n_nodes: 4,
+        f_byzantine: 1,
+        attack: Attack::SignFlip { sigma: -2.0 },
+        rounds: 2,
+        local_steps: 3,
+        lr: 1.0,
+        train_samples: 1024,
+        test_samples: 256,
+        // Generous stabilization budget so every UPD lands each round on
+        // both the virtual and the wall clock — a prerequisite for the
+        // two transports committing identical per-round digest sets.
+        gst_lt_ms: 1_000,
+        ..Default::default()
+    }
+}
+
+fn build_node(c: &ExperimentConfig, engine: &Arc<Engine>, id: NodeId) -> DeflNode {
+    let (train, _test, mut shards, sizes) = build_data(c, engine);
+    let registry = KeyRegistry::new(c.n_nodes, c.seed);
+    let theta0 = engine.init_params(c.seed as u32).expect("init");
+    DeflNode::new(
+        id,
+        c.clone(),
+        engine.clone(),
+        train,
+        shards.remove(id as usize),
+        sizes,
+        registry,
+        theta0,
+    )
+}
+
+/// (rounds_done, final-theta digest) for every node, via the simulator.
+fn run_on_sim(c: &ExperimentConfig) -> Vec<(u64, Digest)> {
+    let engine = Arc::new(Engine::load_default(c.model).expect("engine"));
+    let actors: Vec<Box<dyn Actor>> = (0..c.n_nodes as NodeId)
+        .map(|id| Box::new(build_node(c, &engine, id)) as Box<dyn Actor>)
+        .collect();
+    let sim_cfg = SimConfig {
+        n_nodes: c.n_nodes,
+        latency_us: c.link_latency_us,
+        jitter_us: c.link_latency_us / 4,
+        drop_prob: 0.0,
+        seed: c.seed,
+    };
+    let mut net = SimNet::new(sim_cfg, actors);
+    let mut t = 0u64;
+    loop {
+        t += 1_000_000;
+        net.run_until(t, u64::MAX);
+        let all_done = (0..c.n_nodes as NodeId)
+            .all(|i| net.actor_as::<DeflNode>(i).map(|n| n.done).unwrap_or(false));
+        if all_done || t > 600_000_000 {
+            break;
+        }
+    }
+    (0..c.n_nodes as NodeId)
+        .map(|i| {
+            let node = net.actor_as::<DeflNode>(i).expect("defl node");
+            assert!(node.done, "sim node {i} did not finish");
+            let d = node.final_theta.as_ref().expect("final theta").digest();
+            (node.stats.rounds_done, d)
+        })
+        .collect()
+}
+
+/// Same, over real localhost TCP sockets via the unified driver.
+fn run_on_tcp(c: &ExperimentConfig, base_port: u16) -> Vec<(u64, Digest)> {
+    let addrs = local_addrs(c.n_nodes, base_port);
+    let mut handles = Vec::new();
+    for id in 0..c.n_nodes as NodeId {
+        let (c, addrs) = (c.clone(), addrs.clone());
+        handles.push(std::thread::spawn(move || {
+            // PJRT clients are not Send: each node thread owns its engine,
+            // as separate silo processes would.
+            let engine = Arc::new(Engine::load_default(c.model).expect("engine"));
+            let mut node = build_node(&c, &engine, id);
+            let mesh = TcpNode::connect_mesh(id, &addrs).expect("mesh");
+            // Linger after `done` so stragglers can still reach consensus
+            // quorum with this node's votes.
+            run_actor(
+                &mesh,
+                &mut node,
+                Duration::from_secs(180),
+                |n| n.done,
+                Duration::from_secs(3),
+            )
+            .expect("run");
+            let d = node.final_theta.as_ref().expect("final theta").digest();
+            (node.stats.rounds_done, d)
+        }));
+    }
+    handles.into_iter().map(|h| h.join().expect("node thread")).collect()
+}
+
+#[test]
+fn sim_and_tcp_drive_defl_to_the_same_result() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let c = cfg();
+    let sim = run_on_sim(&c);
+    let tcp = run_on_tcp(&c, 39415);
+
+    // Every node finishes all rounds on both transports.
+    for (i, ((sim_r, _), (tcp_r, _))) in sim.iter().zip(tcp.iter()).enumerate() {
+        assert_eq!(*sim_r, c.rounds as u64, "sim node {i} rounds");
+        assert_eq!(*tcp_r, c.rounds as u64, "tcp node {i} rounds");
+    }
+    // Honest nodes agree within each transport (Lemma 1)…
+    let honest = c.f_byzantine..c.n_nodes;
+    for transport in [&sim, &tcp] {
+        let first = transport[honest.start].1;
+        for i in honest.clone() {
+            assert_eq!(transport[i].1, first, "intra-transport divergence at node {i}");
+        }
+    }
+    // …and across transports: the same state machine, digest-identical.
+    assert_eq!(
+        sim[honest.start].1, tcp[honest.start].1,
+        "sim and TCP reached different final models"
+    );
+}
