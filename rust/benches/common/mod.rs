@@ -6,6 +6,10 @@
 //! DEFL_LOCAL_STEPS, DEFL_GST_MS) select full-fidelity runs; the defaults
 //! here keep `cargo bench` minutes-scale on one CPU core.
 
+// Each bench target compiles this module separately and uses a subset.
+#![allow(dead_code)]
+
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use defl::config::Model;
@@ -29,6 +33,32 @@ pub fn bench_scale() {
 
 pub fn engine(model: Model) -> Arc<Engine> {
     Arc::new(Engine::load_default(model).expect("run `make artifacts` first"))
+}
+
+/// Engine when the artifacts are built, `None` otherwise — benches that
+/// can degrade to native-only measurements use this instead of failing.
+pub fn try_engine(model: Model) -> Option<Arc<Engine>> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        return None;
+    }
+    match Engine::load_default(model) {
+        Ok(e) => Some(Arc::new(e)),
+        Err(e) => {
+            eprintln!("artifacts present but engine failed to load: {e:#}");
+            None
+        }
+    }
+}
+
+/// Where `BENCH_*.json` perf-trajectory files land: the repo root (next
+/// to ROADMAP.md), so CI uploads them and local runs diff them in place.
+/// `DEFL_BENCH_DIR` overrides.
+pub fn bench_report_path(file: &str) -> PathBuf {
+    let dir = std::env::var("DEFL_BENCH_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| Path::new(env!("CARGO_MANIFEST_DIR")).join(".."));
+    dir.join(file)
 }
 
 pub fn note_scale(bench: &str) {

@@ -1,41 +1,87 @@
-//! L1/L3 micro-bench: Multi-Krum aggregation — AOT artifact (Pallas Gram
-//! kernel through PJRT) vs the native rust implementation, across scales.
+//! L1/L3 micro-bench: the Multi-Krum distance engine across scales, plus
+//! the artifact-vs-native comparison when the AOT artifacts are built.
+//!
+//! Measures the sequential per-pair reference, the exact pool-parallel
+//! path (PR 1's engine), and the blocked Gram kernel with and without the
+//! persistent worker pool, at several (n, D) points up to n=32, D=2^20.
+//! Every case lands in `BENCH_krum.json` (ns/op + percentiles) at the
+//! repo root — the machine-readable perf trajectory CI uploads as an
+//! artifact, so each PR's numbers are recorded next to the previous ones.
 mod common;
 
+use std::time::Duration;
+
 use defl::config::Model;
-use defl::krum;
-use defl::util::bench::bench;
+use defl::krum::{self, DistEngine};
+use defl::util::bench::{bench, bench_for, BenchReport};
 use defl::util::Pcg;
 use defl::weights::Weights;
 
+fn rows_at(rng: &mut Pcg, n: usize, d: usize) -> Vec<Weights> {
+    (0..n)
+        .map(|_| Weights::new((0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect()))
+        .collect()
+}
+
 fn main() {
     common::bench_scale();
-    let engine = common::engine(Model::CifarCnn);
-    let d = engine.dim();
-    println!("== micro: Multi-Krum over f32[n,{d}] ==");
-    println!("(rows enter as shared Weights handles — the pool path: no");
-    println!(" per-row to_vec; the artifact pays one stack into its input)");
+    let mut report = BenchReport::new("micro_krum");
     let mut rng = Pcg::seeded(1);
-    for (n, f) in [(4usize, 1usize), (7, 2), (10, 3)] {
-        // Shared handles, exactly what DeflNode::aggregate_last reads out
-        // of the WeightPool.
-        let rows: Vec<Weights> = (0..n)
-            .map(|_| Weights::new((0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect()))
-            .collect();
+    let budget = Duration::from_millis(600);
+
+    println!("== micro: pairwise distance engines ==");
+    for (n, d) in [(8usize, 1usize << 14), (16, 1 << 17), (32, 1 << 20)] {
+        let rows = rows_at(&mut rng, n, d);
         let sw = vec![1.0f32; n];
-        let a = bench(&format!("krum artifact n={n} f={f}"), 3, 30, || {
-            std::hint::black_box(engine.krum(f, &rows, &sw).unwrap());
-        });
-        let b = bench(&format!("krum native   n={n} f={f}"), 3, 30, || {
-            std::hint::black_box(krum::multi_krum(&rows, &sw, f, n - f).unwrap());
-        });
-        println!("  n={n}: artifact/native = {:.2}x", a.mean_ms() / b.mean_ms());
-        let c = bench(&format!("pairwise seq  n={n}"), 3, 30, || {
+        let s = bench_for(&format!("pairwise/seq n={n} d={d}"), budget, || {
             std::hint::black_box(krum::pairwise_sq_dists_seq(&rows));
         });
-        let p = bench(&format!("pairwise par  n={n}"), 3, 30, || {
-            std::hint::black_box(krum::pairwise_sq_dists(&rows));
+        let seq_ns = s.mean_ns();
+        report.record(&s, &[("n", n as f64), ("d", d as f64)]);
+        for (label, engine) in [
+            ("exact_par", DistEngine::Exact),
+            ("gram_seq", DistEngine::GramSeq),
+            ("gram_pool", DistEngine::GramPool),
+        ] {
+            let s = bench_for(&format!("pairwise/{label} n={n} d={d}"), budget, || {
+                std::hint::black_box(krum::pairwise_dists_with(&rows, engine));
+            });
+            report.record(&s, &[("n", n as f64), ("d", d as f64)]);
+            println!("    {label:<9} speedup vs seq: {:.2}x", seq_ns / s.mean_ns());
+        }
+        // Full Multi-Krum through the auto engine (distances + partial
+        // selection + fused masked aggregation).
+        let f = n.saturating_sub(3).clamp(1, 3);
+        let s = bench_for(&format!("multi_krum/auto n={n} d={d}"), budget, || {
+            std::hint::black_box(krum::multi_krum(&rows, &sw, f, n - f).unwrap());
         });
-        println!("  n={n}: pairwise par/seq = {:.2}x", p.mean_ms() / c.mean_ms());
+        report.record(&s, &[("n", n as f64), ("f", f as f64), ("d", d as f64)]);
     }
+
+    // Artifact vs native at the paper's (n, f) combos, when built.
+    if let Some(engine) = common::try_engine(Model::CifarCnn) {
+        let d = engine.dim();
+        println!("== micro: Multi-Krum artifact vs native over f32[n,{d}] ==");
+        println!("(rows enter as shared Weights handles — the pool path: no");
+        println!(" per-row to_vec; the artifact pays one stack into its input)");
+        for (n, f) in [(4usize, 1usize), (7, 2), (10, 3)] {
+            let rows = rows_at(&mut rng, n, d);
+            let sw = vec![1.0f32; n];
+            let a = bench(&format!("krum/artifact n={n} f={f}"), 3, 30, || {
+                std::hint::black_box(engine.krum(f, &rows, &sw).unwrap());
+            });
+            report.record(&a, &[("n", n as f64), ("f", f as f64), ("d", d as f64)]);
+            let b = bench(&format!("krum/native   n={n} f={f}"), 3, 30, || {
+                std::hint::black_box(krum::multi_krum(&rows, &sw, f, n - f).unwrap());
+            });
+            report.record(&b, &[("n", n as f64), ("f", f as f64), ("d", d as f64)]);
+            println!("  n={n}: artifact/native = {:.2}x", a.mean_ms() / b.mean_ms());
+        }
+    } else {
+        println!("(artifacts not built; skipping artifact-vs-native comparison)");
+    }
+
+    let path = common::bench_report_path("BENCH_krum.json");
+    report.write(&path).expect("write BENCH_krum.json");
+    println!("wrote {} ({} entries)", path.display(), report.len());
 }

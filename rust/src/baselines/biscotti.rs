@@ -26,7 +26,6 @@ use crate::crypto::{Digest, NodeId};
 use crate::defl::WeightBlob;
 use crate::fl::data::{Dataset, Shard};
 use crate::fl::trainer::local_train;
-use crate::krum;
 use crate::metrics::Traffic;
 use crate::net::transport::{Actor, Ctx};
 use crate::runtime::Engine;
@@ -240,22 +239,13 @@ impl BiscottiNode {
         if rows.is_empty() {
             return;
         }
-        let n = rows.len();
-        let f = self.cfg.krum_f().min(n.saturating_sub(3));
-        let global = if f >= 1 && n >= f + 3 {
-            if self.engine.has_krum(n, f) {
-                self.engine
-                    .krum(f, &rows, &sw)
-                    .map(|o| o.aggregate)
-                    .unwrap_or_else(|_| {
-                        krum::multi_krum(&rows, &sw, f, n - f).expect("krum").aggregate
-                    })
-            } else {
-                krum::multi_krum(&rows, &sw, f, n - f).expect("krum").aggregate
-            }
-        } else {
-            krum::fedavg(&rows, &sw).expect("fedavg")
-        };
+        // Same dispatch as the DeFL node: artifact Multi-Krum when
+        // exported, native Gram engine otherwise, FedAvg when too few
+        // rows (accuracy matches DeFL, Table 1).
+        let (global, _path) = self
+            .engine
+            .aggregate_robust(self.cfg.krum_f(), &rows, &sw)
+            .expect("biscotti aggregation");
         self.theta = global;
         if round >= self.cfg.rounds as u64 {
             self.done = true;

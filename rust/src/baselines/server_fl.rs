@@ -21,7 +21,6 @@ use crate::config::{Attack, ExperimentConfig, System};
 use crate::crypto::{Digest, NodeId};
 use crate::fl::data::{Dataset, Shard};
 use crate::fl::trainer::local_train;
-use crate::krum;
 use crate::metrics::Traffic;
 use crate::net::transport::{Actor, Ctx};
 use crate::runtime::Engine;
@@ -192,14 +191,8 @@ impl ServerFlNode {
             return;
         }
         // FedAvg over everything — no defense (the Table 1 failure mode).
-        let n = rows.len();
-        let global = if n == self.cfg.n_nodes && self.engine.dim() == rows[0].len() {
-            self.engine
-                .fedavg(&rows, &sw)
-                .unwrap_or_else(|_| krum::fedavg(&rows, &sw).expect("fedavg"))
-        } else {
-            krum::fedavg(&rows, &sw).expect("fedavg")
-        };
+        // Artifact when exported for this n, native fused pass otherwise.
+        let (global, _path) = self.engine.fedavg_auto(&rows, &sw).expect("fedavg");
 
         let round = self.round;
         if self.system == System::Swarm {

@@ -152,6 +152,11 @@ impl Manifest {
     pub fn has_krum(&self, n: usize, f: usize) -> bool {
         self.nf_combos.contains(&(n, f))
     }
+
+    /// Does the manifest cover FedAvg at this n?
+    pub fn has_fedavg(&self, n: usize) -> bool {
+        self.ns.contains(&n)
+    }
 }
 
 #[cfg(test)]
@@ -189,6 +194,8 @@ ns=4,7,10
         assert_eq!(s.x_dtype, XDtype::I32);
         assert!(m.has_krum(10, 3));
         assert!(!m.has_krum(5, 1));
+        assert!(m.has_fedavg(7));
+        assert!(!m.has_fedavg(5));
         assert_eq!(m.ns, vec![4, 7, 10]);
     }
 

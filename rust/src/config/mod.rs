@@ -254,7 +254,7 @@ impl ExperimentConfig {
     /// filter is active even in 0-byzantine control runs (matching the
     /// paper's "Multi-Krum filters outliers even with no attack" effect).
     pub fn krum_f(&self) -> usize {
-        self.f_byzantine.max(1).min((self.n_nodes.saturating_sub(3)).max(1))
+        self.f_byzantine.clamp(1, (self.n_nodes.saturating_sub(3)).max(1))
     }
 
     /// HotStuff replica quorum: n − f_tolerated where f_tolerated = ⌊(n−1)/3⌋.

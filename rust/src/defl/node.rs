@@ -24,15 +24,14 @@ use anyhow::Result;
 
 use crate::attacks::{self, poison_weights};
 use crate::config::{Attack, ExperimentConfig};
-use crate::crypto::NodeId;
+use crate::crypto::{Digest, NodeId};
 use crate::fl::data::{Dataset, Shard};
 use crate::fl::trainer::local_train;
 use crate::hotstuff::{Action, ByzMode, HotStuff, HsConfig};
-use crate::krum;
 use crate::mempool::WeightPool;
 use crate::metrics::Traffic;
 use crate::net::transport::{Actor, Ctx};
-use crate::runtime::Engine;
+use crate::runtime::{AggPath, Engine};
 use crate::util::{Decode, Encode};
 use crate::weights::Weights;
 
@@ -191,9 +190,21 @@ impl DeflNode {
         // write is the aggregation output itself (a fresh tensor the next
         // training round consumes by move).
         let dim = self.engine.dim();
+        let wanted: Vec<Digest> = digs.iter().map(|(_, d)| *d).collect();
+        // Batch fetch: the common case is all-present in one pass. A miss
+        // (e.g. a blob multicast that never arrived) is reported ONCE with
+        // the full digest-list context, then aggregation proceeds with
+        // whatever the pool does hold.
+        let fetched: Vec<Option<Weights>> = match self.pool.get_many(&wanted) {
+            Ok(ws) => ws.into_iter().map(Some).collect(),
+            Err(e) => {
+                log::warn!("n{}: last-round weights incomplete: {e:#}", self.id);
+                wanted.iter().map(|d| self.pool.get(d).ok()).collect()
+            }
+        };
         let mut present: Vec<(NodeId, Weights)> = Vec::new();
-        for (node, digest) in &digs {
-            if let Ok(w) = self.pool.get(digest) {
+        for ((node, _), w) in digs.iter().zip(fetched) {
+            if let Some(w) = w {
                 if w.len() == dim {
                     present.push((*node, w));
                 }
@@ -205,28 +216,19 @@ impl DeflNode {
         if present.len() == 1 {
             return Ok(present.remove(0).1.to_vec());
         }
-        let n = present.len();
         let sw: Vec<f32> = present
             .iter()
             .map(|(node, _)| self.shard_sizes[*node as usize])
             .collect();
         let rows: Vec<Weights> = present.into_iter().map(|(_, w)| w).collect();
-        let f = self.cfg.krum_f().min(n.saturating_sub(3));
-        if f >= 1 && n >= f + 3 && self.engine.has_krum(n, f) {
-            // Hot path: AOT artifact (L1 Pallas Gram kernel); rows stack
-            // straight into the artifact's row-major input buffer.
-            let out = self.engine.krum(f, &rows, &sw)?;
-            self.stats.agg_artifact += 1;
-            return Ok(out.aggregate);
+        // Artifact Multi-Krum when exported for (n, f), native Gram engine
+        // otherwise, FedAvg when too few rows for Krum.
+        let (agg, path) = self.engine.aggregate_robust(self.cfg.krum_f(), &rows, &sw)?;
+        match path {
+            AggPath::Artifact => self.stats.agg_artifact += 1,
+            AggPath::Native => self.stats.agg_native += 1,
         }
-        // Fallback: native Multi-Krum (combos outside the exported set)
-        // or weighted average when too few rows for Krum.
-        self.stats.agg_native += 1;
-        if f >= 1 && n >= f + 3 {
-            Ok(krum::multi_krum(&rows, &sw, f, n - f)?.aggregate)
-        } else {
-            krum::fedavg(&rows, &sw)
-        }
+        Ok(agg)
     }
 
     /// Algorithm 1: aggregate → local train → UPD → (GST_LT) → AGG.

@@ -45,7 +45,7 @@ pub struct ReplicaState {
 
 impl ReplicaState {
     pub fn new(n: usize, agg_quorum: usize) -> ReplicaState {
-        assert!(agg_quorum >= 1 && agg_quorum <= n);
+        assert!((1..=n).contains(&agg_quorum));
         ReplicaState {
             n,
             agg_quorum,

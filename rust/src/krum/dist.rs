@@ -1,0 +1,522 @@
+//! The pairwise-distance engine behind native Multi-Krum.
+//!
+//! The O(n²·D) squared-distance matrix dominates every native
+//! aggregation. Two engines compute it:
+//!
+//! * **Exact** — the pinned per-pair reference: each pair's difference is
+//!   accumulated in f64, exactly as [`pairwise_sq_dists_seq`] does. Large
+//!   inputs stripe the pair list across the shared worker pool
+//!   ([`crate::util::workers`]); per-pair arithmetic is untouched, so the
+//!   result is bit-identical to the sequential reference regardless of
+//!   thread count.
+//! * **Gram** — the fast path, mirroring the L1 Pallas kernel
+//!   (python/compile/kernels/pairwise.py): per-row squared norms are
+//!   computed once and d²(i, j) = ‖i‖² + ‖j‖² − 2·⟨i, j⟩ is derived from
+//!   a cache-blocked dot-product kernel. Rows are walked in
+//!   [`ROW_BLOCK`]-row tiles over [`D_TILE`]-element slabs (the rust
+//!   analogue of the kernel's VMEM block schedule), and the innermost
+//!   contraction keeps [`LANES`] independent f32 partial sums so the
+//!   compiler auto-vectorizes it; tiles fold into f64. Block tasks are
+//!   distributed over the worker pool for large inputs.
+//!
+//! Exactness contract: Gram trades bit-identity for throughput. Its error
+//! is bounded relative to the norm scale (‖i‖² + ‖j‖²), NOT relative to
+//! d² itself — for near-identical rows the subtraction cancels and the
+//! relative-to-d² error is unbounded, which is inherent to the Gram trick
+//! (the Pallas artifact has the same property, and Krum only consumes the
+//! matrix through sums and rankings of well-separated values). Callers
+//! that need bit-exact distances pick [`DistEngine::Exact`] or set
+//! `DEFL_KRUM_EXACT=1` to force it process-wide in `Auto` mode.
+
+use std::sync::OnceLock;
+
+use crate::util::workers::{self, ScopedJob, WorkerPool};
+
+/// Flat row-major n×n squared-distance matrix (symmetric, zero diagonal).
+/// One allocation, contiguous rows — replaces the `Vec<Vec<f32>>` of the
+/// per-pair era so score selection streams each row without pointer
+/// chasing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DistMatrix {
+    n: usize,
+    data: Vec<f32>,
+}
+
+impl DistMatrix {
+    pub fn zeros(n: usize) -> DistMatrix {
+        DistMatrix { n, data: vec![0.0; n * n] }
+    }
+
+    /// Number of rows (= columns).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.n + j]
+    }
+
+    /// Row `i` as a contiguous slice of length n.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.n..(i + 1) * self.n]
+    }
+
+    #[inline]
+    fn set_sym(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.n + j] = v;
+        self.data[j * self.n + i] = v;
+    }
+
+    /// Copy out as nested rows (tests / debugging against the reference).
+    pub fn to_nested(&self) -> Vec<Vec<f32>> {
+        (0..self.n).map(|i| self.row(i).to_vec()).collect()
+    }
+}
+
+/// Which distance implementation to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DistEngine {
+    /// Gram when the work bound warrants it, Exact otherwise;
+    /// `DEFL_KRUM_EXACT=1` forces Exact process-wide.
+    Auto,
+    /// Per-pair f64 accumulation, bit-identical to
+    /// [`pairwise_sq_dists_seq`] (pool-parallel over pairs when large).
+    Exact,
+    /// Blocked Gram kernel on the calling thread.
+    GramSeq,
+    /// Blocked Gram kernel with tiles on the shared worker pool.
+    GramPool,
+}
+
+/// One pair's squared distance, f64-accumulated exactly like the original
+/// sequential loop (shared by the sequential and parallel exact drivers
+/// so the two are bit-identical by construction).
+#[inline]
+pub(crate) fn pair_sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b.iter()) {
+        let d = (*x - *y) as f64;
+        acc += d * d;
+    }
+    acc as f32
+}
+
+/// Sequential reference for the pairwise distance matrix (kept public so
+/// tests can pin both engines against it).
+pub fn pairwise_sq_dists_seq<R: AsRef<[f32]>>(rows: &[R]) -> Vec<Vec<f32>> {
+    let n = rows.len();
+    let mut d2 = vec![vec![0.0f32; n]; n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let d = pair_sq_dist(rows[i].as_ref(), rows[j].as_ref());
+            d2[i][j] = d;
+            d2[j][i] = d;
+        }
+    }
+    d2
+}
+
+/// Below this many multiply-adds `Auto` stays on the exact per-pair path:
+/// it is numerically exact and beats tile setup at tiny sizes.
+pub(crate) const GRAM_WORK_MIN: usize = 1 << 16;
+
+/// Below this many multiply-adds a single thread beats pool dispatch
+/// (same constant the per-pair path used for its spawn threshold).
+pub(crate) const POOL_WORK_MIN: usize = 1 << 21;
+
+/// Independent f32 partial sums in the inner contraction — wide enough
+/// for the compiler to lower onto SIMD lanes.
+const LANES: usize = 8;
+
+/// D-slab in f32 elements (16 KiB per row-tile): the 2·[`ROW_BLOCK`]
+/// row-tiles a block task touches stay cache-resident while the slab is
+/// contracted, cutting memory traffic ~ROW_BLOCK× vs the per-pair path.
+const D_TILE: usize = 4096;
+
+/// Rows per block tile on each side of the Gram contraction.
+const ROW_BLOCK: usize = 4;
+
+/// Dot product of one D-slab: [`LANES`] f32 partials folded into f64.
+#[inline]
+fn dot_tile(a: &[f32], b: &[f32]) -> f64 {
+    let mut lanes = [0.0f32; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (pa, pb) in ca.by_ref().zip(cb.by_ref()) {
+        for ((acc, x), y) in lanes.iter_mut().zip(pa).zip(pb) {
+            *acc += *x * *y;
+        }
+    }
+    let mut tail = 0.0f32;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += *x * *y;
+    }
+    lanes.iter().map(|&x| x as f64).sum::<f64>() + tail as f64
+}
+
+/// ‖a‖² with the same tiling as the Gram contraction.
+fn sq_norm(a: &[f32]) -> f64 {
+    let mut total = 0.0f64;
+    for tile in a.chunks(D_TILE) {
+        total += dot_tile(tile, tile);
+    }
+    total
+}
+
+/// Raw pointer to the flat matrix, sendable across pool workers.
+///
+/// Safety: every (i, j) upper-triangle cell belongs to exactly one block
+/// task (see [`gram_block`]'s pair enumeration), so concurrent tasks
+/// write disjoint cells.
+#[derive(Clone, Copy)]
+struct MatPtr {
+    data: *mut f32,
+    n: usize,
+}
+
+unsafe impl Send for MatPtr {}
+unsafe impl Sync for MatPtr {}
+
+impl MatPtr {
+    /// # Safety
+    /// Caller guarantees (i, j) is written by no other concurrent task
+    /// and i, j < n.
+    #[inline]
+    unsafe fn set_sym(self, i: usize, j: usize, v: f32) {
+        *self.data.add(i * self.n + j) = v;
+        *self.data.add(j * self.n + i) = v;
+    }
+}
+
+/// Contract one (a, b) row-block pair over all D-slabs and write its
+/// distances. Diagonal blocks (a == b) only enumerate i < j.
+fn gram_block<R: AsRef<[f32]> + Sync>(
+    rows: &[R],
+    norms: &[f64],
+    dim: usize,
+    a: usize,
+    b: usize,
+    out: MatPtr,
+) {
+    let n = rows.len();
+    let i0 = a * ROW_BLOCK;
+    let i1 = (i0 + ROW_BLOCK).min(n);
+    let j0 = b * ROW_BLOCK;
+    let j1 = (j0 + ROW_BLOCK).min(n);
+    let mut acc = [[0.0f64; ROW_BLOCK]; ROW_BLOCK];
+    let mut off = 0;
+    while off < dim {
+        let end = (off + D_TILE).min(dim);
+        for i in i0..i1 {
+            let ti = &rows[i].as_ref()[off..end];
+            let jstart = if a == b { (i + 1).max(j0) } else { j0 };
+            for j in jstart..j1 {
+                let tj = &rows[j].as_ref()[off..end];
+                acc[i - i0][j - j0] += dot_tile(ti, tj);
+            }
+        }
+        off = end;
+    }
+    for i in i0..i1 {
+        let jstart = if a == b { (i + 1).max(j0) } else { j0 };
+        for j in jstart..j1 {
+            let g = acc[i - i0][j - j0];
+            // Clamp: cancellation can drive a mathematically non-negative
+            // distance a hair below zero.
+            let d2 = (norms[i] + norms[j] - 2.0 * g).max(0.0) as f32;
+            // SAFETY: this (a, b) task owns the (i, j) cell exclusively.
+            unsafe { out.set_sym(i, j, d2) };
+        }
+    }
+}
+
+fn pairwise_gram<R: AsRef<[f32]> + Sync>(rows: &[R], pool: Option<&WorkerPool>) -> DistMatrix {
+    let n = rows.len();
+    let dim = rows[0].as_ref().len();
+    let mut m = DistMatrix::zeros(n);
+
+    let mut norms = vec![0.0f64; n];
+    match pool {
+        Some(pool) if n > 1 && pool.workers() > 1 => {
+            workers::for_each_chunk_mut(pool, &mut norms, pool.workers(), |off, chunk| {
+                for (k, v) in chunk.iter_mut().enumerate() {
+                    *v = sq_norm(rows[off + k].as_ref());
+                }
+            });
+        }
+        _ => {
+            for (v, row) in norms.iter_mut().zip(rows.iter()) {
+                *v = sq_norm(row.as_ref());
+            }
+        }
+    }
+
+    // Upper-triangle row-block pairs; each is one independent task.
+    let nb = n.div_ceil(ROW_BLOCK);
+    let blocks: Vec<(usize, usize)> =
+        (0..nb).flat_map(|a| (a..nb).map(move |b| (a, b))).collect();
+    let ptr = MatPtr { data: m.data.as_mut_ptr(), n };
+    match pool {
+        Some(pool) if blocks.len() > 1 && pool.workers() > 1 => {
+            let shares = pool.workers().min(blocks.len());
+            let chunk = blocks.len().div_ceil(shares);
+            let norms = &norms;
+            let jobs: Vec<ScopedJob<'_>> = blocks
+                .chunks(chunk)
+                .map(|share| {
+                    let job: ScopedJob<'_> = Box::new(move || {
+                        for &(a, b) in share {
+                            gram_block(rows, norms, dim, a, b, ptr);
+                        }
+                    });
+                    job
+                })
+                .collect();
+            pool.scope(jobs);
+        }
+        _ => {
+            for &(a, b) in &blocks {
+                gram_block(rows, &norms, dim, a, b, ptr);
+            }
+        }
+    }
+    m
+}
+
+fn pairwise_exact<R: AsRef<[f32]> + Sync>(rows: &[R]) -> DistMatrix {
+    let n = rows.len();
+    let dim = rows[0].as_ref().len();
+    let mut m = DistMatrix::zeros(n);
+    let pairs: Vec<(usize, usize)> =
+        (0..n).flat_map(|i| ((i + 1)..n).map(move |j| (i, j))).collect();
+    let n_pairs = pairs.len();
+    // Don't touch (and lazily spawn) the pool unless the work warrants it.
+    let pool = if n_pairs >= 2 && n_pairs * dim >= POOL_WORK_MIN {
+        Some(workers::global())
+    } else {
+        None
+    };
+    let Some(pool) = pool.filter(|p| p.workers() >= 2) else {
+        for &(i, j) in &pairs {
+            let d = pair_sq_dist(rows[i].as_ref(), rows[j].as_ref());
+            m.set_sym(i, j, d);
+        }
+        return m;
+    };
+    // Stripe the pair list across the pool; every worker writes disjoint
+    // slots of its own output chunk, per-pair arithmetic untouched.
+    let chunk = n_pairs.div_ceil(pool.workers().min(n_pairs));
+    let mut dists = vec![0.0f32; n_pairs];
+    {
+        let jobs: Vec<ScopedJob<'_>> = pairs
+            .chunks(chunk)
+            .zip(dists.chunks_mut(chunk))
+            .map(|(pair_chunk, out_chunk)| {
+                let job: ScopedJob<'_> = Box::new(move || {
+                    for (&(i, j), out) in pair_chunk.iter().zip(out_chunk.iter_mut()) {
+                        *out = pair_sq_dist(rows[i].as_ref(), rows[j].as_ref());
+                    }
+                });
+                job
+            })
+            .collect();
+        pool.scope(jobs);
+    }
+    for (&(i, j), d) in pairs.iter().zip(dists) {
+        m.set_sym(i, j, d);
+    }
+    m
+}
+
+fn exact_forced() -> bool {
+    static FORCED: OnceLock<bool> = OnceLock::new();
+    *FORCED.get_or_init(|| {
+        matches!(
+            std::env::var("DEFL_KRUM_EXACT").as_deref().map(str::trim),
+            Ok("1") | Ok("true")
+        )
+    })
+}
+
+/// Pairwise squared distances with the `Auto` engine (see [`DistEngine`]).
+pub fn pairwise_dists<R: AsRef<[f32]> + Sync>(rows: &[R]) -> DistMatrix {
+    pairwise_dists_with(rows, DistEngine::Auto)
+}
+
+/// Pairwise squared distances with an explicit engine choice.
+pub fn pairwise_dists_with<R: AsRef<[f32]> + Sync>(rows: &[R], engine: DistEngine) -> DistMatrix {
+    let n = rows.len();
+    if n < 2 {
+        return DistMatrix::zeros(n);
+    }
+    let dim = rows[0].as_ref().len();
+    let work = n * (n - 1) / 2 * dim;
+    let engine = match engine {
+        DistEngine::Auto => {
+            if exact_forced() || work < GRAM_WORK_MIN {
+                DistEngine::Exact
+            } else if work >= POOL_WORK_MIN {
+                DistEngine::GramPool
+            } else {
+                DistEngine::GramSeq
+            }
+        }
+        e => e,
+    };
+    match engine {
+        DistEngine::Exact => pairwise_exact(rows),
+        DistEngine::GramSeq => pairwise_gram(rows, None),
+        DistEngine::GramPool => pairwise_gram(rows, Some(workers::global())),
+        DistEngine::Auto => unreachable!("Auto resolved above"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::{forall, gens};
+    use crate::util::Pcg;
+
+    fn cluster(rng: &mut Pcg, n: usize, d: usize, spread: f32) -> Vec<Vec<f32>> {
+        let center = gens::f32_vec(rng, d, 1.0);
+        (0..n)
+            .map(|_| center.iter().map(|c| c + rng.normal_f32(0.0, spread)).collect())
+            .collect()
+    }
+
+    fn f64_norm2(row: &[f32]) -> f64 {
+        row.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    #[test]
+    fn dist_matrix_layout_row_at_nested() {
+        let mut m = DistMatrix::zeros(3);
+        m.set_sym(0, 2, 5.0);
+        m.set_sym(1, 2, 7.0);
+        assert_eq!(m.n(), 3);
+        assert_eq!(m.at(0, 2), 5.0);
+        assert_eq!(m.at(2, 0), 5.0);
+        assert_eq!(m.row(2), &[5.0, 7.0, 0.0]);
+        assert_eq!(m.to_nested()[1], vec![0.0, 0.0, 7.0]);
+    }
+
+    #[test]
+    fn every_engine_is_symmetric_with_zero_diag() {
+        let mut rng = Pcg::seeded(1);
+        let rows = cluster(&mut rng, 6, 50, 1.0);
+        for engine in [DistEngine::Auto, DistEngine::Exact, DistEngine::GramSeq, DistEngine::GramPool] {
+            let d2 = pairwise_dists_with(&rows, engine);
+            for i in 0..6 {
+                assert_eq!(d2.at(i, i), 0.0, "{engine:?} diag");
+                for j in 0..6 {
+                    assert!((d2.at(i, j) - d2.at(j, i)).abs() < 1e-6, "{engine:?} sym");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exact_engine_bit_identical_to_sequential_reference() {
+        // Force the pool-parallel exact path (work > POOL_WORK_MIN) and
+        // compare bit patterns, not approximate values.
+        let mut rng = Pcg::seeded(44);
+        let n = 12;
+        let d = POOL_WORK_MIN / (12 * 11 / 2) + 17;
+        let rows = cluster(&mut rng, n, d, 1.0);
+        let par = pairwise_dists_with(&rows, DistEngine::Exact);
+        let seq = pairwise_sq_dists_seq(&rows);
+        for i in 0..n {
+            for j in 0..n {
+                assert_eq!(
+                    par.at(i, j).to_bits(),
+                    seq[i][j].to_bits(),
+                    "bit mismatch at ({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn auto_small_inputs_take_the_exact_path_identically() {
+        let mut rng = Pcg::seeded(45);
+        let rows = cluster(&mut rng, 5, 64, 0.5);
+        let a = pairwise_dists(&rows);
+        let b = pairwise_sq_dists_seq(&rows);
+        assert_eq!(a.to_nested(), b);
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        let none: Vec<Vec<f32>> = Vec::new();
+        assert_eq!(pairwise_dists(&none).n(), 0);
+        let one = vec![vec![1.0f32, 2.0]];
+        let m = pairwise_dists(&one);
+        assert_eq!(m.n(), 1);
+        assert_eq!(m.at(0, 0), 0.0);
+    }
+
+    #[test]
+    fn prop_gram_matches_exact_within_norm_scaled_tolerance() {
+        // The exactness contract: Gram error is bounded relative to the
+        // norm scale ‖i‖² + ‖j‖², across (n, D, spread) regimes from
+        // tight clusters (heavy cancellation) to well-separated rows.
+        forall(
+            "gram-vs-exact",
+            17,
+            12,
+            6,
+            |rng, size| {
+                let n = 3 + rng.gen_usize(8);
+                let d = 32 + rng.gen_usize(size * 700 + 1);
+                let spread = [0.01f32, 0.3, 3.0][rng.gen_usize(3)];
+                cluster(rng, n, d, spread)
+            },
+            |rows| {
+                let n = rows.len();
+                let seq = pairwise_sq_dists_seq(rows);
+                let norms: Vec<f64> = rows.iter().map(|r| f64_norm2(r)).collect();
+                for engine in [DistEngine::GramSeq, DistEngine::GramPool] {
+                    let g = pairwise_dists_with(rows, engine);
+                    for i in 0..n {
+                        for j in 0..n {
+                            let tol = 1e-4 * (norms[i] + norms[j] + 1.0);
+                            let err = (g.at(i, j) as f64 - seq[i][j] as f64).abs();
+                            prop_assert!(
+                                err <= tol,
+                                "{engine:?} ({i},{j}): err {err:.3e} > tol {tol:.3e} \
+                                 (d2 {}, dim {})",
+                                seq[i][j],
+                                rows[0].len()
+                            );
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn gram_handles_non_multiple_block_and_tile_sizes() {
+        // n not a multiple of ROW_BLOCK, dim not a multiple of LANES or
+        // D_TILE: remainders must still be contracted.
+        let mut rng = Pcg::seeded(9);
+        let rows = cluster(&mut rng, ROW_BLOCK * 2 + 3, D_TILE + LANES + 5, 0.7);
+        let g = pairwise_dists_with(&rows, DistEngine::GramSeq);
+        let s = pairwise_sq_dists_seq(&rows);
+        for i in 0..rows.len() {
+            for j in 0..rows.len() {
+                let tol = 1e-4 * (f64_norm2(&rows[i]) + f64_norm2(&rows[j]) + 1.0);
+                assert!(
+                    (g.at(i, j) as f64 - s[i][j] as f64).abs() <= tol,
+                    "({i},{j}): {} vs {}",
+                    g.at(i, j),
+                    s[i][j]
+                );
+            }
+        }
+    }
+}

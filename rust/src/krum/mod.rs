@@ -1,21 +1,51 @@
 //! Native Krum / Multi-Krum (Blanchard et al. 2017), the DeFL weight
 //! filter (§3.2).
 //!
-//! The hot path uses the AOT artifact (L1 Pallas Gram kernel inside the L2
-//! aggregation graph, executed through [`crate::runtime`]); this module is
-//! the arbitrary-(n, f) reference used for (a) cross-checking the artifact
-//! in tests, (b) configurations outside the exported combos, and (c) the
-//! pure-rust baselines.
+//! The deployment hot path uses the AOT artifact (L1 Pallas Gram kernel
+//! inside the L2 aggregation graph, executed through [`crate::runtime`]);
+//! this module is the arbitrary-(n, f) engine used for (a) configurations
+//! outside the exported combos, (b) cross-checking the artifact in tests,
+//! and (c) the pure-rust baselines.
 //!
-//! Rows are accepted as any `AsRef<[f32]>` (e.g. `Vec<f32>`, `&[f32]`,
-//! [`crate::weights::Weights`]), so the DeFL node aggregates straight out
-//! of the weight pool without a per-row copy. The O(n²·D) distance matrix
-//! — the dominant cost of the native fallback — is computed on multiple
-//! threads for large inputs, with results bit-identical to the sequential
-//! reference (each pair's f64 accumulation is untouched; only the pairs
-//! are distributed).
+//! Rows are accepted as any `AsRef<[f32]> + Sync` (e.g. `Vec<f32>`,
+//! `&[f32]`, [`crate::weights::Weights`]), so the DeFL node aggregates
+//! straight out of the weight pool without a per-row copy.
+//!
+//! ## Engine dispatch
+//!
+//! The O(n²·D) distance matrix is served by [`dist`]:
+//!
+//! * `Auto` (the default for [`krum_scores`] / [`multi_krum`]) runs the
+//!   blocked **Gram** kernel — norms once, d² = ‖i‖² + ‖j‖² − 2⟨i,j⟩ from
+//!   cache-tiled, auto-vectorized dot products — on the shared persistent
+//!   worker pool ([`crate::util::workers`]) above ~2M multiply-adds,
+//!   single-threaded below, and falls back to the exact per-pair path
+//!   under ~64K multiply-adds where tile setup isn't worth it.
+//! * The **Exact** engine keeps PR 1's contract: per-pair f64
+//!   accumulation bit-identical to [`pairwise_sq_dists_seq`], pool-striped
+//!   for large inputs. `DEFL_KRUM_EXACT=1` forces it process-wide — the
+//!   escape hatch for configurations that must reproduce the sequential
+//!   reference bit-for-bit.
+//!
+//! The worker pool is lazily spawned on first large aggregation and lives
+//! for the process — no per-call thread spawns anywhere on this path.
+//!
+//! Score selection uses `select_nth_unstable` (only the n−f−2 closest
+//! neighbours matter) with the selected prefix re-sorted, so scores stay
+//! bit-identical to the full-sort reference over the same matrix. The
+//! Multi-Krum aggregation itself is one fused weighted pass over
+//! dim-chunks, pool-parallel for large models, with per-coordinate f64
+//! accumulation that is independent of the chunking.
+
+pub mod dist;
+
+pub use dist::{pairwise_dists, pairwise_dists_with, pairwise_sq_dists_seq, DistEngine, DistMatrix};
+
+use std::cmp::Ordering;
 
 use anyhow::{bail, Result};
+
+use crate::util::workers;
 
 /// Result of a Multi-Krum aggregation.
 #[derive(Debug, Clone)]
@@ -28,85 +58,23 @@ pub struct KrumOutput {
     pub mask: Vec<f32>,
 }
 
-/// One pair's squared distance, f64-accumulated exactly like the original
-/// sequential loop (shared by the sequential and parallel drivers so the
-/// two are bit-identical by construction).
 #[inline]
-fn pair_sq_dist(a: &[f32], b: &[f32]) -> f32 {
-    let mut acc = 0.0f64;
-    for (x, y) in a.iter().zip(b.iter()) {
-        let d = (*x - *y) as f64;
-        acc += d * d;
-    }
-    acc as f32
+fn fcmp(a: &f32, b: &f32) -> Ordering {
+    a.partial_cmp(b).unwrap_or(Ordering::Equal)
 }
 
-/// Sequential reference for the pairwise distance matrix (kept public so
-/// tests can pin the parallel path against it).
-pub fn pairwise_sq_dists_seq<R: AsRef<[f32]>>(rows: &[R]) -> Vec<Vec<f32>> {
-    let n = rows.len();
-    let mut d2 = vec![vec![0.0f32; n]; n];
-    for i in 0..n {
-        for j in (i + 1)..n {
-            let d = pair_sq_dist(rows[i].as_ref(), rows[j].as_ref());
-            d2[i][j] = d;
-            d2[j][i] = d;
-        }
-    }
-    d2
-}
-
-/// Below this many multiply-adds the thread-spawn overhead dominates and
-/// the sequential path wins.
-const PAR_WORK_THRESHOLD: usize = 1 << 21;
-
-/// Pairwise squared distances between rows (n × n, symmetric, zero diag).
-///
-/// Large inputs are chunked over `std::thread::scope` worker threads;
-/// per-pair arithmetic is identical to [`pairwise_sq_dists_seq`], so the
-/// result is bit-identical regardless of thread count.
-pub fn pairwise_sq_dists<R: AsRef<[f32]> + Sync>(rows: &[R]) -> Vec<Vec<f32>> {
-    let n = rows.len();
-    if n < 2 {
-        return pairwise_sq_dists_seq(rows);
-    }
-    let dim = rows[0].as_ref().len();
-    let n_pairs = n * (n - 1) / 2;
-    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
-    if n_pairs * dim < PAR_WORK_THRESHOLD || threads < 2 || n_pairs < 2 {
-        return pairwise_sq_dists_seq(rows);
-    }
-
-    // Enumerate the upper triangle and stripe it across workers; every
-    // worker writes disjoint (i, j) results into its own chunk.
-    let pairs: Vec<(usize, usize)> = (0..n)
-        .flat_map(|i| ((i + 1)..n).map(move |j| (i, j)))
-        .collect();
-    let workers = threads.min(n_pairs);
-    let chunk = n_pairs.div_ceil(workers);
-    let mut dists = vec![0.0f32; n_pairs];
-
-    std::thread::scope(|scope| {
-        for (pair_chunk, out_chunk) in pairs.chunks(chunk).zip(dists.chunks_mut(chunk)) {
-            scope.spawn(move || {
-                for ((i, j), out) in pair_chunk.iter().zip(out_chunk.iter_mut()) {
-                    *out = pair_sq_dist(rows[*i].as_ref(), rows[*j].as_ref());
-                }
-            });
-        }
-    });
-
-    let mut d2 = vec![vec![0.0f32; n]; n];
-    for ((i, j), d) in pairs.into_iter().zip(dists) {
-        d2[i][j] = d;
-        d2[j][i] = d;
-    }
-    d2
-}
-
-/// Krum scores: for each row, the sum of squared distances to its
-/// n − f − 2 closest other rows.
+/// Krum scores with the `Auto` distance engine: for each row, the sum of
+/// squared distances to its n − f − 2 closest other rows.
 pub fn krum_scores<R: AsRef<[f32]> + Sync>(rows: &[R], f: usize) -> Result<Vec<f32>> {
+    krum_scores_with(rows, f, DistEngine::Auto)
+}
+
+/// Krum scores over an explicitly chosen distance engine.
+pub fn krum_scores_with<R: AsRef<[f32]> + Sync>(
+    rows: &[R],
+    f: usize,
+    engine: DistEngine,
+) -> Result<Vec<f32>> {
     let n = rows.len();
     if n < f + 3 {
         bail!("krum needs n - f - 2 >= 1 (n={n}, f={f})");
@@ -116,24 +84,91 @@ pub fn krum_scores<R: AsRef<[f32]> + Sync>(rows: &[R], f: usize) -> Result<Vec<f
         bail!("krum: row {bad} has dim {} != {dim}", rows[bad].as_ref().len());
     }
     let closest = n - f - 2;
-    let d2 = pairwise_sq_dists(rows);
+    let d2 = pairwise_dists_with(rows, engine);
     let mut scores = Vec::with_capacity(n);
+    let mut scratch = vec![0.0f32; n - 1];
     for i in 0..n {
-        let mut dists: Vec<f32> = (0..n).filter(|&j| j != i).map(|j| d2[i][j]).collect();
-        dists.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-        scores.push(dists[..closest].iter().sum());
+        let row = d2.row(i);
+        // The row minus its zero diagonal entry (distances to OTHER rows).
+        scratch[..i].copy_from_slice(&row[..i]);
+        scratch[i..].copy_from_slice(&row[i + 1..]);
+        // Partial selection: only the `closest` smallest matter. The
+        // selected prefix is re-sorted and summed in ascending order, so
+        // the score is bit-identical to the full-sort reference.
+        let (lo, mid, _hi) = scratch.select_nth_unstable_by(closest - 1, fcmp);
+        lo.sort_unstable_by(fcmp);
+        let mut s = 0.0f32;
+        for x in lo.iter() {
+            s += *x;
+        }
+        s += *mid;
+        scores.push(s);
     }
     Ok(scores)
 }
 
-/// Multi-Krum: FedAvg (weighted by `sample_weights`) over the `m` rows
-/// with the smallest Krum scores. Matches python/compile/aggregate.py
-/// (ties broken by index, like argsort).
+/// Work bound above which the fused aggregation pass fans out dim-chunks
+/// over the worker pool.
+const AGG_POOL_WORK_MIN: usize = dist::POOL_WORK_MIN;
+
+/// Fused weighted mean over `sel` rows: one pass per dim-chunk, f64
+/// accumulation per coordinate. Chunks run on the pool for large models;
+/// each coordinate's accumulation order is fixed (row order), so the
+/// result is independent of the chunking.
+fn weighted_mean<R: AsRef<[f32]> + Sync>(
+    rows: &[R],
+    sel: &[usize],
+    sample_weights: &[f32],
+    dim: usize,
+) -> Vec<f32> {
+    let mut total = 0.0f64;
+    for &i in sel {
+        total += sample_weights[i] as f64;
+    }
+    let denom = total.max(1e-12);
+    let mut out = vec![0.0f32; dim];
+    let accumulate = |start: usize, chunk: &mut [f32]| {
+        let mut acc = vec![0.0f64; chunk.len()];
+        for &i in sel {
+            let w = sample_weights[i] as f64;
+            let row = &rows[i].as_ref()[start..start + chunk.len()];
+            for (a, x) in acc.iter_mut().zip(row) {
+                *a += w * *x as f64;
+            }
+        }
+        for (o, a) in chunk.iter_mut().zip(acc) {
+            *o = (a / denom) as f32;
+        }
+    };
+    if sel.len() * dim >= AGG_POOL_WORK_MIN {
+        let pool = workers::global();
+        workers::for_each_chunk_mut(pool, &mut out, pool.workers(), accumulate);
+    } else {
+        accumulate(0, &mut out);
+    }
+    out
+}
+
+/// Multi-Krum with the `Auto` engine: FedAvg (weighted by
+/// `sample_weights`) over the `m` rows with the smallest Krum scores.
+/// Matches python/compile/aggregate.py (ties broken by index, like
+/// argsort).
 pub fn multi_krum<R: AsRef<[f32]> + Sync>(
     rows: &[R],
     sample_weights: &[f32],
     f: usize,
     m: usize,
+) -> Result<KrumOutput> {
+    multi_krum_with(rows, sample_weights, f, m, DistEngine::Auto)
+}
+
+/// Multi-Krum over an explicitly chosen distance engine.
+pub fn multi_krum_with<R: AsRef<[f32]> + Sync>(
+    rows: &[R],
+    sample_weights: &[f32],
+    f: usize,
+    m: usize,
+    engine: DistEngine,
 ) -> Result<KrumOutput> {
     let n = rows.len();
     if m == 0 || m > n {
@@ -142,42 +177,25 @@ pub fn multi_krum<R: AsRef<[f32]> + Sync>(
     if sample_weights.len() != n {
         bail!("multi-krum: {} sample weights for {n} rows", sample_weights.len());
     }
-    let scores = krum_scores(rows, f)?;
+    let scores = krum_scores_with(rows, f, engine)?;
 
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&a, &b| {
-        scores[a]
-            .partial_cmp(&scores[b])
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.cmp(&b))
-    });
+    order.sort_by(|&a, &b| fcmp(&scores[a], &scores[b]).then(a.cmp(&b)));
     let mut mask = vec![0.0f32; n];
     for &i in &order[..m] {
         mask[i] = 1.0;
     }
+    let mut sel = order[..m].to_vec();
+    sel.sort_unstable();
 
     let dim = rows[0].as_ref().len();
-    let mut aggregate = vec![0.0f32; dim];
-    let mut total_w = 0.0f64;
-    for i in 0..n {
-        if mask[i] == 0.0 {
-            continue;
-        }
-        let w = sample_weights[i] as f64;
-        total_w += w;
-        for (acc, x) in aggregate.iter_mut().zip(rows[i].as_ref().iter()) {
-            *acc += (w * *x as f64) as f32;
-        }
-    }
-    let denom = total_w.max(1e-12) as f32;
-    for a in aggregate.iter_mut() {
-        *a /= denom;
-    }
+    let aggregate = weighted_mean(rows, &sel, sample_weights, dim);
     Ok(KrumOutput { aggregate, scores, mask })
 }
 
-/// Plain FedAvg over all rows (the FL/SL aggregation rule).
-pub fn fedavg<R: AsRef<[f32]>>(rows: &[R], sample_weights: &[f32]) -> Result<Vec<f32>> {
+/// Plain FedAvg over all rows (the FL/SL aggregation rule), through the
+/// same fused pass as Multi-Krum's aggregation.
+pub fn fedavg<R: AsRef<[f32]> + Sync>(rows: &[R], sample_weights: &[f32]) -> Result<Vec<f32>> {
     let n = rows.len();
     if n == 0 {
         bail!("fedavg: no rows");
@@ -186,20 +204,11 @@ pub fn fedavg<R: AsRef<[f32]>>(rows: &[R], sample_weights: &[f32]) -> Result<Vec
         bail!("fedavg: weight arity");
     }
     let dim = rows[0].as_ref().len();
-    let mut out = vec![0.0f64; dim];
-    let mut total = 0.0f64;
-    for (row, &w) in rows.iter().zip(sample_weights.iter()) {
-        let row = row.as_ref();
-        if row.len() != dim {
-            bail!("fedavg: ragged rows");
-        }
-        total += w as f64;
-        for (acc, x) in out.iter_mut().zip(row.iter()) {
-            *acc += w as f64 * *x as f64;
-        }
+    if let Some(bad) = rows.iter().position(|r| r.as_ref().len() != dim) {
+        bail!("fedavg: ragged rows (row {bad})");
     }
-    let denom = total.max(1e-12);
-    Ok(out.into_iter().map(|x| (x / denom) as f32).collect())
+    let sel: Vec<usize> = (0..n).collect();
+    Ok(weighted_mean(rows, &sel, sample_weights, dim))
 }
 
 #[cfg(test)]
@@ -220,49 +229,6 @@ mod tests {
                     .collect()
             })
             .collect()
-    }
-
-    #[test]
-    fn distances_symmetric_zero_diag() {
-        let mut rng = Pcg::seeded(1);
-        let rows = cluster(&mut rng, 6, 50, 1.0);
-        let d2 = pairwise_sq_dists(&rows);
-        for i in 0..6 {
-            assert_eq!(d2[i][i], 0.0);
-            for j in 0..6 {
-                assert!((d2[i][j] - d2[j][i]).abs() < 1e-6);
-            }
-        }
-    }
-
-    #[test]
-    fn parallel_distances_bit_identical_to_sequential() {
-        // Force the parallel path (work > PAR_WORK_THRESHOLD) and compare
-        // bit patterns, not approximate values.
-        let mut rng = Pcg::seeded(44);
-        let n = 12;
-        let d = PAR_WORK_THRESHOLD / (12 * 11 / 2) + 17;
-        let rows = cluster(&mut rng, n, d, 1.0);
-        let par = pairwise_sq_dists(&rows);
-        let seq = pairwise_sq_dists_seq(&rows);
-        for i in 0..n {
-            for j in 0..n {
-                assert_eq!(
-                    par[i][j].to_bits(),
-                    seq[i][j].to_bits(),
-                    "bit mismatch at ({i},{j})"
-                );
-            }
-        }
-    }
-
-    #[test]
-    fn small_inputs_take_the_sequential_path_identically() {
-        let mut rng = Pcg::seeded(45);
-        let rows = cluster(&mut rng, 5, 64, 0.5);
-        let a = pairwise_sq_dists(&rows);
-        let b = pairwise_sq_dists_seq(&rows);
-        assert_eq!(a, b);
     }
 
     #[test]
@@ -294,6 +260,55 @@ mod tests {
     }
 
     #[test]
+    fn partial_selection_bit_identical_to_full_sort_reference() {
+        // Same distance matrix in, same scores out: select_nth + prefix
+        // sort must reproduce the full-sort reference exactly.
+        let mut rng = Pcg::seeded(21);
+        for (n, f) in [(5usize, 1usize), (9, 2), (12, 4), (8, 0)] {
+            let rows = cluster(&mut rng, n, 40, 1.0);
+            let scores = krum_scores_with(&rows, f, DistEngine::Exact).unwrap();
+            let d2 = pairwise_sq_dists_seq(&rows);
+            let closest = n - f - 2;
+            for i in 0..n {
+                let mut dists: Vec<f32> =
+                    (0..n).filter(|&j| j != i).map(|j| d2[i][j]).collect();
+                dists.sort_by(fcmp);
+                let expect: f32 = dists[..closest].iter().sum();
+                assert_eq!(
+                    scores[i].to_bits(),
+                    expect.to_bits(),
+                    "row {i} of (n={n}, f={f}): {} vs {}",
+                    scores[i],
+                    expect
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gram_and_exact_engines_agree_on_selection() {
+        // Numerics differ in low bits; the FILTER decision must not.
+        // Spread 0.5 keeps inlier score gaps orders of magnitude above
+        // the Gram kernel's norm-scaled error, so mask equality is
+        // deterministic, while the outliers stay unambiguous.
+        let mut rng = Pcg::seeded(23);
+        let mut rows = cluster(&mut rng, 9, 600, 0.5);
+        rows[4] = gens::f32_vec(&mut rng, 600, 20.0);
+        rows[7] = rows[7].iter().map(|x| x * -5.0).collect();
+        let sw = vec![1.0f32; 9];
+        let exact = multi_krum_with(&rows, &sw, 2, 6, DistEngine::Exact).unwrap();
+        for engine in [DistEngine::GramSeq, DistEngine::GramPool] {
+            let gram = multi_krum_with(&rows, &sw, 2, 6, engine).unwrap();
+            assert_eq!(gram.mask, exact.mask, "{engine:?} mask diverged");
+            assert_eq!(gram.mask[4], 0.0);
+            assert_eq!(gram.mask[7], 0.0);
+            for (a, b) in gram.aggregate.iter().zip(exact.aggregate.iter()) {
+                assert!((a - b).abs() < 1e-3, "{engine:?} agg diverged: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
     fn multi_krum_filters_outlier_and_averages_rest() {
         let mut rng = Pcg::seeded(3);
         let mut rows = cluster(&mut rng, 4, 32, 0.01);
@@ -305,6 +320,27 @@ mod tests {
         let manual = fedavg(&rows[1..], &[1.0; 3]).unwrap();
         for (a, b) in out.aggregate.iter().zip(manual.iter()) {
             assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn fused_aggregation_independent_of_chunking() {
+        // weighted_mean must yield the same bits through the pool chunks
+        // as through the single inline chunk.
+        let mut rng = Pcg::seeded(29);
+        let dim = AGG_POOL_WORK_MIN / 3 + 41;
+        let rows: Vec<Vec<f32>> = (0..4).map(|_| gens::f32_vec(&mut rng, dim, 1.0)).collect();
+        let sw = [1.0f32, 2.0, 0.5, 3.0];
+        let sel = [0usize, 1, 3];
+        let pooled = weighted_mean(&rows, &sel, &sw, dim);
+        // Inline reference: same per-coordinate accumulation, one chunk.
+        let denom: f64 = sel.iter().map(|&i| sw[i] as f64).sum::<f64>().max(1e-12);
+        for (k, got) in pooled.iter().enumerate() {
+            let mut acc = 0.0f64;
+            for &i in &sel {
+                acc += sw[i] as f64 * rows[i][k] as f64;
+            }
+            assert_eq!(got.to_bits(), ((acc / denom) as f32).to_bits(), "coord {k}");
         }
     }
 
@@ -326,13 +362,14 @@ mod tests {
         assert!(multi_krum(&rows, &[1.0; 4], 1, 5).is_err()); // m > n
         let ragged = vec![vec![0.0f32; 4], vec![0.0f32; 3]];
         assert!(krum_scores(&ragged, 0).is_err());
+        assert!(fedavg(&ragged, &[1.0; 2]).is_err());
     }
 
     #[test]
     fn prop_mask_selects_exactly_m() {
         forall("mask-m", 11, 40, 10, |rng, size| {
             let n = 4 + rng.gen_usize(7);
-            let f = rng.gen_usize((n - 3).max(1).min(n / 2) + 1);
+            let f = rng.gen_usize((n - 3).clamp(1, n / 2) + 1);
             let m = 1 + rng.gen_usize(n - f.max(1));
             let d = 4 + size;
             let rows: Vec<Vec<f32>> = (0..n).map(|_| gens::f32_vec(rng, d, 1.0)).collect();

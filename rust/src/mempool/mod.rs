@@ -75,13 +75,41 @@ impl WeightPool {
         }
     }
 
+    /// Batch lookup for an aggregation row set. All-or-nothing: on any
+    /// miss the error names every missing digest AND the full requested
+    /// list, so a lost blob is diagnosable in one log line instead of n
+    /// separate "not present" errors.
+    pub fn get_many(&self, digests: &[Digest]) -> Result<Vec<Weights>> {
+        let mut out = Vec::with_capacity(digests.len());
+        let mut missing: Vec<String> = Vec::new();
+        for d in digests {
+            match self.entries.get(d) {
+                Some(e) => out.push(e.weights.clone()),
+                None => missing.push(d.short()),
+            }
+        }
+        if !missing.is_empty() {
+            let wanted: Vec<String> = digests.iter().map(|d| d.short()).collect();
+            bail!(
+                "mempool: {}/{} digests missing [{}] of requested [{}]",
+                missing.len(),
+                digests.len(),
+                missing.join(", "),
+                wanted.join(", ")
+            );
+        }
+        Ok(out)
+    }
+
     pub fn contains(&self, digest: &Digest) -> bool {
         self.entries.contains_key(digest)
     }
 
     /// Drop all blobs older than `current_round − τ + 1`. The byte gauge
     /// is maintained incrementally (subtract what was reaped) instead of
-    /// re-summing every surviving entry.
+    /// re-summing every surviving entry; the subtraction saturates so an
+    /// accounting bug can never wrap the gauge to ~u64::MAX and poison
+    /// every storage metric downstream.
     pub fn gc(&mut self, current_round: u64) {
         let keep_from = current_round.saturating_sub(self.tau - 1);
         let mut reaped = 0u64;
@@ -93,7 +121,7 @@ impl WeightPool {
                 false
             }
         });
-        self.bytes -= reaped;
+        self.bytes = self.bytes.saturating_sub(reaped);
     }
 
     pub fn len(&self) -> usize {
@@ -148,6 +176,42 @@ mod tests {
     fn missing_digest_errors() {
         let p = WeightPool::new(2);
         assert!(p.get(&Digest::zero()).is_err());
+    }
+
+    #[test]
+    fn get_many_returns_rows_in_request_order() {
+        let mut p = WeightPool::new(2);
+        let a = p.put(0, blob(1.0, 8));
+        let b = p.put(0, blob(2.0, 8));
+        let got = p.get_many(&[b, a, b]).unwrap();
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0].as_slice()[0], 2.0);
+        assert_eq!(got[1].as_slice()[0], 1.0);
+        assert_eq!(got[2].as_slice()[0], 2.0);
+        // Handles share pool storage (no copy on batch fetch either).
+        assert!(Weights::ptr_eq(&got[0], &got[2]));
+    }
+
+    #[test]
+    fn get_many_reports_every_missing_digest_with_context() {
+        let mut p = WeightPool::new(2);
+        let present = p.put(0, blob(1.0, 8));
+        let ghost = Digest::of_bytes(b"never-inserted");
+        let err = p.get_many(&[present, ghost]).unwrap_err().to_string();
+        assert!(err.contains("1/2"), "count context missing: {err}");
+        assert!(err.contains(&ghost.short()), "missing digest absent: {err}");
+        assert!(err.contains(&present.short()), "request context absent: {err}");
+    }
+
+    #[test]
+    fn gc_gauge_saturates_instead_of_wrapping() {
+        let mut p = WeightPool::new(2);
+        p.put(0, blob(1.0, 16));
+        p.gc(100); // everything reaped
+        assert_eq!(p.bytes(), 0);
+        p.gc(200); // nothing left to reap; gauge must stay at zero
+        assert_eq!(p.bytes(), 0);
+        assert!(p.is_empty());
     }
 
     #[test]

@@ -14,6 +14,9 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::config::manifest::{Manifest, ModelMeta, XDtype};
 use crate::config::Model;
 
+/// Elements below which stacking rows on one thread beats pool dispatch.
+const STACK_POOL_WORK_MIN: usize = 1 << 21;
+
 /// A data batch in the model's input dtype.
 #[derive(Debug, Clone)]
 pub enum Batch {
@@ -43,6 +46,16 @@ pub struct KrumResult {
     pub aggregate: Vec<f32>,
     pub scores: Vec<f32>,
     pub mask: Vec<f32>,
+}
+
+/// Which implementation served an aggregation (per-node stats surface it
+/// as `agg_artifact` / `agg_native`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggPath {
+    /// The AOT-compiled artifact (L1 Pallas Gram kernel through PJRT).
+    Artifact,
+    /// The native rust engine (`crate::krum`, blocked Gram + worker pool).
+    Native,
 }
 
 pub struct Engine {
@@ -223,15 +236,33 @@ impl Engine {
     /// validating every row against the model dimension. This is the ONE
     /// copy the aggregation path pays (the PJRT literal needs contiguous
     /// input); rows come straight from the weight pool without per-row
-    /// `to_vec` staging.
+    /// `to_vec` staging, and large stacks fan the row memcpys out over
+    /// the shared worker pool.
     fn stack_checked(&self, rows: &[impl AsRef<[f32]>]) -> Result<Vec<f32>> {
-        let mut stacked = Vec::with_capacity(rows.len() * self.meta.dim);
+        let dim = self.meta.dim;
         for (i, row) in rows.iter().enumerate() {
-            let row = row.as_ref();
-            if row.len() != self.meta.dim {
-                bail!("row {i} dim {} != D {}", row.len(), self.meta.dim);
+            if row.as_ref().len() != dim {
+                bail!("row {i} dim {} != D {}", row.as_ref().len(), dim);
             }
-            stacked.extend_from_slice(row);
+        }
+        let mut stacked = vec![0.0f32; rows.len() * dim];
+        if rows.len() > 1 && rows.len() * dim >= STACK_POOL_WORK_MIN {
+            let pool = crate::util::workers::global();
+            let jobs: Vec<crate::util::workers::ScopedJob<'_>> = stacked
+                .chunks_mut(dim)
+                .zip(rows.iter())
+                .map(|(dst, row)| {
+                    let src: &[f32] = row.as_ref();
+                    let job: crate::util::workers::ScopedJob<'_> =
+                        Box::new(move || dst.copy_from_slice(src));
+                    job
+                })
+                .collect();
+            pool.scope(jobs);
+        } else {
+            for (dst, row) in stacked.chunks_mut(dim).zip(rows.iter()) {
+                dst.copy_from_slice(row.as_ref());
+            }
         }
         Ok(stacked)
     }
@@ -276,6 +307,64 @@ impl Engine {
         let sw = xla::Literal::vec1(sample_weights);
         let outs = self.run(&format!("fedavg_{}_n{n}", self.meta.name), &[w, sw])?;
         outs[0].to_vec::<f32>().map_err(|e| anyhow!("agg: {e:?}"))
+    }
+
+    /// Does the artifact set cover FedAvg at this n?
+    pub fn has_fedavg(&self, n: usize) -> bool {
+        self.manifest.has_fedavg(n)
+    }
+
+    /// The full aggregation dispatch shared by the DeFL node and the
+    /// baselines: the AOT Multi-Krum artifact when exported for (n, f)
+    /// — falling back to the native engine if execution fails — the
+    /// native Gram Multi-Krum otherwise, and weighted FedAvg when n is
+    /// too small for Krum at the given f. `f` is clamped to n − 3 so a
+    /// thinned row set degrades instead of erroring.
+    pub fn aggregate_robust(
+        &self,
+        f: usize,
+        rows: &[impl AsRef<[f32]> + Sync],
+        sample_weights: &[f32],
+    ) -> Result<(Vec<f32>, AggPath)> {
+        let n = rows.len();
+        if n == 0 {
+            bail!("aggregate: no rows");
+        }
+        let f = f.min(n.saturating_sub(3));
+        if f >= 1 {
+            if self.has_krum(n, f) {
+                match self.krum(f, rows, sample_weights) {
+                    Ok(out) => return Ok((out.aggregate, AggPath::Artifact)),
+                    Err(e) => {
+                        log::warn!("krum artifact failed, using native engine: {e:#}")
+                    }
+                }
+            }
+            let out = crate::krum::multi_krum(rows, sample_weights, f, n - f)?;
+            Ok((out.aggregate, AggPath::Native))
+        } else {
+            Ok((crate::krum::fedavg(rows, sample_weights)?, AggPath::Native))
+        }
+    }
+
+    /// FedAvg through the artifact when exported for this n (falling back
+    /// to native on execution failure), the native fused pass otherwise.
+    pub fn fedavg_auto(
+        &self,
+        rows: &[impl AsRef<[f32]> + Sync],
+        sample_weights: &[f32],
+    ) -> Result<(Vec<f32>, AggPath)> {
+        let n = rows.len();
+        if n == 0 {
+            bail!("fedavg: no rows");
+        }
+        if self.has_fedavg(n) && rows[0].as_ref().len() == self.meta.dim {
+            match self.fedavg(rows, sample_weights) {
+                Ok(out) => return Ok((out, AggPath::Artifact)),
+                Err(e) => log::warn!("fedavg artifact failed, using native: {e:#}"),
+            }
+        }
+        Ok((crate::krum::fedavg(rows, sample_weights)?, AggPath::Native))
     }
 }
 

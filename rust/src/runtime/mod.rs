@@ -9,4 +9,4 @@
 
 mod engine;
 
-pub use engine::{stack_rows, Batch, Engine, KrumResult, TrainOutput};
+pub use engine::{stack_rows, AggPath, Batch, Engine, KrumResult, TrainOutput};

@@ -24,6 +24,18 @@ impl Stats {
     pub fn mean_ms(&self) -> f64 {
         self.mean.as_secs_f64() * 1e3
     }
+
+    pub fn mean_ns(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e9
+    }
+
+    pub fn p50_ns(&self) -> f64 {
+        self.p50.as_secs_f64() * 1e9
+    }
+
+    pub fn p95_ns(&self) -> f64 {
+        self.p95.as_secs_f64() * 1e9
+    }
 }
 
 impl std::fmt::Display for Stats {
@@ -133,6 +145,69 @@ impl Table {
     }
 }
 
+/// Machine-readable bench report, written as `BENCH_<name>.json` so the
+/// perf trajectory of a hot path is recorded run over run (and uploaded
+/// as a CI artifact). serde is unavailable offline, so the (flat, fully
+/// controlled) schema is serialized by hand:
+///
+/// ```json
+/// {"bench": "...", "entries": [
+///   {"name": "...", "params": {"n": 32, "d": 1048576},
+///    "ns_per_op": 1.0, "p50_ns": 1.0, "p95_ns": 1.0, "iters": 30}]}
+/// ```
+pub struct BenchReport {
+    bench: String,
+    entries: Vec<String>,
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+impl BenchReport {
+    pub fn new(bench: &str) -> BenchReport {
+        BenchReport { bench: bench.to_string(), entries: Vec::new() }
+    }
+
+    /// Record one case with its parameter axes (e.g. `[("n", 32.0)]`).
+    pub fn record(&mut self, stats: &Stats, params: &[(&str, f64)]) {
+        let params_json: Vec<String> = params
+            .iter()
+            .map(|(k, v)| format!("\"{}\": {}", json_escape(k), v))
+            .collect();
+        self.entries.push(format!(
+            "{{\"name\": \"{}\", \"params\": {{{}}}, \"ns_per_op\": {:.1}, \
+             \"p50_ns\": {:.1}, \"p95_ns\": {:.1}, \"iters\": {}}}",
+            json_escape(&stats.name),
+            params_json.join(", "),
+            stats.mean_ns(),
+            stats.p50_ns(),
+            stats.p95_ns(),
+            stats.iters
+        ));
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\n  \"bench\": \"{}\",\n  \"entries\": [\n    {}\n  ]\n}}\n",
+            json_escape(&self.bench),
+            self.entries.join(",\n    ")
+        )
+    }
+
+    pub fn write(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
 /// Format bytes human-readably (figures report GB/MB).
 pub fn fmt_bytes(b: u64) -> String {
     const KB: f64 = 1024.0;
@@ -175,6 +250,46 @@ mod tests {
     fn table_rejects_bad_row() {
         let mut t = Table::new("t", &["a", "b"]);
         t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn bench_report_serializes_valid_flat_json() {
+        let s = bench("case \"a\"", 0, 5, || {
+            std::hint::black_box(2 + 2);
+        });
+        let mut r = BenchReport::new("micro_test");
+        assert!(r.is_empty());
+        r.record(&s, &[("n", 32.0), ("d", 1048576.0)]);
+        assert_eq!(r.len(), 1);
+        let json = r.to_json();
+        assert!(json.contains("\"bench\": \"micro_test\""));
+        assert!(json.contains("\"name\": \"case \\\"a\\\"\""), "escaping: {json}");
+        assert!(json.contains("\"n\": 32"));
+        assert!(json.contains("\"d\": 1048576"));
+        assert!(json.contains("\"ns_per_op\": "));
+        assert!(json.contains("\"iters\": 5"));
+        // Balanced braces/brackets (cheap well-formedness check).
+        for (open, close) in [('{', '}'), ('[', ']')] {
+            assert_eq!(
+                json.matches(open).count(),
+                json.matches(close).count(),
+                "unbalanced {open}{close}"
+            );
+        }
+    }
+
+    #[test]
+    fn bench_report_writes_to_disk() {
+        let s = bench("w", 0, 2, || {
+            std::hint::black_box(1);
+        });
+        let mut r = BenchReport::new("roundtrip");
+        r.record(&s, &[("n", 4.0)]);
+        let path = std::env::temp_dir().join("defl_bench_report_test.json");
+        r.write(&path).unwrap();
+        let back = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(back, r.to_json());
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

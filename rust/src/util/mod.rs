@@ -8,6 +8,7 @@ pub mod codec;
 pub mod logging;
 pub mod prop;
 pub mod rng;
+pub mod workers;
 
 pub use codec::{Decode, Encode};
 pub use rng::Pcg;

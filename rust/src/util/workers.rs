@@ -1,0 +1,269 @@
+//! Persistent worker pool for the aggregation hot paths.
+//!
+//! PR 1 parallelized the Krum distance matrix with per-call
+//! `std::thread::scope` spawns — a thread create/destroy storm at one
+//! aggregation per round per node. This pool spawns its threads once,
+//! lazily, on first use ([`global`]); every later scoped fan-out
+//! ([`WorkerPool::scope`]) is a channel send plus one condvar wait, and
+//! the threads stay warm (stacks, TLS, scheduler affinity) across calls.
+//!
+//! Sizing: `DEFL_WORKERS` overrides; the default is
+//! `available_parallelism()` clamped to [1, 16] (aggregations are
+//! serialized per process, so the pool can own the machine while active).
+//!
+//! `scope` keeps the crossbeam-style soundness contract: borrowed jobs
+//! are lifetime-erased to cross the channel, and the call BLOCKS until
+//! every job has finished (panics included) before returning, so no
+//! borrow outlives the scope. A panicking job poisons the scope and
+//! re-panics on the caller. Jobs must not call `scope` themselves: a
+//! nested scope could wait on queue slots its own jobs occupy.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// A unit of work that may borrow from the submitting stack frame (the
+/// borrow is erased inside [`WorkerPool::scope`], which outlives it).
+pub type ScopedJob<'scope> = Box<dyn FnOnce() + Send + 'scope>;
+
+/// A lifetime-erased job as it travels through the channel.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Completion latch one `scope` call waits on.
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+/// A fixed set of process-lifetime worker threads fed from one queue.
+pub struct WorkerPool {
+    /// Guarded so the pool is `Sync` on toolchains where `Sender` is not.
+    tx: Mutex<Sender<Job>>,
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `workers` threads. Threads live for the process
+    /// (the global pool is never dropped); each blocks on the shared
+    /// queue when idle.
+    pub fn new(workers: usize) -> WorkerPool {
+        let workers = workers.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        for i in 0..workers {
+            let rx = Arc::clone(&rx);
+            std::thread::Builder::new()
+                .name(format!("defl-worker-{i}"))
+                .spawn(move || loop {
+                    // Hold the queue lock only for the dequeue itself.
+                    let job = match rx.lock() {
+                        Ok(guard) => guard.recv(),
+                        Err(_) => return,
+                    };
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => return, // pool dropped, queue drained
+                    }
+                })
+                .expect("spawn defl worker thread");
+        }
+        WorkerPool { tx: Mutex::new(tx), workers }
+    }
+
+    /// Number of threads in the pool (callers size their fan-out to it).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `jobs` on the pool, blocking until every one has completed.
+    ///
+    /// Jobs may borrow from the caller's stack: the wait below guarantees
+    /// each job has run to completion before any borrow expires.
+    pub fn scope<'scope>(&self, jobs: Vec<ScopedJob<'scope>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        let latch = Arc::new(Latch {
+            remaining: Mutex::new(jobs.len()),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        {
+            let tx = self.tx.lock().unwrap();
+            for job in jobs {
+                // SAFETY: the transmute only erases the `'scope` borrow
+                // lifetime from the closure type so it can cross the
+                // channel. The latch wait below does not return until the
+                // job has run (the decrement happens after the job body,
+                // panic included), so the closure never outlives the data
+                // it borrows.
+                let job: Job = unsafe {
+                    std::mem::transmute::<ScopedJob<'scope>, ScopedJob<'static>>(job)
+                };
+                let latch = Arc::clone(&latch);
+                tx.send(Box::new(move || {
+                    if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                        latch.panicked.store(true, Ordering::Relaxed);
+                    }
+                    let mut rem = latch.remaining.lock().unwrap();
+                    *rem -= 1;
+                    if *rem == 0 {
+                        latch.done.notify_all();
+                    }
+                }))
+                .expect("worker pool queue closed");
+            }
+        }
+        let mut rem = latch.remaining.lock().unwrap();
+        while *rem > 0 {
+            rem = latch.done.wait(rem).unwrap();
+        }
+        drop(rem);
+        if latch.panicked.load(Ordering::Relaxed) {
+            panic!("worker pool job panicked");
+        }
+    }
+}
+
+/// Split `out` into at most `pieces` contiguous chunks and run
+/// `f(chunk_offset, chunk)` for each on the pool. With one piece (or an
+/// empty slice) `f` runs inline — identical observable behaviour, no
+/// queue round-trip.
+pub fn for_each_chunk_mut<T, F>(pool: &WorkerPool, out: &mut [T], pieces: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let len = out.len();
+    let pieces = pieces.clamp(1, len.max(1));
+    if pieces <= 1 || len == 0 {
+        f(0, out);
+        return;
+    }
+    let chunk = len.div_ceil(pieces);
+    let f = &f;
+    let jobs: Vec<ScopedJob<'_>> = out
+        .chunks_mut(chunk)
+        .enumerate()
+        .map(|(k, c)| {
+            let job: ScopedJob<'_> = Box::new(move || f(k * chunk, c));
+            job
+        })
+        .collect();
+    pool.scope(jobs);
+}
+
+static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+
+/// The process-wide pool, spawned on first use and alive until exit.
+pub fn global() -> &'static WorkerPool {
+    GLOBAL.get_or_init(|| WorkerPool::new(default_workers()))
+}
+
+fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("DEFL_WORKERS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.clamp(1, 64);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|t| t.get())
+        .unwrap_or(1)
+        .clamp(1, 16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn scope_runs_every_job_before_returning() {
+        let pool = WorkerPool::new(4);
+        let mut out = vec![0u64; 64];
+        {
+            let jobs: Vec<ScopedJob<'_>> = out
+                .chunks_mut(8)
+                .enumerate()
+                .map(|(k, c)| {
+                    let job: ScopedJob<'_> = Box::new(move || {
+                        for (i, x) in c.iter_mut().enumerate() {
+                            *x = (k * 8 + i) as u64;
+                        }
+                    });
+                    job
+                })
+                .collect();
+            pool.scope(jobs);
+        }
+        // Returning from scope proves completion; values prove coverage.
+        for (i, x) in out.iter().enumerate() {
+            assert_eq!(*x, i as u64);
+        }
+    }
+
+    #[test]
+    fn pool_is_reused_across_scopes() {
+        let pool = WorkerPool::new(2);
+        let hits = AtomicUsize::new(0);
+        for _ in 0..10 {
+            let jobs: Vec<ScopedJob<'_>> = (0..4)
+                .map(|_| {
+                    let job: ScopedJob<'_> = Box::new(|| {
+                        hits.fetch_add(1, Ordering::Relaxed);
+                    });
+                    job
+                })
+                .collect();
+            pool.scope(jobs);
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 40);
+    }
+
+    #[test]
+    fn empty_scope_is_a_noop() {
+        let pool = WorkerPool::new(1);
+        pool.scope(Vec::new());
+    }
+
+    #[test]
+    #[should_panic(expected = "worker pool job panicked")]
+    fn job_panic_propagates_to_caller() {
+        let pool = WorkerPool::new(2);
+        let ok: ScopedJob<'static> = Box::new(|| {});
+        let bad: ScopedJob<'static> = Box::new(|| panic!("inner"));
+        pool.scope(vec![ok, bad]);
+    }
+
+    #[test]
+    fn for_each_chunk_mut_covers_the_slice_with_offsets() {
+        let pool = WorkerPool::new(3);
+        let mut data = vec![0usize; 23];
+        for_each_chunk_mut(&pool, &mut data, 4, |off, chunk| {
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = off + i;
+            }
+        });
+        for (i, x) in data.iter().enumerate() {
+            assert_eq!(*x, i);
+        }
+        // Single-piece path runs inline and still covers everything.
+        let mut one = vec![0usize; 5];
+        for_each_chunk_mut(&pool, &mut one, 1, |off, chunk| {
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = off + i + 100;
+            }
+        });
+        assert_eq!(one, vec![100, 101, 102, 103, 104]);
+    }
+
+    #[test]
+    fn global_pool_initializes_once() {
+        let a = global() as *const WorkerPool;
+        let b = global() as *const WorkerPool;
+        assert_eq!(a, b);
+        assert!(global().workers() >= 1);
+    }
+}
