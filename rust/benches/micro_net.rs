@@ -1,0 +1,182 @@
+//! L3 network-overhead bench: consensus bytes/messages per round with
+//! view-batched vs legacy per-tx payloads at n ∈ {8, 16, 32}, and
+//! weight-multicast bytes for chunked vs monolithic blobs at several
+//! model sizes — all on `LiteNode` clusters (no ML artifacts needed), so
+//! the numbers isolate the wire protocol.
+//!
+//! Emits `BENCH_net.json` at the repo root (the machine-readable
+//! network-overhead trajectory CI uploads), and HARD-FAILS if batched
+//! consensus traffic is not strictly below unbatched at every n — the
+//! overhead reduction is an acceptance criterion, not a nice-to-have.
+mod common;
+
+use defl::crypto::NodeId;
+use defl::defl::lite::{lite_cluster, LiteConfig, LiteNode};
+use defl::metrics::Traffic;
+use defl::net::sim::{SimConfig, SimNet};
+use defl::util::bench::{fmt_bytes, BenchReport, Table};
+
+struct NetRun {
+    rounds: u64,
+    consensus_bytes: u64,
+    consensus_msgs: u64,
+    weights_bytes: u64,
+    weights_msgs: u64,
+    sim_us: u64,
+    digests: Vec<defl::crypto::Digest>,
+}
+
+fn run_cluster(cfg: &LiteConfig, seed: u64) -> NetRun {
+    let sim = SimConfig {
+        n_nodes: cfg.n_nodes,
+        latency_us: 200,
+        jitter_us: 50,
+        drop_prob: 0.0,
+        seed,
+    };
+    let mut net = SimNet::new(sim, lite_cluster(cfg));
+    let mut t = 0u64;
+    loop {
+        t += 500_000;
+        net.run_until(t, u64::MAX);
+        let all_done = (0..cfg.n_nodes as NodeId)
+            .all(|i| net.actor_as::<LiteNode>(i).map(|a| a.done).unwrap_or(false));
+        if all_done {
+            break;
+        }
+        assert!(t < 300_000_000, "cluster n={} failed to finish", cfg.n_nodes);
+    }
+    let digests = (0..cfg.n_nodes as NodeId)
+        .map(|i| {
+            net.actor_as::<LiteNode>(i)
+                .unwrap()
+                .final_digest
+                .expect("final digest")
+        })
+        .collect();
+    NetRun {
+        rounds: cfg.rounds,
+        consensus_bytes: net.meter.sent_class(Traffic::Consensus),
+        consensus_msgs: net.meter.msgs_class(Traffic::Consensus),
+        weights_bytes: net.meter.sent_class(Traffic::Weights),
+        weights_msgs: net.meter.msgs_class(Traffic::Weights),
+        sim_us: net.now_us(),
+        digests,
+    }
+}
+
+fn main() {
+    common::bench_scale();
+    let mut report = BenchReport::new("micro_net");
+    let mut failures = Vec::new();
+
+    // ---- consensus: view-batched vs per-tx gossip ----
+    let mut table = Table::new(
+        "Consensus overhead per round (UPD/AGG payload path)",
+        &["n", "mode", "bytes/round", "msgs/round", "sim time"],
+    );
+    for n in [8usize, 16, 32] {
+        let mk = |batch: bool| LiteConfig {
+            n_nodes: n,
+            rounds: 3,
+            dim: 64,
+            seed: 11,
+            gst_us: 300_000,
+            chunk_bytes: 0,
+            batch_consensus: batch,
+            timeout_base_us: 200_000,
+        };
+        let batched = run_cluster(&mk(true), 21);
+        let unbatched = run_cluster(&mk(false), 21);
+        for (mode, r) in [("batched", &batched), ("unbatched", &unbatched)] {
+            let bpr = r.consensus_bytes as f64 / r.rounds as f64;
+            let mpr = r.consensus_msgs as f64 / r.rounds as f64;
+            table.row(&[
+                n.to_string(),
+                mode.into(),
+                fmt_bytes(bpr as u64),
+                format!("{mpr:.0}"),
+                format!("{:.2}s", r.sim_us as f64 / 1e6),
+            ]);
+            report.record_metrics(
+                &format!("consensus/{mode}"),
+                &[("n", n as f64)],
+                &[
+                    ("bytes_per_round", bpr),
+                    ("msgs_per_round", mpr),
+                    ("rounds", r.rounds as f64),
+                ],
+            );
+        }
+        if batched.consensus_bytes >= unbatched.consensus_bytes {
+            failures.push(format!(
+                "n={n}: batched consensus bytes {} NOT below unbatched {}",
+                batched.consensus_bytes, unbatched.consensus_bytes
+            ));
+        }
+        if batched.digests != unbatched.digests {
+            failures.push(format!("n={n}: batching changed the final model"));
+        }
+    }
+    table.print();
+
+    // ---- storage layer: chunked vs monolithic multicast ----
+    let mut table = Table::new(
+        "Weight multicast per round (chunked vs monolithic)",
+        &["dim", "chunk", "bytes/round", "msgs/round"],
+    );
+    for dim in [1usize << 12, 1 << 14, 1 << 16] {
+        let image = dim * 4;
+        let mut mono_digests: Option<Vec<defl::crypto::Digest>> = None;
+        // Budgets strictly below the image so every "chunked" row really
+        // splits (8 and 2 chunks per blob respectively).
+        for (label, chunk) in [("mono", 0usize), ("chunk_eighth", image / 8), ("chunk_half", image / 2)] {
+            let cfg = LiteConfig {
+                n_nodes: 4,
+                rounds: 3,
+                dim,
+                seed: 13,
+                gst_us: 300_000,
+                chunk_bytes: chunk,
+                batch_consensus: true,
+                timeout_base_us: 200_000,
+            };
+            let r = run_cluster(&cfg, 33);
+            let bpr = r.weights_bytes as f64 / r.rounds as f64;
+            let mpr = r.weights_msgs as f64 / r.rounds as f64;
+            table.row(&[
+                dim.to_string(),
+                label.into(),
+                fmt_bytes(bpr as u64),
+                format!("{mpr:.0}"),
+            ]);
+            report.record_metrics(
+                &format!("weights/{label}"),
+                &[("n", 4.0), ("dim", dim as f64), ("chunk_bytes", chunk as f64)],
+                &[("bytes_per_round", bpr), ("msgs_per_round", mpr)],
+            );
+            match &mono_digests {
+                None => mono_digests = Some(r.digests),
+                Some(reference) => {
+                    if &r.digests != reference {
+                        failures.push(format!(
+                            "dim={dim} chunk={chunk}: chunked run diverged from monolithic"
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    table.print();
+
+    let path = common::bench_report_path("BENCH_net.json");
+    report.write(&path).expect("write BENCH_net.json");
+    println!("wrote {} ({} entries)", path.display(), report.len());
+
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("FAIL: {f}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -193,6 +193,14 @@ pub struct ExperimentConfig {
     pub link_latency_us: u64,
     /// GST_LT: local-training stabilization budget in simulated ms.
     pub gst_lt_ms: u64,
+    /// Weight-blob multicast chunk budget in bytes: a blob whose wire
+    /// image exceeds this is streamed as chunks and reassembled (and
+    /// digest-verified) receiver-side. 0 disables chunking.
+    pub chunk_bytes: usize,
+    /// View-batched consensus payloads (`SubmitBatch` to the leader +
+    /// pending txs piggybacked on `NewView`) instead of per-tx gossip
+    /// broadcasts. Off = the legacy path, kept for overhead comparisons.
+    pub batch_consensus: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -213,6 +221,8 @@ impl Default for ExperimentConfig {
             seed: 42,
             link_latency_us: 200,
             gst_lt_ms: 2_000,
+            chunk_bytes: 256 * 1024,
+            batch_consensus: true,
         }
     }
 }

@@ -1,0 +1,339 @@
+//! Engine-free DeFL protocol node: the full coordination stack —
+//! HotStuff consensus (view-batched payloads), the Algorithm-2 replica
+//! state machine, the digest-addressed weight pool, and (chunked) blob
+//! multicast — with local training replaced by a deterministic synthetic
+//! update.
+//!
+//! This is the network-layer testbench: it runs everywhere the real
+//! [`super::DeflNode`] runs (the [`crate::net::sim::SimNet`] simulator
+//! and the [`crate::net::tcp::run_actor`] TCP host) but needs no PJRT
+//! artifacts, no datasets, and no `Engine`, so fault-injection tests and
+//! the network-overhead benches exercise the exact consensus + storage
+//! wire paths in CI where the ML artifacts are not built.
+//!
+//! Determinism: the synthetic update for (node, round) is a pure function
+//! of the seed, so two runs over the same transport schedule produce
+//! bit-identical tensors and digests — which is what lets the
+//! fault-injection suite and the sim-vs-TCP parity test compare final
+//! model digests.
+
+use std::any::Any;
+
+use crate::crypto::{Digest, KeyRegistry, NodeId};
+use crate::hotstuff::{Action, ByzMode, HotStuff, HsConfig, Msg};
+use crate::krum;
+use crate::mempool::{ChunkAssembler, WeightPool};
+use crate::metrics::Traffic;
+use crate::net::transport::{Actor, Ctx};
+use crate::util::{Decode, Encode, Pcg};
+use crate::weights::Weights;
+
+use super::replica::{execute_decided_cmds, ReplicaState};
+use super::tx::{multicast_blob, receive_weight_frame, Tx, WeightBlob};
+
+/// Timer namespaces (match `DeflNode`).
+const TIMER_HS: u64 = 1 << 62;
+const TIMER_GST: u64 = 1 << 61;
+
+/// Knobs for a [`LiteNode`] cluster.
+#[derive(Debug, Clone)]
+pub struct LiteConfig {
+    pub n_nodes: usize,
+    /// Training rounds to run before a node reports `done`.
+    pub rounds: u64,
+    /// Synthetic model dimension (f32 elements per blob).
+    pub dim: usize,
+    pub seed: u64,
+    /// GST_LT analogue: delay between a node's UPD and its AGG (µs).
+    pub gst_us: u64,
+    /// Blob multicast chunk budget in bytes (0 = monolithic frames).
+    pub chunk_bytes: usize,
+    /// View-batched consensus payloads (off = legacy per-tx gossip).
+    pub batch_consensus: bool,
+    /// HotStuff base view timeout (µs).
+    pub timeout_base_us: u64,
+}
+
+impl Default for LiteConfig {
+    fn default() -> Self {
+        LiteConfig {
+            n_nodes: 4,
+            rounds: 3,
+            dim: 256,
+            seed: 7,
+            gst_us: 100_000,
+            chunk_bytes: 0,
+            batch_consensus: true,
+            timeout_base_us: 100_000,
+        }
+    }
+}
+
+/// The protocol node. Public state (`done`, `rounds_done`,
+/// `final_digest`, `replica`) is what tests and benches extract.
+pub struct LiteNode {
+    pub id: NodeId,
+    cfg: LiteConfig,
+    hs: HotStuff,
+    pub replica: ReplicaState,
+    pool: WeightPool,
+    chunks: ChunkAssembler,
+    theta: Weights,
+    /// Highest round whose own UPD executed Ok (duplicate-decision guard).
+    l_round: u64,
+    round_in_flight: Option<u64>,
+    pub done: bool,
+    pub rounds_done: u64,
+    /// Digest of the final aggregate (the cross-transport parity probe).
+    pub final_digest: Option<Digest>,
+}
+
+impl LiteNode {
+    pub fn new(id: NodeId, cfg: LiteConfig, registry: KeyRegistry) -> LiteNode {
+        let hs_cfg = HsConfig {
+            propose_empty: false,
+            timeout_base_us: cfg.timeout_base_us,
+            batch_submit: cfg.batch_consensus,
+            ..Default::default()
+        };
+        // AGG quorum f_tol + 1: small enough that a partitioned minority
+        // cannot stall rounds, large enough that it cannot advance them.
+        let agg_quorum = (cfg.n_nodes - 1) / 3 + 1;
+        LiteNode {
+            id,
+            hs: HotStuff::new(id, cfg.n_nodes, registry, hs_cfg, ByzMode::Honest),
+            replica: ReplicaState::new(cfg.n_nodes, agg_quorum),
+            pool: WeightPool::new(2),
+            chunks: ChunkAssembler::new(1 << 28),
+            theta: Weights::new(vec![0.0f32; cfg.dim]),
+            l_round: 0,
+            round_in_flight: None,
+            done: false,
+            rounds_done: 0,
+            final_digest: None,
+            cfg,
+        }
+    }
+
+    pub fn pool(&self) -> &WeightPool {
+        &self.pool
+    }
+
+    pub fn hotstuff(&self) -> &HotStuff {
+        &self.hs
+    }
+
+    fn apply_actions(&mut self, ctx: &mut dyn Ctx, actions: Vec<Action>) {
+        for act in actions {
+            match act {
+                Action::Send { to, msg } => ctx.send(to, Traffic::Consensus, msg.to_bytes()),
+                Action::Broadcast { msg } => ctx.broadcast(Traffic::Consensus, msg.to_bytes()),
+                Action::SetTimer { delay_us, epoch } => ctx.set_timer(delay_us, TIMER_HS | epoch),
+                Action::Deliver { cmds, .. } => {
+                    let exec = execute_decided_cmds(
+                        &mut self.replica,
+                        self.id,
+                        &mut self.l_round,
+                        &mut self.round_in_flight,
+                        &cmds,
+                    );
+                    if exec.advanced {
+                        self.pool.gc(self.replica.r_round);
+                        self.chunks.gc(self.replica.r_round.saturating_sub(1));
+                    }
+                }
+            }
+        }
+    }
+
+    /// FedAvg over whatever W^LAST blobs the pool holds (a lost blob just
+    /// drops a row, like `DeflNode::aggregate_last`).
+    fn aggregate_last(&self) -> Vec<f32> {
+        let digs = self.replica.last_round_digests();
+        let rows: Vec<Weights> = digs
+            .iter()
+            .filter_map(|(_, d)| self.pool.get(d).ok())
+            .filter(|w| w.len() == self.cfg.dim)
+            .collect();
+        if rows.is_empty() {
+            return self.theta.to_vec();
+        }
+        let sw = vec![1.0f32; rows.len()];
+        krum::fedavg(&rows, &sw).unwrap_or_else(|_| self.theta.to_vec())
+    }
+
+    /// Deterministic synthetic "training": a decayed aggregate plus a
+    /// per-(seed, node, round) pseudo-gradient.
+    fn local_update(&self, agg: Vec<f32>, round: u64) -> Weights {
+        let mut rng = Pcg::new(self.cfg.seed ^ 0x117e, ((self.id as u64) << 32) | round);
+        let mut w = agg;
+        for x in w.iter_mut() {
+            *x = 0.9 * *x + rng.normal_f32(0.0, 0.1);
+        }
+        Weights::new(w)
+    }
+
+    fn try_start_round(&mut self, ctx: &mut dyn Ctx) {
+        if self.done {
+            return;
+        }
+        if self.replica.r_round >= self.cfg.rounds {
+            self.finish();
+            return;
+        }
+        let target = self.replica.r_round + 1;
+        if self.round_in_flight == Some(target) {
+            return;
+        }
+        self.round_in_flight = Some(target);
+
+        let agg = self.aggregate_last();
+        self.theta = self.local_update(agg, target);
+
+        // Storage layer first (one shared tensor), then the UPD digest
+        // through consensus, then AGG after the GST_LT analogue.
+        let digest = self.theta.digest();
+        let blob = WeightBlob { node: self.id, round: target, weights: self.theta.clone() };
+        self.pool.put(target, self.theta.clone());
+        multicast_blob(ctx, &blob, self.cfg.chunk_bytes);
+
+        let upd = Tx::Upd { id: self.id, target_round: target, digest };
+        let mut out = Vec::new();
+        self.hs.submit_and_gossip(upd.to_bytes(), &mut out);
+        ctx.set_timer(self.cfg.gst_us, TIMER_GST | target);
+        self.apply_actions(ctx, out);
+    }
+
+    fn finish(&mut self) {
+        if self.done {
+            return;
+        }
+        self.done = true;
+        self.rounds_done = self.replica.r_round;
+        self.final_digest = Some(Weights::new(self.aggregate_last()).digest());
+    }
+}
+
+impl Actor for LiteNode {
+    fn on_start(&mut self, ctx: &mut dyn Ctx) {
+        let mut out = Vec::new();
+        self.hs.start(&mut out);
+        self.apply_actions(ctx, out);
+        self.try_start_round(ctx);
+    }
+
+    fn on_message(&mut self, ctx: &mut dyn Ctx, from: NodeId, class: Traffic, bytes: &[u8]) {
+        match class {
+            Traffic::Weights => {
+                if let Err(e) = receive_weight_frame(
+                    &mut self.pool,
+                    &mut self.chunks,
+                    self.replica.r_round,
+                    from,
+                    bytes,
+                ) {
+                    log::debug!("lite n{}: weight frame rejected: {e:#}", self.id);
+                }
+            }
+            Traffic::Consensus => {
+                if let Ok(msg) = Msg::from_bytes(bytes) {
+                    let mut out = Vec::new();
+                    let _ = self.hs.on_message(from, msg, &mut out);
+                    self.apply_actions(ctx, out);
+                    self.try_start_round(ctx);
+                }
+            }
+            Traffic::Blocks => {}
+        }
+    }
+
+    fn on_timer(&mut self, ctx: &mut dyn Ctx, id: u64) {
+        if id & TIMER_HS != 0 {
+            let mut out = Vec::new();
+            self.hs.on_timeout(id & !TIMER_HS, &mut out);
+            self.apply_actions(ctx, out);
+            self.try_start_round(ctx);
+        } else if id & TIMER_GST != 0 {
+            if self.done {
+                return;
+            }
+            let target = id & !TIMER_GST;
+            let agg_tx = Tx::Agg { id: self.id, target_round: target };
+            let mut out = Vec::new();
+            self.hs.submit_and_gossip(agg_tx.to_bytes(), &mut out);
+            self.apply_actions(ctx, out);
+            self.try_start_round(ctx);
+        }
+    }
+
+    fn as_any(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+/// Build a whole LiteNode cluster sharing one key registry, boxed for a
+/// transport host.
+pub fn lite_cluster(cfg: &LiteConfig) -> Vec<Box<dyn Actor>> {
+    let registry = KeyRegistry::new(cfg.n_nodes, cfg.seed);
+    (0..cfg.n_nodes as NodeId)
+        .map(|id| Box::new(LiteNode::new(id, cfg.clone(), registry.clone())) as Box<dyn Actor>)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::sim::{SimConfig, SimNet};
+
+    fn drive(net: &mut SimNet, n: usize, deadline_us: u64) {
+        let mut t = 0u64;
+        while t < deadline_us {
+            t += 250_000;
+            net.run_until(t, u64::MAX);
+            let all = (0..n as NodeId)
+                .all(|i| net.actor_as::<LiteNode>(i).map(|a| a.done).unwrap_or(false));
+            if all {
+                return;
+            }
+        }
+    }
+
+    fn digests(net: &mut SimNet, n: usize) -> Vec<(u64, Digest)> {
+        (0..n as NodeId)
+            .map(|i| {
+                let a = net.actor_as::<LiteNode>(i).expect("lite node");
+                assert!(a.done, "node {i} not done");
+                (a.rounds_done, a.final_digest.expect("final digest"))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn cluster_completes_rounds_and_agrees() {
+        let cfg = LiteConfig { n_nodes: 4, rounds: 3, ..Default::default() };
+        let sim = SimConfig { n_nodes: 4, seed: 2, ..Default::default() };
+        let mut net = SimNet::new(sim, lite_cluster(&cfg));
+        drive(&mut net, 4, 60_000_000);
+        let ds = digests(&mut net, 4);
+        for (r, d) in &ds {
+            assert_eq!(*r, 3);
+            assert_eq!(*d, ds[0].1, "final models diverged");
+        }
+    }
+
+    #[test]
+    fn chunked_and_monolithic_runs_reach_the_same_model() {
+        let run = |chunk_bytes: usize| {
+            let cfg = LiteConfig { n_nodes: 4, rounds: 3, dim: 100, chunk_bytes, ..Default::default() };
+            let sim = SimConfig { n_nodes: 4, seed: 5, ..Default::default() };
+            let mut net = SimNet::new(sim, lite_cluster(&cfg));
+            drive(&mut net, 4, 60_000_000);
+            digests(&mut net, 4)
+        };
+        // 100 f32s = 400 bytes: whole-blob, mid, and 1-byte-ish chunking.
+        let mono = run(0);
+        for chunk in [400, 128, 32] {
+            assert_eq!(run(chunk), mono, "chunk size {chunk} changed the outcome");
+        }
+    }
+}

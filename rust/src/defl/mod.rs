@@ -4,10 +4,15 @@
 //! HotStuff-ordered UPD/AGG transactions over round_id, W^CUR, W^LAST),
 //! with weight blobs decoupled into the storage layer (§3.4).
 
+pub mod lite;
 pub mod node;
 pub mod replica;
 pub mod tx;
 
+pub use lite::{lite_cluster, LiteConfig, LiteNode};
 pub use node::{DeflNode, NodeStats};
-pub use replica::{ReplicaState, TxResponse};
-pub use tx::{Tx, WeightBlob};
+pub use replica::{execute_decided_cmds, ExecOutcome, ReplicaState, TxResponse};
+pub use tx::{
+    decode_cmd_txs, multicast_blob, receive_weight_frame, BlobChunk, Tx, TxBatch, WeightBlob,
+    WeightMsg,
+};

@@ -28,15 +28,21 @@ use crate::crypto::{Digest, NodeId};
 use crate::fl::data::{Dataset, Shard};
 use crate::fl::trainer::local_train;
 use crate::hotstuff::{Action, ByzMode, HotStuff, HsConfig};
-use crate::mempool::WeightPool;
+use crate::mempool::{ChunkAssembler, WeightPool};
 use crate::metrics::Traffic;
 use crate::net::transport::{Actor, Ctx};
 use crate::runtime::{AggPath, Engine};
 use crate::util::{Decode, Encode};
 use crate::weights::Weights;
 
-use super::replica::{ReplicaState, TxResponse};
-use super::tx::{Tx, WeightBlob};
+use super::replica::{execute_decided_cmds, ReplicaState};
+use super::tx::{multicast_blob, receive_weight_frame, Tx, TxBatch, WeightBlob};
+
+/// Per-sender memory budget for blobs mid-reassembly (far above any
+/// model herein; the budget only exists so a Byzantine sender cannot pin
+/// unbounded RAM, and it is per sender so flooding one budget never
+/// starves honest senders' chunks).
+const CHUNK_ASM_CAP: u64 = 256 << 20;
 
 /// Timer namespaces (HotStuff epochs vs client GST_LT deadlines).
 const TIMER_HS: u64 = 1 << 62;
@@ -68,6 +74,7 @@ pub struct DeflNode {
     hs: HotStuff,
     pub replica: ReplicaState,
     pool: WeightPool,
+    chunks: ChunkAssembler,
     atk_rng: crate::util::Pcg,
 
     l_round: u64,
@@ -104,6 +111,7 @@ impl DeflNode {
         let hs_cfg = HsConfig {
             propose_empty: false,
             timeout_base_us: 100_000,
+            batch_submit: cfg.batch_consensus,
             ..Default::default()
         };
         let n = cfg.n_nodes;
@@ -115,6 +123,7 @@ impl DeflNode {
             hs: HotStuff::new(id, n, registry, hs_cfg, ByzMode::Honest),
             replica: ReplicaState::new(n, agg_quorum),
             pool: WeightPool::new(cfg.tau),
+            chunks: ChunkAssembler::new(CHUNK_ASM_CAP),
             atk_rng,
             l_round: 0,
             theta: Weights::new(theta0),
@@ -142,42 +151,26 @@ impl DeflNode {
                 Action::SetTimer { delay_us, epoch } => ctx.set_timer(delay_us, TIMER_HS | epoch),
                 Action::Deliver { cmds, .. } => {
                     // Algorithm 2: execute the ordered transactions.
-                    let advanced = self.execute_cmds(&cmds);
-                    if advanced {
+                    let exec = execute_decided_cmds(
+                        &mut self.replica,
+                        self.id,
+                        &mut self.l_round,
+                        &mut self.round_in_flight,
+                        &cmds,
+                    );
+                    self.stats.upd_ok += exec.own_upd_ok;
+                    self.stats.upd_rejected += exec.own_upd_raced;
+                    if exec.advanced {
                         self.pool.gc(self.replica.r_round);
+                        // Same retention horizon for blobs mid-reassembly.
+                        self.chunks
+                            .gc(self.replica.r_round.saturating_sub(self.cfg.tau as u64 - 1));
                         self.stats.pool_bytes = self.pool.bytes();
                         self.stats.pool_peak_bytes = self.pool.peak_bytes();
                     }
                 }
             }
         }
-    }
-
-    /// Returns true if r_round advanced.
-    fn execute_cmds(&mut self, cmds: &[Vec<u8>]) -> bool {
-        let before = self.replica.r_round;
-        for raw in cmds {
-            let Ok(tx) = Tx::from_bytes(raw) else { continue };
-            let resp = self.replica.apply(&tx);
-            if let Tx::Upd { id, target_round, .. } = tx {
-                if id == self.id {
-                    match resp {
-                        TxResponse::Ok => {
-                            // Algorithm 1 line 7.
-                            self.l_round = target_round;
-                            self.stats.upd_ok += 1;
-                        }
-                        _ => {
-                            // Our UPD raced a round change: retrain at the
-                            // new round.
-                            self.stats.upd_rejected += 1;
-                            self.round_in_flight = None;
-                        }
-                    }
-                }
-            }
-        }
-        self.replica.r_round > before
     }
 
     /// Multi-Krum aggregation over W^LAST (Algorithm 1 line 3). Falls back
@@ -281,10 +274,12 @@ impl DeflNode {
 
         // Storage layer: ONE shared tensor backs the pool entry, the blob
         // multicast, and (via the cached digest) the UPD transaction.
+        // Blobs over the chunk budget stream out as chunks sliced from the
+        // tensor's zero-copy byte view.
         let digest = committed.digest();
         let blob = WeightBlob { node: self.id, round: target, weights: committed.clone() };
         self.pool.put(target, committed);
-        ctx.multicast(Traffic::Weights, blob.to_bytes());
+        multicast_blob(ctx, &blob, self.cfg.chunk_bytes);
 
         // UPD transaction through consensus (digest only).
         let tx_round = if self.is_byzantine && attacks::commits_stale_round(self.attack) {
@@ -294,13 +289,15 @@ impl DeflNode {
         };
         let upd = Tx::Upd { id: self.id, target_round: tx_round, digest };
         let mut out = Vec::new();
-        self.hs.submit_and_gossip(upd.to_bytes(), &mut out);
 
-        // AGG: immediately for the early-AGG attack, after GST_LT otherwise.
+        // AGG: immediately for the early-AGG attack (batched with the UPD
+        // into one command frame), after GST_LT otherwise.
         if self.is_byzantine && attacks::commits_early_agg(self.attack) {
             let agg_tx = Tx::Agg { id: self.id, target_round: target };
-            self.hs.submit_and_gossip(agg_tx.to_bytes(), &mut out);
+            let batch = TxBatch { txs: vec![upd, agg_tx] };
+            self.hs.submit_and_gossip(batch.to_bytes(), &mut out);
         } else {
+            self.hs.submit_and_gossip(upd.to_bytes(), &mut out);
             ctx.set_timer(self.cfg.gst_lt_ms * 1000, TIMER_GST | target);
         }
         self.apply_actions(ctx, out);
@@ -339,12 +336,17 @@ impl Actor for DeflNode {
 
     fn on_message(&mut self, ctx: &mut dyn Ctx, from: NodeId, class: Traffic, bytes: &[u8]) {
         match class {
-            Traffic::Weights => {
-                if let Ok(blob) = WeightBlob::from_bytes(bytes) {
-                    self.pool.put(blob.round, blob.weights);
-                    self.stats.pool_peak_bytes = self.pool.peak_bytes();
-                }
-            }
+            Traffic::Weights => match receive_weight_frame(
+                &mut self.pool,
+                &mut self.chunks,
+                self.replica.r_round,
+                from,
+                bytes,
+            ) {
+                Ok(true) => self.stats.pool_peak_bytes = self.pool.peak_bytes(),
+                Ok(false) => {}
+                Err(e) => log::debug!("n{}: weight frame rejected: {e:#}", self.id),
+            },
             Traffic::Consensus => {
                 if let Ok(msg) = crate::hotstuff::Msg::from_bytes(bytes) {
                     let mut out = Vec::new();

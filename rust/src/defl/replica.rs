@@ -10,7 +10,7 @@ use std::collections::BTreeSet;
 
 use crate::crypto::{Digest, NodeId};
 
-use super::tx::Tx;
+use super::tx::{decode_cmd_txs, Tx};
 
 /// Responses of Algorithm 2.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -102,6 +102,56 @@ impl ReplicaState {
     pub fn agg_votes(&self) -> usize {
         self.votes.len()
     }
+}
+
+/// Result of executing one decided command batch (the Algorithm-2
+/// driver shared by `DeflNode` and `LiteNode`).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ExecOutcome {
+    /// r_round advanced during this batch (run storage GC).
+    pub advanced: bool,
+    /// Own UPDs applied Ok.
+    pub own_upd_ok: u64,
+    /// Own UPDs rejected by a GENUINE round race (retrain required).
+    pub own_upd_raced: u64,
+}
+
+/// Execute a decided command batch (bare-`Tx` or `TxBatch` frames)
+/// against `replica`, maintaining the caller's client-side bookkeeping:
+/// `l_round` tracks the highest own UPD that executed Ok — so a
+/// duplicate decision of an already-applied UPD (possible across view
+/// changes, by design) is NOT mistaken for a round race — and
+/// `round_in_flight` is cleared exactly when an own UPD genuinely raced
+/// a round change and the client must retrain at the new round.
+pub fn execute_decided_cmds(
+    replica: &mut ReplicaState,
+    my_id: NodeId,
+    l_round: &mut u64,
+    round_in_flight: &mut Option<u64>,
+    cmds: &[Vec<u8>],
+) -> ExecOutcome {
+    let before = replica.r_round;
+    let mut out = ExecOutcome::default();
+    for raw in cmds {
+        let Ok(txs) = decode_cmd_txs(raw) else { continue };
+        for tx in txs {
+            let resp = replica.apply(&tx);
+            if let Tx::Upd { id, target_round, .. } = tx {
+                if id == my_id {
+                    if resp == TxResponse::Ok {
+                        // Algorithm 1 line 7.
+                        *l_round = (*l_round).max(target_round);
+                        out.own_upd_ok += 1;
+                    } else if *l_round < target_round {
+                        out.own_upd_raced += 1;
+                        *round_in_flight = None;
+                    }
+                }
+            }
+        }
+    }
+    out.advanced = replica.r_round > before;
+    out
 }
 
 #[cfg(test)]
@@ -205,6 +255,51 @@ mod tests {
             (r.r_round, r.w_cur.clone(), r.w_last.clone(), resp)
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn execute_decided_cmds_distinguishes_duplicates_from_races() {
+        use crate::util::Encode;
+        use super::super::tx::TxBatch;
+        let mut r = ReplicaState::new(4, 1);
+        let mut l_round = 0u64;
+        let mut in_flight = Some(1u64);
+        let upd = Tx::Upd { id: 2, target_round: 1, digest: d(1) }.to_bytes();
+        // First decision applies Ok and bumps l_round.
+        let out = execute_decided_cmds(&mut r, 2, &mut l_round, &mut in_flight, &[upd.clone()]);
+        assert_eq!(out.own_upd_ok, 1);
+        assert_eq!(l_round, 1);
+        assert_eq!(in_flight, Some(1));
+        assert!(!out.advanced);
+        // Round advances (AGG quorum 1 here).
+        let agg = Tx::Agg { id: 0, target_round: 1 }.to_bytes();
+        assert!(execute_decided_cmds(&mut r, 2, &mut l_round, &mut in_flight, &[agg]).advanced);
+        // A duplicate decision of the SAME UPD (possible across view
+        // changes) is rejected by the replica but is NOT a race: no
+        // retrain trigger.
+        let out = execute_decided_cmds(&mut r, 2, &mut l_round, &mut in_flight, &[upd]);
+        assert_eq!(out.own_upd_raced, 0);
+        assert_eq!(in_flight, Some(1));
+        // A genuinely raced UPD clears round_in_flight.
+        let raced = Tx::Upd { id: 2, target_round: 3, digest: d(2) }.to_bytes();
+        let out = execute_decided_cmds(&mut r, 2, &mut l_round, &mut in_flight, &[raced]);
+        assert_eq!(out.own_upd_raced, 1);
+        assert_eq!(in_flight, None);
+        // TxBatch frames execute atomically, in order.
+        let mut r2 = ReplicaState::new(4, 1);
+        let mut l2 = 0u64;
+        let mut f2 = None;
+        let batch = TxBatch {
+            txs: vec![
+                Tx::Upd { id: 0, target_round: 1, digest: d(3) },
+                Tx::Agg { id: 0, target_round: 1 },
+            ],
+        }
+        .to_bytes();
+        let out = execute_decided_cmds(&mut r2, 0, &mut l2, &mut f2, &[batch]);
+        assert!(out.advanced);
+        assert_eq!(out.own_upd_ok, 1);
+        assert_eq!(l2, 1);
     }
 
     #[test]

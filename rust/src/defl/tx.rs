@@ -1,16 +1,25 @@
 //! DeFL transactions and storage-layer messages.
 //!
 //! Consensus carries only fixed-size transactions — UPD with the weight
-//! *digest*, AGG with just a round number (§3.4 decoupling). The weight
-//! blobs travel on the storage layer as [`WeightBlob`] multicasts; the
-//! blob holds a shared [`Weights`] handle, so building one from the
-//! trainer output or pool entry never copies the tensor, and encoding
-//! it streams the tensor's zero-copy byte view straight into the frame.
+//! *digest*, AGG with just a round number (§3.4 decoupling). A command
+//! frame holds either one [`Tx`] or a [`TxBatch`] (several txs committed
+//! atomically in one frame); [`decode_cmd_txs`] accepts both.
+//!
+//! The weight blobs travel on the storage layer as [`WeightMsg`]
+//! multicasts: small blobs go whole ([`WeightMsg::Whole`]), large ones
+//! are split by [`multicast_blob`] into [`BlobChunk`]s over the tensor's
+//! zero-copy [`Weights::as_bytes`] view and reassembled (and digest-
+//! verified) by [`crate::mempool::ChunkAssembler`]. The blob holds a
+//! shared [`Weights`] handle, so building one from the trainer output or
+//! pool entry never copies the tensor, and encoding it streams the
+//! tensor's byte view straight into the frame.
 
 use anyhow::Result;
 
 use crate::crypto::{Digest, NodeId};
-use crate::util::codec::{Cursor, Decode, Encode};
+use crate::metrics::Traffic;
+use crate::net::transport::Ctx;
+use crate::util::codec::{decode_list, encode_list, Cursor, Decode, Encode};
 use crate::weights::Weights;
 
 /// A DeFL transaction ordered by HotStuff (Algorithm 1 commits these;
@@ -77,6 +86,63 @@ impl Decode for Tx {
     }
 }
 
+/// Command-frame tag distinguishing a [`TxBatch`] from a bare [`Tx`]
+/// (whose tags are 1 = UPD, 2 = AGG).
+const TAG_BATCH: u8 = 3;
+
+/// Several transactions committed atomically in ONE consensus command
+/// frame (one length prefix, one dedup digest) — e.g. a node's UPD and
+/// AGG for the same view. The frame is covered by the block digest like
+/// any other command.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TxBatch {
+    pub txs: Vec<Tx>,
+}
+
+impl TxBatch {
+    /// Content digest of the encoded batch (the consensus-layer dedup key).
+    pub fn digest(&self) -> Digest {
+        Digest::of_bytes(&self.to_bytes())
+    }
+
+    pub fn len(&self) -> usize {
+        self.txs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.txs.is_empty()
+    }
+}
+
+impl Encode for TxBatch {
+    fn encode(&self, out: &mut Vec<u8>) {
+        TAG_BATCH.encode(out);
+        encode_list(&self.txs, out);
+    }
+    fn encoded_len(&self) -> usize {
+        1 + 4 + self.txs.iter().map(|t| t.encoded_len()).sum::<usize>()
+    }
+}
+
+impl Decode for TxBatch {
+    fn decode(cur: &mut Cursor<'_>) -> Result<Self> {
+        let tag = u8::decode(cur)?;
+        if tag != TAG_BATCH {
+            anyhow::bail!("bad tx batch tag {tag}");
+        }
+        Ok(TxBatch { txs: decode_list(cur)? })
+    }
+}
+
+/// Decode one consensus command frame into its transactions: a bare
+/// [`Tx`] yields one, a [`TxBatch`] yields all of them in frame order.
+pub fn decode_cmd_txs(raw: &[u8]) -> Result<Vec<Tx>> {
+    match raw.first() {
+        Some(&TAG_BATCH) => Ok(TxBatch::from_bytes(raw)?.txs),
+        _ => Ok(vec![Tx::from_bytes(raw)?]),
+    }
+}
+
 /// Storage-layer blob: the weights behind an UPD digest. Cloning a blob
 /// (gossip forwarding, block assembly) shares the tensor.
 #[derive(Debug, Clone, PartialEq)]
@@ -112,6 +178,156 @@ impl Decode for WeightBlob {
             round: u64::decode(cur)?,
             weights: Weights::decode(cur)?,
         })
+    }
+}
+
+/// One chunk of a large blob's wire image. The digest is the content
+/// digest of the COMPLETE tensor: it keys reassembly and is verified
+/// against the rebuilt tensor, so a corrupted or adversarial chunk can
+/// never produce a wrong blob — at worst a dropped one.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlobChunk {
+    pub node: NodeId,
+    pub round: u64,
+    pub digest: Digest,
+    /// Total wire bytes of the tensor image (elements × 4).
+    pub total_bytes: u32,
+    /// Byte offset of `payload` within the tensor image.
+    pub offset: u32,
+    pub payload: Vec<u8>,
+}
+
+impl Encode for BlobChunk {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.node.encode(out);
+        self.round.encode(out);
+        self.digest.encode(out);
+        self.total_bytes.encode(out);
+        self.offset.encode(out);
+        self.payload.encode(out);
+    }
+    fn encoded_len(&self) -> usize {
+        4 + 8 + 32 + 4 + 4 + self.payload.encoded_len()
+    }
+}
+
+impl Decode for BlobChunk {
+    fn decode(cur: &mut Cursor<'_>) -> Result<Self> {
+        Ok(BlobChunk {
+            node: NodeId::decode(cur)?,
+            round: u64::decode(cur)?,
+            digest: Digest::decode(cur)?,
+            total_bytes: u32::decode(cur)?,
+            offset: u32::decode(cur)?,
+            payload: Vec::<u8>::decode(cur)?,
+        })
+    }
+}
+
+/// Wire envelope for `Traffic::Weights` frames.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WeightMsg {
+    /// The whole blob in one frame (fits the chunk budget).
+    Whole(WeightBlob),
+    /// One chunk of a large blob (reassembled receiver-side).
+    Chunk(BlobChunk),
+}
+
+impl Encode for WeightMsg {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            WeightMsg::Whole(blob) => {
+                1u8.encode(out);
+                blob.encode(out);
+            }
+            WeightMsg::Chunk(chunk) => {
+                2u8.encode(out);
+                chunk.encode(out);
+            }
+        }
+    }
+    fn encoded_len(&self) -> usize {
+        1 + match self {
+            WeightMsg::Whole(blob) => blob.encoded_len(),
+            WeightMsg::Chunk(chunk) => chunk.encoded_len(),
+        }
+    }
+}
+
+impl Decode for WeightMsg {
+    fn decode(cur: &mut Cursor<'_>) -> Result<Self> {
+        Ok(match u8::decode(cur)? {
+            1 => WeightMsg::Whole(WeightBlob::decode(cur)?),
+            2 => WeightMsg::Chunk(BlobChunk::decode(cur)?),
+            t => anyhow::bail!("bad weight msg tag {t}"),
+        })
+    }
+}
+
+/// Round slack accepted on incoming chunk tags past the receiver's
+/// replica round: covers a sender legitimately ahead of a lagging
+/// receiver without letting junk park at a far-future round where the
+/// assembler's GC never reaps it.
+pub const CHUNK_ROUND_SLACK: u64 = 4;
+
+/// Receiver side of the storage layer, shared by `DeflNode` and
+/// `LiteNode` (the sim-vs-TCP parity suite proves these identical, so
+/// the logic must live once): decode a `Traffic::Weights` frame, feed
+/// chunks through the assembler with the round horizon pinned to the
+/// replica round, and deposit completed blobs in the pool. Returns
+/// whether a whole blob entered the pool.
+pub fn receive_weight_frame(
+    pool: &mut crate::mempool::WeightPool,
+    chunks: &mut crate::mempool::ChunkAssembler,
+    replica_round: u64,
+    from: NodeId,
+    bytes: &[u8],
+) -> Result<bool> {
+    match WeightMsg::from_bytes(bytes)? {
+        WeightMsg::Whole(blob) => {
+            pool.put(blob.round, blob.weights);
+            Ok(true)
+        }
+        WeightMsg::Chunk(chunk) => {
+            chunks.set_round_horizon(replica_round + CHUNK_ROUND_SLACK);
+            match chunks.accept(from, chunk)? {
+                Some(blob) => {
+                    pool.put(blob.round, blob.weights);
+                    Ok(true)
+                }
+                None => Ok(false),
+            }
+        }
+    }
+}
+
+/// Multicast a blob on the storage layer, splitting its wire image into
+/// `max_chunk_bytes`-sized chunks when it exceeds the budget (0 disables
+/// chunking). The split slices the tensor's zero-copy byte view — the
+/// tensor is never re-serialized; each chunk frame pays exactly one copy
+/// of its own payload slice.
+pub fn multicast_blob(ctx: &mut dyn Ctx, blob: &WeightBlob, max_chunk_bytes: usize) {
+    let bytes = blob.weights.as_bytes();
+    if max_chunk_bytes == 0 || bytes.len() <= max_chunk_bytes {
+        ctx.multicast(Traffic::Weights, WeightMsg::Whole(blob.clone()).to_bytes());
+        return;
+    }
+    assert!(bytes.len() <= u32::MAX as usize, "blob exceeds chunkable size");
+    let digest = blob.digest();
+    let total_bytes = bytes.len() as u32;
+    let mut offset = 0usize;
+    while offset < bytes.len() {
+        let end = (offset + max_chunk_bytes).min(bytes.len());
+        let chunk = BlobChunk {
+            node: blob.node,
+            round: blob.round,
+            digest,
+            total_bytes,
+            offset: offset as u32,
+            payload: bytes[offset..end].to_vec(),
+        };
+        ctx.multicast(Traffic::Weights, WeightMsg::Chunk(chunk).to_bytes());
+        offset = end;
     }
 }
 
@@ -204,5 +420,157 @@ mod tests {
     #[test]
     fn bad_tag_rejected() {
         assert!(Tx::from_bytes(&[9]).is_err());
+        assert!(TxBatch::from_bytes(&[1]).is_err());
+        assert!(WeightMsg::from_bytes(&[9]).is_err());
+    }
+
+    fn arb_tx(rng: &mut crate::util::Pcg) -> Tx {
+        if rng.f64() < 0.5 {
+            Tx::Upd {
+                id: rng.next_u32(),
+                target_round: rng.next_u64(),
+                digest: Digest::of_bytes(&rng.next_u64().to_le_bytes()),
+            }
+        } else {
+            Tx::Agg { id: rng.next_u32(), target_round: rng.next_u64() }
+        }
+    }
+
+    #[test]
+    fn single_tx_and_batch_frames_share_one_decoder() {
+        let tx = Tx::Agg { id: 4, target_round: 9 };
+        assert_eq!(decode_cmd_txs(&tx.to_bytes()).unwrap(), vec![tx.clone()]);
+        let batch = TxBatch { txs: vec![tx.clone(), Tx::Upd { id: 1, target_round: 9, digest: Digest::zero() }] };
+        assert_eq!(decode_cmd_txs(&batch.to_bytes()).unwrap(), batch.txs);
+        assert_eq!(batch.len(), 2);
+        assert!(!batch.is_empty());
+        assert!(decode_cmd_txs(&[]).is_err());
+    }
+
+    #[test]
+    fn prop_txbatch_codec_roundtrip() {
+        // Arbitrary UPD/AGG mixes (including the empty batch) reproduce
+        // bit-identical bytes, lengths, and digests through the codec.
+        forall("txbatch-roundtrip", 29, 150, 40, |rng, size| {
+            let k = rng.gen_usize(size + 1);
+            TxBatch { txs: (0..k).map(|_| arb_tx(rng)).collect() }
+        }, |batch| {
+            let bytes = batch.to_bytes();
+            if bytes.len() != batch.encoded_len() {
+                return Err(format!("encoded_len {} != {}", batch.encoded_len(), bytes.len()));
+            }
+            let back = TxBatch::from_bytes(&bytes).map_err(|e| e.to_string())?;
+            if back != *batch {
+                return Err("decode(encode(batch)) != batch".into());
+            }
+            if back.digest() != batch.digest() {
+                return Err("digest not stable across the wire".into());
+            }
+            if decode_cmd_txs(&bytes).map_err(|e| e.to_string())? != batch.txs {
+                return Err("decode_cmd_txs disagrees with TxBatch::decode".into());
+            }
+            Ok(())
+        });
+    }
+
+    /// Ctx stub capturing multicast frames (the sender side of the chunk
+    /// pipeline); sends/timers are unused by `multicast_blob`.
+    struct CaptureCtx {
+        frames: Vec<Vec<u8>>,
+    }
+
+    impl crate::net::transport::Ctx for CaptureCtx {
+        fn node(&self) -> NodeId {
+            0
+        }
+        fn n_nodes(&self) -> usize {
+            2
+        }
+        fn now_us(&self) -> u64 {
+            0
+        }
+        fn send(&mut self, _: NodeId, _: crate::metrics::Traffic, _: Vec<u8>) {}
+        fn multicast(&mut self, class: crate::metrics::Traffic, bytes: Vec<u8>) {
+            assert_eq!(class, crate::metrics::Traffic::Weights);
+            self.frames.push(bytes);
+        }
+        fn set_timer(&mut self, _: u64, _: u64) {}
+        fn halt(&mut self) {}
+    }
+
+    #[test]
+    fn multicast_blob_respects_the_chunk_budget() {
+        let blob = WeightBlob { node: 1, round: 2, weights: vec![1.0f32; 100].into() };
+        // Budget 0 and budget >= image: one Whole frame.
+        for budget in [0usize, 400, 4096] {
+            let mut ctx = CaptureCtx { frames: Vec::new() };
+            multicast_blob(&mut ctx, &blob, budget);
+            assert_eq!(ctx.frames.len(), 1, "budget {budget}");
+            assert_eq!(WeightMsg::from_bytes(&ctx.frames[0]).unwrap(), WeightMsg::Whole(blob.clone()));
+        }
+        // Budget below the image: ceil(400/96) = 5 chunks, ragged last.
+        let mut ctx = CaptureCtx { frames: Vec::new() };
+        multicast_blob(&mut ctx, &blob, 96);
+        assert_eq!(ctx.frames.len(), 5);
+        for (i, frame) in ctx.frames.iter().enumerate() {
+            let WeightMsg::Chunk(c) = WeightMsg::from_bytes(frame).unwrap() else {
+                panic!("expected chunk frame");
+            };
+            assert_eq!(c.offset as usize, i * 96);
+            assert_eq!(c.payload.len(), if i < 4 { 96 } else { 16 });
+            assert_eq!(c.total_bytes, 400);
+            assert_eq!(c.digest, blob.digest());
+        }
+    }
+
+    #[test]
+    fn prop_chunk_reassembly_is_bit_identical() {
+        // End to end: sender split over the zero-copy byte view →
+        // (shuffled) chunk frames → assembler → bit-identical tensor and
+        // SHA-256 digest, for arbitrary chunk sizes including 1 byte and
+        // the whole blob.
+        use crate::mempool::ChunkAssembler;
+        forall("chunk-roundtrip", 31, 120, 48, |rng, size| {
+            let dim = 1 + rng.gen_usize(size.max(1));
+            let w = gens::f32_vec(rng, dim, 5.0);
+            // 1..=image-size chunk budgets, with the extremes forced in.
+            let image = dim * 4;
+            let chunk = match rng.gen_usize(4) {
+                0 => 1,
+                1 => image,
+                _ => 1 + rng.gen_usize(image),
+            };
+            let order_seed = rng.next_u64();
+            (w, chunk, order_seed)
+        }, |(w, chunk, order_seed)| {
+            let blob = WeightBlob { node: 3, round: 7, weights: w.clone().into() };
+            let mut ctx = CaptureCtx { frames: Vec::new() };
+            multicast_blob(&mut ctx, &blob, *chunk);
+            let mut rng = crate::util::Pcg::new(*order_seed, 1);
+            rng.shuffle(&mut ctx.frames);
+            let mut asm = ChunkAssembler::new(1 << 24);
+            let mut done: Option<WeightBlob> = None;
+            for frame in &ctx.frames {
+                match WeightMsg::from_bytes(frame).map_err(|e| e.to_string())? {
+                    WeightMsg::Whole(b) => done = Some(b),
+                    WeightMsg::Chunk(c) => {
+                        if let Some(b) = asm.accept(3, c).map_err(|e| e.to_string())? {
+                            done = Some(b);
+                        }
+                    }
+                }
+            }
+            let got = done.ok_or("blob never completed")?;
+            if got.weights.as_slice() != &w[..] {
+                return Err("reassembled tensor differs".into());
+            }
+            if got.digest() != blob.digest() {
+                return Err("digest differs after reassembly".into());
+            }
+            if got.node != blob.node || got.round != blob.round {
+                return Err("blob metadata lost".into());
+            }
+            Ok(())
+        });
     }
 }

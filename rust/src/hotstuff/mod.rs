@@ -7,4 +7,4 @@ pub mod replica;
 pub mod types;
 
 pub use replica::{Action, ByzMode, HotStuff, HsConfig};
-pub use types::{leader_of, vote_digest, Block, Msg, Phase, Qc};
+pub use types::{leader_of, vote_digest, Block, Msg, Phase, Qc, SyncEntry};

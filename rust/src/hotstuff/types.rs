@@ -142,12 +142,40 @@ impl Decode for Qc {
     }
 }
 
+/// One decided block with its commit QC, served to lagging replicas by
+/// the catch-up protocol (the QC makes the entry self-certifying: a
+/// replica replays it after verifying quorum signatures, so a Byzantine
+/// peer cannot forge history).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SyncEntry {
+    pub qc: Qc,
+    pub block: Block,
+}
+
+impl Encode for SyncEntry {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.qc.encode(out);
+        self.block.encode(out);
+    }
+    fn encoded_len(&self) -> usize {
+        self.qc.encoded_len() + self.block.encoded_len()
+    }
+}
+
+impl Decode for SyncEntry {
+    fn decode(cur: &mut Cursor<'_>) -> Result<Self> {
+        Ok(SyncEntry { qc: Qc::decode(cur)?, block: Block::decode(cur)? })
+    }
+}
+
 /// Protocol messages.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Msg {
     /// Replica → next leader: enter view `view`; carries the replica's
-    /// prepareQC (the leader picks the highest).
-    NewView { view: u64, prepare_qc: Qc },
+    /// prepareQC (the leader picks the highest) and, when view-batching
+    /// is on, the replica's still-pending commands so every new leader
+    /// can propose them without any per-command gossip.
+    NewView { view: u64, prepare_qc: Qc, batch: Vec<Vec<u8>> },
     /// Leader → replicas: the view's proposal, justified by high_qc.
     Prepare { view: u64, block: Block, high_qc: Qc },
     /// Replica → leader: signed vote for `phase` on `block`.
@@ -159,7 +187,17 @@ pub enum Msg {
     Decide { view: u64, qc: Qc, block: Block },
     /// Mempool gossip: a command submitted on one node, rebroadcast so the
     /// current (and any future) leader can include it in a proposal.
+    /// Legacy per-command path, kept for the unbatched comparison mode.
     Submit { cmd: Vec<u8> },
+    /// Submitter → current leader: all of the submitter's pending
+    /// commands in one frame (the view-batched replacement for
+    /// per-command `Submit` broadcasts).
+    SubmitBatch { cmds: Vec<Vec<u8>> },
+    /// Lagging replica → a peer seen sending from a higher view: send me
+    /// the decided blocks after `have_view`.
+    SyncRequest { have_view: u64 },
+    /// Catch-up payload: decided blocks with their commit QCs.
+    SyncReply { entries: Vec<SyncEntry> },
 }
 
 impl Msg {
@@ -172,6 +210,9 @@ impl Msg {
             Msg::Commit { .. } => 5,
             Msg::Decide { .. } => 6,
             Msg::Submit { .. } => 7,
+            Msg::SubmitBatch { .. } => 8,
+            Msg::SyncRequest { .. } => 9,
+            Msg::SyncReply { .. } => 10,
         }
     }
 
@@ -183,7 +224,10 @@ impl Msg {
             | Msg::PreCommit { view, .. }
             | Msg::Commit { view, .. }
             | Msg::Decide { view, .. } => *view,
-            Msg::Submit { .. } => 0,
+            Msg::Submit { .. }
+            | Msg::SubmitBatch { .. }
+            | Msg::SyncRequest { .. }
+            | Msg::SyncReply { .. } => 0,
         }
     }
 }
@@ -192,9 +236,10 @@ impl Encode for Msg {
     fn encode(&self, out: &mut Vec<u8>) {
         self.tag().encode(out);
         match self {
-            Msg::NewView { view, prepare_qc } => {
+            Msg::NewView { view, prepare_qc, batch } => {
                 view.encode(out);
                 prepare_qc.encode(out);
+                encode_list(batch, out);
             }
             Msg::Prepare { view, block, high_qc } => {
                 view.encode(out);
@@ -219,6 +264,15 @@ impl Encode for Msg {
             Msg::Submit { cmd } => {
                 cmd.encode(out);
             }
+            Msg::SubmitBatch { cmds } => {
+                encode_list(cmds, out);
+            }
+            Msg::SyncRequest { have_view } => {
+                have_view.encode(out);
+            }
+            Msg::SyncReply { entries } => {
+                encode_list(entries, out);
+            }
         }
     }
 }
@@ -226,7 +280,11 @@ impl Encode for Msg {
 impl Decode for Msg {
     fn decode(cur: &mut Cursor<'_>) -> Result<Self> {
         Ok(match u8::decode(cur)? {
-            1 => Msg::NewView { view: u64::decode(cur)?, prepare_qc: Qc::decode(cur)? },
+            1 => Msg::NewView {
+                view: u64::decode(cur)?,
+                prepare_qc: Qc::decode(cur)?,
+                batch: decode_list(cur)?,
+            },
             2 => Msg::Prepare {
                 view: u64::decode(cur)?,
                 block: Block::decode(cur)?,
@@ -246,6 +304,9 @@ impl Decode for Msg {
                 block: Block::decode(cur)?,
             },
             7 => Msg::Submit { cmd: Vec::<u8>::decode(cur)? },
+            8 => Msg::SubmitBatch { cmds: decode_list(cur)? },
+            9 => Msg::SyncRequest { have_view: u64::decode(cur)? },
+            10 => Msg::SyncReply { entries: decode_list(cur)? },
             t => anyhow::bail!("bad hotstuff msg tag {t}"),
         })
     }
@@ -281,7 +342,8 @@ mod tests {
         let qc = Qc { phase: Phase::Prepare, view: 3, block: block.digest(), cert };
 
         let msgs = vec![
-            Msg::NewView { view: 4, prepare_qc: qc.clone() },
+            Msg::NewView { view: 4, prepare_qc: qc.clone(), batch: vec![vec![9; 45], vec![8]] },
+            Msg::NewView { view: 4, prepare_qc: qc.clone(), batch: Vec::new() },
             Msg::Prepare { view: 3, block: block.clone(), high_qc: Qc::genesis() },
             Msg::Vote {
                 phase: Phase::Commit,
@@ -298,6 +360,32 @@ mod tests {
             assert_eq!(bytes.len(), m.encoded_len(), "len mismatch for {m:?}");
             assert_eq!(Msg::from_bytes(&bytes).unwrap(), m);
             assert_eq!(m.view(), if matches!(m, Msg::NewView { .. }) { 4 } else { 3 });
+        }
+    }
+
+    #[test]
+    fn batched_and_sync_msgs_roundtrip() {
+        let reg = KeyRegistry::new(4, 7);
+        let block = Block { view: 9, parent: Digest::zero(), cmds: vec![vec![1, 2, 3]] };
+        let vd = vote_digest(Phase::Commit, 9, &block.digest());
+        let mut cert = QuorumCert::new(vd);
+        for i in 0..3 {
+            cert.add(reg.signer(i).sign(&vd));
+        }
+        let qc = Qc { phase: Phase::Commit, view: 9, block: block.digest(), cert };
+        let msgs = vec![
+            Msg::SubmitBatch { cmds: vec![vec![1; 45], vec![2; 13], Vec::new()] },
+            Msg::SubmitBatch { cmds: Vec::new() },
+            Msg::SyncRequest { have_view: 17 },
+            Msg::SyncReply { entries: vec![SyncEntry { qc, block }] },
+            Msg::SyncReply { entries: Vec::new() },
+        ];
+        for m in msgs {
+            let bytes = m.to_bytes();
+            assert_eq!(bytes.len(), m.encoded_len(), "len mismatch for {m:?}");
+            assert_eq!(Msg::from_bytes(&bytes).unwrap(), m);
+            // Mempool/sync traffic is view-less for the lag detector.
+            assert_eq!(m.view(), 0);
         }
     }
 

@@ -11,12 +11,17 @@
 //! copying it, the content digest is taken from the tensor's cache (one
 //! SHA-256 per tensor per process, not per layer), and `get` hands back
 //! a cheap clone the aggregation path can keep across pool mutations.
+//!
+//! Large blobs arrive as [`BlobChunk`]s (see [`crate::defl::tx`]);
+//! [`ChunkAssembler`] rebuilds them, verifies the claimed content digest
+//! against the reassembled tensor, and hands the pool a whole blob.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 
 use anyhow::{bail, Result};
 
 use crate::crypto::Digest;
+use crate::defl::tx::{BlobChunk, WeightBlob};
 use crate::weights::Weights;
 
 /// A stored weight blob, tagged with the round it belongs to.
@@ -138,6 +143,202 @@ impl WeightPool {
 
     pub fn peak_bytes(&self) -> u64 {
         self.peak_bytes
+    }
+}
+
+/// A blob mid-reassembly. Segments are kept as received (offset →
+/// payload) and only stitched into one buffer at completion, so memory
+/// is charged for bytes actually RECEIVED — a tiny chunk claiming a
+/// huge `total_bytes` cannot pin more than its own payload.
+#[derive(Debug)]
+struct PartialBlob {
+    node: crate::crypto::NodeId,
+    round: u64,
+    total_bytes: u32,
+    segments: HashMap<u32, Vec<u8>>,
+    covered: u64,
+}
+
+/// Receiver side of chunked blob multicast: buffers [`BlobChunk`]s per
+/// (transport sender, content digest), and returns the whole
+/// [`WeightBlob`] once every byte is covered AND the reassembled tensor
+/// hashes to the claimed digest.
+///
+/// Robustness contract (Byzantine peers control every chunk FIELD, but
+/// not the transport-level `from` the embedding node passes in):
+/// * partials are keyed by `(from, digest)`, so a Byzantine node
+///   injecting forged chunks for an honest blob's digest only poisons
+///   its OWN partial — the honest sender's stream reassembles untouched;
+/// * memory is charged per received payload byte (never the claimed
+///   total) against a PER-SENDER budget of `cap_bytes`, so one flooding
+///   peer can exhaust only its own allowance, never an honest sender's;
+/// * chunks landing outside the declared image, declaring an image the
+///   budget could never admit, conflicting with the partial's total, or
+///   tagged with a round beyond [`ChunkAssembler::set_round_horizon`]
+///   are rejected with an error; with the horizon wired to the replica
+///   round, junk partials age out of [`ChunkAssembler::gc`] within τ
+///   rounds instead of pinning memory forever;
+/// * duplicate offsets are idempotent; overlapping or corrupt payloads
+///   survive until finalization, where the SHA-256 check rejects the
+///   whole partial (content addressing is the single source of truth).
+#[derive(Debug)]
+pub struct ChunkAssembler {
+    partials: HashMap<(crate::crypto::NodeId, Digest), PartialBlob>,
+    /// Buffered (received) segment bytes per transport sender.
+    sender_bytes: HashMap<crate::crypto::NodeId, u64>,
+    /// Per-sender buffer budget.
+    cap_bytes: u64,
+    /// Highest acceptable chunk `round` tag (u64::MAX = no limit).
+    round_horizon: u64,
+    pub completed: u64,
+    pub rejected: u64,
+}
+
+impl ChunkAssembler {
+    pub fn new(cap_bytes: u64) -> ChunkAssembler {
+        ChunkAssembler {
+            partials: HashMap::new(),
+            sender_bytes: HashMap::new(),
+            cap_bytes,
+            round_horizon: u64::MAX,
+            completed: 0,
+            rejected: 0,
+        }
+    }
+
+    /// Cap the acceptable chunk `round` tag. The embedding node keeps
+    /// this a small slack above its replica round so an attacker cannot
+    /// park junk at `round = u64::MAX` where `gc` never reaps it.
+    pub fn set_round_horizon(&mut self, horizon: u64) {
+        self.round_horizon = horizon;
+    }
+
+    /// Accept one chunk received from transport peer `from`.
+    /// `Ok(Some(blob))` when this chunk completed the blob (digest
+    /// already verified), `Ok(None)` while still partial.
+    pub fn accept(
+        &mut self,
+        from: crate::crypto::NodeId,
+        chunk: BlobChunk,
+    ) -> Result<Option<WeightBlob>> {
+        let BlobChunk { node, round, digest, total_bytes, offset, payload } = chunk;
+        let total = total_bytes as u64;
+        let end = offset as u64 + payload.len() as u64;
+        if payload.is_empty() || end > total || total % 4 != 0 {
+            self.rejected += 1;
+            bail!(
+                "chunk [{offset}, {end}) invalid for a {total}-byte blob {}",
+                digest.short()
+            );
+        }
+        if round > self.round_horizon {
+            self.rejected += 1;
+            bail!("chunk round {round} beyond horizon {}", self.round_horizon);
+        }
+        // A claimed image the budget could never admit will never
+        // complete: refuse it outright rather than buffering doomed
+        // segments.
+        if total > self.cap_bytes {
+            self.rejected += 1;
+            bail!(
+                "chunk assembler: {} would exceed the {}-byte budget",
+                digest.short(),
+                self.cap_bytes
+            );
+        }
+        let key = (from, digest);
+        // Duplicate/conflict checks come BEFORE the budget check so a
+        // benign retransmit near the cap stays idempotent (Ok(None), not
+        // an error) and never counts as a rejection.
+        if let Some(p) = self.partials.get_mut(&key) {
+            if p.total_bytes != total_bytes {
+                self.rejected += 1;
+                bail!("chunk: conflicting total for {}", digest.short());
+            }
+            // Keep the newest round tag (re-broadcasts), like
+            // `WeightPool::put`.
+            p.round = p.round.max(round);
+            if p.segments.contains_key(&offset) {
+                return Ok(None); // duplicate chunk
+            }
+        }
+        let used = self.sender_bytes.entry(from).or_default();
+        if *used + payload.len() as u64 > self.cap_bytes {
+            self.rejected += 1;
+            bail!(
+                "chunk assembler: sender {from} over its {}-byte budget",
+                self.cap_bytes
+            );
+        }
+        *used += payload.len() as u64;
+        let p = self.partials.entry(key).or_insert_with(|| PartialBlob {
+            node,
+            round,
+            total_bytes,
+            segments: HashMap::new(),
+            covered: 0,
+        });
+        p.covered += payload.len() as u64;
+        p.segments.insert(offset, payload);
+        if p.covered < total {
+            return Ok(None);
+        }
+        // Complete (or overlapped into apparent completeness): stitch the
+        // segments and let the content digest decide.
+        let p = self.partials.remove(&key).unwrap();
+        self.credit(from, p.covered);
+        let mut buf = vec![0u8; total as usize];
+        for (off, seg) in &p.segments {
+            let start = *off as usize;
+            buf[start..start + seg.len()].copy_from_slice(seg);
+        }
+        let weights = Weights::from_le_bytes(&buf)?;
+        if weights.digest() != digest {
+            self.rejected += 1;
+            bail!("reassembled blob does not hash to {}", digest.short());
+        }
+        self.completed += 1;
+        Ok(Some(WeightBlob { node: p.node, round: p.round, weights }))
+    }
+
+    /// Return `n` buffered bytes to `from`'s budget.
+    fn credit(&mut self, from: crate::crypto::NodeId, n: u64) {
+        if let Some(used) = self.sender_bytes.get_mut(&from) {
+            *used = used.saturating_sub(n);
+            if *used == 0 {
+                self.sender_bytes.remove(&from);
+            }
+        }
+    }
+
+    /// Drop partials older than `keep_from_round` (pool GC companion).
+    pub fn gc(&mut self, keep_from_round: u64) {
+        let sender_bytes = &mut self.sender_bytes;
+        self.partials.retain(|(from, _), p| {
+            if p.round >= keep_from_round {
+                true
+            } else {
+                if let Some(used) = sender_bytes.get_mut(from) {
+                    *used = used.saturating_sub(p.covered);
+                }
+                false
+            }
+        });
+        self.sender_bytes.retain(|_, used| *used > 0);
+    }
+
+    /// Partial blobs currently buffered.
+    pub fn len(&self) -> usize {
+        self.partials.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.partials.is_empty()
+    }
+
+    /// Bytes held by partial buffers across all senders (RAM gauge).
+    pub fn bytes(&self) -> u64 {
+        self.sender_bytes.values().sum()
     }
 }
 
@@ -285,5 +486,172 @@ mod tests {
     #[should_panic(expected = "tau")]
     fn tau_one_rejected() {
         WeightPool::new(1);
+    }
+
+    // ---------------- chunk reassembly ----------------
+
+    /// Split a tensor's wire image into `chunk` -byte chunks (mirrors the
+    /// sender in `defl::tx::multicast_blob`).
+    fn chunks_of(w: &Weights, node: u32, round: u64, chunk: usize) -> Vec<BlobChunk> {
+        let bytes = w.as_bytes();
+        let digest = w.digest();
+        let mut out = Vec::new();
+        let mut off = 0usize;
+        while off < bytes.len() {
+            let end = (off + chunk).min(bytes.len());
+            out.push(BlobChunk {
+                node,
+                round,
+                digest,
+                total_bytes: bytes.len() as u32,
+                offset: off as u32,
+                payload: bytes[off..end].to_vec(),
+            });
+            off = end;
+        }
+        out
+    }
+
+    #[test]
+    fn chunks_reassemble_to_the_identical_tensor() {
+        let w = Weights::new(blob(4.0, 100)); // 400 bytes
+        let mut asm = ChunkAssembler::new(1 << 20);
+        let mut got = None;
+        for c in chunks_of(&w, 7, 3, 96) {
+            got = asm.accept(0, c).unwrap();
+        }
+        let back = got.expect("last chunk completes");
+        assert_eq!(back.node, 7);
+        assert_eq!(back.round, 3);
+        assert_eq!(back.weights.as_slice(), w.as_slice());
+        assert_eq!(back.digest(), w.digest());
+        assert_eq!(asm.completed, 1);
+        assert_eq!(asm.bytes(), 0);
+        assert!(asm.is_empty());
+    }
+
+    #[test]
+    fn duplicate_and_reordered_chunks_are_idempotent() {
+        let w = Weights::new(blob(1.0, 64));
+        let mut asm = ChunkAssembler::new(1 << 20);
+        let mut cs = chunks_of(&w, 0, 1, 60);
+        cs.reverse();
+        assert!(asm.accept(0, cs[0].clone()).unwrap().is_none());
+        assert!(asm.accept(0, cs[0].clone()).unwrap().is_none()); // dup
+        let done = asm.accept(0, cs[1].clone()).unwrap().expect("complete");
+        assert_eq!(done.weights.as_slice(), w.as_slice());
+    }
+
+    #[test]
+    fn adversarial_chunks_rejected() {
+        let w = Weights::new(blob(2.0, 32)); // 128 bytes
+        let mut asm = ChunkAssembler::new(1 << 20);
+        let cs = chunks_of(&w, 1, 1, 64);
+        // Out-of-range chunk.
+        let mut bad = cs[0].clone();
+        bad.offset = 100;
+        assert!(asm.accept(0, bad).is_err());
+        // Empty payload.
+        let mut bad = cs[0].clone();
+        bad.payload.clear();
+        assert!(asm.accept(0, bad).is_err());
+        // Conflicting total after the first chunk landed.
+        assert!(asm.accept(0, cs[0].clone()).unwrap().is_none());
+        let mut bad = cs[1].clone();
+        bad.total_bytes = 64;
+        bad.offset = 0;
+        assert!(asm.accept(0, bad).is_err());
+        assert!(asm.rejected >= 3);
+    }
+
+    #[test]
+    fn corrupted_payload_fails_the_digest_check() {
+        let w = Weights::new(blob(5.0, 40));
+        let mut asm = ChunkAssembler::new(1 << 20);
+        let mut cs = chunks_of(&w, 2, 4, 80);
+        cs[1].payload[0] ^= 0xff;
+        assert!(asm.accept(0, cs[0].clone()).unwrap().is_none());
+        let err = asm.accept(0, cs[1].clone()).unwrap_err().to_string();
+        assert!(err.contains("does not hash"), "{err}");
+        // The poisoned partial is gone; a clean retransmit succeeds.
+        let mut got = None;
+        for c in chunks_of(&w, 2, 4, 80) {
+            got = asm.accept(0, c).unwrap();
+        }
+        assert_eq!(got.expect("clean retry").weights.as_slice(), w.as_slice());
+    }
+
+    #[test]
+    fn byzantine_injection_cannot_suppress_an_honest_sender() {
+        // A Byzantine peer (transport id 9) injects a junk chunk for the
+        // honest blob's digest before the honest sender's own chunks
+        // finish. Partials are keyed by (sender, digest), so the junk
+        // builds a doomed partial of its own and the honest stream
+        // reassembles untouched.
+        let w = Weights::new(blob(6.0, 64)); // 256-byte image
+        let honest = chunks_of(&w, 4, 2, 100);
+        let mut asm = ChunkAssembler::new(1 << 20);
+        assert!(asm.accept(4, honest[0].clone()).unwrap().is_none());
+        let mut forged = honest[1].clone();
+        for b in forged.payload.iter_mut() {
+            *b = 0xaa;
+        }
+        assert!(asm.accept(9, forged).unwrap().is_none());
+        // Honest chunks still land in the honest partial and complete.
+        assert!(asm.accept(4, honest[1].clone()).unwrap().is_none());
+        let done = asm.accept(4, honest[2].clone()).unwrap().expect("honest blob completes");
+        assert_eq!(done.weights.as_slice(), w.as_slice());
+        // The forged partial lingers (until GC) but harms nothing.
+        assert_eq!(asm.len(), 1);
+        assert_eq!(asm.completed, 1);
+    }
+
+    #[test]
+    fn per_sender_budget_isolates_flooders_and_horizon_bounds_rounds() {
+        let mut asm = ChunkAssembler::new(300);
+        asm.set_round_horizon(5);
+        // Round tags beyond the horizon are refused outright — junk can
+        // no longer park where gc() never reaps it.
+        let w = Weights::new(blob(1.0, 64));
+        let mut parked = chunks_of(&w, 0, u64::MAX, 100)[0].clone();
+        assert!(asm.accept(7, parked.clone()).is_err());
+        parked.round = 4;
+        assert!(asm.accept(7, parked).unwrap().is_none());
+        // Sender 7 exhausts ITS 300-byte budget...
+        let junk = Weights::new(blob(2.0, 64));
+        assert!(asm.accept(7, chunks_of(&junk, 0, 4, 100)[0].clone()).unwrap().is_none());
+        assert!(asm.accept(7, chunks_of(&junk, 0, 4, 100)[1].clone()).unwrap().is_none());
+        assert!(asm.accept(7, chunks_of(&junk, 0, 4, 100)[2].clone()).is_err());
+        // ...while the honest sender 4 is completely unaffected.
+        let honest = Weights::new(blob(3.0, 64));
+        let mut done = None;
+        for c in chunks_of(&honest, 4, 4, 100) {
+            done = asm.accept(4, c).unwrap();
+        }
+        assert_eq!(done.expect("honest blob").weights.as_slice(), honest.as_slice());
+    }
+
+    #[test]
+    fn assembler_gc_reaps_stale_partials_and_enforces_cap() {
+        let w_old = Weights::new(blob(1.0, 50)); // 200-byte image
+        let w_new = Weights::new(blob(2.0, 50));
+        let mut asm = ChunkAssembler::new(250);
+        // A claimed image the cap could never admit is refused outright —
+        // a tiny frame cannot reserve a huge buffer.
+        let mut huge = chunks_of(&w_old, 0, 1, 100)[0].clone();
+        huge.total_bytes = 1 << 20;
+        assert!(asm.accept(0, huge).is_err());
+        // Buffered bytes are charged per RECEIVED payload, not per claim.
+        assert!(asm.accept(0, chunks_of(&w_old, 0, 1, 100)[0].clone()).unwrap().is_none());
+        assert!(asm.accept(0, chunks_of(&w_new, 0, 9, 100)[0].clone()).unwrap().is_none());
+        assert_eq!(asm.bytes(), 200);
+        // The next segment would push the buffers past the 250-byte cap.
+        assert!(asm.accept(0, chunks_of(&w_new, 0, 9, 100)[1].clone()).is_err());
+        // GC reaps the stale round-1 partial, freeing room to finish.
+        asm.gc(8);
+        assert_eq!(asm.len(), 1);
+        assert_eq!(asm.bytes(), 100);
+        let done = asm.accept(0, chunks_of(&w_new, 0, 9, 100)[1].clone()).unwrap();
+        assert_eq!(done.expect("complete").weights.as_slice(), w_new.as_slice());
     }
 }

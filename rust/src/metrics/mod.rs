@@ -31,12 +31,14 @@ impl Traffic {
     }
 }
 
-/// Per-node send/receive byte meters.
+/// Per-node send/receive byte meters, with message counts split by
+/// traffic class (the bytes/messages-per-round instrumentation behind
+/// `BENCH_net.json`).
 #[derive(Debug, Clone, Default)]
 pub struct NetMeter {
     sent: BTreeMap<(NodeId, Traffic), u64>,
     recv: BTreeMap<(NodeId, Traffic), u64>,
-    msgs_sent: BTreeMap<NodeId, u64>,
+    msgs_sent: BTreeMap<(NodeId, Traffic), u64>,
 }
 
 impl NetMeter {
@@ -46,7 +48,7 @@ impl NetMeter {
 
     pub fn on_send(&mut self, node: NodeId, class: Traffic, bytes: u64) {
         *self.sent.entry((node, class)).or_default() += bytes;
-        *self.msgs_sent.entry(node).or_default() += 1;
+        *self.msgs_sent.entry((node, class)).or_default() += 1;
     }
 
     pub fn on_recv(&mut self, node: NodeId, class: Traffic, bytes: u64) {
@@ -84,7 +86,23 @@ impl NetMeter {
     }
 
     pub fn msgs_sent_by(&self, node: NodeId) -> u64 {
-        self.msgs_sent.get(&node).copied().unwrap_or(0)
+        Traffic::ALL
+            .iter()
+            .map(|c| self.msgs_sent.get(&(node, *c)).copied().unwrap_or(0))
+            .sum()
+    }
+
+    /// Cluster-wide messages sent in one traffic class.
+    pub fn msgs_class(&self, class: Traffic) -> u64 {
+        self.msgs_sent
+            .iter()
+            .filter(|((_, c), _)| *c == class)
+            .map(|(_, v)| *v)
+            .sum()
+    }
+
+    pub fn msgs_total(&self) -> u64 {
+        self.msgs_sent.values().sum()
     }
 
     /// Max over nodes of sent bytes — the "leader hot spot" detectability
@@ -264,6 +282,9 @@ mod tests {
         assert_eq!(m.sent_class(Traffic::Weights), 4500);
         assert_eq!(m.total_sent(), 4600);
         assert_eq!(m.msgs_sent_by(0), 2);
+        assert_eq!(m.msgs_class(Traffic::Weights), 2);
+        assert_eq!(m.msgs_class(Traffic::Consensus), 1);
+        assert_eq!(m.msgs_total(), 3);
         assert_eq!(m.max_node_sent(), 4100);
     }
 

@@ -4,6 +4,45 @@
 //! substrate, with exact byte accounting for Figures 2/3 and fault
 //! injection for the threat models) and a real TCP transport whose
 //! [`tcp::run_actor`] drives the same actor code over localhost sockets.
+//!
+//! # Wire formats (README)
+//!
+//! Both hosts carry the same opaque `(class, bytes)` frames; everything
+//! below is defined ABOVE the transport seam, so sim and TCP runs are
+//! byte-identical.
+//!
+//! **Consensus frames** (`Traffic::Consensus`) are
+//! [`crate::hotstuff::Msg`] encodings. View batching changes how DeFL's
+//! 45-byte UPD / 13-byte AGG transactions travel:
+//!
+//! * a submitter sends ONE `SubmitBatch { cmds }` frame (length-prefixed
+//!   list of command frames) to the CURRENT leader, instead of gossiping
+//!   each tx to all n−1 peers;
+//! * every `NewView { view, prepare_qc, batch }` re-carries the sender's
+//!   still-pending commands, so an undecided tx reaches each successive
+//!   leader with zero extra messages;
+//! * a command frame is either a bare [`crate::defl::Tx`] (tag 1 = UPD,
+//!   tag 2 = AGG) or a [`crate::defl::TxBatch`] (tag 3 + tx list)
+//!   committed atomically — one length prefix, one block-digest-covered
+//!   unit, decoded by [`crate::defl::decode_cmd_txs`];
+//! * lagging replicas recover missed decisions with `SyncRequest
+//!   { have_view }` → `SyncReply { entries }`, each entry a decided block
+//!   plus its commit QC (self-certifying; see `hotstuff::replica`).
+//!
+//! **Storage-layer frames** (`Traffic::Weights`) are
+//! [`crate::defl::WeightMsg`] encodings:
+//!
+//! * tag 1 `Whole(WeightBlob)` — `node: u32, round: u64, weights:
+//!   u32 count + packed LE f32s` — for blobs within the chunk budget;
+//! * tag 2 `Chunk(BlobChunk)` — `node: u32, round: u64, digest: 32 B,
+//!   total_bytes: u32, offset: u32, payload: u32 len + bytes` — emitted
+//!   by [`crate::defl::multicast_blob`] as zero-copy slices of
+//!   [`crate::weights::Weights::as_bytes`] and reassembled by
+//!   [`crate::mempool::ChunkAssembler`], which keys partials by the
+//!   transport-level sender (forged chunks cannot poison an honest
+//!   stream), enforces per-sender memory budgets and a round horizon,
+//!   and verifies the reassembled tensor hashes to `digest` before it
+//!   may enter the pool.
 
 pub mod sim;
 pub mod tcp;

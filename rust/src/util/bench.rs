@@ -187,6 +187,29 @@ impl BenchReport {
         ));
     }
 
+    /// Record one case from externally measured metrics (byte meters,
+    /// message counters) instead of timing stats — e.g.
+    /// `record_metrics("consensus/batched", &[("n", 8.0)],
+    /// &[("bytes_per_round", 12_345.0)])`. Metric values must be finite
+    /// (NaN/inf are not valid JSON numbers).
+    pub fn record_metrics(&mut self, name: &str, params: &[(&str, f64)], metrics: &[(&str, f64)]) {
+        let params_json: Vec<String> = params
+            .iter()
+            .map(|(k, v)| format!("\"{}\": {}", json_escape(k), v))
+            .collect();
+        let mut entry = format!(
+            "{{\"name\": \"{}\", \"params\": {{{}}}",
+            json_escape(name),
+            params_json.join(", ")
+        );
+        for (k, v) in metrics {
+            debug_assert!(v.is_finite(), "metric {k} is not finite");
+            entry += &format!(", \"{}\": {}", json_escape(k), v);
+        }
+        entry.push('}');
+        self.entries.push(entry);
+    }
+
     pub fn len(&self) -> usize {
         self.entries.len()
     }
@@ -275,6 +298,24 @@ mod tests {
                 json.matches(close).count(),
                 "unbalanced {open}{close}"
             );
+        }
+    }
+
+    #[test]
+    fn bench_report_metric_entries_serialize() {
+        let mut r = BenchReport::new("net");
+        r.record_metrics(
+            "consensus/batched",
+            &[("n", 8.0)],
+            &[("bytes_per_round", 1234.5), ("msgs_per_round", 42.0)],
+        );
+        let json = r.to_json();
+        assert!(json.contains("\"name\": \"consensus/batched\""));
+        assert!(json.contains("\"n\": 8"));
+        assert!(json.contains("\"bytes_per_round\": 1234.5"));
+        assert!(json.contains("\"msgs_per_round\": 42"));
+        for (open, close) in [('{', '}'), ('[', ']')] {
+            assert_eq!(json.matches(open).count(), json.matches(close).count());
         }
     }
 

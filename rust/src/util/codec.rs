@@ -371,7 +371,11 @@ mod fuzz_tests {
         let _ = crate::hotstuff::Block::from_bytes(bytes);
         let _ = crate::hotstuff::Qc::from_bytes(bytes);
         let _ = crate::defl::Tx::from_bytes(bytes);
+        let _ = crate::defl::TxBatch::from_bytes(bytes);
+        let _ = crate::defl::decode_cmd_txs(bytes);
         let _ = crate::defl::WeightBlob::from_bytes(bytes);
+        let _ = crate::defl::WeightMsg::from_bytes(bytes);
+        let _ = crate::defl::BlobChunk::from_bytes(bytes);
         let _ = crate::weights::Weights::from_bytes(bytes);
         let _ = crate::blockchain::ChainBlock::from_bytes(bytes);
     }

@@ -11,6 +11,7 @@ use std::time::Duration;
 
 use defl::config::{Attack, ExperimentConfig, Model, Partition, System};
 use defl::crypto::{Digest, KeyRegistry, NodeId};
+use defl::defl::lite::{lite_cluster, LiteConfig, LiteNode};
 use defl::defl::DeflNode;
 use defl::net::sim::{SimConfig, SimNet};
 use defl::net::tcp::{local_addrs, run_actor, TcpNode};
@@ -41,6 +42,9 @@ fn cfg() -> ExperimentConfig {
         // both the virtual and the wall clock — a prerequisite for the
         // two transports committing identical per-round digest sets.
         gst_lt_ms: 1_000,
+        // Force the chunked multicast path (blobs far exceed 2 KiB), so
+        // the parity claim covers split + reassembly on both transports.
+        chunk_bytes: 2048,
         ..Default::default()
     }
 }
@@ -151,5 +155,79 @@ fn sim_and_tcp_drive_defl_to_the_same_result() {
     assert_eq!(
         sim[honest.start].1, tcp[honest.start].1,
         "sim and TCP reached different final models"
+    );
+}
+
+/// Same parity claim for the batched + chunked wire path, on the
+/// engine-free `LiteNode` — this variant needs no artifacts, so the
+/// batching/chunking contract is pinned in every CI run.
+#[test]
+fn sim_and_tcp_agree_on_batched_chunked_path() {
+    // 300 f32s = 1200 wire bytes over 128-byte chunks: 10 frames per
+    // blob with a ragged tail, view-batched consensus payloads on.
+    let c = LiteConfig {
+        n_nodes: 4,
+        rounds: 3,
+        dim: 300,
+        seed: 91,
+        gst_us: 150_000,
+        chunk_bytes: 128,
+        batch_consensus: true,
+        timeout_base_us: 100_000,
+    };
+
+    // Simulator run.
+    let sim_cfg = SimConfig { n_nodes: c.n_nodes, latency_us: 200, jitter_us: 50, drop_prob: 0.0, seed: 3 };
+    let mut net = SimNet::new(sim_cfg, lite_cluster(&c));
+    let mut t = 0u64;
+    loop {
+        t += 500_000;
+        net.run_until(t, u64::MAX);
+        let all = (0..c.n_nodes as NodeId)
+            .all(|i| net.actor_as::<LiteNode>(i).map(|a| a.done).unwrap_or(false));
+        if all {
+            break;
+        }
+        assert!(t < 120_000_000, "sim lite cluster did not finish");
+    }
+    let sim: Vec<(u64, Digest)> = (0..c.n_nodes as NodeId)
+        .map(|i| {
+            let a = net.actor_as::<LiteNode>(i).unwrap();
+            (a.rounds_done, a.final_digest.expect("sim final digest"))
+        })
+        .collect();
+
+    // TCP run: each thread owns its node, like separate silo processes.
+    let addrs = local_addrs(c.n_nodes, 39515);
+    let mut handles = Vec::new();
+    for id in 0..c.n_nodes as NodeId {
+        let (c, addrs) = (c.clone(), addrs.clone());
+        handles.push(std::thread::spawn(move || {
+            let registry = KeyRegistry::new(c.n_nodes, c.seed);
+            let mut node = LiteNode::new(id, c, registry);
+            let mesh = TcpNode::connect_mesh(id, &addrs).expect("mesh");
+            run_actor(
+                &mesh,
+                &mut node,
+                Duration::from_secs(120),
+                |n| n.done,
+                Duration::from_secs(2),
+            )
+            .expect("run");
+            (node.rounds_done, node.final_digest.expect("tcp final digest"))
+        }));
+    }
+    let tcp: Vec<(u64, Digest)> =
+        handles.into_iter().map(|h| h.join().expect("node thread")).collect();
+
+    for (i, ((sim_r, sim_d), (tcp_r, tcp_d))) in sim.iter().zip(tcp.iter()).enumerate() {
+        assert_eq!(*sim_r, 3, "sim node {i} rounds");
+        assert_eq!(*tcp_r, 3, "tcp node {i} rounds");
+        assert_eq!(sim_d, &sim[0].1, "sim node {i} diverged");
+        assert_eq!(tcp_d, &tcp[0].1, "tcp node {i} diverged");
+    }
+    assert_eq!(
+        sim[0].1, tcp[0].1,
+        "batched+chunked path: sim and TCP reached different final models"
     );
 }
