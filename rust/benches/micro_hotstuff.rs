@@ -1,5 +1,10 @@
 //! L3 micro-bench: HotStuff consensus throughput and per-view latency in
 //! the simnet (no ML), for the §Perf coordinator numbers.
+//!
+//! Emits `BENCH_hotstuff.json` (via `util::bench::BenchReport`): wall
+//! time per simulated second plus decided views / committed commands /
+//! events per simulated second at each cluster size, so the consensus
+//! perf trajectory is recorded run over run like krum/net.
 mod common;
 
 use std::any::Any;
@@ -8,7 +13,7 @@ use defl::crypto::{KeyRegistry, NodeId};
 use defl::hotstuff::{Action, ByzMode, HotStuff, HsConfig, Msg};
 use defl::metrics::Traffic;
 use defl::net::sim::{Actor, Ctx, SimConfig, SimNet};
-use defl::util::bench::bench;
+use defl::util::bench::{bench, BenchReport};
 use defl::util::{Decode, Encode};
 
 struct Node {
@@ -74,15 +79,29 @@ fn run_views(n: usize, sim_us: u64) -> (u64, u64, u64) {
 
 fn main() {
     common::bench_scale();
+    let mut report = BenchReport::new("micro_hotstuff");
     println!("== micro: HotStuff (simulated 1s of consensus, cmd=45B) ==");
     for n in [4usize, 7, 10] {
         let s = bench(&format!("hotstuff n={n} sim-1s"), 1, 5, || {
             std::hint::black_box(run_views(n, 1_000_000));
         });
+        report.record(&s, &[("n", n as f64)]);
         let (views, cmds, events) = run_views(n, 1_000_000);
+        report.record_metrics(
+            &format!("hotstuff/sim1s n={n}"),
+            &[("n", n as f64)],
+            &[
+                ("views_per_sim_s", views as f64),
+                ("cmds_per_sim_s", cmds as f64),
+                ("events_per_sim_s", events as f64),
+            ],
+        );
         println!(
             "  n={n}: {views} views, {cmds} cmds committed per simulated second, {events} events, wall {:.1} ms/sim-s",
             s.mean_ms()
         );
     }
+    let path = common::bench_report_path("BENCH_hotstuff.json");
+    report.write(&path).expect("write BENCH_hotstuff.json");
+    println!("wrote {} ({} entries)", path.display(), report.len());
 }

@@ -85,6 +85,7 @@ fn main() {
             chunk_bytes: 0,
             batch_consensus: batch,
             timeout_base_us: 200_000,
+            fetch_retry_us: 50_000,
         };
         let batched = run_cluster(&mk(true), 21);
         let unbatched = run_cluster(&mk(false), 21);
@@ -140,6 +141,7 @@ fn main() {
                 chunk_bytes: chunk,
                 batch_consensus: true,
                 timeout_base_us: 200_000,
+                fetch_retry_us: 50_000,
             };
             let r = run_cluster(&cfg, 33);
             let bpr = r.weights_bytes as f64 / r.rounds as f64;

@@ -1,16 +1,40 @@
 //! L2 micro-bench: PJRT execution latency of the train / eval / init /
 //! fedavg artifacts — the per-round compute costs of every system.
+//!
+//! Emits `BENCH_runtime.json` (via `util::bench::BenchReport`) so the
+//! runtime perf trajectory is recorded run over run like krum/net. The
+//! native fedavg rows need no artifacts, so the report is never empty in
+//! CI; the PJRT cases self-skip when `artifacts/` is absent.
 mod common;
 
 use defl::config::Model;
 use defl::runtime::Batch;
-use defl::util::bench::bench;
+use defl::util::bench::{bench, BenchReport};
 use defl::util::Pcg;
 
 fn main() {
     common::bench_scale();
+    let mut report = BenchReport::new("micro_runtime");
+
+    // Artifact-free baseline: the native weighted-mean aggregation pass
+    // (the fallback every node runs when no fedavg artifact is exported).
+    println!("== micro: native fedavg (no artifacts needed) ==");
+    for dim in [1usize << 14, 1 << 17] {
+        let rows: Vec<Vec<f32>> = (0..8)
+            .map(|i| (0..dim).map(|j| (i * dim + j) as f32 * 1e-6).collect())
+            .collect();
+        let sw = vec![1.0f32; 8];
+        let s = bench(&format!("native/fedavg n=8 d={dim}"), 2, 20, || {
+            std::hint::black_box(defl::krum::fedavg(&rows, &sw).unwrap());
+        });
+        report.record(&s, &[("n", 8.0), ("d", dim as f64)]);
+    }
+
     for model in [Model::CifarCnn, Model::SentMlp] {
-        let engine = common::engine(model);
+        let Some(engine) = common::try_engine(model) else {
+            println!("skipping {} PJRT cases: artifacts not built", model.name());
+            continue;
+        };
         let meta = engine.meta().clone();
         println!("\n== micro: runtime {} (D={}) ==", model.name(), meta.dim);
         let theta = engine.init_params(1).unwrap();
@@ -26,18 +50,30 @@ fn main() {
         };
         let y: Vec<i32> = (0..meta.batch).map(|_| rng.gen_range(meta.classes as u64) as i32).collect();
 
-        bench("init_params", 2, 20, || {
+        // Every row carries the model prefix: the two models share this
+        // report, and trajectory tooling keys rows by name.
+        let d = meta.dim as f64;
+        let name = model.name();
+        let s = bench(&format!("{name}/init_params"), 2, 20, || {
             std::hint::black_box(engine.init_params(7).unwrap());
         });
-        bench("train_step (fwd+bwd+pallas sgd)", 2, 20, || {
+        report.record(&s, &[("d", d)]);
+        let s = bench(&format!("{name}/train_step (fwd+bwd+pallas sgd)"), 2, 20, || {
             std::hint::black_box(engine.train_step(&theta, &x, &y, 0.05).unwrap());
         });
-        bench("eval_batch", 2, 20, || {
+        report.record(&s, &[("d", d)]);
+        let s = bench(&format!("{name}/eval_batch"), 2, 20, || {
             std::hint::black_box(engine.eval_batch(&theta, &x, &y).unwrap());
         });
+        report.record(&s, &[("d", d)]);
         let rows: Vec<Vec<f32>> = (0..4).map(|_| theta.clone()).collect();
-        bench("fedavg n=4", 2, 20, || {
+        let s = bench(&format!("{name}/fedavg n=4"), 2, 20, || {
             std::hint::black_box(engine.fedavg(&rows, &[1.0; 4]).unwrap());
         });
+        report.record(&s, &[("n", 4.0), ("d", d)]);
     }
+
+    let path = common::bench_report_path("BENCH_runtime.json");
+    report.write(&path).expect("write BENCH_runtime.json");
+    println!("wrote {} ({} entries)", path.display(), report.len());
 }

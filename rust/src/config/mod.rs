@@ -201,6 +201,12 @@ pub struct ExperimentConfig {
     /// pending txs piggybacked on `NewView`) instead of per-tx gossip
     /// broadcasts. Off = the legacy path, kept for overhead comparisons.
     pub batch_consensus: bool,
+    /// Storage-layer pull protocol: tick period AND per-holder reply
+    /// timeout for digest-addressed blob fetches (a referenced blob
+    /// missing from the pool — lost chunk, healed replica — is pulled
+    /// from the committing node first, rotating to other holders on
+    /// timeout, miss, or a digest-mismatched reply).
+    pub fetch_retry_ms: u64,
 }
 
 impl Default for ExperimentConfig {
@@ -223,6 +229,7 @@ impl Default for ExperimentConfig {
             gst_lt_ms: 2_000,
             chunk_bytes: 256 * 1024,
             batch_consensus: true,
+            fetch_retry_ms: 150,
         }
     }
 }

@@ -28,10 +28,11 @@ use crate::net::transport::{Actor, Ctx};
 use crate::util::{Decode, Encode, Pcg};
 use crate::weights::Weights;
 
+use super::pull::{self, receive_weight_frame, FetchConfig, Puller, TIMER_FETCH};
 use super::replica::{execute_decided_cmds, ReplicaState};
-use super::tx::{multicast_blob, receive_weight_frame, Tx, WeightBlob};
+use super::tx::{multicast_blob, Tx, WeightBlob};
 
-/// Timer namespaces (match `DeflNode`).
+/// Timer namespaces (match `DeflNode`; `pull::TIMER_FETCH` is 1 << 60).
 const TIMER_HS: u64 = 1 << 62;
 const TIMER_GST: u64 = 1 << 61;
 
@@ -52,6 +53,8 @@ pub struct LiteConfig {
     pub batch_consensus: bool,
     /// HotStuff base view timeout (µs).
     pub timeout_base_us: u64,
+    /// Pull-protocol tick period / per-holder fetch timeout (µs).
+    pub fetch_retry_us: u64,
 }
 
 impl Default for LiteConfig {
@@ -65,6 +68,7 @@ impl Default for LiteConfig {
             chunk_bytes: 0,
             batch_consensus: true,
             timeout_base_us: 100_000,
+            fetch_retry_us: 50_000,
         }
     }
 }
@@ -78,6 +82,7 @@ pub struct LiteNode {
     pub replica: ReplicaState,
     pool: WeightPool,
     chunks: ChunkAssembler,
+    puller: Puller,
     theta: Weights,
     /// Highest round whose own UPD executed Ok (duplicate-decision guard).
     l_round: u64,
@@ -105,6 +110,13 @@ impl LiteNode {
             replica: ReplicaState::new(cfg.n_nodes, agg_quorum),
             pool: WeightPool::new(2),
             chunks: ChunkAssembler::new(1 << 28),
+            puller: Puller::new(FetchConfig {
+                retry_us: cfg.fetch_retry_us,
+                serve_budget_bytes: 16 << 20,
+                serve_budget_reqs: 256,
+                chunk_bytes: cfg.chunk_bytes,
+                ..Default::default()
+            }),
             theta: Weights::new(vec![0.0f32; cfg.dim]),
             l_round: 0,
             round_in_flight: None,
@@ -123,13 +135,23 @@ impl LiteNode {
         &self.hs
     }
 
+    pub fn puller(&self) -> &Puller {
+        &self.puller
+    }
+
+    pub fn puller_mut(&mut self) -> &mut Puller {
+        &mut self.puller
+    }
+
     fn apply_actions(&mut self, ctx: &mut dyn Ctx, actions: Vec<Action>) {
+        let mut executed = false;
         for act in actions {
             match act {
                 Action::Send { to, msg } => ctx.send(to, Traffic::Consensus, msg.to_bytes()),
                 Action::Broadcast { msg } => ctx.broadcast(Traffic::Consensus, msg.to_bytes()),
                 Action::SetTimer { delay_us, epoch } => ctx.set_timer(delay_us, TIMER_HS | epoch),
                 Action::Deliver { cmds, .. } => {
+                    executed = true;
                     let exec = execute_decided_cmds(
                         &mut self.replica,
                         self.id,
@@ -140,9 +162,13 @@ impl LiteNode {
                     if exec.advanced {
                         self.pool.gc(self.replica.r_round);
                         self.chunks.gc(self.replica.r_round.saturating_sub(1));
+                        self.puller.on_round();
                     }
                 }
             }
+        }
+        if executed {
+            pull::refresh_wants(&mut self.puller, &self.replica, &self.pool, ctx, self.id);
         }
     }
 
@@ -176,6 +202,9 @@ impl LiteNode {
     fn try_start_round(&mut self, ctx: &mut dyn Ctx) {
         if self.done {
             return;
+        }
+        if pull::awaiting_blobs(&self.puller, &self.replica, &self.pool) {
+            return; // a pull in flight will re-trigger this
         }
         if self.replica.r_round >= self.cfg.rounds {
             self.finish();
@@ -225,14 +254,18 @@ impl Actor for LiteNode {
     fn on_message(&mut self, ctx: &mut dyn Ctx, from: NodeId, class: Traffic, bytes: &[u8]) {
         match class {
             Traffic::Weights => {
-                if let Err(e) = receive_weight_frame(
+                match receive_weight_frame(
                     &mut self.pool,
                     &mut self.chunks,
+                    &mut self.puller,
+                    ctx,
                     self.replica.r_round,
                     from,
                     bytes,
                 ) {
-                    log::debug!("lite n{}: weight frame rejected: {e:#}", self.id);
+                    Ok(true) => self.try_start_round(ctx),
+                    Ok(false) => {}
+                    Err(e) => log::debug!("lite n{}: weight frame rejected: {e:#}", self.id),
                 }
             }
             Traffic::Consensus => {
@@ -262,6 +295,9 @@ impl Actor for LiteNode {
             let mut out = Vec::new();
             self.hs.submit_and_gossip(agg_tx.to_bytes(), &mut out);
             self.apply_actions(ctx, out);
+            self.try_start_round(ctx);
+        } else if id & TIMER_FETCH != 0 {
+            pull::on_fetch_timer(&mut self.puller, &self.pool, &self.chunks, ctx);
             self.try_start_round(ctx);
         }
     }

@@ -6,13 +6,14 @@
 
 pub mod lite;
 pub mod node;
+pub mod pull;
 pub mod replica;
 pub mod tx;
 
 pub use lite::{lite_cluster, LiteConfig, LiteNode};
 pub use node::{DeflNode, NodeStats};
+pub use pull::{receive_weight_frame, FetchConfig, FetchStats, Puller};
 pub use replica::{execute_decided_cmds, ExecOutcome, ReplicaState, TxResponse};
 pub use tx::{
-    decode_cmd_txs, multicast_blob, receive_weight_frame, BlobChunk, Tx, TxBatch, WeightBlob,
-    WeightMsg,
+    decode_cmd_txs, multicast_blob, BlobChunk, BlobFetch, Tx, TxBatch, WeightBlob, WeightMsg,
 };

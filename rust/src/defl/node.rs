@@ -35,8 +35,9 @@ use crate::runtime::{AggPath, Engine};
 use crate::util::{Decode, Encode};
 use crate::weights::Weights;
 
+use super::pull::{self, receive_weight_frame, FetchConfig, Puller, TIMER_FETCH};
 use super::replica::{execute_decided_cmds, ReplicaState};
-use super::tx::{multicast_blob, receive_weight_frame, Tx, TxBatch, WeightBlob};
+use super::tx::{multicast_blob, Tx, TxBatch, WeightBlob};
 
 /// Per-sender memory budget for blobs mid-reassembly (far above any
 /// model herein; the budget only exists so a Byzantine sender cannot pin
@@ -44,7 +45,8 @@ use super::tx::{multicast_blob, receive_weight_frame, Tx, TxBatch, WeightBlob};
 /// starves honest senders' chunks).
 const CHUNK_ASM_CAP: u64 = 256 << 20;
 
-/// Timer namespaces (HotStuff epochs vs client GST_LT deadlines).
+/// Timer namespaces (HotStuff epochs and client GST_LT deadlines; the
+/// storage-layer pull ticker uses `pull::TIMER_FETCH` = 1 << 60).
 const TIMER_HS: u64 = 1 << 62;
 const TIMER_GST: u64 = 1 << 61;
 
@@ -60,6 +62,8 @@ pub struct NodeStats {
     /// Aggregations served by the AOT krum/fedavg artifact vs native rust.
     pub agg_artifact: u64,
     pub agg_native: u64,
+    /// Blobs recovered through the digest-addressed pull protocol.
+    pub fetched_blobs: u64,
 }
 
 pub struct DeflNode {
@@ -75,6 +79,7 @@ pub struct DeflNode {
     pub replica: ReplicaState,
     pool: WeightPool,
     chunks: ChunkAssembler,
+    puller: Puller,
     atk_rng: crate::util::Pcg,
 
     l_round: u64,
@@ -124,6 +129,13 @@ impl DeflNode {
             replica: ReplicaState::new(n, agg_quorum),
             pool: WeightPool::new(cfg.tau),
             chunks: ChunkAssembler::new(CHUNK_ASM_CAP),
+            puller: Puller::new(FetchConfig {
+                retry_us: cfg.fetch_retry_ms * 1000,
+                serve_budget_bytes: CHUNK_ASM_CAP,
+                serve_budget_reqs: 1024,
+                chunk_bytes: cfg.chunk_bytes,
+                ..Default::default()
+            }),
             atk_rng,
             l_round: 0,
             theta: Weights::new(theta0),
@@ -144,6 +156,7 @@ impl DeflNode {
     }
 
     fn apply_actions(&mut self, ctx: &mut dyn Ctx, actions: Vec<Action>) {
+        let mut executed = false;
         for act in actions {
             match act {
                 Action::Send { to, msg } => ctx.send(to, Traffic::Consensus, msg.to_bytes()),
@@ -151,6 +164,7 @@ impl DeflNode {
                 Action::SetTimer { delay_us, epoch } => ctx.set_timer(delay_us, TIMER_HS | epoch),
                 Action::Deliver { cmds, .. } => {
                     // Algorithm 2: execute the ordered transactions.
+                    executed = true;
                     let exec = execute_decided_cmds(
                         &mut self.replica,
                         self.id,
@@ -165,11 +179,15 @@ impl DeflNode {
                         // Same retention horizon for blobs mid-reassembly.
                         self.chunks
                             .gc(self.replica.r_round.saturating_sub(self.cfg.tau as u64 - 1));
+                        self.puller.on_round();
                         self.stats.pool_bytes = self.pool.bytes();
                         self.stats.pool_peak_bytes = self.pool.peak_bytes();
                     }
                 }
             }
+        }
+        if executed {
+            pull::refresh_wants(&mut self.puller, &self.replica, &self.pool, ctx, self.id);
         }
     }
 
@@ -228,6 +246,9 @@ impl DeflNode {
     fn try_start_round(&mut self, ctx: &mut dyn Ctx) {
         if self.done || self.l_round > self.replica.r_round {
             return;
+        }
+        if pull::awaiting_blobs(&self.puller, &self.replica, &self.pool) {
+            return; // a pull in flight will re-trigger this
         }
         let target = self.replica.r_round + 1;
         if self.round_in_flight == Some(target) {
@@ -315,6 +336,7 @@ impl DeflNode {
         });
         self.stats.pool_peak_bytes = self.pool.peak_bytes();
         self.stats.pool_bytes = self.pool.bytes();
+        self.stats.fetched_blobs = self.puller.stats.blobs_recovered;
     }
 
     pub fn pool(&self) -> &WeightPool {
@@ -323,6 +345,10 @@ impl DeflNode {
 
     pub fn hotstuff(&self) -> &HotStuff {
         &self.hs
+    }
+
+    pub fn puller(&self) -> &Puller {
+        &self.puller
     }
 }
 
@@ -339,11 +365,18 @@ impl Actor for DeflNode {
             Traffic::Weights => match receive_weight_frame(
                 &mut self.pool,
                 &mut self.chunks,
+                &mut self.puller,
+                ctx,
                 self.replica.r_round,
                 from,
                 bytes,
             ) {
-                Ok(true) => self.stats.pool_peak_bytes = self.pool.peak_bytes(),
+                Ok(true) => {
+                    self.stats.pool_peak_bytes = self.pool.peak_bytes();
+                    // A recovered blob may be the one the round is held
+                    // on.
+                    self.try_start_round(ctx);
+                }
                 Ok(false) => {}
                 Err(e) => log::debug!("n{}: weight frame rejected: {e:#}", self.id),
             },
@@ -377,6 +410,9 @@ impl Actor for DeflNode {
             let mut out = Vec::new();
             self.hs.submit_and_gossip(agg_tx.to_bytes(), &mut out);
             self.apply_actions(ctx, out);
+            self.try_start_round(ctx);
+        } else if id & TIMER_FETCH != 0 {
+            pull::on_fetch_timer(&mut self.puller, &self.pool, &self.chunks, ctx);
             self.try_start_round(ctx);
         }
     }

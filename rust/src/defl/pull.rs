@@ -1,0 +1,925 @@
+//! Digest-addressed blob pull protocol — the storage layer's
+//! retransmission and refill path.
+//!
+//! Chunked multicast (PR 3) has no retransmission: a receiver that loses
+//! even one [`super::tx::BlobChunk`] silently drops the whole blob, and a
+//! replica healed from a partition has a replayed decided log but an
+//! empty weight pool. [`Puller`] closes both holes: any node can request
+//! a blob — whole, or exactly the byte ranges its partial is missing —
+//! by SHA-256 digest from any peer holding it
+//! ([`super::tx::WeightMsg::Fetch`]), and replies reuse the zero-copy
+//! [`crate::weights::Weights::as_bytes`] chunking plus the existing
+//! [`ChunkAssembler`] so every recovered tensor is digest-verified before
+//! it may enter the pool.
+//!
+//! Robustness contract:
+//! * **Serving is budgeted per peer** (bytes and request count per round
+//!   window), so a Byzantine requester can neither mine honest bandwidth
+//!   nor starve other requesters — it exhausts only its own allowance.
+//! * **Fetching rotates holders**: the first attempt asks the blob's
+//!   origin for the missing ranges (cheap retransmission); a timeout, a
+//!   [`super::tx::WeightMsg::FetchMiss`], or a digest-mismatched reply
+//!   rotates deterministically to the next candidate holder. A peer that
+//!   served wrong bytes is blacklisted for that digest.
+//! * **Replies cannot poison**: a `FetchReply` chunk is only accepted for
+//!   a digest this node currently wants, feeds the `(sender, digest)`-
+//!   keyed assembler, and the stitched tensor must hash to the requested
+//!   digest — a lying holder costs one rotation, never a wrong blob.
+//! * **Wants are bounded**: only blobs referenced by the replica state
+//!   (W^CUR / W^LAST) are ever wanted, and a want that survives
+//!   `max_cycles` full rotations is abandoned (the round proceeds with a
+//!   dropped aggregation row, exactly the pre-pull behaviour).
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use anyhow::Result;
+
+use crate::crypto::{Digest, NodeId};
+use crate::mempool::{ChunkAssembler, WeightPool};
+use crate::metrics::Traffic;
+use crate::net::transport::Ctx;
+use crate::util::{Decode, Encode};
+
+use super::replica::ReplicaState;
+use super::tx::{BlobChunk, BlobFetch, WeightMsg, CHUNK_ROUND_SLACK};
+
+/// Most missing ranges requested individually before falling back to a
+/// whole-blob fetch (bounds Fetch-frame fan-out for swiss-cheese partials).
+const MAX_FETCH_RANGES: usize = 4;
+
+/// Timer-id namespace of the pull ticker (disjoint from the nodes'
+/// `TIMER_HS = 1 << 62` and `TIMER_GST = 1 << 61` namespaces).
+pub const TIMER_FETCH: u64 = 1 << 60;
+
+/// Pull-protocol knobs.
+#[derive(Debug, Clone)]
+pub struct FetchConfig {
+    /// Tick period AND per-holder reply timeout (µs): a want whose
+    /// in-flight request is older than this rotates to the next holder.
+    pub retry_us: u64,
+    /// Reply payload bytes served per requesting peer per round window.
+    pub serve_budget_bytes: u64,
+    /// Fetch requests served per requesting peer per round window.
+    pub serve_budget_reqs: u32,
+    /// Reply chunk budget in bytes (0 = one chunk per reply).
+    pub chunk_bytes: usize,
+    /// Full rotations through every candidate holder before a want is
+    /// abandoned and the round proceeds without the blob.
+    pub max_cycles: u32,
+}
+
+impl Default for FetchConfig {
+    fn default() -> Self {
+        FetchConfig {
+            retry_us: 50_000,
+            serve_budget_bytes: 64 << 20,
+            serve_budget_reqs: 256,
+            chunk_bytes: 0,
+            max_cycles: 2,
+        }
+    }
+}
+
+/// Pull-protocol counters (surfaced by node stats and the fault suite).
+#[derive(Debug, Default, Clone)]
+pub struct FetchStats {
+    /// Fetch frames sent.
+    pub fetches_sent: u64,
+    /// Blobs recovered through FetchReply reassembly.
+    pub blobs_recovered: u64,
+    /// FetchReply bursts served to peers.
+    pub replies_served: u64,
+    /// FetchMiss frames sent (digest not in our pool).
+    pub misses_sent: u64,
+    /// FetchMiss frames received from the current holder.
+    pub misses_recv: u64,
+    /// Holder rotations (timeout, miss, or bad reply).
+    pub rotations: u64,
+    /// Replies rejected by the assembler (digest mismatch / malformed).
+    pub bad_replies: u64,
+    /// Requests denied by the per-peer serve budgets.
+    pub serve_denied: u64,
+    /// Wants abandoned after `max_cycles` fruitless rotations.
+    pub gave_up: u64,
+}
+
+/// One outstanding blob want.
+#[derive(Debug)]
+struct Want {
+    /// Round the blob is referenced at (pool round tag on recovery).
+    round: u64,
+    /// Node whose UPD committed the digest — the first holder asked.
+    origin: NodeId,
+    /// Rotation cursor into the origin-first holder ring.
+    attempt: u32,
+    /// Completed full rotations (give-up counter).
+    cycles: u32,
+    /// Holders that served digest-mismatched bytes for this digest.
+    bad: HashSet<NodeId>,
+    /// When the next (re-)request is due (µs, transport clock).
+    next_due_us: u64,
+    /// Holder of the in-flight request, if any.
+    asked: Option<NodeId>,
+}
+
+/// Requester + server state of the pull protocol. One per node, driven
+/// by the embedding actor's fetch timer and `Traffic::Weights` frames.
+#[derive(Debug)]
+pub struct Puller {
+    cfg: FetchConfig,
+    /// Outstanding wants, keyed by digest. BTreeMap so tick order is
+    /// deterministic (the fault suite replays byte-identical schedules).
+    wants: BTreeMap<Digest, Want>,
+    /// Digests abandoned after `max_cycles` rotations. `want()` refuses
+    /// them, so the give-up actually STICKS while the digest stays
+    /// referenced (the want-set is re-derived from the replica state
+    /// after every executed batch) — pruned alongside the references,
+    /// and cleared per digest if the blob arrives late after all.
+    given_up: HashSet<Digest>,
+    /// Reply payload bytes served per peer this round window.
+    served_bytes: HashMap<NodeId, u64>,
+    /// Fetch requests served per peer this round window.
+    served_reqs: HashMap<NodeId, u32>,
+    /// The embedding node's fetch timer is currently armed.
+    pub timer_armed: bool,
+    /// Byzantine test knob: serve digest-mismatched reply payloads.
+    pub corrupt_serve: bool,
+    pub stats: FetchStats,
+}
+
+impl Puller {
+    pub fn new(cfg: FetchConfig) -> Puller {
+        Puller {
+            cfg,
+            wants: BTreeMap::new(),
+            given_up: HashSet::new(),
+            served_bytes: HashMap::new(),
+            served_reqs: HashMap::new(),
+            timer_armed: false,
+            corrupt_serve: false,
+            stats: FetchStats::default(),
+        }
+    }
+
+    pub fn cfg(&self) -> &FetchConfig {
+        &self.cfg
+    }
+
+    pub fn has_wants(&self) -> bool {
+        !self.wants.is_empty()
+    }
+
+    pub fn is_wanted(&self, digest: &Digest) -> bool {
+        self.wants.contains_key(digest)
+    }
+
+    /// Register a want (no-op when already wanted or already abandoned
+    /// after a full give-up). The first request goes out on the first
+    /// tick at least `retry_us` after registration, giving in-flight
+    /// multicast chunks a grace window.
+    pub fn want(&mut self, digest: Digest, round: u64, origin: NodeId, now_us: u64) {
+        if self.given_up.contains(&digest) {
+            return;
+        }
+        let due = now_us + self.cfg.retry_us;
+        self.wants.entry(digest).or_insert_with(|| Want {
+            round,
+            origin,
+            attempt: 0,
+            cycles: 0,
+            bad: HashSet::new(),
+            next_due_us: due,
+            asked: None,
+        });
+    }
+
+    /// The blob arrived (any path) — drop the want (and forgive an
+    /// earlier give-up; the digest is no longer a lost cause).
+    pub fn fulfilled(&mut self, digest: &Digest) {
+        self.wants.remove(digest);
+        self.given_up.remove(digest);
+    }
+
+    /// Drop wants (and give-up tombstones) whose digest is no longer
+    /// referenced by the replica state (the round moved past them).
+    pub fn retain_referenced(&mut self, referenced: &HashSet<Digest>) {
+        self.wants.retain(|d, _| referenced.contains(d));
+        self.given_up.retain(|d| referenced.contains(d));
+    }
+
+    /// Round advanced: open a fresh serve-budget window.
+    pub fn on_round(&mut self) {
+        self.served_bytes.clear();
+        self.served_reqs.clear();
+    }
+
+    /// Issue due (re-)requests, rotating past unresponsive holders and
+    /// abandoning wants that exhausted `max_cycles` rotations. Driven by
+    /// the embedding node's fetch timer.
+    pub fn tick(&mut self, ctx: &mut dyn Ctx, pool: &WeightPool, chunks: &ChunkAssembler) {
+        let now = ctx.now_us();
+        let me = ctx.node();
+        let n = ctx.n_nodes() as NodeId;
+        let mut resolved: Vec<Digest> = Vec::new();
+        let mut sends: Vec<(NodeId, Vec<u8>)> = Vec::new();
+        for (digest, w) in self.wants.iter_mut() {
+            if pool.contains(digest) {
+                resolved.push(*digest);
+                continue;
+            }
+            if w.next_due_us > now {
+                continue;
+            }
+            if w.asked.take().is_some() {
+                // The in-flight request produced nothing before its
+                // timeout: rotate.
+                self.stats.rotations += 1;
+            }
+            // Origin-first ring of candidate holders, excluding self.
+            let ring: Vec<NodeId> =
+                (0..n).map(|i| (w.origin + i) % n).filter(|p| *p != me).collect();
+            let ring_len = ring.len() as u32;
+            if ring_len == 0 || w.cycles >= self.cfg.max_cycles {
+                self.stats.gave_up += 1;
+                self.given_up.insert(*digest);
+                resolved.push(*digest);
+                continue;
+            }
+            let mut holder = None;
+            for _ in 0..ring_len {
+                let cand = ring[(w.attempt % ring_len) as usize];
+                w.attempt += 1;
+                if w.attempt % ring_len == 0 {
+                    w.cycles += 1;
+                }
+                if !w.bad.contains(&cand) {
+                    holder = Some(cand);
+                    break;
+                }
+            }
+            let holder = match holder {
+                Some(h) => h,
+                None => {
+                    // Every candidate served bad bytes at least once;
+                    // forgive and retry the ring from the top.
+                    w.bad.clear();
+                    let cand = ring[(w.attempt % ring_len) as usize];
+                    w.attempt += 1;
+                    if w.attempt % ring_len == 0 {
+                        w.cycles += 1;
+                    }
+                    cand
+                }
+            };
+            w.asked = Some(holder);
+            w.next_due_us = now + self.cfg.retry_us;
+            // Asking the origin: pull exactly the ranges its partial is
+            // missing (the reply completes the SAME (origin, digest)
+            // partial). Any other holder: pull the whole image.
+            let ranges: Vec<(u32, u32)> = if holder == w.origin {
+                match chunks.missing_ranges(holder, digest) {
+                    Some(rs) if !rs.is_empty() && rs.len() <= MAX_FETCH_RANGES => rs,
+                    _ => vec![(0, 0)],
+                }
+            } else {
+                vec![(0, 0)]
+            };
+            for (from_byte, to_byte) in ranges {
+                let fetch = BlobFetch { digest: *digest, from_byte, to_byte };
+                sends.push((holder, WeightMsg::Fetch(fetch).to_bytes()));
+                self.stats.fetches_sent += 1;
+            }
+        }
+        for d in resolved {
+            self.wants.remove(&d);
+        }
+        for (to, bytes) in sends {
+            ctx.send(to, Traffic::Weights, bytes);
+        }
+    }
+
+    /// Serve one Fetch request against the local pool, within the
+    /// requester's budgets. A digest we do not hold earns a FetchMiss so
+    /// the requester rotates immediately instead of waiting out the
+    /// timeout.
+    fn serve_fetch(&mut self, ctx: &mut dyn Ctx, pool: &WeightPool, from: NodeId, fetch: BlobFetch) {
+        let reqs = self.served_reqs.entry(from).or_default();
+        if *reqs >= self.cfg.serve_budget_reqs {
+            self.stats.serve_denied += 1;
+            return;
+        }
+        *reqs += 1;
+        let Some((round, weights)) = pool.entry(&fetch.digest) else {
+            self.stats.misses_sent += 1;
+            let miss = WeightMsg::FetchMiss { digest: fetch.digest };
+            ctx.send(from, Traffic::Weights, miss.to_bytes());
+            return;
+        };
+        let image = weights.as_bytes();
+        let total = image.len();
+        if total > u32::MAX as usize {
+            return;
+        }
+        let (lo, hi) = if fetch.from_byte == 0 && fetch.to_byte == 0 {
+            (0usize, total)
+        } else {
+            let lo = fetch.from_byte as usize;
+            let hi = (fetch.to_byte as usize).min(total);
+            if lo >= hi {
+                self.stats.serve_denied += 1;
+                return;
+            }
+            (lo, hi)
+        };
+        let span = (hi - lo) as u64;
+        let used = self.served_bytes.entry(from).or_default();
+        if *used + span > self.cfg.serve_budget_bytes {
+            self.stats.serve_denied += 1;
+            return;
+        }
+        *used += span;
+        let step = if self.cfg.chunk_bytes == 0 { hi - lo } else { self.cfg.chunk_bytes };
+        let mut off = lo;
+        while off < hi {
+            let end = (off + step).min(hi);
+            let mut payload = image[off..end].to_vec();
+            if self.corrupt_serve {
+                for b in payload.iter_mut() {
+                    *b ^= 0x5a;
+                }
+            }
+            let chunk = BlobChunk {
+                node: ctx.node(),
+                round,
+                digest: fetch.digest,
+                total_bytes: total as u32,
+                offset: off as u32,
+                payload,
+            };
+            ctx.send(from, Traffic::Weights, WeightMsg::FetchReply(chunk).to_bytes());
+            off = end;
+        }
+        self.stats.replies_served += 1;
+    }
+
+    /// A FetchReply chunk arrived. Unsolicited digests are ignored;
+    /// wanted ones feed the assembler, and a reply that fails the
+    /// digest check blacklists the holder and rotates on the next tick.
+    fn on_fetch_reply(
+        &mut self,
+        pool: &mut WeightPool,
+        chunks: &mut ChunkAssembler,
+        replica_round: u64,
+        from: NodeId,
+        chunk: BlobChunk,
+    ) -> Result<bool> {
+        let digest = chunk.digest;
+        let Some(round) = self.wants.get(&digest).map(|w| w.round) else {
+            return Ok(false); // unsolicited reply: ignore
+        };
+        chunks.set_round_horizon(replica_round + CHUNK_ROUND_SLACK);
+        match chunks.accept(from, chunk) {
+            Ok(Some(blob)) => {
+                pool.put(round.max(blob.round), blob.weights);
+                self.wants.remove(&digest);
+                self.stats.blobs_recovered += 1;
+                Ok(true)
+            }
+            Ok(None) => Ok(false),
+            Err(e) => {
+                self.stats.bad_replies += 1;
+                if let Some(w) = self.wants.get_mut(&digest) {
+                    w.bad.insert(from);
+                    if w.asked == Some(from) {
+                        w.asked = None;
+                        w.next_due_us = 0; // rotate on the next tick
+                        self.stats.rotations += 1;
+                    }
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// The asked holder reported it does not have the blob: rotate on
+    /// the next tick. Misses from anyone else are ignored (a forged miss
+    /// cannot cancel a fetch that a real holder is answering).
+    fn on_fetch_miss(&mut self, from: NodeId, digest: Digest) {
+        self.stats.misses_recv += 1;
+        if let Some(w) = self.wants.get_mut(&digest) {
+            if w.asked == Some(from) {
+                w.asked = None;
+                w.next_due_us = 0;
+                self.stats.rotations += 1;
+            }
+        }
+    }
+}
+
+/// Reconcile the want-set with the replica state, shared by `DeflNode`
+/// and `LiteNode` (one implementation — the sim-vs-TCP parity suite
+/// depends on the nodes behaving identically): every referenced blob
+/// missing from `pool` becomes a want (origin = the committing node),
+/// wants and give-up tombstones the round moved past are dropped, and
+/// the fetch ticker is armed while any want remains. A healed replica's
+/// replayed UPD txs land in W^CUR/W^LAST, so this single hook also
+/// refills its pool after catch-up.
+pub fn refresh_wants(
+    puller: &mut Puller,
+    replica: &ReplicaState,
+    pool: &WeightPool,
+    ctx: &mut dyn Ctx,
+    my_id: NodeId,
+) {
+    let refs = replica.referenced_blobs();
+    let referenced: HashSet<Digest> = refs.iter().map(|(_, _, d)| *d).collect();
+    puller.retain_referenced(&referenced);
+    let now = ctx.now_us();
+    for (node, round, digest) in refs {
+        if node != my_id && !pool.contains(&digest) {
+            puller.want(digest, round, node, now);
+        }
+    }
+    if puller.has_wants() && !puller.timer_armed {
+        puller.timer_armed = true;
+        ctx.set_timer(puller.cfg().retry_us, TIMER_FETCH);
+    }
+}
+
+/// A W^LAST blob is missing but an active fetch is still chasing it:
+/// the node holds its round (aggregation would silently drop the row)
+/// until the pull resolves or gives up, keeping recovery bit-identical
+/// across honest nodes.
+pub fn awaiting_blobs(puller: &Puller, replica: &ReplicaState, pool: &WeightPool) -> bool {
+    replica
+        .last_round_digests()
+        .iter()
+        .any(|(_, d)| !pool.contains(d) && puller.is_wanted(d))
+}
+
+/// The node's `TIMER_FETCH` handler: run one tick and re-arm the timer
+/// while wants remain (the caller re-checks its round afterwards — a
+/// give-up may have just unblocked it).
+pub fn on_fetch_timer(
+    puller: &mut Puller,
+    pool: &WeightPool,
+    chunks: &ChunkAssembler,
+    ctx: &mut dyn Ctx,
+) {
+    puller.timer_armed = false;
+    puller.tick(ctx, pool, chunks);
+    if puller.has_wants() {
+        puller.timer_armed = true;
+        ctx.set_timer(puller.cfg().retry_us, TIMER_FETCH);
+    }
+}
+
+/// Receiver side of the storage layer, shared by `DeflNode` and
+/// `LiteNode` (the sim-vs-TCP parity suite proves these identical, so
+/// the logic must live once): decode a `Traffic::Weights` frame, feed
+/// multicast chunks and fetch replies through the assembler with the
+/// round horizon pinned to the replica round, serve pull requests from
+/// the pool, and deposit completed blobs. Returns whether a whole blob
+/// entered the pool.
+pub fn receive_weight_frame(
+    pool: &mut WeightPool,
+    chunks: &mut ChunkAssembler,
+    puller: &mut Puller,
+    ctx: &mut dyn Ctx,
+    replica_round: u64,
+    from: NodeId,
+    bytes: &[u8],
+) -> Result<bool> {
+    match WeightMsg::from_bytes(bytes)? {
+        WeightMsg::Whole(blob) => {
+            puller.fulfilled(&blob.digest());
+            pool.put(blob.round, blob.weights);
+            Ok(true)
+        }
+        WeightMsg::Chunk(chunk) => {
+            chunks.set_round_horizon(replica_round + CHUNK_ROUND_SLACK);
+            match chunks.accept(from, chunk)? {
+                Some(blob) => {
+                    puller.fulfilled(&blob.digest());
+                    pool.put(blob.round, blob.weights);
+                    Ok(true)
+                }
+                None => Ok(false),
+            }
+        }
+        WeightMsg::Fetch(fetch) => {
+            puller.serve_fetch(ctx, pool, from, fetch);
+            Ok(false)
+        }
+        WeightMsg::FetchReply(chunk) => {
+            puller.on_fetch_reply(pool, chunks, replica_round, from, chunk)
+        }
+        WeightMsg::FetchMiss { digest } => {
+            puller.on_fetch_miss(from, digest);
+            Ok(false)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::defl::tx::{multicast_blob, WeightBlob};
+    use crate::weights::Weights;
+
+    /// Ctx stub: records sends, multicasts, timers; clock is settable.
+    struct StubCtx {
+        node: NodeId,
+        n: usize,
+        now: u64,
+        sends: Vec<(NodeId, Traffic, Vec<u8>)>,
+    }
+
+    impl StubCtx {
+        fn new(node: NodeId, n: usize) -> StubCtx {
+            StubCtx { node, n, now: 0, sends: Vec::new() }
+        }
+
+        fn sent_weight_msgs(&self) -> Vec<(NodeId, WeightMsg)> {
+            self.sends
+                .iter()
+                .map(|(to, class, b)| {
+                    assert_eq!(*class, Traffic::Weights);
+                    (*to, WeightMsg::from_bytes(b).unwrap())
+                })
+                .collect()
+        }
+    }
+
+    impl Ctx for StubCtx {
+        fn node(&self) -> NodeId {
+            self.node
+        }
+        fn n_nodes(&self) -> usize {
+            self.n
+        }
+        fn now_us(&self) -> u64 {
+            self.now
+        }
+        fn send(&mut self, to: NodeId, class: Traffic, bytes: Vec<u8>) {
+            self.sends.push((to, class, bytes));
+        }
+        fn multicast(&mut self, _: Traffic, _: Vec<u8>) {}
+        fn set_timer(&mut self, _: u64, _: u64) {}
+        fn halt(&mut self) {}
+    }
+
+    fn small_cfg() -> FetchConfig {
+        FetchConfig { retry_us: 1_000, chunk_bytes: 64, ..Default::default() }
+    }
+
+    fn tensor(tag: f32, len: usize) -> Weights {
+        Weights::new((0..len).map(|i| tag + i as f32).collect())
+    }
+
+    #[test]
+    fn whole_blob_fetch_roundtrip_between_two_pullers() {
+        // Server holds the blob; requester wants it; one tick + serve +
+        // reply recovers a digest-verified copy.
+        let w = tensor(1.0, 64);
+        let digest = w.digest();
+
+        let mut server_pool = WeightPool::new(2);
+        server_pool.put(1, w.clone());
+        let mut server = Puller::new(small_cfg());
+        let mut server_chunks = ChunkAssembler::new(1 << 20);
+
+        let mut req_pool = WeightPool::new(2);
+        let mut req_chunks = ChunkAssembler::new(1 << 20);
+        let mut requester = Puller::new(small_cfg());
+        requester.want(digest, 1, 1, 0);
+        assert!(requester.is_wanted(&digest));
+
+        // Tick at the due time: a whole-blob Fetch goes to the origin.
+        let mut ctx0 = StubCtx::new(0, 4);
+        ctx0.now = 1_000;
+        requester.tick(&mut ctx0, &req_pool, &req_chunks);
+        let sent = ctx0.sent_weight_msgs();
+        assert_eq!(sent.len(), 1);
+        let (to, msg) = &sent[0];
+        assert_eq!(*to, 1);
+        let WeightMsg::Fetch(f) = msg else { panic!("expected fetch, got {msg:?}") };
+        assert_eq!((f.digest, f.from_byte, f.to_byte), (digest, 0, 0));
+
+        // Server side: serve the request (256-byte image over 64-byte
+        // reply chunks = 4 FetchReply frames).
+        let mut ctx1 = StubCtx::new(1, 4);
+        let frame = sent[0].1.to_bytes();
+        let delivered =
+            receive_weight_frame(&mut server_pool, &mut server_chunks, &mut server, &mut ctx1, 1, 0, &frame)
+                .unwrap();
+        assert!(!delivered);
+        let replies = ctx1.sent_weight_msgs();
+        assert_eq!(replies.len(), 4);
+        assert_eq!(server.stats.replies_served, 1);
+
+        // Requester side: replies reassemble into the verified blob.
+        let mut ctx0 = StubCtx::new(0, 4);
+        let mut completed = false;
+        for (to, reply) in replies {
+            assert_eq!(to, 0);
+            let got = receive_weight_frame(
+                &mut req_pool,
+                &mut req_chunks,
+                &mut requester,
+                &mut ctx0,
+                1,
+                1,
+                &reply.to_bytes(),
+            )
+            .unwrap();
+            completed |= got;
+        }
+        assert!(completed);
+        assert!(req_pool.contains(&digest));
+        assert_eq!(req_pool.get(&digest).unwrap().as_slice(), w.as_slice());
+        assert!(!requester.is_wanted(&digest));
+        assert_eq!(requester.stats.blobs_recovered, 1);
+    }
+
+    #[test]
+    fn first_attempt_pulls_only_the_missing_ranges_from_the_origin() {
+        // Simulate a lost middle chunk of a multicast: the partial holds
+        // chunks 0 and 2 of 4; the fetch asks the origin for the two
+        // missing ranges only, and the replies complete the partial.
+        let w = tensor(3.0, 64); // 256-byte image
+        let blob = WeightBlob { node: 1, round: 2, weights: w.clone() };
+        let digest = w.digest();
+
+        struct Cap(Vec<Vec<u8>>);
+        impl Ctx for Cap {
+            fn node(&self) -> NodeId {
+                1
+            }
+            fn n_nodes(&self) -> usize {
+                4
+            }
+            fn now_us(&self) -> u64 {
+                0
+            }
+            fn send(&mut self, _: NodeId, _: Traffic, _: Vec<u8>) {}
+            fn multicast(&mut self, _: Traffic, bytes: Vec<u8>) {
+                self.0.push(bytes);
+            }
+            fn set_timer(&mut self, _: u64, _: u64) {}
+            fn halt(&mut self) {}
+        }
+        let mut cap = Cap(Vec::new());
+        multicast_blob(&mut cap, &blob, 64);
+        assert_eq!(cap.0.len(), 4);
+
+        let mut pool = WeightPool::new(2);
+        let mut chunks = ChunkAssembler::new(1 << 20);
+        let mut puller = Puller::new(small_cfg());
+        let mut ctx = StubCtx::new(0, 4);
+        // Chunks 1 and 3 are lost; 0 and 2 arrive.
+        for arrived in [cap.0[0].clone(), cap.0[2].clone()] {
+            receive_weight_frame(&mut pool, &mut chunks, &mut puller, &mut ctx, 2, 1, &arrived)
+                .unwrap();
+        }
+        puller.want(digest, 2, 1, 0);
+        let mut ctx = StubCtx::new(0, 4);
+        ctx.now = 1_000;
+        puller.tick(&mut ctx, &pool, &chunks);
+        let sent = ctx.sent_weight_msgs();
+        let ranges: Vec<(u32, u32)> = sent
+            .iter()
+            .map(|(to, m)| {
+                assert_eq!(*to, 1);
+                let WeightMsg::Fetch(f) = m else { panic!("expected fetch") };
+                (f.from_byte, f.to_byte)
+            })
+            .collect();
+        assert_eq!(ranges, vec![(64, 128), (192, 256)]);
+
+        // The origin serves the ranges; replies land in the SAME partial.
+        let mut server_pool = WeightPool::new(2);
+        server_pool.put(2, w.clone());
+        let mut server = Puller::new(small_cfg());
+        let mut server_chunks = ChunkAssembler::new(1 << 20);
+        let mut sctx = StubCtx::new(1, 4);
+        for (_, m) in sent {
+            receive_weight_frame(
+                &mut server_pool,
+                &mut server_chunks,
+                &mut server,
+                &mut sctx,
+                2,
+                0,
+                &m.to_bytes(),
+            )
+            .unwrap();
+        }
+        let mut done = false;
+        let mut rctx = StubCtx::new(0, 4);
+        for (_, reply) in sctx.sent_weight_msgs() {
+            done |= receive_weight_frame(
+                &mut pool,
+                &mut chunks,
+                &mut puller,
+                &mut rctx,
+                2,
+                1,
+                &reply.to_bytes(),
+            )
+            .unwrap();
+        }
+        assert!(done, "ranged replies must complete the original partial");
+        assert_eq!(pool.get(&digest).unwrap().as_slice(), w.as_slice());
+    }
+
+    #[test]
+    fn mismatched_reply_is_rejected_and_rotates_to_an_honest_holder() {
+        let w = tensor(5.0, 32); // 128-byte image
+        let digest = w.digest();
+        let mut pool = WeightPool::new(2);
+        let mut chunks = ChunkAssembler::new(1 << 20);
+        let mut puller = Puller::new(small_cfg());
+        puller.want(digest, 1, 1, 0);
+
+        // Holder ring for origin 1 at node 0 of n=4: [1, 2, 3].
+        let mut ctx = StubCtx::new(0, 4);
+        ctx.now = 1_000;
+        puller.tick(&mut ctx, &pool, &chunks);
+        assert_eq!(ctx.sent_weight_msgs()[0].0, 1);
+
+        // Node 1 serves corrupted bytes (digest mismatch at completion).
+        let mut byz_pool = WeightPool::new(2);
+        byz_pool.put(1, w.clone());
+        let mut byz = Puller::new(small_cfg());
+        byz.corrupt_serve = true;
+        let mut byz_chunks = ChunkAssembler::new(1 << 20);
+        let mut bctx = StubCtx::new(1, 4);
+        let fetch = WeightMsg::Fetch(BlobFetch { digest, from_byte: 0, to_byte: 0 });
+        receive_weight_frame(&mut byz_pool, &mut byz_chunks, &mut byz, &mut bctx, 1, 0, &fetch.to_bytes())
+            .unwrap();
+        let replies = bctx.sent_weight_msgs();
+        assert_eq!(replies.len(), 2, "128 B over 64 B reply chunks");
+
+        let mut rctx = StubCtx::new(0, 4);
+        let mut saw_err = false;
+        for (_, reply) in replies {
+            saw_err |= receive_weight_frame(
+                &mut pool,
+                &mut chunks,
+                &mut puller,
+                &mut rctx,
+                1,
+                1,
+                &reply.to_bytes(),
+            )
+            .is_err();
+        }
+        assert!(saw_err, "mismatched bytes must fail the digest check");
+        assert!(puller.is_wanted(&digest), "want survives a bad reply");
+        assert_eq!(puller.stats.bad_replies, 1);
+
+        // Next tick rotates PAST the blacklisted origin to holder 2.
+        let mut ctx = StubCtx::new(0, 4);
+        ctx.now = 2_000;
+        puller.tick(&mut ctx, &pool, &chunks);
+        let sent = ctx.sent_weight_msgs();
+        assert_eq!(sent.len(), 1);
+        assert_eq!(sent[0].0, 2, "rotation must skip the bad holder");
+        assert!(puller.stats.rotations >= 1);
+    }
+
+    #[test]
+    fn fetch_miss_rotates_and_unsolicited_misses_are_ignored() {
+        let digest = tensor(7.0, 8).digest();
+        let mut puller = Puller::new(small_cfg());
+        let pool = WeightPool::new(2);
+        let chunks = ChunkAssembler::new(1 << 20);
+        puller.want(digest, 1, 2, 0);
+        let mut ctx = StubCtx::new(0, 4);
+        ctx.now = 1_000;
+        puller.tick(&mut ctx, &pool, &chunks);
+        assert_eq!(ctx.sent_weight_msgs()[0].0, 2, "origin asked first");
+        // A forged miss from a peer we did not ask changes nothing.
+        puller.on_fetch_miss(3, digest);
+        let mut ctx = StubCtx::new(0, 4);
+        ctx.now = 1_500;
+        puller.tick(&mut ctx, &pool, &chunks);
+        assert!(ctx.sends.is_empty(), "in-flight request not due yet");
+        // A miss from the asked holder rotates immediately.
+        puller.on_fetch_miss(2, digest);
+        let mut ctx = StubCtx::new(0, 4);
+        ctx.now = 1_600;
+        puller.tick(&mut ctx, &pool, &chunks);
+        assert_eq!(ctx.sent_weight_msgs()[0].0, 3, "rotated to the next holder");
+    }
+
+    #[test]
+    fn serve_budgets_deny_floods_and_reset_per_round() {
+        let w = tensor(2.0, 64); // 256-byte image
+        let mut pool = WeightPool::new(2);
+        pool.put(1, w.clone());
+        let mut puller = Puller::new(FetchConfig {
+            serve_budget_bytes: 300,
+            serve_budget_reqs: 8,
+            chunk_bytes: 0,
+            ..Default::default()
+        });
+        let fetch = |lo, hi| BlobFetch { digest: w.digest(), from_byte: lo, to_byte: hi };
+        let mut ctx = StubCtx::new(1, 4);
+        puller.serve_fetch(&mut ctx, &pool, 0, fetch(0, 0)); // 256 B
+        assert_eq!(puller.stats.replies_served, 1);
+        puller.serve_fetch(&mut ctx, &pool, 0, fetch(0, 0)); // would be 512 B
+        assert_eq!(puller.stats.serve_denied, 1, "byte budget must deny");
+        // Another peer has its own allowance.
+        puller.serve_fetch(&mut ctx, &pool, 2, fetch(0, 128));
+        assert_eq!(puller.stats.replies_served, 2);
+        // Degenerate ranges are denied, not served.
+        puller.serve_fetch(&mut ctx, &pool, 2, fetch(300, 200));
+        assert_eq!(puller.stats.serve_denied, 2);
+        // A new round window restores the budget.
+        puller.on_round();
+        puller.serve_fetch(&mut ctx, &pool, 0, fetch(0, 0));
+        assert_eq!(puller.stats.replies_served, 3);
+        // Request-count budget: exhaust it with misses.
+        let ghost = Digest::of_bytes(b"ghost");
+        for _ in 0..8 {
+            puller.serve_fetch(&mut ctx, &pool, 3, BlobFetch { digest: ghost, from_byte: 0, to_byte: 0 });
+        }
+        let denied_before = puller.stats.serve_denied;
+        puller.serve_fetch(&mut ctx, &pool, 3, fetch(0, 0));
+        assert_eq!(puller.stats.serve_denied, denied_before + 1, "request budget must deny");
+    }
+
+    #[test]
+    fn wants_give_up_after_max_cycles_and_unreferenced_wants_are_dropped() {
+        let pool = WeightPool::new(2);
+        let chunks = ChunkAssembler::new(1 << 20);
+        let mut puller = Puller::new(FetchConfig { retry_us: 100, max_cycles: 2, ..Default::default() });
+        let d = tensor(4.0, 8).digest();
+        puller.want(d, 1, 1, 0);
+        // Ring has 3 holders; 2 cycles = 6 attempts, then give-up.
+        let mut now = 0u64;
+        for _ in 0..16 {
+            now += 200;
+            let mut ctx = StubCtx::new(0, 4);
+            ctx.now = now;
+            puller.tick(&mut ctx, &pool, &chunks);
+            if !puller.has_wants() {
+                break;
+            }
+        }
+        assert!(!puller.has_wants(), "want must eventually give up");
+        assert_eq!(puller.stats.gave_up, 1);
+        assert_eq!(puller.stats.fetches_sent, 6);
+
+        // The give-up STICKS: re-registering the same still-referenced
+        // digest (the nodes re-derive wants after every decided batch)
+        // must not restart the fetch storm…
+        puller.want(d, 1, 1, now);
+        assert!(!puller.has_wants(), "abandoned digest must not be re-wanted");
+        // …until the blob arrives after all, which forgives the digest.
+        puller.fulfilled(&d);
+        puller.want(d, 1, 1, now);
+        assert!(puller.has_wants());
+        puller.fulfilled(&d);
+
+        // retain_referenced drops wants AND tombstones the round moved
+        // past, so an abandoned digest from an old round can recur
+        // later (content addressing) without being blocked forever.
+        let d2 = tensor(6.0, 8).digest();
+        puller.want(d2, 2, 1, 0);
+        puller.retain_referenced(&HashSet::new());
+        assert!(!puller.has_wants());
+    }
+
+    #[test]
+    fn unsolicited_fetch_replies_never_touch_the_pool() {
+        let w = tensor(8.0, 16);
+        let mut pool = WeightPool::new(2);
+        let mut chunks = ChunkAssembler::new(1 << 20);
+        let mut puller = Puller::new(small_cfg());
+        let chunk = BlobChunk {
+            node: 2,
+            round: 1,
+            digest: w.digest(),
+            total_bytes: 64,
+            offset: 0,
+            payload: w.as_bytes().to_vec(),
+        };
+        let mut ctx = StubCtx::new(0, 4);
+        let got = receive_weight_frame(
+            &mut pool,
+            &mut chunks,
+            &mut puller,
+            &mut ctx,
+            1,
+            2,
+            &WeightMsg::FetchReply(chunk).to_bytes(),
+        )
+        .unwrap();
+        assert!(!got);
+        assert!(pool.is_empty(), "unsolicited reply must be ignored");
+        assert!(chunks.is_empty(), "unsolicited reply must not buffer");
+    }
+}

@@ -99,6 +99,24 @@ impl ReplicaState {
             .collect()
     }
 
+    /// Every blob the synchronized state references, as
+    /// `(committing node, round, digest)`: W^LAST entries at `r_round`
+    /// and W^CUR entries at `r_round + 1`. This is the want-set of the
+    /// storage layer's pull protocol — a node whose pool is missing any
+    /// of these (a lost chunk, or a healed replica whose replayed UPD
+    /// txs reference blobs it never received) fetches them by digest.
+    pub fn referenced_blobs(&self) -> Vec<(NodeId, u64, Digest)> {
+        let tag = |set: &[Option<Digest>], round: u64| {
+            set.iter()
+                .enumerate()
+                .filter_map(move |(i, d)| d.map(|d| (i as NodeId, round, d)))
+                .collect::<Vec<_>>()
+        };
+        let mut out = tag(&self.w_last, self.r_round);
+        out.extend(tag(&self.w_cur, self.r_round + 1));
+        out
+    }
+
     pub fn agg_votes(&self) -> usize {
         self.votes.len()
     }
@@ -255,6 +273,20 @@ mod tests {
             (r.r_round, r.w_cur.clone(), r.w_last.clone(), resp)
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn referenced_blobs_cover_last_and_current_rounds() {
+        let mut r = ReplicaState::new(4, 1);
+        r.apply(&Tx::Upd { id: 0, target_round: 1, digest: d(1) });
+        r.apply(&Tx::Upd { id: 2, target_round: 1, digest: d(2) });
+        r.apply(&Tx::Agg { id: 0, target_round: 1 });
+        r.apply(&Tx::Upd { id: 1, target_round: 2, digest: d(3) });
+        // r_round = 1: W^LAST tagged round 1, W^CUR tagged round 2.
+        assert_eq!(
+            r.referenced_blobs(),
+            vec![(0, 1, d(1)), (2, 1, d(2)), (1, 2, d(3))]
+        );
     }
 
     #[test]

@@ -224,6 +224,41 @@ impl Decode for BlobChunk {
     }
 }
 
+/// A digest-addressed pull request: ask a peer for (part of) the blob
+/// whose complete wire image hashes to `digest`. `from_byte..to_byte`
+/// selects a byte range of the image ((0, 0) = the whole blob), so a
+/// receiver that lost a single multicast chunk can re-request exactly
+/// the missing slice instead of the full model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlobFetch {
+    pub digest: Digest,
+    pub from_byte: u32,
+    /// Exclusive end of the requested range; 0 together with
+    /// `from_byte == 0` means the whole image.
+    pub to_byte: u32,
+}
+
+impl Encode for BlobFetch {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.digest.encode(out);
+        self.from_byte.encode(out);
+        self.to_byte.encode(out);
+    }
+    fn encoded_len(&self) -> usize {
+        32 + 4 + 4
+    }
+}
+
+impl Decode for BlobFetch {
+    fn decode(cur: &mut Cursor<'_>) -> Result<Self> {
+        Ok(BlobFetch {
+            digest: Digest::decode(cur)?,
+            from_byte: u32::decode(cur)?,
+            to_byte: u32::decode(cur)?,
+        })
+    }
+}
+
 /// Wire envelope for `Traffic::Weights` frames.
 #[derive(Debug, Clone, PartialEq)]
 pub enum WeightMsg {
@@ -231,6 +266,16 @@ pub enum WeightMsg {
     Whole(WeightBlob),
     /// One chunk of a large blob (reassembled receiver-side).
     Chunk(BlobChunk),
+    /// Pull request: send me (a range of) the blob with this digest.
+    Fetch(BlobFetch),
+    /// Pull response: one chunk of the requested blob. Same shape as a
+    /// multicast chunk so the receiver's [`crate::mempool::ChunkAssembler`]
+    /// reassembles and digest-verifies it with the existing machinery —
+    /// a serving peer cannot substitute wrong bytes without the SHA-256
+    /// check rejecting the stitched tensor.
+    FetchReply(BlobChunk),
+    /// Pull response: the serving peer does not hold this digest.
+    FetchMiss { digest: Digest },
 }
 
 impl Encode for WeightMsg {
@@ -244,12 +289,27 @@ impl Encode for WeightMsg {
                 2u8.encode(out);
                 chunk.encode(out);
             }
+            WeightMsg::Fetch(fetch) => {
+                3u8.encode(out);
+                fetch.encode(out);
+            }
+            WeightMsg::FetchReply(chunk) => {
+                4u8.encode(out);
+                chunk.encode(out);
+            }
+            WeightMsg::FetchMiss { digest } => {
+                5u8.encode(out);
+                digest.encode(out);
+            }
         }
     }
     fn encoded_len(&self) -> usize {
         1 + match self {
             WeightMsg::Whole(blob) => blob.encoded_len(),
             WeightMsg::Chunk(chunk) => chunk.encoded_len(),
+            WeightMsg::Fetch(fetch) => fetch.encoded_len(),
+            WeightMsg::FetchReply(chunk) => chunk.encoded_len(),
+            WeightMsg::FetchMiss { digest } => digest.encoded_len(),
         }
     }
 }
@@ -259,6 +319,9 @@ impl Decode for WeightMsg {
         Ok(match u8::decode(cur)? {
             1 => WeightMsg::Whole(WeightBlob::decode(cur)?),
             2 => WeightMsg::Chunk(BlobChunk::decode(cur)?),
+            3 => WeightMsg::Fetch(BlobFetch::decode(cur)?),
+            4 => WeightMsg::FetchReply(BlobChunk::decode(cur)?),
+            5 => WeightMsg::FetchMiss { digest: Digest::decode(cur)? },
             t => anyhow::bail!("bad weight msg tag {t}"),
         })
     }
@@ -269,37 +332,6 @@ impl Decode for WeightMsg {
 /// receiver without letting junk park at a far-future round where the
 /// assembler's GC never reaps it.
 pub const CHUNK_ROUND_SLACK: u64 = 4;
-
-/// Receiver side of the storage layer, shared by `DeflNode` and
-/// `LiteNode` (the sim-vs-TCP parity suite proves these identical, so
-/// the logic must live once): decode a `Traffic::Weights` frame, feed
-/// chunks through the assembler with the round horizon pinned to the
-/// replica round, and deposit completed blobs in the pool. Returns
-/// whether a whole blob entered the pool.
-pub fn receive_weight_frame(
-    pool: &mut crate::mempool::WeightPool,
-    chunks: &mut crate::mempool::ChunkAssembler,
-    replica_round: u64,
-    from: NodeId,
-    bytes: &[u8],
-) -> Result<bool> {
-    match WeightMsg::from_bytes(bytes)? {
-        WeightMsg::Whole(blob) => {
-            pool.put(blob.round, blob.weights);
-            Ok(true)
-        }
-        WeightMsg::Chunk(chunk) => {
-            chunks.set_round_horizon(replica_round + CHUNK_ROUND_SLACK);
-            match chunks.accept(from, chunk)? {
-                Some(blob) => {
-                    pool.put(blob.round, blob.weights);
-                    Ok(true)
-                }
-                None => Ok(false),
-            }
-        }
-    }
-}
 
 /// Multicast a blob on the storage layer, splitting its wire image into
 /// `max_chunk_bytes`-sized chunks when it exceeds the budget (0 disables

@@ -103,10 +103,25 @@ struct PendingCmd {
 /// huge junk commands cannot pin memory any better than many small ones.
 const FOREIGN_PENDING_BYTES: usize = 1 << 20;
 
-/// Serve a repeated SyncRequest for an unchanged decided prefix only
-/// every Nth time: bounds a Byzantine looper's amplification to 1/N
-/// while a requester whose reply was lost still gets a retry.
+/// SyncRequests served per peer against one unchanged decided prefix
+/// (any `from_height` — keying the budget on the request shape would let
+/// a Byzantine looper bypass it by varying the range). Four covers an
+/// honest catch-up: the initial full request plus a ranged gap
+/// re-request or two. The budget resets whenever this replica decides
+/// more blocks.
+const SYNC_SERVE_BUDGET: u32 = 4;
+
+/// Past the budget, serve only every Nth request: bounds a Byzantine
+/// looper's amplification to 1/N while a requester whose replies were
+/// all lost still eventually gets a retry in a quiescent cluster.
 const SYNC_RESERVE_EVERY: u32 = 4;
+
+/// Ranged re-requests issued for the same gap (across views) before the
+/// replayer falls back to a best-effort jump. The jump preserves the old
+/// pre-validation liveness when the gap's entries were evicted cluster-
+/// wide; commands inside the gap stay unrecoverable, which DeFL's
+/// round-checked, idempotent Algorithm 2 tolerates.
+const GAP_JUMP_AFTER: u32 = 2;
 
 /// Leader-side per-view aggregation state.
 #[derive(Default)]
@@ -153,19 +168,38 @@ pub struct HotStuff {
     /// Digests of commands already decided (dedup for re-gossip; bounded).
     delivered: VecDeque<Digest>,
     delivered_set: HashSet<Digest>,
-    /// Recent decided blocks with their commit QCs (catch-up source).
-    decided_log: VecDeque<(Qc, Block)>,
+    /// Recent decided blocks with their commit QCs, heights, and parent
+    /// links (catch-up source).
+    decided_log: VecDeque<SyncEntry>,
+    /// Count of blocks this replica has decided (1-based height of the
+    /// decided tip; identical on honest replicas — Lemma 1).
+    decided_height: u64,
+    /// Digest of the highest decided block (zero before the first): the
+    /// tip every strict sync entry must chain from.
+    decided_tip: Digest,
     /// View the last SyncRequest was issued in (one request per view).
     last_sync_req_view: u64,
-    /// Per-peer sync-serve throttle: (decided prefix last served, how
-    /// many repeat requests for that same prefix were suppressed since).
-    sync_served: HashMap<NodeId, (u64, u32)>,
+    /// View the last ranged gap re-request was issued in (one per view).
+    gap_req_view: u64,
+    /// The gap currently being re-requested and how many ranged requests
+    /// it has absorbed (GAP_JUMP_AFTER triggers the jump fallback).
+    last_gap: Option<(u64, u64)>,
+    gap_attempts: u32,
+    /// Per-peer sync-serve throttle: (decided prefix, serves spent
+    /// against it, requests suppressed since the budget ran out).
+    sync_served: HashMap<NodeId, (u64, u32, u32)>,
 
     /// Decided views counter (metrics).
     pub decided_blocks: u64,
     pub view_changes: u64,
     /// Blocks adopted through catch-up replay rather than live DECIDE.
     pub synced_blocks: u64,
+    /// Ranged gap re-requests issued by the replayer.
+    pub sync_gap_requests: u64,
+    /// Sync entries rejected by chain/QC validation.
+    pub sync_rejects: u64,
+    /// Best-effort jumps past an unrecoverable gap.
+    pub sync_jumps: u64,
 }
 
 impl HotStuff {
@@ -194,12 +228,25 @@ impl HotStuff {
             delivered: VecDeque::new(),
             delivered_set: HashSet::new(),
             decided_log: VecDeque::new(),
+            decided_height: 0,
+            decided_tip: Digest::zero(),
             last_sync_req_view: 0,
+            gap_req_view: 0,
+            last_gap: None,
+            gap_attempts: 0,
             sync_served: HashMap::new(),
             decided_blocks: 0,
             view_changes: 0,
             synced_blocks: 0,
+            sync_gap_requests: 0,
+            sync_rejects: 0,
+            sync_jumps: 0,
         }
+    }
+
+    /// 1-based height of the decided tip (blocks this replica executed).
+    pub fn decided_height(&self) -> u64 {
+        self.decided_height
     }
 
     pub fn view(&self) -> u64 {
@@ -396,8 +443,10 @@ impl HotStuff {
                 }
                 self.try_propose(out)
             }
-            Msg::SyncRequest { have_view } => self.on_sync_request(from, have_view, out),
-            Msg::SyncReply { entries } => self.on_sync_reply(entries, out),
+            Msg::SyncRequest { from_height, to_height } => {
+                self.on_sync_request(from, from_height, to_height, out)
+            }
+            Msg::SyncReply { entries } => self.on_sync_reply(from, entries, out),
         }
     }
 
@@ -410,71 +459,226 @@ impl HotStuff {
             return;
         }
         self.last_sync_req_view = self.view;
-        self.send(out, from, Msg::SyncRequest { have_view: self.last_decided_view });
+        let req = Msg::SyncRequest { from_height: self.decided_height + 1, to_height: u64::MAX };
+        self.send(out, from, req);
     }
 
     fn push_decided(&mut self, qc: &Qc, block: &Block) {
-        self.decided_log.push_back((qc.clone(), block.clone()));
+        self.decided_height += 1;
+        let entry = SyncEntry {
+            height: self.decided_height,
+            prev: self.decided_tip,
+            qc: qc.clone(),
+            block: block.clone(),
+        };
+        self.decided_tip = block.digest();
+        self.log_entry(entry);
+    }
+
+    fn log_entry(&mut self, entry: SyncEntry) {
+        self.decided_log.push_back(entry);
         while self.decided_log.len() > self.cfg.sync_window {
             self.decided_log.pop_front();
         }
     }
 
-    fn on_sync_request(&mut self, from: NodeId, have_view: u64, out: &mut Vec<Action>) -> Result<()> {
-        // Throttle repeats: a peer re-asking for an unchanged decided
-        // prefix (reply lost, or a Byzantine looper) is only served every
-        // SYNC_RESERVE_EVERY-th time — bounded amplification, but a lost
-        // reply is always eventually retried even in a quiescent cluster.
-        if let Some(entry) = self.sync_served.get_mut(&from) {
-            if entry.0 == self.last_decided_view {
-                entry.1 += 1;
-                if entry.1 < SYNC_RESERVE_EVERY {
+    fn on_sync_request(
+        &mut self,
+        from: NodeId,
+        from_height: u64,
+        to_height: u64,
+        out: &mut Vec<Action>,
+    ) -> Result<()> {
+        // Per-peer serve budget against one unchanged decided prefix —
+        // the consensus-side analogue of the pull protocol's serve
+        // budgets. An honest catch-up costs a handful of requests (full
+        // + ranged gap re-requests) and fits the budget; a Byzantine
+        // looper, however it varies the range, is throttled to one
+        // window-sized reply per SYNC_RESERVE_EVERY requests once the
+        // budget is spent. Deciding more blocks opens a fresh window —
+        // which is exactly when a requester legitimately needs more.
+        {
+            let st = self
+                .sync_served
+                .entry(from)
+                .or_insert((self.decided_height, 0, 0));
+            if st.0 != self.decided_height {
+                *st = (self.decided_height, 0, 0);
+            }
+            if st.1 >= SYNC_SERVE_BUDGET {
+                st.2 += 1;
+                if st.2 < SYNC_RESERVE_EVERY {
                     return Ok(());
                 }
+                st.2 = 0;
             }
+            st.1 += 1;
         }
         let entries: Vec<SyncEntry> = self
             .decided_log
             .iter()
-            .filter(|(qc, _)| qc.view > have_view)
-            .map(|(qc, block)| SyncEntry { qc: qc.clone(), block: block.clone() })
+            .filter(|e| e.height >= from_height && e.height <= to_height)
+            .cloned()
             .collect();
         if !entries.is_empty() {
-            self.sync_served.insert(from, (self.last_decided_view, 0));
             self.send(out, from, Msg::SyncReply { entries });
         }
         Ok(())
     }
 
-    /// Replay QC-certified decided blocks we missed, in view order, then
-    /// jump the pacemaker past them. A gap beyond the sender's sync window
-    /// is replayed best-effort (logged): commands in evicted blocks are
-    /// unrecoverable, which the embedding state machine must tolerate
-    /// (DeFL's Algorithm 2 is idempotent and round-checked).
-    fn on_sync_reply(&mut self, mut entries: Vec<SyncEntry>, out: &mut Vec<Action>) -> Result<()> {
-        entries.sort_by_key(|e| e.qc.view);
+    /// Replay QC-certified decided blocks we missed, in height order,
+    /// validating parent-chain contiguity across entries: each strictly
+    /// applied entry must sit at `decided_height + 1` AND chain (via its
+    /// `prev` link) from our decided tip. A height gap — an interior
+    /// entry the server omitted, or one evicted past its sync window —
+    /// halts replay and issues exactly one ranged re-request for the
+    /// missing range per view; after `GAP_JUMP_AFTER` fruitless attempts
+    /// the replayer jumps best-effort (old behaviour) so an evicted
+    /// prefix cannot stall liveness forever. Every entry, strict or
+    /// jumped, still needs a verifying commit QC — history cannot be
+    /// forged, only withheld.
+    fn on_sync_reply(
+        &mut self,
+        from: NodeId,
+        mut entries: Vec<SyncEntry>,
+        out: &mut Vec<Action>,
+    ) -> Result<()> {
+        entries.sort_by_key(|e| e.height);
+        entries.dedup_by_key(|e| e.height);
+        // Height repair: a replica that misses a DECIDE but live-decides
+        // the NEXT view counts its tip one short of the honest sequence
+        // forever (the missed block's commands are lost either way — the
+        // pre-validation code had the same hole). If the server's
+        // sequence contains OUR decided tip at a higher height, adopt
+        // that height so strict chain validation can keep extending from
+        // the tip instead of rejecting every honest reply. Heights are
+        // NOT QC-covered, so the repair is guarded against a Byzantine
+        // server inflating our counter: the claimed height must lie
+        // within one sync window of ours, and the reply must contain a
+        // strictly valid successor (chains from the tip via `prev`, own
+        // verifying commit QC, later view) — an honest server always
+        // has one when there is anything to catch up on, while an
+        // attacker must burn a real decided block per attempt and can
+        // never push us further than the window per burned block.
+        let repair = entries.iter().position(|e| {
+            e.height > self.decided_height
+                && e.height <= self.decided_height + self.cfg.sync_window as u64
+                && e.block.digest() == self.decided_tip
+                && e.qc.phase == Phase::Commit
+                && e.qc.block == self.decided_tip
+                && e.qc.verify(&self.registry, self.quorum).is_ok()
+        });
+        if let Some(i) = repair {
+            let h = entries[i].height;
+            let has_successor = entries.get(i + 1).is_some_and(|s| {
+                s.height == h + 1
+                    && s.prev == self.decided_tip
+                    && s.qc.phase == Phase::Commit
+                    && s.qc.block == s.block.digest()
+                    && s.qc.view > self.last_decided_view
+                    && s.qc.verify(&self.registry, self.quorum).is_ok()
+            });
+            if has_successor {
+                log::debug!(
+                    "n{}: sync height repair {} -> {h} (tip unchanged)",
+                    self.id, self.decided_height
+                );
+                self.decided_height = h;
+            }
+        }
         let mut advanced = false;
+        let mut result = Ok(());
         for e in entries {
-            if e.qc.view <= self.last_decided_view {
+            if e.height <= self.decided_height {
                 continue;
             }
-            if e.qc.phase != Phase::Commit || e.qc.block != e.block.digest() {
-                bail!("sync entry qc does not certify its block");
-            }
-            e.qc.verify(&self.registry, self.quorum)?;
-            if e.qc.view > self.last_decided_view + 1 && self.last_decided_view > 0 {
-                log::debug!(
-                    "n{}: sync jump {} -> {} (possible gap)",
-                    self.id, self.last_decided_view, e.qc.view
+            let mut jump = false;
+            if e.height > self.decided_height + 1 {
+                let (lo, hi) = (self.decided_height + 1, e.height - 1);
+                if self.last_gap != Some((lo, hi)) {
+                    self.last_gap = Some((lo, hi));
+                    self.gap_attempts = 0;
+                }
+                if self.gap_attempts < GAP_JUMP_AFTER {
+                    if self.gap_req_view != self.view {
+                        self.gap_req_view = self.view;
+                        self.gap_attempts += 1;
+                        self.sync_gap_requests += 1;
+                        let req = Msg::SyncRequest { from_height: lo, to_height: hi };
+                        self.send(out, from, req);
+                    }
+                    result = Err(anyhow::anyhow!(
+                        "sync gap: heights [{lo}, {hi}] missing before {}",
+                        e.height
+                    ));
+                    break;
+                }
+                // Heights are not QC-covered: an unclamped jump would let
+                // a Byzantine server park our counter at u64::MAX (dead
+                // sync path + overflow in request_sync). Bound every
+                // jump to one sync window past our tip; a deeper honest
+                // lag falls back to the pacemaker-based rejoin (live
+                // consensus still progresses, like the pre-validation
+                // code after its best-effort skip).
+                if e.height > self.decided_height + self.cfg.sync_window as u64 {
+                    self.sync_rejects += 1;
+                    result = Err(anyhow::anyhow!(
+                        "sync jump target {} beyond the window from height {}",
+                        e.height, self.decided_height
+                    ));
+                    break;
+                }
+                self.sync_jumps += 1;
+                log::warn!(
+                    "n{}: sync gap [{lo}, {hi}] unrecoverable after {} attempts; jumping to {}",
+                    self.id, self.gap_attempts, e.height
                 );
+                jump = true;
             }
+            if e.qc.phase != Phase::Commit || e.qc.block != e.block.digest() {
+                self.sync_rejects += 1;
+                result = Err(anyhow::anyhow!("sync entry qc does not certify its block"));
+                break;
+            }
+            if !jump && e.prev != self.decided_tip {
+                self.sync_rejects += 1;
+                result = Err(anyhow::anyhow!(
+                    "sync entry {} does not chain from the decided tip",
+                    e.height
+                ));
+                break;
+            }
+            if e.qc.view <= self.last_decided_view {
+                self.sync_rejects += 1;
+                result = Err(anyhow::anyhow!(
+                    "sync entry {} regresses the decided view ({} <= {})",
+                    e.height, e.qc.view, self.last_decided_view
+                ));
+                break;
+            }
+            if let Err(err) = e.qc.verify(&self.registry, self.quorum) {
+                self.sync_rejects += 1;
+                result = Err(err);
+                break;
+            }
+            // Apply. A jump adopts the server's height so subsequent
+            // entries in this reply chain contiguously from here.
+            self.decided_height = e.height;
+            self.decided_tip = e.block.digest();
             self.last_decided_view = e.qc.view;
             self.decided_blocks += 1;
             self.synced_blocks += 1;
-            self.push_decided(&e.qc, &e.block);
+            if let Some((_, hi)) = self.last_gap {
+                if self.decided_height > hi {
+                    self.last_gap = None;
+                    self.gap_attempts = 0;
+                }
+            }
             self.mark_delivered(&e.block.cmds);
-            if !e.block.cmds.is_empty() {
-                out.push(Action::Deliver { view: e.qc.view, cmds: e.block.cmds });
+            let cmds = e.block.cmds.clone();
+            self.log_entry(e);
+            if !cmds.is_empty() {
+                out.push(Action::Deliver { view: self.last_decided_view, cmds });
             }
             advanced = true;
         }
@@ -482,7 +686,7 @@ impl HotStuff {
             self.consecutive_timeouts = 0;
             self.enter_view(self.last_decided_view + 1, out);
         }
-        Ok(())
+        result
     }
 
     // ---------------- leader side ----------------
@@ -1081,6 +1285,238 @@ mod tests {
         assert_eq!(logs[3][..k], logs[0][..k], "divergent logs after heal");
         let hs = &net.actor_as::<HsNode>(3).unwrap().hs;
         assert!(hs.synced_blocks > 0, "catch-up should have replayed decided blocks");
+    }
+
+    /// Build a synthetic, fully QC-certified decided chain: heights
+    /// 1..=len, strictly increasing views with random skips, each entry
+    /// parent-linked to its predecessor via `prev`.
+    fn synthetic_chain(
+        registry: &KeyRegistry,
+        quorum: usize,
+        len: usize,
+        seed: u64,
+    ) -> Vec<SyncEntry> {
+        let mut rng = crate::util::Pcg::new(seed, 0xc4a1);
+        let mut prev = Digest::zero();
+        let mut view = 0u64;
+        let mut out = Vec::with_capacity(len);
+        for h in 1..=len as u64 {
+            view += 1 + rng.gen_range(3);
+            let block = Block {
+                view,
+                parent: prev,
+                cmds: vec![format!("chain-cmd-{h}").into_bytes()],
+            };
+            let digest = block.digest();
+            let vd = vote_digest(Phase::Commit, view, &digest);
+            let mut cert = QuorumCert::new(vd);
+            for i in 0..quorum {
+                cert.add(registry.signer(i as NodeId).sign(&vd));
+            }
+            let qc = Qc { phase: Phase::Commit, view, block: digest, cert };
+            out.push(SyncEntry { height: h, prev, qc, block });
+            prev = digest;
+        }
+        out
+    }
+
+    fn fresh_replica(registry: &KeyRegistry) -> (HotStuff, Vec<Action>) {
+        let mut hs = HotStuff::new(3, 4, registry.clone(), HsConfig::default(), ByzMode::Honest);
+        let mut out = Vec::new();
+        hs.start(&mut out);
+        (hs, Vec::new())
+    }
+
+    fn delivered_cmds(out: &[Action]) -> Vec<Vec<u8>> {
+        out.iter()
+            .filter_map(|a| match a {
+                Action::Deliver { cmds, .. } => Some(cmds.clone()),
+                _ => None,
+            })
+            .flatten()
+            .collect()
+    }
+
+    fn sync_requests(out: &[Action]) -> Vec<(u64, u64)> {
+        out.iter()
+            .filter_map(|a| match a {
+                Action::Send { msg: Msg::SyncRequest { from_height, to_height }, .. } => {
+                    Some((*from_height, *to_height))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn clean_sync_reply_replays_the_whole_chain() {
+        let registry = KeyRegistry::new(4, 77);
+        let (mut hs, mut out) = fresh_replica(&registry);
+        let entries = synthetic_chain(&registry, hs.quorum(), 8, 1);
+        hs.on_message(1, Msg::SyncReply { entries }, &mut out).unwrap();
+        assert_eq!(delivered_cmds(&out).len(), 8);
+        assert_eq!(hs.decided_height(), 8);
+        assert_eq!(hs.synced_blocks, 8);
+        assert_eq!(hs.sync_rejects, 0);
+        assert!(sync_requests(&out).is_empty(), "no gap, no re-request");
+    }
+
+    #[test]
+    fn gap_fills_after_the_ranged_rerequest_is_served() {
+        let registry = KeyRegistry::new(4, 78);
+        let (mut hs, mut out) = fresh_replica(&registry);
+        let entries = synthetic_chain(&registry, hs.quorum(), 10, 2);
+        // Serve a reply with interior entry (height 4) missing.
+        let mut gapped = entries.clone();
+        gapped.remove(3);
+        assert!(hs.on_message(1, Msg::SyncReply { entries: gapped }, &mut out).is_err());
+        assert_eq!(hs.decided_height(), 3, "replay must stop at the gap");
+        assert_eq!(sync_requests(&out), vec![(4, 4)], "exactly one ranged re-request");
+        // The re-requested range (plus the tail) arrives: fully healed.
+        let mut out2 = Vec::new();
+        hs.on_message(1, Msg::SyncReply { entries: entries[3..].to_vec() }, &mut out2).unwrap();
+        assert_eq!(hs.decided_height(), 10);
+        assert_eq!(delivered_cmds(&out).len() + delivered_cmds(&out2).len(), 10);
+        assert_eq!(hs.sync_gap_requests, 1);
+    }
+
+    #[test]
+    fn prop_sync_replay_rejects_corruption_and_rerequests_gaps() {
+        use crate::util::prop::forall;
+        let registry = KeyRegistry::new(4, 79);
+        forall(
+            "sync-chain-validation",
+            13,
+            40,
+            12,
+            |rng, size| {
+                let len = 3 + rng.gen_usize(size.max(1) + 2);
+                // Interior position 1..len-1 (keep the first and last in
+                // place so the fault is unambiguously interior).
+                let pos = 1 + rng.gen_usize(len - 2);
+                let drop_instead_of_corrupt = rng.f64() < 0.5;
+                let seed = rng.next_u64();
+                (len, pos, drop_instead_of_corrupt, seed)
+            },
+            |&(len, pos, drop, seed)| {
+                let (mut hs, mut out) = fresh_replica(&registry);
+                let entries = synthetic_chain(&registry, hs.quorum(), len, seed);
+                let mut served = entries.clone();
+                if drop {
+                    served.remove(pos);
+                } else {
+                    // Corrupt one parent link.
+                    served[pos].prev = Digest::of_bytes(b"corrupted-parent-link");
+                }
+                let res = hs.on_message(1, Msg::SyncReply { entries: served }, &mut out);
+                if res.is_ok() {
+                    return Err("replay accepted a corrupted/gapped chain".into());
+                }
+                if hs.decided_height() != pos as u64 {
+                    return Err(format!(
+                        "replay applied {} entries, expected the clean prefix {pos}",
+                        hs.decided_height()
+                    ));
+                }
+                if delivered_cmds(&out).len() != pos {
+                    return Err("delivered commands diverge from the applied prefix".into());
+                }
+                let reqs = sync_requests(&out);
+                if drop {
+                    // A dropped interior entry is a GAP: exactly one
+                    // ranged re-request for precisely the missing height.
+                    let want = (pos as u64 + 1, pos as u64 + 1);
+                    if reqs != vec![want] {
+                        return Err(format!("expected one ranged re-request {want:?}, got {reqs:?}"));
+                    }
+                    if hs.sync_rejects != 0 {
+                        return Err("a pure gap is not a validation reject".into());
+                    }
+                } else {
+                    // A corrupted parent link is a VALIDATION failure,
+                    // not a gap — rejected with no re-request.
+                    if !reqs.is_empty() {
+                        return Err(format!("corruption must not trigger re-requests: {reqs:?}"));
+                    }
+                    if hs.sync_rejects != 1 {
+                        return Err(format!("expected 1 sync reject, got {}", hs.sync_rejects));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn sync_serve_budget_bounds_amplification_yet_serves_honest_rerequests() {
+        let registry = KeyRegistry::new(4, 80);
+        let (mut server, _) = fresh_replica(&registry);
+        let chain = synthetic_chain(&registry, server.quorum(), 7, 5);
+        for e in chain[..6].iter().cloned() {
+            // Hand-feed the server's decided log through the sync path.
+            let mut out = Vec::new();
+            server.on_message(2, Msg::SyncReply { entries: vec![e] }, &mut out).unwrap();
+        }
+        assert_eq!(server.decided_height(), 6);
+        let served_heights = |out: &[Action]| -> Vec<Vec<u64>> {
+            out.iter()
+                .filter_map(|a| match a {
+                    Action::Send { to: 1, msg: Msg::SyncReply { entries } } => {
+                        Some(entries.iter().map(|e| e.height).collect())
+                    }
+                    _ => None,
+                })
+                .collect()
+        };
+        // An honest catch-up's request pattern — a full request plus
+        // ranged gap re-requests (DIFFERENT from_heights) — fits the
+        // budget and every request is served exactly.
+        let mut out = Vec::new();
+        server
+            .on_message(1, Msg::SyncRequest { from_height: 1, to_height: u64::MAX }, &mut out)
+            .unwrap();
+        assert_eq!(served_heights(&out), vec![vec![1, 2, 3, 4, 5, 6]], "full catch-up served");
+        let mut out = Vec::new();
+        server
+            .on_message(1, Msg::SyncRequest { from_height: 3, to_height: 4 }, &mut out)
+            .unwrap();
+        assert_eq!(served_heights(&out), vec![vec![3, 4]], "ranged re-request served exactly");
+        // Two more requests exhaust the SYNC_SERVE_BUDGET (= 4)…
+        for fh in [2u64, 5] {
+            let mut out = Vec::new();
+            server
+                .on_message(1, Msg::SyncRequest { from_height: fh, to_height: u64::MAX }, &mut out)
+                .unwrap();
+            assert_eq!(served_heights(&out).len(), 1, "request {fh} within budget");
+        }
+        // …after which a looper varying from_height per request (the
+        // throttle-bypass shape) is served only every
+        // SYNC_RESERVE_EVERY-th time, not per request.
+        let mut served = 0usize;
+        for i in 0..8u64 {
+            let mut out = Vec::new();
+            server
+                .on_message(
+                    1,
+                    Msg::SyncRequest { from_height: 1 + i % 3, to_height: u64::MAX },
+                    &mut out,
+                )
+                .unwrap();
+            served += served_heights(&out).len();
+        }
+        assert_eq!(served, 2, "over-budget requests must be throttled to 1 in {SYNC_RESERVE_EVERY}");
+        // Deciding another block opens a fresh window: the next request
+        // is served immediately (a lagging peer legitimately needs it).
+        let mut out = Vec::new();
+        server
+            .on_message(2, Msg::SyncReply { entries: vec![chain[6].clone()] }, &mut out)
+            .unwrap();
+        assert_eq!(server.decided_height(), 7);
+        let mut out = Vec::new();
+        server
+            .on_message(1, Msg::SyncRequest { from_height: 7, to_height: u64::MAX }, &mut out)
+            .unwrap();
+        assert_eq!(served_heights(&out), vec![vec![7]], "fresh prefix resets the budget");
     }
 
     #[test]

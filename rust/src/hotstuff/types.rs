@@ -146,25 +146,43 @@ impl Decode for Qc {
 /// the catch-up protocol (the QC makes the entry self-certifying: a
 /// replica replays it after verifying quorum signatures, so a Byzantine
 /// peer cannot forge history).
+///
+/// `height` is the entry's 1-based position in the decided sequence and
+/// `prev` the digest of the decided block immediately before it (zero
+/// for the first). Lemma 1 makes both identical on every honest replica,
+/// so replay can validate parent-chain contiguity — an interior entry a
+/// server omitted (or a relabelled height) shows up as a gap, answered
+/// with a ranged re-request instead of a silent skip. Neither field is
+/// QC-covered: a lying server can only cause its entries to be REJECTED
+/// (each block still needs a valid commit QC), never accepted wrongly.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SyncEntry {
+    pub height: u64,
+    pub prev: Digest,
     pub qc: Qc,
     pub block: Block,
 }
 
 impl Encode for SyncEntry {
     fn encode(&self, out: &mut Vec<u8>) {
+        self.height.encode(out);
+        self.prev.encode(out);
         self.qc.encode(out);
         self.block.encode(out);
     }
     fn encoded_len(&self) -> usize {
-        self.qc.encoded_len() + self.block.encoded_len()
+        8 + 32 + self.qc.encoded_len() + self.block.encoded_len()
     }
 }
 
 impl Decode for SyncEntry {
     fn decode(cur: &mut Cursor<'_>) -> Result<Self> {
-        Ok(SyncEntry { qc: Qc::decode(cur)?, block: Block::decode(cur)? })
+        Ok(SyncEntry {
+            height: u64::decode(cur)?,
+            prev: Digest::decode(cur)?,
+            qc: Qc::decode(cur)?,
+            block: Block::decode(cur)?,
+        })
     }
 }
 
@@ -193,9 +211,11 @@ pub enum Msg {
     /// commands in one frame (the view-batched replacement for
     /// per-command `Submit` broadcasts).
     SubmitBatch { cmds: Vec<Vec<u8>> },
-    /// Lagging replica → a peer seen sending from a higher view: send me
-    /// the decided blocks after `have_view`.
-    SyncRequest { have_view: u64 },
+    /// Lagging replica → a peer seen sending from a higher view (or a
+    /// gap detector re-requesting an exact range): send me the decided
+    /// blocks with heights in `[from_height, to_height]`
+    /// (`to_height = u64::MAX` = everything you retain).
+    SyncRequest { from_height: u64, to_height: u64 },
     /// Catch-up payload: decided blocks with their commit QCs.
     SyncReply { entries: Vec<SyncEntry> },
 }
@@ -267,8 +287,9 @@ impl Encode for Msg {
             Msg::SubmitBatch { cmds } => {
                 encode_list(cmds, out);
             }
-            Msg::SyncRequest { have_view } => {
-                have_view.encode(out);
+            Msg::SyncRequest { from_height, to_height } => {
+                from_height.encode(out);
+                to_height.encode(out);
             }
             Msg::SyncReply { entries } => {
                 encode_list(entries, out);
@@ -305,7 +326,10 @@ impl Decode for Msg {
             },
             7 => Msg::Submit { cmd: Vec::<u8>::decode(cur)? },
             8 => Msg::SubmitBatch { cmds: decode_list(cur)? },
-            9 => Msg::SyncRequest { have_view: u64::decode(cur)? },
+            9 => Msg::SyncRequest {
+                from_height: u64::decode(cur)?,
+                to_height: u64::decode(cur)?,
+            },
             10 => Msg::SyncReply { entries: decode_list(cur)? },
             t => anyhow::bail!("bad hotstuff msg tag {t}"),
         })
@@ -376,8 +400,16 @@ mod tests {
         let msgs = vec![
             Msg::SubmitBatch { cmds: vec![vec![1; 45], vec![2; 13], Vec::new()] },
             Msg::SubmitBatch { cmds: Vec::new() },
-            Msg::SyncRequest { have_view: 17 },
-            Msg::SyncReply { entries: vec![SyncEntry { qc, block }] },
+            Msg::SyncRequest { from_height: 17, to_height: u64::MAX },
+            Msg::SyncRequest { from_height: 4, to_height: 9 },
+            Msg::SyncReply {
+                entries: vec![SyncEntry {
+                    height: 6,
+                    prev: Digest::of_bytes(b"prev-block"),
+                    qc,
+                    block,
+                }],
+            },
             Msg::SyncReply { entries: Vec::new() },
         ];
         for m in msgs {

@@ -110,6 +110,14 @@ impl WeightPool {
         self.entries.contains_key(digest)
     }
 
+    /// Round tag and tensor handle for one digest — what the pull
+    /// protocol serves: the handle shares the pool's allocation, and the
+    /// round tag lets the served chunks pass the requester's round
+    /// horizon without inventing a round the server never saw.
+    pub fn entry(&self, digest: &Digest) -> Option<(u64, Weights)> {
+        self.entries.get(digest).map(|e| (e.round, e.weights.clone()))
+    }
+
     /// Drop all blobs older than `current_round − τ + 1`. The byte gauge
     /// is maintained incrementally (subtract what was reaped) instead of
     /// re-summing every surviving entry; the subtraction saturates so an
@@ -325,6 +333,38 @@ impl ChunkAssembler {
             }
         });
         self.sender_bytes.retain(|_, used| *used > 0);
+    }
+
+    /// Byte ranges of `(from, digest)`'s declared image not yet covered
+    /// by buffered segments, as sorted `[start, end)` pairs. `None` when
+    /// no partial exists for that key. This is what lets a receiver that
+    /// lost one multicast chunk pull exactly the missing slice from the
+    /// original sender — the reply lands in the SAME partial and
+    /// completes it.
+    pub fn missing_ranges(
+        &self,
+        from: crate::crypto::NodeId,
+        digest: &Digest,
+    ) -> Option<Vec<(u32, u32)>> {
+        let p = self.partials.get(&(from, *digest))?;
+        let mut covered: Vec<(u32, u32)> = p
+            .segments
+            .iter()
+            .map(|(off, seg)| (*off, off + seg.len() as u32))
+            .collect();
+        covered.sort_unstable();
+        let mut missing = Vec::new();
+        let mut cursor = 0u32;
+        for (start, end) in covered {
+            if start > cursor {
+                missing.push((cursor, start));
+            }
+            cursor = cursor.max(end);
+        }
+        if cursor < p.total_bytes {
+            missing.push((cursor, p.total_bytes));
+        }
+        Some(missing)
     }
 
     /// Partial blobs currently buffered.
@@ -629,6 +669,40 @@ mod tests {
             done = asm.accept(4, c).unwrap();
         }
         assert_eq!(done.expect("honest blob").weights.as_slice(), honest.as_slice());
+    }
+
+    #[test]
+    fn pool_entry_exposes_round_and_shares_storage() {
+        let mut p = WeightPool::new(2);
+        let w = Weights::new(blob(9.0, 16));
+        let d = p.put(3, w.clone());
+        let (round, got) = p.entry(&d).expect("present");
+        assert_eq!(round, 3);
+        assert!(Weights::ptr_eq(&w, &got), "entry copied the tensor");
+        assert!(p.entry(&Digest::zero()).is_none());
+    }
+
+    #[test]
+    fn missing_ranges_track_partial_coverage() {
+        let w = Weights::new(blob(1.0, 64)); // 256-byte image, 4x64 chunks
+        let mut asm = ChunkAssembler::new(1 << 20);
+        let cs = chunks_of(&w, 2, 1, 64);
+        let d = w.digest();
+        assert!(asm.missing_ranges(2, &d).is_none(), "no partial yet");
+        asm.accept(2, cs[0].clone()).unwrap();
+        asm.accept(2, cs[2].clone()).unwrap();
+        assert_eq!(
+            asm.missing_ranges(2, &d).unwrap(),
+            vec![(64, 128), (192, 256)],
+            "holes after chunks 0 and 2 landed"
+        );
+        // Another sender's partial is tracked independently.
+        assert!(asm.missing_ranges(7, &d).is_none());
+        asm.accept(2, cs[1].clone()).unwrap();
+        assert_eq!(asm.missing_ranges(2, &d).unwrap(), vec![(192, 256)]);
+        // Completion removes the partial (and with it the ranges).
+        assert!(asm.accept(2, cs[3].clone()).unwrap().is_some());
+        assert!(asm.missing_ranges(2, &d).is_none());
     }
 
     #[test]

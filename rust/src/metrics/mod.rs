@@ -33,12 +33,16 @@ impl Traffic {
 
 /// Per-node send/receive byte meters, with message counts split by
 /// traffic class (the bytes/messages-per-round instrumentation behind
-/// `BENCH_net.json`).
+/// `BENCH_net.json`), plus lost-frame counters so fault-injection runs
+/// can assert exactly how many frames the network ate.
 #[derive(Debug, Clone, Default)]
 pub struct NetMeter {
     sent: BTreeMap<(NodeId, Traffic), u64>,
     recv: BTreeMap<(NodeId, Traffic), u64>,
     msgs_sent: BTreeMap<(NodeId, Traffic), u64>,
+    /// Frames lost in flight (targeted injection or random drop), keyed
+    /// by SENDER — the bytes were metered as sent but never arrived.
+    msgs_dropped: BTreeMap<(NodeId, Traffic), u64>,
 }
 
 impl NetMeter {
@@ -53,6 +57,24 @@ impl NetMeter {
 
     pub fn on_recv(&mut self, node: NodeId, class: Traffic, bytes: u64) {
         *self.recv.entry((node, class)).or_default() += bytes;
+    }
+
+    /// A frame from `node` was lost in flight.
+    pub fn on_drop(&mut self, node: NodeId, class: Traffic) {
+        *self.msgs_dropped.entry((node, class)).or_default() += 1;
+    }
+
+    /// Cluster-wide frames lost in one traffic class.
+    pub fn dropped_class(&self, class: Traffic) -> u64 {
+        self.msgs_dropped
+            .iter()
+            .filter(|((_, c), _)| *c == class)
+            .map(|(_, v)| *v)
+            .sum()
+    }
+
+    pub fn dropped_total(&self) -> u64 {
+        self.msgs_dropped.values().sum()
     }
 
     pub fn sent_by(&self, node: NodeId) -> u64 {
@@ -122,6 +144,9 @@ impl NetMeter {
         }
         for (k, v) in &other.msgs_sent {
             *self.msgs_sent.entry(*k).or_default() += v;
+        }
+        for (k, v) in &other.msgs_dropped {
+            *self.msgs_dropped.entry(*k).or_default() += v;
         }
     }
 }
@@ -292,12 +317,28 @@ mod tests {
     fn net_meter_merge() {
         let mut a = NetMeter::new();
         a.on_send(0, Traffic::Blocks, 10);
+        a.on_drop(0, Traffic::Blocks);
         let mut b = NetMeter::new();
         b.on_send(0, Traffic::Blocks, 5);
         b.on_recv(2, Traffic::Consensus, 7);
+        b.on_drop(1, Traffic::Weights);
         a.merge(&b);
         assert_eq!(a.sent_by(0), 15);
         assert_eq!(a.recv_by(2), 7);
+        assert_eq!(a.dropped_total(), 2);
+        assert_eq!(a.dropped_class(Traffic::Weights), 1);
+    }
+
+    #[test]
+    fn dropped_frames_counted_per_class() {
+        let mut m = NetMeter::new();
+        assert_eq!(m.dropped_total(), 0);
+        m.on_drop(3, Traffic::Weights);
+        m.on_drop(3, Traffic::Weights);
+        m.on_drop(1, Traffic::Consensus);
+        assert_eq!(m.dropped_class(Traffic::Weights), 2);
+        assert_eq!(m.dropped_class(Traffic::Consensus), 1);
+        assert_eq!(m.dropped_total(), 3);
     }
 
     #[test]

@@ -25,9 +25,16 @@
 //!   tag 2 = AGG) or a [`crate::defl::TxBatch`] (tag 3 + tx list)
 //!   committed atomically — one length prefix, one block-digest-covered
 //!   unit, decoded by [`crate::defl::decode_cmd_txs`];
-//! * lagging replicas recover missed decisions with `SyncRequest
-//!   { have_view }` → `SyncReply { entries }`, each entry a decided block
-//!   plus its commit QC (self-certifying; see `hotstuff::replica`).
+//! * lagging replicas recover missed decisions with the ranged
+//!   `SyncRequest { from_height: u64, to_height: u64 }` (`to_height =
+//!   u64::MAX` = everything retained) → `SyncReply { entries }`. Each
+//!   [`crate::hotstuff::SyncEntry`] is `height: u64, prev: 32 B digest,
+//!   qc, block`: the commit QC makes it self-certifying, while `height`
+//!   (1-based position in the decided sequence) and `prev` (digest of
+//!   the preceding decided block) let replay validate parent-chain
+//!   contiguity — an omitted interior entry shows up as a height gap and
+//!   earns exactly one ranged re-request for the missing span per view
+//!   (see `hotstuff::replica::on_sync_reply`).
 //!
 //! **Storage-layer frames** (`Traffic::Weights`) are
 //! [`crate::defl::WeightMsg`] encodings:
@@ -42,7 +49,19 @@
 //!   transport-level sender (forged chunks cannot poison an honest
 //!   stream), enforces per-sender memory budgets and a round horizon,
 //!   and verifies the reassembled tensor hashes to `digest` before it
-//!   may enter the pool.
+//!   may enter the pool;
+//! * tag 3 `Fetch(BlobFetch)` — `digest: 32 B, from_byte: u32, to_byte:
+//!   u32` — the digest-addressed pull request ((0, 0) = whole blob; a
+//!   non-zero range re-requests exactly the bytes a partial is missing).
+//!   Served from any peer's `WeightPool` under per-requester byte and
+//!   request budgets (see [`crate::defl::Puller`]);
+//! * tag 4 `FetchReply(BlobChunk)` — same layout as tag 2, unicast to
+//!   the requester; replies feed the same assembler, so a mismatched
+//!   reply fails the SHA-256 check and rotates the fetch to the next
+//!   holder;
+//! * tag 5 `FetchMiss { digest: 32 B }` — the serving peer does not hold
+//!   the blob; the requester rotates immediately instead of waiting out
+//!   its per-holder timeout.
 
 pub mod sim;
 pub mod tcp;

@@ -401,6 +401,82 @@ mod fuzz_tests {
     }
 
     #[test]
+    fn pull_and_ranged_sync_frames_roundtrip_and_reject_adversarial_framing() {
+        // The PR-4 wire additions: digest-addressed pull frames and the
+        // ranged sync catch-up. Each frame must roundtrip exactly, and
+        // every truncation AND over-length extension must error (never
+        // panic) — Byzantine peers control all of these bytes.
+        use crate::crypto::Digest;
+        use crate::defl::{BlobChunk, BlobFetch, WeightMsg};
+        use crate::hotstuff::{Block, Msg, Qc, SyncEntry};
+
+        let weight_msgs = vec![
+            WeightMsg::Fetch(BlobFetch {
+                digest: Digest::of_bytes(b"wanted-blob"),
+                from_byte: 64,
+                to_byte: 128,
+            }),
+            WeightMsg::Fetch(BlobFetch {
+                digest: Digest::of_bytes(b"whole-blob"),
+                from_byte: 0,
+                to_byte: 0,
+            }),
+            WeightMsg::FetchReply(BlobChunk {
+                node: 3,
+                round: 9,
+                digest: Digest::of_bytes(b"served"),
+                total_bytes: 256,
+                offset: 64,
+                payload: vec![7u8; 64],
+            }),
+            WeightMsg::FetchMiss { digest: Digest::of_bytes(b"gone") },
+        ];
+        for m in &weight_msgs {
+            let full = m.to_bytes();
+            assert_eq!(full.len(), m.encoded_len(), "encoded_len for {m:?}");
+            assert_eq!(WeightMsg::from_bytes(&full).unwrap(), *m);
+            for cut in 0..full.len() {
+                try_all_decoders(&full[..cut]);
+                assert!(WeightMsg::from_bytes(&full[..cut]).is_err(), "truncation at {cut} accepted");
+            }
+            let mut over = full.clone();
+            over.extend_from_slice(&[0xff, 0x00, 0xff]);
+            try_all_decoders(&over);
+            assert!(WeightMsg::from_bytes(&over).is_err(), "over-length frame accepted");
+        }
+
+        let sync_msgs = vec![
+            Msg::SyncRequest { from_height: 5, to_height: 9 },
+            Msg::SyncRequest { from_height: 1, to_height: u64::MAX },
+            Msg::SyncReply {
+                entries: vec![SyncEntry {
+                    height: 4,
+                    prev: Digest::of_bytes(b"prev"),
+                    qc: Qc::genesis(),
+                    block: Block {
+                        view: 4,
+                        parent: Digest::zero(),
+                        cmds: vec![vec![1, 2, 3]],
+                    },
+                }],
+            },
+        ];
+        for m in &sync_msgs {
+            let full = m.to_bytes();
+            assert_eq!(full.len(), m.encoded_len(), "encoded_len for {m:?}");
+            assert_eq!(Msg::from_bytes(&full).unwrap(), *m);
+            for cut in 0..full.len() {
+                try_all_decoders(&full[..cut]);
+                assert!(Msg::from_bytes(&full[..cut]).is_err(), "truncation at {cut} accepted");
+            }
+            let mut over = full.clone();
+            over.extend_from_slice(&[0xaa, 0x55]);
+            try_all_decoders(&over);
+            assert!(Msg::from_bytes(&over).is_err(), "over-length frame accepted");
+        }
+    }
+
+    #[test]
     fn decoders_never_panic_on_bitflipped_messages() {
         use crate::hotstuff::{Block, Msg, Qc};
         let block = Block {

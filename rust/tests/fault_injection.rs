@@ -10,6 +10,7 @@
 
 use defl::crypto::{Digest, NodeId};
 use defl::defl::lite::{lite_cluster, LiteConfig, LiteNode};
+use defl::metrics::Traffic;
 use defl::net::sim::{SimConfig, SimNet};
 
 fn cfg(n: usize, rounds: u64) -> LiteConfig {
@@ -24,6 +25,7 @@ fn cfg(n: usize, rounds: u64) -> LiteConfig {
         chunk_bytes: 64,
         batch_consensus: true,
         timeout_base_us: 100_000,
+        fetch_retry_us: 50_000,
     }
 }
 
@@ -175,6 +177,146 @@ fn legacy_unbatched_path_survives_the_same_partition_schedule() {
     drive(&mut net, n, 240_000_000);
     for (rounds, _) in results(&mut net, n) {
         assert_eq!(rounds, 3);
+    }
+}
+
+// ---------------- recovery schedules (digest-addressed pull) ----------------
+
+#[test]
+fn single_lost_chunk_recovers_via_fetch_with_bit_identical_models() {
+    // Exactly ONE weight chunk vanishes: the 2nd of the 4 chunks node 1
+    // multicasts for its round-1 blob never reaches node 0. Before the
+    // pull protocol this silently dropped the whole blob at node 0 (its
+    // aggregation lost a row and diverged); now node 0 must detect the
+    // referenced-but-missing digest, pull exactly the missing range from
+    // the origin, and end bit-identical with everyone else.
+    let n = 4;
+    let c = cfg(n, 3);
+    let sim = SimConfig { n_nodes: n, latency_us: 200, jitter_us: 50, drop_prob: 0.0, seed: 83 };
+    let mut net = SimNet::new(sim, lite_cluster(&c));
+    net.inject_drop(1, 0, Traffic::Weights, 1, 1);
+    drive(&mut net, n, 240_000_000);
+    let rs = results(&mut net, n);
+    for (i, (rounds, digest)) in rs.iter().enumerate() {
+        assert_eq!(*rounds, 3, "node {i} rounds");
+        assert_eq!(*digest, rs[0].1, "node {i}: lost chunk changed the final model");
+    }
+    assert_eq!(net.meter.dropped_class(Traffic::Weights), 1, "exactly one chunk was lost");
+    let victim = net.actor_as::<LiteNode>(0).unwrap();
+    assert!(
+        victim.puller().stats.blobs_recovered >= 1,
+        "recovery must go through the digest-addressed pull path"
+    );
+    // Pool digest equality: everything the final state references is
+    // present at the receiver that suffered the loss.
+    let refs = victim.replica.referenced_blobs();
+    assert!(!refs.is_empty());
+    for (node, round, d) in &refs {
+        assert!(
+            victim.pool().contains(d),
+            "node 0 pool missing blob of node {node} round {round}"
+        );
+    }
+}
+
+#[test]
+fn whole_blob_lost_at_one_receiver_recovers_via_whole_fetch() {
+    // ALL 4 chunks of node 1's round-1 blob are eaten on the way to
+    // node 0 — no partial exists, so the fetch must pull the whole image
+    // (from_byte = to_byte = 0) from the origin.
+    let n = 4;
+    let c = cfg(n, 3);
+    let sim = SimConfig { n_nodes: n, latency_us: 200, jitter_us: 50, drop_prob: 0.0, seed: 89 };
+    let mut net = SimNet::new(sim, lite_cluster(&c));
+    net.inject_drop(1, 0, Traffic::Weights, 0, 4);
+    drive(&mut net, n, 240_000_000);
+    let rs = results(&mut net, n);
+    for (i, (rounds, digest)) in rs.iter().enumerate() {
+        assert_eq!(*rounds, 3, "node {i} rounds");
+        assert_eq!(*digest, rs[0].1, "node {i}: whole-blob loss changed the final model");
+    }
+    assert_eq!(net.meter.dropped_class(Traffic::Weights), 4);
+    let victim = net.actor_as::<LiteNode>(0).unwrap();
+    assert!(victim.puller().stats.blobs_recovered >= 1);
+}
+
+#[test]
+fn byzantine_fetch_reply_is_rejected_and_the_fetch_rotates_to_an_honest_holder() {
+    // Node 0 never receives ANY weight frame from node 1 (all eaten, so
+    // fetch replies from the origin are gone too), and node 2 answers
+    // fetches with digest-mismatched bytes. Recovery of node 1's blobs
+    // at node 0 must therefore walk the full rotation: origin 1 (dead
+    // link, timeout) → 2 (Byzantine bytes, SHA-256 reject) → 3 (honest)
+    // — and every round must still commit with bit-identical models.
+    let n = 4;
+    let mut c = cfg(n, 2);
+    c.gst_us = 400_000;
+    c.fetch_retry_us = 60_000;
+    let sim = SimConfig { n_nodes: n, latency_us: 200, jitter_us: 50, drop_prob: 0.0, seed: 97 };
+    let mut net = SimNet::new(sim, lite_cluster(&c));
+    net.actor_as::<LiteNode>(2).unwrap().puller_mut().corrupt_serve = true;
+    net.inject_drop(1, 0, Traffic::Weights, 0, u32::MAX);
+    drive(&mut net, n, 240_000_000);
+    let rs = results(&mut net, n);
+    for (i, (rounds, digest)) in rs.iter().enumerate() {
+        assert_eq!(*rounds, 2, "node {i} rounds");
+        assert_eq!(*digest, rs[0].1, "node {i}: Byzantine serving changed the final model");
+    }
+    let victim = net.actor_as::<LiteNode>(0).unwrap();
+    let stats = &victim.puller().stats;
+    assert!(stats.bad_replies >= 1, "the mismatched reply must be rejected");
+    assert!(stats.rotations >= 2, "the fetch must rotate past dead and Byzantine holders");
+    assert!(stats.blobs_recovered >= 2, "both rounds' blobs must be recovered");
+}
+
+#[test]
+fn healed_minority_refills_its_weight_pool_after_partition_and_gst() {
+    // Node 3 is cut off while the majority keeps training to completion.
+    // After GST it must (a) replay the decided log through the
+    // chain-validated sync path and (b) walk the replayed UPD references
+    // to pull every blob its pool lacks — ending with the full decided
+    // log AND a bit-identical final model, not just the round count.
+    let n = 4;
+    let c = cfg(n, 4);
+    let sim = SimConfig { n_nodes: n, latency_us: 200, jitter_us: 50, drop_prob: 0.0, seed: 103 };
+    let mut net = SimNet::new(sim, lite_cluster(&c));
+    net.run_until(150_000, u64::MAX);
+    for peer in 0..3 {
+        net.partition(3, peer);
+    }
+    net.run_until(1_500_000, u64::MAX);
+    let majority_round = net.actor_as::<LiteNode>(0).unwrap().replica.r_round;
+    let minority_round = net.actor_as::<LiteNode>(3).unwrap().replica.r_round;
+    assert!(
+        majority_round > minority_round,
+        "majority should commit rounds past the cut node ({majority_round} vs {minority_round})"
+    );
+    for peer in 0..3 {
+        net.heal(3, peer);
+    }
+    drive(&mut net, n, 240_000_000);
+    let rs = results(&mut net, n);
+    for (i, (rounds, digest)) in rs.iter().enumerate() {
+        assert_eq!(*rounds, 4, "node {i} rounds after heal");
+        assert_eq!(*digest, rs[0].1, "node {i}: healed replica's final model diverged");
+    }
+    let healed = net.actor_as::<LiteNode>(3).unwrap();
+    assert!(
+        healed.hotstuff().synced_blocks > 0,
+        "the rejoin must replay decided blocks through catch-up"
+    );
+    assert!(
+        healed.puller().stats.blobs_recovered > 0,
+        "the pool refill must go through the pull path"
+    );
+    // Every blob the replayed state references is in the healed pool.
+    let refs = healed.replica.referenced_blobs();
+    assert!(!refs.is_empty());
+    for (node, round, d) in &refs {
+        assert!(
+            healed.pool().contains(d),
+            "healed pool missing blob of node {node} round {round}"
+        );
     }
 }
 

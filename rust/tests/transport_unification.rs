@@ -6,18 +6,21 @@
 //! only surface the node sees, so the simulator results (every figure and
 //! table) and the deployment path are the same code.
 
+use std::any::Any;
 use std::sync::Arc;
 use std::time::Duration;
 
 use defl::config::{Attack, ExperimentConfig, Model, Partition, System};
 use defl::crypto::{Digest, KeyRegistry, NodeId};
 use defl::defl::lite::{lite_cluster, LiteConfig, LiteNode};
-use defl::defl::DeflNode;
+use defl::defl::{DeflNode, WeightMsg};
+use defl::metrics::Traffic;
 use defl::net::sim::{SimConfig, SimNet};
 use defl::net::tcp::{local_addrs, run_actor, TcpNode};
-use defl::net::Actor;
+use defl::net::{Actor, Ctx};
 use defl::runtime::Engine;
 use defl::sim::build_data;
+use defl::util::Decode;
 
 fn artifacts_present() -> bool {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
@@ -174,6 +177,7 @@ fn sim_and_tcp_agree_on_batched_chunked_path() {
         chunk_bytes: 128,
         batch_consensus: true,
         timeout_base_us: 100_000,
+        fetch_retry_us: 50_000,
     };
 
     // Simulator run.
@@ -229,5 +233,158 @@ fn sim_and_tcp_agree_on_batched_chunked_path() {
     assert_eq!(
         sim[0].1, tcp[0].1,
         "batched+chunked path: sim and TCP reached different final models"
+    );
+}
+
+/// Receiver-side fault injector usable on BOTH transports: an actor
+/// wrapper that eats the first `remaining` multicast chunk frames
+/// arriving from `drop_from` before they reach the inner `LiteNode`.
+/// Fetch/FetchReply/FetchMiss frames pass through, so the loss is
+/// recoverable exactly through the pull path — on the simulator and on
+/// real sockets alike.
+struct DropNthChunk {
+    inner: LiteNode,
+    drop_from: NodeId,
+    remaining: u32,
+}
+
+impl Actor for DropNthChunk {
+    fn on_start(&mut self, ctx: &mut dyn Ctx) {
+        self.inner.on_start(ctx);
+    }
+    fn on_message(&mut self, ctx: &mut dyn Ctx, from: NodeId, class: Traffic, bytes: &[u8]) {
+        if class == Traffic::Weights && from == self.drop_from && self.remaining > 0 {
+            if let Ok(WeightMsg::Chunk(_)) = WeightMsg::from_bytes(bytes) {
+                self.remaining -= 1;
+                return; // the network ate it
+            }
+        }
+        self.inner.on_message(ctx, from, class, bytes);
+    }
+    fn on_timer(&mut self, ctx: &mut dyn Ctx, id: u64) {
+        self.inner.on_timer(ctx, id);
+    }
+    fn as_any(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+/// Sim-vs-TCP parity for the RECOVERY path: node 0 loses the first
+/// chunk of node 1's first blob on each transport, must recover through
+/// the digest-addressed pull, and both transports must still converge to
+/// the same bit-identical final model on every node.
+#[test]
+fn sim_and_tcp_recover_identically_from_a_dropped_chunk() {
+    // 300 f32s = 1200 wire bytes over 128-byte chunks: 10 frames per
+    // blob, one of which is eaten at node 0.
+    let c = LiteConfig {
+        n_nodes: 4,
+        rounds: 3,
+        dim: 300,
+        seed: 117,
+        gst_us: 300_000,
+        chunk_bytes: 128,
+        batch_consensus: true,
+        timeout_base_us: 100_000,
+        fetch_retry_us: 60_000,
+    };
+
+    let build = |id: NodeId, c: &LiteConfig| {
+        LiteNode::new(id, c.clone(), KeyRegistry::new(c.n_nodes, c.seed))
+    };
+
+    // Simulator run, node 0 wrapped in the injector.
+    let actors: Vec<Box<dyn Actor>> = (0..c.n_nodes as NodeId)
+        .map(|id| {
+            if id == 0 {
+                Box::new(DropNthChunk { inner: build(0, &c), drop_from: 1, remaining: 1 })
+                    as Box<dyn Actor>
+            } else {
+                Box::new(build(id, &c)) as Box<dyn Actor>
+            }
+        })
+        .collect();
+    let sim_cfg =
+        SimConfig { n_nodes: c.n_nodes, latency_us: 200, jitter_us: 50, drop_prob: 0.0, seed: 7 };
+    let mut net = SimNet::new(sim_cfg, actors);
+    let mut t = 0u64;
+    loop {
+        t += 500_000;
+        net.run_until(t, u64::MAX);
+        let wrapped_done = net.actor_as::<DropNthChunk>(0).map(|a| a.inner.done).unwrap_or(false);
+        let rest_done = (1..c.n_nodes as NodeId)
+            .all(|i| net.actor_as::<LiteNode>(i).map(|a| a.done).unwrap_or(false));
+        if wrapped_done && rest_done {
+            break;
+        }
+        assert!(t < 240_000_000, "sim recovery run did not finish");
+    }
+    let sim: Vec<(u64, Digest)> = (0..c.n_nodes as NodeId)
+        .map(|i| {
+            if i == 0 {
+                let a = net.actor_as::<DropNthChunk>(0).unwrap();
+                assert_eq!(a.remaining, 0, "sim: the targeted chunk was never dropped");
+                assert!(
+                    a.inner.puller().stats.blobs_recovered >= 1,
+                    "sim: recovery must use the pull path"
+                );
+                (a.inner.rounds_done, a.inner.final_digest.expect("sim digest"))
+            } else {
+                let a = net.actor_as::<LiteNode>(i).unwrap();
+                (a.rounds_done, a.final_digest.expect("sim digest"))
+            }
+        })
+        .collect();
+
+    // TCP run: identical injection at node 0, over real sockets.
+    let addrs = local_addrs(c.n_nodes, 39615);
+    let mut handles = Vec::new();
+    for id in 0..c.n_nodes as NodeId {
+        let (c, addrs) = (c.clone(), addrs.clone());
+        handles.push(std::thread::spawn(move || {
+            let mesh = TcpNode::connect_mesh(id, &addrs).expect("mesh");
+            if id == 0 {
+                let mut actor =
+                    DropNthChunk { inner: build(0, &c), drop_from: 1, remaining: 1 };
+                run_actor(
+                    &mesh,
+                    &mut actor,
+                    Duration::from_secs(120),
+                    |a| a.inner.done,
+                    Duration::from_secs(2),
+                )
+                .expect("run");
+                assert_eq!(actor.remaining, 0, "tcp: the targeted chunk was never dropped");
+                assert!(
+                    actor.inner.puller().stats.blobs_recovered >= 1,
+                    "tcp: recovery must use the pull path"
+                );
+                (actor.inner.rounds_done, actor.inner.final_digest.expect("tcp digest"))
+            } else {
+                let mut node = build(id, &c);
+                run_actor(
+                    &mesh,
+                    &mut node,
+                    Duration::from_secs(120),
+                    |n| n.done,
+                    Duration::from_secs(2),
+                )
+                .expect("run");
+                (node.rounds_done, node.final_digest.expect("tcp digest"))
+            }
+        }));
+    }
+    let tcp: Vec<(u64, Digest)> =
+        handles.into_iter().map(|h| h.join().expect("node thread")).collect();
+
+    for (i, ((sim_r, sim_d), (tcp_r, tcp_d))) in sim.iter().zip(tcp.iter()).enumerate() {
+        assert_eq!(*sim_r, 3, "sim node {i} rounds");
+        assert_eq!(*tcp_r, 3, "tcp node {i} rounds");
+        assert_eq!(sim_d, &sim[0].1, "sim node {i} diverged after recovery");
+        assert_eq!(tcp_d, &tcp[0].1, "tcp node {i} diverged after recovery");
+    }
+    assert_eq!(
+        sim[0].1, tcp[0].1,
+        "dropped-chunk recovery: sim and TCP reached different final models"
     );
 }
