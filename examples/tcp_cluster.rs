@@ -12,6 +12,13 @@
 //! node act as its own parameter server, demonstrated on real sockets.
 //!
 //! Run: `cargo run --release --example tcp_cluster`
+//!
+//! NOTE: threads-in-one-process is the DEMO topology — one crash here
+//! kills every silo at once. For a real deployment (one OS process per
+//! silo, supervised restarts, crash-recovery through sync + blob pulls)
+//! use the cluster subsystem instead:
+//! `defl-supervisor --config cluster.toml` — see `defl::cluster` and the
+//! "Running a real multi-process cluster" section in `net/mod.rs`.
 
 use std::sync::Arc;
 use std::time::Duration;

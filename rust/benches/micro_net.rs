@@ -86,6 +86,7 @@ fn main() {
             batch_consensus: batch,
             timeout_base_us: 200_000,
             fetch_retry_us: 50_000,
+            agg_quorum: None,
         };
         let batched = run_cluster(&mk(true), 21);
         let unbatched = run_cluster(&mk(false), 21);
@@ -142,6 +143,7 @@ fn main() {
                 batch_consensus: true,
                 timeout_base_us: 200_000,
                 fetch_retry_us: 50_000,
+                agg_quorum: None,
             };
             let r = run_cluster(&cfg, 33);
             let bpr = r.weights_bytes as f64 / r.rounds as f64;

@@ -1,0 +1,221 @@
+//! `defl-silo` — one DeFL silo as one OS process.
+//!
+//! Runs a single protocol node (engine-free `LiteNode` or full
+//! `DeflNode`, per the cluster TOML) over the real TCP mesh
+//! (`net::tcp::run_actor`), reports heartbeats/stats/completion to
+//! `defl-supervisor` over the control plane, and exits cleanly once its
+//! rounds are done (after a linger so stragglers keep quorum).
+//!
+//! Usage: `defl-silo --config cluster.toml --id N [--rejoin]`
+//!
+//! `--rejoin` is passed by the supervisor when restarting a crashed
+//! silo: instead of the all-peers-start-together mesh handshake, the
+//! process dials every (already running) peer with backoff and relies on
+//! their acceptors to swap in the fresh connection; consensus and pool
+//! state are then recovered via QC-chain sync + digest-addressed pulls.
+
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use defl::cluster::{read_ctrl, write_ctrl, ClusterConfig, CtrlMsg, SiloMode};
+use defl::crypto::{Digest, KeyRegistry, NodeId};
+use defl::defl::{DeflNode, LiteNode};
+use defl::metrics::StatsSnapshot;
+use defl::net::tcp::{run_actor, TcpNode};
+use defl::util::cli::Args;
+
+fn main() {
+    defl::util::logging::init();
+    if let Err(e) = run() {
+        eprintln!("defl-silo: error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env(&[])?;
+    let cfg_path = args.require("config")?;
+    let id: NodeId = args
+        .get_parse("id")?
+        .context("missing required --id <node>")?;
+    let rejoin = args.flag("rejoin");
+    let cc = ClusterConfig::load(Path::new(cfg_path))?;
+    if id as usize >= cc.n_nodes {
+        bail!("--id {id} outside the {}-silo cluster", cc.n_nodes);
+    }
+
+    // Control plane: dial the supervisor (it binds before spawning us),
+    // introduce ourselves, then stream heartbeats from a side thread and
+    // watch for Shutdown on another. All writes go through one mutex so
+    // the heartbeat thread and the final Done frame can never interleave
+    // bytes on the wire.
+    let mut ctrl = dial_ctrl(&cc, Duration::from_secs(10))?;
+    write_ctrl(&mut ctrl, &CtrlMsg::Hello { node: id })?;
+    let writer = Arc::new(Mutex::new(ctrl.try_clone()?));
+    let snap = Arc::new(Mutex::new(StatsSnapshot { node: id, ..Default::default() }));
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let stop_beats = Arc::new(AtomicBool::new(false));
+    let beats = {
+        let (snap, stop, writer) = (snap.clone(), stop_beats.clone(), writer.clone());
+        let period = Duration::from_millis(cc.heartbeat_ms);
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::SeqCst) {
+                let s = snap.lock().unwrap().clone();
+                if write_ctrl(&mut *writer.lock().unwrap(), &CtrlMsg::Heartbeat(s)).is_err() {
+                    return; // supervisor gone; keep running regardless
+                }
+                std::thread::sleep(period);
+            }
+        })
+    };
+    {
+        let shutdown = shutdown.clone();
+        let mut r = ctrl.try_clone()?;
+        std::thread::spawn(move || loop {
+            match read_ctrl(&mut r) {
+                Ok(CtrlMsg::Shutdown) => {
+                    shutdown.store(true, Ordering::SeqCst);
+                    return;
+                }
+                Ok(_) => {}
+                Err(_) => return,
+            }
+        });
+    }
+
+    // Mesh: fresh cluster start vs crash-restart rejoin.
+    let addrs = cc.mesh_addrs();
+    let t0 = Instant::now();
+    let mesh = if rejoin {
+        TcpNode::rejoin_mesh(id, &addrs, Duration::from_secs(15))?
+    } else {
+        TcpNode::connect_mesh(id, &addrs)?
+    };
+    println!(
+        "silo {id}: {} mesh in {:?} ({} peers connected)",
+        if rejoin { "rejoined" } else { "joined" },
+        t0.elapsed(),
+        mesh.connected_peers()
+    );
+
+    let (rounds, digest) = match cc.mode {
+        SiloMode::Lite => run_lite(&cc, id, &mesh, &snap, &shutdown)?,
+        SiloMode::Full => run_full(&cc, id, &mesh, &snap, &shutdown)?,
+    };
+
+    let _ = write_ctrl(
+        &mut *writer.lock().unwrap(),
+        &CtrlMsg::Done { node: id, rounds, digest },
+    );
+    stop_beats.store(true, Ordering::SeqCst);
+    let _ = beats.join();
+    println!("silo {id}: done after {rounds} rounds, final digest {}", digest.short());
+    Ok(())
+}
+
+fn dial_ctrl(cc: &ClusterConfig, budget: Duration) -> Result<TcpStream> {
+    let addr = cc.control_addr();
+    let deadline = Instant::now() + budget;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                s.set_nodelay(true).ok();
+                return Ok(s);
+            }
+            Err(e) => {
+                if Instant::now() > deadline {
+                    bail!("control plane {addr}: {e}");
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+fn run_lite(
+    cc: &ClusterConfig,
+    id: NodeId,
+    mesh: &TcpNode,
+    snap: &Arc<Mutex<StatsSnapshot>>,
+    shutdown: &Arc<AtomicBool>,
+) -> Result<(u64, Digest)> {
+    let lc = cc.lite_config();
+    let registry = KeyRegistry::new(cc.n_nodes, lc.seed);
+    let mut node = LiteNode::new(id, lc, registry);
+    // The done predicate runs after every message and idle tick; rebuild
+    // the (allocating) snapshot only at the heartbeat cadence.
+    let snap_period = Duration::from_millis(cc.heartbeat_ms.max(2) / 2);
+    let mut next_snap = Instant::now();
+    run_actor(
+        mesh,
+        &mut node,
+        Duration::from_secs(cc.deadline_s),
+        |n| {
+            if shutdown.load(Ordering::SeqCst) && !n.done {
+                n.shutdown();
+            }
+            if n.done || Instant::now() >= next_snap {
+                next_snap = Instant::now() + snap_period;
+                *snap.lock().unwrap() = n.snapshot();
+            }
+            n.done
+        },
+        Duration::from_millis(cc.linger_ms),
+    )?;
+    let digest = node
+        .final_digest
+        .ok_or_else(|| anyhow::anyhow!("silo {id} finished without a final digest"))?;
+    Ok((node.rounds_done, digest))
+}
+
+fn run_full(
+    cc: &ClusterConfig,
+    id: NodeId,
+    mesh: &TcpNode,
+    snap: &Arc<Mutex<StatsSnapshot>>,
+    shutdown: &Arc<AtomicBool>,
+) -> Result<(u64, Digest)> {
+    use defl::runtime::Engine;
+    use defl::sim::build_data;
+    use std::sync::Arc as StdArc;
+
+    let exp = cc.full_config();
+    // Each silo process owns its engine and rebuilds the deterministic
+    // dataset from the seed — exactly the deployment shape the PJRT
+    // clients require (they are not Send).
+    let engine = StdArc::new(Engine::load_default(exp.model)?);
+    let (train, _test, mut shards, sizes) = build_data(&exp, &engine);
+    let theta0 = engine.init_params(exp.seed as u32)?;
+    let shard = shards.remove(id as usize);
+    let registry = KeyRegistry::new(exp.n_nodes, exp.seed);
+    let mut node = DeflNode::new(id, exp, engine, train, shard, sizes, registry, theta0);
+    let snap_period = Duration::from_millis(cc.heartbeat_ms.max(2) / 2);
+    let mut next_snap = Instant::now();
+    run_actor(
+        mesh,
+        &mut node,
+        Duration::from_secs(cc.deadline_s),
+        |n| {
+            if shutdown.load(Ordering::SeqCst) && !n.done {
+                n.shutdown();
+            }
+            if n.done || Instant::now() >= next_snap {
+                next_snap = Instant::now() + snap_period;
+                *snap.lock().unwrap() = n.snapshot();
+            }
+            n.done
+        },
+        Duration::from_millis(cc.linger_ms),
+    )?;
+    let digest = node
+        .final_theta
+        .as_ref()
+        .map(|w| w.digest())
+        .ok_or_else(|| anyhow::anyhow!("silo {id} finished without a final model"))?;
+    Ok((node.stats.rounds_done, digest))
+}

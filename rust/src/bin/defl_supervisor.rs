@@ -1,0 +1,60 @@
+//! `defl-supervisor` — spawn, monitor, and restart a multi-process DeFL
+//! cluster described by a cluster TOML (see `cluster::config`).
+//!
+//! Usage:
+//!   defl-supervisor --config cluster.toml
+//!       [--silo-bin path/to/defl-silo]   # default: sibling of this binary
+//!       [--kill <node>@<round>]          # SIGKILL scenario + restart
+//!       [--deadline-s N]                 # hard wall-clock cap (hangs fail fast)
+//!
+//! On success prints the machine-readable exit lines CI and the
+//! integration test compare across runs:
+//!   CLUSTER_ROUNDS <r>
+//!   CLUSTER_DIGEST <hex>
+//!   CLUSTER_RESTARTS <n>
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use defl::cluster::{run_supervisor, ClusterConfig, KillSpec, SupervisorOpts};
+use defl::util::cli::Args;
+
+fn main() {
+    defl::util::logging::init();
+    if let Err(e) = run() {
+        eprintln!("defl-supervisor: error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env(&[])?;
+    let cfg_path = PathBuf::from(args.require("config")?);
+    let cc = ClusterConfig::load(&cfg_path)?;
+
+    let silo_bin = match args.get("silo-bin") {
+        Some(p) => PathBuf::from(p),
+        None => {
+            // Default: the defl-silo built next to this supervisor.
+            let me = std::env::current_exe().context("locating defl-supervisor")?;
+            let dir = me.parent().context("defl-supervisor has no parent dir")?;
+            dir.join(if cfg!(windows) { "defl-silo.exe" } else { "defl-silo" })
+        }
+    };
+    let kill = args.get("kill").map(KillSpec::parse).transpose()?;
+    let deadline_s: u64 = args.get_parse_or("deadline-s", cc.deadline_s)?;
+
+    let opts = SupervisorOpts {
+        silo_bin,
+        config_path: cfg_path,
+        kill,
+        deadline: Duration::from_secs(deadline_s),
+    };
+    let report = run_supervisor(&cc, &opts)?;
+    println!("CLUSTER_ROUNDS {}", report.rounds);
+    println!("CLUSTER_DIGEST {}", report.digest.hex());
+    println!("CLUSTER_RESTARTS {}", report.restarts);
+    Ok(())
+}

@@ -1,0 +1,554 @@
+//! Cluster TOML schema: one file describes a whole multi-process
+//! deployment — node count, mesh/control ports, supervision knobs, and
+//! the experiment itself — and every `defl-silo` process derives its own
+//! per-node configuration from it (id → listen address, chunk and fetch
+//! budgets, quorums), so the supervisor and all silos provably read the
+//! same world.
+//!
+//! Parsing is strict: unknown keys are rejected (a typo'd knob must not
+//! silently fall back to a default mid-deployment), `[experiment]`
+//! defaults mirror [`ExperimentConfig::default`] exactly, and
+//! [`ClusterConfig::to_toml`] emits a document that parses back to the
+//! identical config (pinned by a property test).
+
+use std::net::{IpAddr, SocketAddr};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::toml::TomlDoc;
+use crate::config::{Attack, ExperimentConfig, Model, Partition, System};
+use crate::defl::LiteConfig;
+
+/// Which protocol node a silo process hosts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SiloMode {
+    /// Engine-free `LiteNode`: deterministic synthetic updates, no PJRT
+    /// artifacts needed. The mode CI's multi-process smoke runs, and the
+    /// only mode whose crash-restart recovery is bit-identical to an
+    /// uninterrupted run (the local update is a pure function of
+    /// (seed, node, round)).
+    Lite,
+    /// Full `DeflNode` (Algorithm 1 + 2 over real training); requires
+    /// the AOT artifacts. Crash-restart recovers to cluster-wide
+    /// agreement; bit-identity to an uninterrupted run additionally
+    /// needs restart-deterministic trainer state (ROADMAP follow-on).
+    Full,
+}
+
+impl SiloMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SiloMode::Lite => "lite",
+            SiloMode::Full => "full",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<SiloMode> {
+        match s {
+            "lite" => Ok(SiloMode::Lite),
+            "full" => Ok(SiloMode::Full),
+            _ => bail!("unknown silo mode `{s}` (lite | full)"),
+        }
+    }
+}
+
+/// The `[cluster]` + `[experiment]` sections of a cluster TOML.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Silo count n (one OS process each).
+    pub n_nodes: usize,
+    /// Interface every silo listens on (and the supervisor binds the
+    /// control plane to).
+    pub host: IpAddr,
+    /// Mesh ports: silo i listens on `base_port + i`.
+    pub base_port: u16,
+    /// Supervisor control-plane port (heartbeat/status/shutdown frames).
+    pub control_port: u16,
+    /// Silo → supervisor heartbeat period (ms).
+    pub heartbeat_ms: u64,
+    /// First restart delay after a silo crash (ms); doubles per
+    /// consecutive crash of the same silo, capped below.
+    pub restart_backoff_ms: u64,
+    pub restart_backoff_max_ms: u64,
+    /// Restarts allowed per silo before the supervisor gives up.
+    pub max_restarts: u32,
+    pub mode: SiloMode,
+    /// `agg_quorum = "all"`: a round advances only once EVERY silo's AGG
+    /// committed, so no round is ever decided without a crashed silo's
+    /// UPD row — the precondition for bit-identical crash-restart
+    /// recovery. `"auto"` = f_tol + 1 (rounds survive a minority crash,
+    /// at the cost of those rounds aggregating fewer rows).
+    pub agg_quorum_all: bool,
+    /// Wall-clock budget for one silo's whole run (s).
+    pub deadline_s: u64,
+    /// How long a finished silo keeps serving peers (consensus votes,
+    /// sync replies, blob fetches) before exiting (ms).
+    pub linger_ms: u64,
+    /// Lite-mode synthetic model dimension (f32 elements).
+    pub dim: usize,
+    /// HotStuff base view timeout (ms).
+    pub hs_timeout_ms: u64,
+    /// The experiment payload; `n_nodes` is forced to the cluster's.
+    pub exp: ExperimentConfig,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        let n_nodes = 4;
+        ClusterConfig {
+            n_nodes,
+            host: IpAddr::from([127, 0, 0, 1]),
+            base_port: 42200,
+            control_port: 42190,
+            heartbeat_ms: 200,
+            restart_backoff_ms: 250,
+            restart_backoff_max_ms: 4_000,
+            max_restarts: 5,
+            mode: SiloMode::Lite,
+            agg_quorum_all: false,
+            deadline_s: 600,
+            linger_ms: 3_000,
+            dim: 1_024,
+            hs_timeout_ms: 100,
+            exp: ExperimentConfig { n_nodes, ..Default::default() },
+        }
+    }
+}
+
+/// Keys accepted in each section — anything else is a hard parse error.
+const CLUSTER_KEYS: &[&str] = &[
+    "cluster.nodes",
+    "cluster.host",
+    "cluster.base_port",
+    "cluster.control_port",
+    "cluster.heartbeat_ms",
+    "cluster.restart_backoff_ms",
+    "cluster.restart_backoff_max_ms",
+    "cluster.max_restarts",
+    "cluster.mode",
+    "cluster.agg_quorum",
+    "cluster.deadline_s",
+    "cluster.linger_ms",
+];
+
+const EXPERIMENT_KEYS: &[&str] = &[
+    "experiment.system",
+    "experiment.model",
+    "experiment.partition",
+    "experiment.attack",
+    "experiment.byzantine",
+    "experiment.rounds",
+    "experiment.local_steps",
+    "experiment.lr",
+    "experiment.train_n",
+    "experiment.test_n",
+    "experiment.tau",
+    "experiment.seed",
+    "experiment.gst_ms",
+    "experiment.chunk_bytes",
+    "experiment.batch_consensus",
+    "experiment.fetch_retry_ms",
+    "experiment.dim",
+    "experiment.hs_timeout_ms",
+];
+
+impl ClusterConfig {
+    pub fn parse(text: &str) -> Result<ClusterConfig> {
+        let doc = TomlDoc::parse(text)?;
+        Self::from_doc(&doc)
+    }
+
+    pub fn load(path: &Path) -> Result<ClusterConfig> {
+        let doc = TomlDoc::load(path)
+            .with_context(|| format!("loading cluster config {}", path.display()))?;
+        Self::from_doc(&doc)
+    }
+
+    pub fn from_doc(doc: &TomlDoc) -> Result<ClusterConfig> {
+        for key in doc.keys() {
+            if !CLUSTER_KEYS.contains(&key) && !EXPERIMENT_KEYS.contains(&key) {
+                bail!("unknown cluster config key `{key}`");
+            }
+        }
+        let mut cfg = ClusterConfig::default();
+        if let Some(v) = doc.get("cluster.host") {
+            cfg.host = v.parse().with_context(|| format!("cluster.host={v}"))?;
+        }
+        cfg.n_nodes = doc.get_parse("cluster.nodes")?.unwrap_or(cfg.n_nodes);
+        cfg.base_port = doc.get_parse("cluster.base_port")?.unwrap_or(cfg.base_port);
+        cfg.control_port = doc.get_parse("cluster.control_port")?.unwrap_or(cfg.control_port);
+        cfg.heartbeat_ms = doc.get_parse("cluster.heartbeat_ms")?.unwrap_or(cfg.heartbeat_ms);
+        cfg.restart_backoff_ms = doc
+            .get_parse("cluster.restart_backoff_ms")?
+            .unwrap_or(cfg.restart_backoff_ms);
+        cfg.restart_backoff_max_ms = doc
+            .get_parse("cluster.restart_backoff_max_ms")?
+            .unwrap_or(cfg.restart_backoff_max_ms);
+        cfg.max_restarts = doc.get_parse("cluster.max_restarts")?.unwrap_or(cfg.max_restarts);
+        if let Some(v) = doc.get("cluster.mode") {
+            cfg.mode = SiloMode::parse(v)?;
+        }
+        if let Some(v) = doc.get("cluster.agg_quorum") {
+            cfg.agg_quorum_all = match v {
+                "all" => true,
+                "auto" => false,
+                _ => bail!("cluster.agg_quorum={v} (all | auto)"),
+            };
+        }
+        cfg.deadline_s = doc.get_parse("cluster.deadline_s")?.unwrap_or(cfg.deadline_s);
+        cfg.linger_ms = doc.get_parse("cluster.linger_ms")?.unwrap_or(cfg.linger_ms);
+
+        let e = &mut cfg.exp;
+        if let Some(v) = doc.get("experiment.system") {
+            e.system = System::parse(v)?;
+        }
+        if let Some(v) = doc.get("experiment.model") {
+            e.model = Model::parse(v)?;
+        }
+        if let Some(v) = doc.get("experiment.partition") {
+            e.partition = Partition::parse(v)?;
+        }
+        if let Some(v) = doc.get("experiment.attack") {
+            e.attack = Attack::parse(v)?;
+        }
+        e.f_byzantine = doc.get_parse("experiment.byzantine")?.unwrap_or(e.f_byzantine);
+        e.rounds = doc.get_parse("experiment.rounds")?.unwrap_or(e.rounds);
+        e.local_steps = doc.get_parse("experiment.local_steps")?.unwrap_or(e.local_steps);
+        e.lr = doc.get_parse("experiment.lr")?.unwrap_or(e.lr);
+        e.train_samples = doc.get_parse("experiment.train_n")?.unwrap_or(e.train_samples);
+        e.test_samples = doc.get_parse("experiment.test_n")?.unwrap_or(e.test_samples);
+        e.tau = doc.get_parse("experiment.tau")?.unwrap_or(e.tau);
+        e.seed = doc.get_parse("experiment.seed")?.unwrap_or(e.seed);
+        e.gst_lt_ms = doc.get_parse("experiment.gst_ms")?.unwrap_or(e.gst_lt_ms);
+        e.chunk_bytes = doc.get_parse("experiment.chunk_bytes")?.unwrap_or(e.chunk_bytes);
+        e.batch_consensus = doc
+            .get_parse("experiment.batch_consensus")?
+            .unwrap_or(e.batch_consensus);
+        e.fetch_retry_ms = doc
+            .get_parse("experiment.fetch_retry_ms")?
+            .unwrap_or(e.fetch_retry_ms);
+        cfg.dim = doc.get_parse("experiment.dim")?.unwrap_or(cfg.dim);
+        cfg.hs_timeout_ms = doc.get_parse("experiment.hs_timeout_ms")?.unwrap_or(cfg.hs_timeout_ms);
+
+        cfg.exp.n_nodes = cfg.n_nodes;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Emit a TOML document that [`parse`](Self::parse) maps back to
+    /// `self` exactly (every key explicit — the file doubles as the
+    /// deployment record).
+    pub fn to_toml(&self) -> String {
+        let attack = match self.exp.attack {
+            Attack::None => "none".to_string(),
+            Attack::Gaussian { sigma } => format!("gaussian:{sigma}"),
+            Attack::SignFlip { sigma } => format!("sign-flip:{sigma}"),
+            Attack::LabelFlip => "label-flip".to_string(),
+            Attack::StaleRound => "stale-round".to_string(),
+            Attack::EarlyAgg => "early-agg".to_string(),
+        };
+        let partition = match self.exp.partition {
+            Partition::Iid => "iid".to_string(),
+            Partition::Dirichlet(a) => format!("dirichlet:{a}"),
+        };
+        format!(
+            "[cluster]\n\
+             nodes = {}\n\
+             host = \"{}\"\n\
+             base_port = {}\n\
+             control_port = {}\n\
+             heartbeat_ms = {}\n\
+             restart_backoff_ms = {}\n\
+             restart_backoff_max_ms = {}\n\
+             max_restarts = {}\n\
+             mode = \"{}\"\n\
+             agg_quorum = \"{}\"\n\
+             deadline_s = {}\n\
+             linger_ms = {}\n\
+             \n\
+             [experiment]\n\
+             system = \"{}\"\n\
+             model = \"{}\"\n\
+             partition = \"{partition}\"\n\
+             attack = \"{attack}\"\n\
+             byzantine = {}\n\
+             rounds = {}\n\
+             local_steps = {}\n\
+             lr = {}\n\
+             train_n = {}\n\
+             test_n = {}\n\
+             tau = {}\n\
+             seed = {}\n\
+             gst_ms = {}\n\
+             chunk_bytes = {}\n\
+             batch_consensus = {}\n\
+             fetch_retry_ms = {}\n\
+             dim = {}\n\
+             hs_timeout_ms = {}\n",
+            self.n_nodes,
+            self.host,
+            self.base_port,
+            self.control_port,
+            self.heartbeat_ms,
+            self.restart_backoff_ms,
+            self.restart_backoff_max_ms,
+            self.max_restarts,
+            self.mode.name(),
+            if self.agg_quorum_all { "all" } else { "auto" },
+            self.deadline_s,
+            self.linger_ms,
+            self.exp.system.name(),
+            self.exp.model.name(),
+            self.exp.f_byzantine,
+            self.exp.rounds,
+            self.exp.local_steps,
+            self.exp.lr,
+            self.exp.train_samples,
+            self.exp.test_samples,
+            self.exp.tau,
+            self.exp.seed,
+            self.exp.gst_lt_ms,
+            self.exp.chunk_bytes,
+            self.exp.batch_consensus,
+            self.exp.fetch_retry_ms,
+            self.dim,
+            self.hs_timeout_ms,
+        )
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_nodes < 2 {
+            bail!("cluster.nodes must be >= 2 (a mesh of one is the simulator's job)");
+        }
+        if self.n_nodes > u16::MAX as usize - self.base_port as usize {
+            bail!("cluster.base_port + nodes overflows the port space");
+        }
+        let mesh = self.base_port..self.base_port + self.n_nodes as u16;
+        if mesh.contains(&self.control_port) {
+            bail!(
+                "cluster.control_port {} collides with the mesh port range {}..{}",
+                self.control_port, mesh.start, mesh.end
+            );
+        }
+        if self.heartbeat_ms == 0 || self.restart_backoff_ms == 0 {
+            bail!("heartbeat_ms and restart_backoff_ms must be positive");
+        }
+        if self.restart_backoff_max_ms < self.restart_backoff_ms {
+            bail!("restart_backoff_max_ms below restart_backoff_ms");
+        }
+        if self.dim == 0 {
+            bail!("experiment.dim must be positive");
+        }
+        if self.hs_timeout_ms == 0 {
+            bail!("experiment.hs_timeout_ms must be positive");
+        }
+        if self.exp.n_nodes != self.n_nodes {
+            bail!("experiment n_nodes diverged from cluster.nodes");
+        }
+        self.exp.validate()
+    }
+
+    /// Mesh listen addresses: silo i ⇒ `host:(base_port + i)`.
+    pub fn mesh_addrs(&self) -> Vec<SocketAddr> {
+        (0..self.n_nodes)
+            .map(|i| SocketAddr::new(self.host, self.base_port + i as u16))
+            .collect()
+    }
+
+    /// Supervisor control-plane address.
+    pub fn control_addr(&self) -> SocketAddr {
+        SocketAddr::new(self.host, self.control_port)
+    }
+
+    /// The AGG quorum every silo runs with (see `agg_quorum_all`).
+    pub fn agg_quorum(&self) -> usize {
+        if self.agg_quorum_all {
+            self.n_nodes
+        } else {
+            (self.n_nodes - 1) / 3 + 1
+        }
+    }
+
+    /// Per-node protocol config for a lite-mode silo, derived from the
+    /// `[experiment]` section: the chunk/fetch budgets, seed, and GST are
+    /// the exact `ExperimentConfig` values (pinned by a test), so a lite
+    /// cluster exercises the same wire-path parameters a full one would.
+    pub fn lite_config(&self) -> LiteConfig {
+        LiteConfig {
+            n_nodes: self.n_nodes,
+            rounds: self.exp.rounds as u64,
+            dim: self.dim,
+            seed: self.exp.seed,
+            gst_us: self.exp.gst_lt_ms * 1_000,
+            chunk_bytes: self.exp.chunk_bytes,
+            batch_consensus: self.exp.batch_consensus,
+            timeout_base_us: self.hs_timeout_ms * 1_000,
+            fetch_retry_us: self.exp.fetch_retry_ms * 1_000,
+            agg_quorum: Some(self.agg_quorum()),
+        }
+    }
+
+    /// Per-node experiment config for a full-mode silo (identical across
+    /// silos; the node id picks the shard at runtime, exactly like
+    /// `examples/tcp_cluster.rs`).
+    pub fn full_config(&self) -> ExperimentConfig {
+        self.exp.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn default_roundtrips_and_matches_experiment_defaults() {
+        let cfg = ClusterConfig::default();
+        let back = ClusterConfig::parse(&cfg.to_toml()).unwrap();
+        assert_eq!(back, cfg);
+
+        // An empty [experiment] section must yield EXACTLY the
+        // ExperimentConfig defaults (modulo the cluster-driven n_nodes):
+        // the per-node derivation may not drift from the simulator's.
+        let minimal = ClusterConfig::parse("[cluster]\nnodes = 7\n").unwrap();
+        let want = ExperimentConfig::default();
+        assert_eq!(minimal.exp.rounds, want.rounds);
+        assert_eq!(minimal.exp.seed, want.seed);
+        assert_eq!(minimal.exp.tau, want.tau);
+        assert_eq!(minimal.exp.gst_lt_ms, want.gst_lt_ms);
+        assert_eq!(minimal.exp.chunk_bytes, want.chunk_bytes);
+        assert_eq!(minimal.exp.batch_consensus, want.batch_consensus);
+        assert_eq!(minimal.exp.fetch_retry_ms, want.fetch_retry_ms);
+        assert_eq!(minimal.exp.n_nodes, 7);
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected() {
+        for text in [
+            "[cluster]\nnodes = 4\nchaos = 1\n",
+            "[experiment]\nrounds = 3\nroundz = 3\n",
+            "stray = 1\n",
+            "[typo_section]\nnodes = 4\n",
+        ] {
+            let err = ClusterConfig::parse(text).unwrap_err().to_string();
+            assert!(err.contains("unknown cluster config key"), "{text}: {err}");
+        }
+    }
+
+    #[test]
+    fn per_node_derivation_is_consistent() {
+        let cfg = ClusterConfig::parse(
+            "[cluster]\nnodes = 4\nbase_port = 45000\ncontrol_port = 44990\n\
+             agg_quorum = \"all\"\n\
+             [experiment]\nrounds = 6\nseed = 99\ngst_ms = 300\nchunk_bytes = 2048\n\
+             fetch_retry_ms = 60\ndim = 512\nhs_timeout_ms = 80\n",
+        )
+        .unwrap();
+        let addrs = cfg.mesh_addrs();
+        assert_eq!(addrs.len(), 4);
+        for (i, a) in addrs.iter().enumerate() {
+            assert_eq!(a.port(), 45000 + i as u16);
+            assert_eq!(a.ip(), cfg.host);
+        }
+        assert_eq!(cfg.control_addr().port(), 44990);
+        let lc = cfg.lite_config();
+        assert_eq!(lc.n_nodes, 4);
+        assert_eq!(lc.rounds, 6);
+        assert_eq!(lc.dim, 512);
+        assert_eq!(lc.seed, 99);
+        assert_eq!(lc.gst_us, 300_000);
+        assert_eq!(lc.chunk_bytes, 2048);
+        assert_eq!(lc.fetch_retry_us, 60_000);
+        assert_eq!(lc.timeout_base_us, 80_000);
+        assert_eq!(lc.agg_quorum, Some(4), "agg_quorum=all means unanimity");
+        // The full-mode config is the experiment section verbatim, with
+        // the cluster's n.
+        assert_eq!(cfg.full_config().n_nodes, 4);
+        assert_eq!(cfg.full_config().rounds, 6);
+    }
+
+    #[test]
+    fn validation_rejects_bad_shapes() {
+        assert!(ClusterConfig::parse("[cluster]\nnodes = 1\n").is_err());
+        // control port inside the mesh range
+        assert!(ClusterConfig::parse(
+            "[cluster]\nnodes = 4\nbase_port = 42200\ncontrol_port = 42202\n"
+        )
+        .is_err());
+        // port-space overflow
+        assert!(ClusterConfig::parse("[cluster]\nnodes = 4\nbase_port = 65534\n").is_err());
+        // backoff cap below the base
+        assert!(ClusterConfig::parse(
+            "[cluster]\nnodes = 4\nrestart_backoff_ms = 500\nrestart_backoff_max_ms = 100\n"
+        )
+        .is_err());
+        assert!(ClusterConfig::parse("[cluster]\nmode = \"threads\"\n").is_err());
+        assert!(ClusterConfig::parse("[cluster]\nagg_quorum = \"most\"\n").is_err());
+    }
+
+    #[test]
+    fn prop_toml_roundtrip_is_exact() {
+        forall(
+            "cluster-toml-roundtrip",
+            31,
+            60,
+            16,
+            |rng, _size| {
+                let n_nodes = 2 + rng.gen_usize(9);
+                let base_port = 40_000 + rng.gen_range(10_000) as u16;
+                let mut cfg = ClusterConfig {
+                    n_nodes,
+                    base_port,
+                    control_port: base_port - 1 - rng.gen_range(50) as u16,
+                    heartbeat_ms: 50 + rng.gen_range(500),
+                    restart_backoff_ms: 100 + rng.gen_range(400),
+                    restart_backoff_max_ms: 1_000 + rng.gen_range(5_000),
+                    max_restarts: rng.gen_range(9) as u32,
+                    mode: if rng.f64() < 0.5 { SiloMode::Lite } else { SiloMode::Full },
+                    agg_quorum_all: rng.f64() < 0.5,
+                    deadline_s: 60 + rng.gen_range(600),
+                    linger_ms: rng.gen_range(5_000),
+                    dim: 1 + rng.gen_usize(1 << 14),
+                    hs_timeout_ms: 20 + rng.gen_range(400),
+                    ..Default::default()
+                };
+                cfg.exp.n_nodes = n_nodes;
+                cfg.exp.rounds = 1 + rng.gen_usize(40);
+                cfg.exp.seed = rng.next_u64();
+                cfg.exp.lr = (rng.f32() * 0.9).max(0.01);
+                cfg.exp.tau = 2 + rng.gen_usize(4);
+                cfg.exp.gst_lt_ms = 100 + rng.gen_range(4_000);
+                cfg.exp.chunk_bytes = rng.gen_usize(1 << 20);
+                cfg.exp.batch_consensus = rng.f64() < 0.5;
+                cfg.exp.fetch_retry_ms = 10 + rng.gen_range(400);
+                cfg.exp.attack = *rng.choose(&[
+                    Attack::None,
+                    Attack::LabelFlip,
+                    Attack::StaleRound,
+                    Attack::EarlyAgg,
+                    Attack::Gaussian { sigma: 0.25 },
+                    Attack::SignFlip { sigma: -2.0 },
+                ]);
+                cfg.exp.partition = *rng.choose(&[
+                    Partition::Iid,
+                    Partition::Dirichlet(1.0),
+                    Partition::Dirichlet(0.5),
+                ]);
+                cfg
+            },
+            |cfg| {
+                if cfg.validate().is_err() {
+                    return Ok(()); // generator produced an invalid combo: skip
+                }
+                let text = cfg.to_toml();
+                let back = ClusterConfig::parse(&text)
+                    .map_err(|e| format!("reparse failed: {e:#}\n{text}"))?;
+                if &back != cfg {
+                    return Err(format!("roundtrip drift:\n{back:?}\nvs\n{cfg:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,177 @@
+//! Supervisor ⇄ silo control plane: a tiny framed protocol over one TCP
+//! connection per silo, reusing the repo codec ([`crate::util::codec`]).
+//!
+//! Wire format: every frame is `len: u32 LE` followed by `len` bytes of
+//! a [`CtrlMsg`] encoding —
+//!
+//! * tag 1 `Hello { node: u32 }` — first frame after a silo connects
+//!   (also re-sent by a restarted silo; the supervisor re-binds the
+//!   connection to the node id).
+//! * tag 2 `Heartbeat(StatsSnapshot)` — periodic liveness + the node's
+//!   live [`crate::metrics::StatsSnapshot`], aggregated by the
+//!   supervisor into the cluster summary.
+//! * tag 3 `Done { node: u32, rounds: u64, digest: 32 B }` — terminal
+//!   report: the silo finished its configured rounds with this
+//!   final-model digest.
+//! * tag 4 `Shutdown` — supervisor → silo: finalize now and exit
+//!   cleanly (drives [`crate::defl::DeflNode::shutdown`]).
+//!
+//! The supervisor never trusts these bytes: frames are length-capped and
+//! decode through the bounds-checked cursor, so a wedged or malicious
+//! child can at worst disconnect itself.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Result};
+
+use crate::crypto::{Digest, NodeId};
+use crate::metrics::StatsSnapshot;
+use crate::util::codec::{Cursor, Decode, Encode};
+
+/// Cap on one control frame (far above any real snapshot; a corrupt
+/// length prefix must not allocate unbounded memory).
+pub const CTRL_MAX_FRAME: usize = 1 << 20;
+
+/// One control-plane message (see the module docs for the wire format).
+#[derive(Debug, Clone, PartialEq)]
+pub enum CtrlMsg {
+    Hello { node: NodeId },
+    Heartbeat(StatsSnapshot),
+    Done { node: NodeId, rounds: u64, digest: Digest },
+    Shutdown,
+}
+
+impl Encode for CtrlMsg {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            CtrlMsg::Hello { node } => {
+                1u8.encode(out);
+                node.encode(out);
+            }
+            CtrlMsg::Heartbeat(snap) => {
+                2u8.encode(out);
+                snap.encode(out);
+            }
+            CtrlMsg::Done { node, rounds, digest } => {
+                3u8.encode(out);
+                node.encode(out);
+                rounds.encode(out);
+                digest.encode(out);
+            }
+            CtrlMsg::Shutdown => 4u8.encode(out),
+        }
+    }
+    fn encoded_len(&self) -> usize {
+        1 + match self {
+            CtrlMsg::Hello { .. } => 4,
+            CtrlMsg::Heartbeat(snap) => snap.encoded_len(),
+            CtrlMsg::Done { .. } => 4 + 8 + 32,
+            CtrlMsg::Shutdown => 0,
+        }
+    }
+}
+
+impl Decode for CtrlMsg {
+    fn decode(cur: &mut Cursor<'_>) -> Result<Self> {
+        Ok(match u8::decode(cur)? {
+            1 => CtrlMsg::Hello { node: NodeId::decode(cur)? },
+            2 => CtrlMsg::Heartbeat(StatsSnapshot::decode(cur)?),
+            3 => CtrlMsg::Done {
+                node: NodeId::decode(cur)?,
+                rounds: u64::decode(cur)?,
+                digest: Digest::decode(cur)?,
+            },
+            4 => CtrlMsg::Shutdown,
+            t => bail!("bad ctrl msg tag {t}"),
+        })
+    }
+}
+
+/// Write one length-prefixed control frame.
+pub fn write_ctrl<W: Write>(w: &mut W, msg: &CtrlMsg) -> Result<()> {
+    let payload = msg.to_bytes();
+    if payload.len() > CTRL_MAX_FRAME {
+        bail!("ctrl frame too large: {}", payload.len());
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one length-prefixed control frame.
+pub fn read_ctrl<R: Read>(r: &mut R) -> Result<CtrlMsg> {
+    let mut len_bytes = [0u8; 4];
+    r.read_exact(&mut len_bytes)?;
+    let len = u32::from_le_bytes(len_bytes) as usize;
+    if len > CTRL_MAX_FRAME {
+        bail!("ctrl frame too large: {len}");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    CtrlMsg::from_bytes(&payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::PeerServe;
+
+    fn sample_msgs() -> Vec<CtrlMsg> {
+        vec![
+            CtrlMsg::Hello { node: 2 },
+            CtrlMsg::Heartbeat(StatsSnapshot {
+                node: 2,
+                round: 3,
+                decided_height: 11,
+                view: 14,
+                pool_bytes: 8192,
+                peer_serves: vec![PeerServe { peer: 1, bytes_served: 4096, reqs_throttled: 2 }],
+                ..Default::default()
+            }),
+            CtrlMsg::Done { node: 2, rounds: 6, digest: Digest::of_bytes(b"model") },
+            CtrlMsg::Shutdown,
+        ]
+    }
+
+    #[test]
+    fn ctrl_msgs_roundtrip_exactly() {
+        for m in sample_msgs() {
+            let bytes = m.to_bytes();
+            assert_eq!(bytes.len(), m.encoded_len(), "encoded_len for {m:?}");
+            assert_eq!(CtrlMsg::from_bytes(&bytes).unwrap(), m);
+            for cut in 0..bytes.len() {
+                assert!(CtrlMsg::from_bytes(&bytes[..cut]).is_err(), "truncation at {cut}");
+            }
+        }
+    }
+
+    #[test]
+    fn framing_roundtrips_over_a_byte_stream() {
+        let msgs = sample_msgs();
+        let mut wire = Vec::new();
+        for m in &msgs {
+            write_ctrl(&mut wire, m).unwrap();
+        }
+        let mut cursor = std::io::Cursor::new(wire);
+        for m in &msgs {
+            assert_eq!(&read_ctrl(&mut cursor).unwrap(), m);
+        }
+        // The stream is fully drained; one more read is a clean error.
+        assert!(read_ctrl(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn oversized_and_garbage_frames_are_rejected() {
+        // Absurd length prefix: rejected before allocating.
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&(u32::MAX).to_le_bytes());
+        wire.extend_from_slice(&[0u8; 16]);
+        assert!(read_ctrl(&mut std::io::Cursor::new(wire)).is_err());
+        // Unknown tag inside a well-framed payload.
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&1u32.to_le_bytes());
+        wire.push(9);
+        assert!(read_ctrl(&mut std::io::Cursor::new(wire)).is_err());
+    }
+}

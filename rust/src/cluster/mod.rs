@@ -1,0 +1,65 @@
+//! Process-per-silo cluster subsystem: real multi-process DeFL.
+//!
+//! Everything below `net::transport` already runs the same state machine
+//! on the simulator and on TCP; this module adds the missing deployment
+//! layer — one **OS process per silo** plus a **supervisor**, so a crash
+//! kills exactly one participant (the failure model the paper assumes)
+//! instead of the whole thread-pool of `examples/tcp_cluster.rs`.
+//!
+//! # Pieces
+//!
+//! * [`config::ClusterConfig`] — the cluster TOML (`[cluster]` +
+//!   `[experiment]`): node ids/ports, supervision knobs, and the
+//!   experiment, with strict unknown-key rejection and exact
+//!   `to_toml`/`parse` roundtripping. Every silo derives its per-node
+//!   view (listen address, chunk/fetch budgets, quorums) from the same
+//!   file.
+//! * [`control`] — the supervisor ⇄ silo control plane: length-prefixed
+//!   `Hello` / `Heartbeat(StatsSnapshot)` / `Done` / `Shutdown` frames
+//!   over one TCP connection per silo, reusing `util::codec`.
+//! * [`supervisor`] — spawns `defl-silo` processes, monitors heartbeats,
+//!   restarts crashed silos with exponential backoff (capped, bounded
+//!   attempts), aggregates snapshots into the cluster summary printed at
+//!   round boundaries and on exit, and runs the `--kill <node>@<round>`
+//!   recovery scenario.
+//!
+//! The two binaries live in `src/bin/`: `defl-silo` (one node over
+//! `net::tcp`) and `defl-supervisor`. Run a cluster with
+//! `defl-supervisor --config cluster.toml`.
+//!
+//! # Crash-restart recovery guarantees
+//!
+//! A silo SIGKILLed mid-training and restarted by the supervisor rejoins
+//! via [`crate::net::tcp::TcpNode::rejoin_mesh`] (surviving peers'
+//! acceptors replace the dead connection) and recovers protocol state
+//! entirely through machinery that predates this module:
+//!
+//! 1. **Consensus**: the first frame from a higher view triggers the
+//!    ranged `SyncRequest` catch-up; replay validates each entry's
+//!    commit QC, its QC-covered height, and parent-chain contiguity.
+//! 2. **Storage**: replayed UPDs repopulate W^CUR/W^LAST references, and
+//!    every referenced blob missing from the restarted pool — including
+//!    the silo's OWN pre-crash commits — is pulled back by digest from
+//!    any holder, SHA-256-verified.
+//! 3. **Rounds**: aggregation holds while W^LAST pulls are in flight, so
+//!    the recovered aggregate is bit-identical, not row-dropped.
+//!
+//! With `agg_quorum = "all"` no round can advance without every silo's
+//! UPD, so a lite-mode cluster's final model digest after kill + restart
+//! is **bit-identical to an uninterrupted run of the same seed** (the
+//! lite local update is a pure function of (seed, node, round); the CI
+//! smoke and `tests/cluster_process.rs` assert exactly this). With the
+//! default minority AGG quorum, rounds keep advancing while a silo is
+//! down — recovery then guarantees cluster-wide agreement, and the runs
+//! legitimately diverge from an uninterrupted one by the rows decided
+//! without the dead silo. Crash-restart also resets a replica's HotStuff
+//! lock state: safe under the crash-fault model supervised here, and
+//! counted against the Byzantine budget otherwise.
+
+pub mod config;
+pub mod control;
+pub mod supervisor;
+
+pub use config::{ClusterConfig, SiloMode};
+pub use control::{read_ctrl, write_ctrl, CtrlMsg};
+pub use supervisor::{run_supervisor, KillSpec, SupervisorOpts, SupervisorReport};

@@ -1,0 +1,487 @@
+//! The supervisor: spawns one `defl-silo` OS process per node, watches
+//! them over the TCP control plane, restarts crashed silos with
+//! exponential backoff, and aggregates every silo's
+//! [`StatsSnapshot`] into a cluster-wide summary printed at round
+//! boundaries and on exit.
+//!
+//! The headline scenario (`--kill <node>@<round>`): SIGKILL a silo once
+//! its heartbeats report the target round, restart it, and let the
+//! rejoined process catch up through the existing QC-chain sync +
+//! digest-addressed blob pull — over real process boundaries. With
+//! `agg_quorum = "all"` the recovered run's final model is bit-identical
+//! to an uninterrupted run of the same seed (the exit lines
+//! `CLUSTER_DIGEST` / `CLUSTER_ROUNDS` / `CLUSTER_RESTARTS` make that
+//! comparable from CI).
+
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::crypto::{Digest, NodeId};
+use crate::metrics::StatsSnapshot;
+use crate::util::bench::fmt_bytes;
+
+use super::config::{ClusterConfig, SiloMode};
+use super::control::{read_ctrl, write_ctrl, CtrlMsg};
+
+/// Kill scenario: SIGKILL `node` once its heartbeats report `at_round`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KillSpec {
+    pub node: NodeId,
+    pub at_round: u64,
+}
+
+impl KillSpec {
+    /// Parse the CLI shape `<node>@<round>`, e.g. `2@1`.
+    pub fn parse(s: &str) -> Result<KillSpec> {
+        let Some((node, round)) = s.split_once('@') else {
+            bail!("kill spec `{s}` is not <node>@<round>");
+        };
+        Ok(KillSpec {
+            node: node.parse().with_context(|| format!("kill node `{node}`"))?,
+            at_round: round.parse().with_context(|| format!("kill round `{round}`"))?,
+        })
+    }
+}
+
+/// Supervisor invocation parameters (beyond the cluster TOML).
+#[derive(Debug, Clone)]
+pub struct SupervisorOpts {
+    /// Path to the `defl-silo` binary.
+    pub silo_bin: PathBuf,
+    /// Path to the cluster TOML, passed through to every silo.
+    pub config_path: PathBuf,
+    pub kill: Option<KillSpec>,
+    /// Hard wall-clock budget for the whole run; on expiry every child
+    /// is killed and the supervisor exits nonzero (a hang fails fast).
+    pub deadline: Duration,
+}
+
+/// What a successful supervised run produced.
+#[derive(Debug, Clone)]
+pub struct SupervisorReport {
+    /// Rounds every honest silo completed.
+    pub rounds: u64,
+    /// The agreed final-model digest.
+    pub digest: Digest,
+    /// Total silo restarts performed.
+    pub restarts: u32,
+    /// Round the killed silo rejoined at (first heartbeat after
+    /// restart), when a kill was requested.
+    pub rejoin_round: Option<u64>,
+}
+
+/// Exponential restart backoff: doubles per consecutive crash, capped.
+pub fn next_backoff(cur_ms: u64, max_ms: u64) -> u64 {
+    cur_ms.saturating_mul(2).min(max_ms)
+}
+
+/// One line aggregating the latest snapshots — the cluster-wide summary
+/// (rounds, consensus heights, storage gauges, pull-protocol health
+/// including the per-peer serve budgets).
+pub fn summary_line(snaps: &[StatsSnapshot], restarts: u32) -> String {
+    let min = |f: fn(&StatsSnapshot) -> u64| snaps.iter().map(f).min().unwrap_or(0);
+    let max = |f: fn(&StatsSnapshot) -> u64| snaps.iter().map(f).max().unwrap_or(0);
+    let sum = |f: fn(&StatsSnapshot) -> u64| snaps.iter().map(f).sum::<u64>();
+    let served: u64 = snaps
+        .iter()
+        .flat_map(|s| s.peer_serves.iter())
+        .map(|p| p.bytes_served)
+        .sum();
+    let throttled: u64 = snaps
+        .iter()
+        .flat_map(|s| s.peer_serves.iter())
+        .map(|p| p.reqs_throttled)
+        .sum();
+    format!(
+        "round {}..{} | height {}..{} | pool {} (peak {}) | \
+         fetch sent {} recovered {} served {} throttled {} | restarts {}",
+        min(|s| s.round),
+        max(|s| s.round),
+        min(|s| s.decided_height),
+        max(|s| s.decided_height),
+        fmt_bytes(sum(|s| s.pool_bytes)),
+        fmt_bytes(sum(|s| s.pool_peak_bytes)),
+        sum(|s| s.fetches_sent),
+        sum(|s| s.blobs_recovered),
+        fmt_bytes(served),
+        throttled,
+        restarts,
+    )
+}
+
+/// Per-silo supervision state.
+struct Silo {
+    child: Option<Child>,
+    restarts: u32,
+    backoff_ms: u64,
+    restart_at: Option<Instant>,
+    snap: StatsSnapshot,
+    done: Option<(u64, Digest)>,
+}
+
+fn spawn_silo(opts: &SupervisorOpts, id: NodeId, rejoin: bool) -> Result<Child> {
+    let mut cmd = Command::new(&opts.silo_bin);
+    cmd.arg("--config")
+        .arg(&opts.config_path)
+        .arg("--id")
+        .arg(id.to_string());
+    if rejoin {
+        cmd.arg("--rejoin");
+    }
+    cmd.spawn()
+        .with_context(|| format!("spawning {} for silo {id}", opts.silo_bin.display()))
+}
+
+/// Run the whole supervised cluster to completion. Returns once every
+/// silo reported `Done` with an agreed digest, or fails on the deadline,
+/// on restart-budget exhaustion, or on digest disagreement.
+pub fn run_supervisor(cc: &ClusterConfig, opts: &SupervisorOpts) -> Result<SupervisorReport> {
+    cc.validate()?;
+    let n = cc.n_nodes;
+    if let Some(k) = opts.kill {
+        if k.node as usize >= n {
+            bail!("kill target {} outside the {n}-silo cluster", k.node);
+        }
+    }
+
+    // Control plane: accept silo connections, forward their frames.
+    let listener = TcpListener::bind(cc.control_addr())
+        .with_context(|| format!("bind control plane {}", cc.control_addr()))?;
+    let (tx, rx) = channel::<(NodeId, CtrlMsg)>();
+    let writers: Arc<Mutex<HashMap<NodeId, TcpStream>>> = Arc::new(Mutex::new(HashMap::new()));
+    let closed = Arc::new(AtomicBool::new(false));
+    let accept_thread = {
+        let (tx, writers, closed) = (tx.clone(), writers.clone(), closed.clone());
+        std::thread::spawn(move || control_accept_loop(listener, tx, writers, closed))
+    };
+    drop(tx);
+
+    let mut silos: Vec<Silo> = (0..n)
+        .map(|_| Silo {
+            child: None,
+            restarts: 0,
+            backoff_ms: cc.restart_backoff_ms,
+            restart_at: None,
+            snap: StatsSnapshot::default(),
+            done: None,
+        })
+        .collect();
+
+    let result = supervise(cc, opts, &mut silos, &rx);
+
+    // Tear down — on success AND on error: stop accepting, nudge
+    // lingering silos over the control plane, then reap every child
+    // (kill whatever ignores the nudge).
+    closed.store(true, Ordering::SeqCst);
+    let _ = TcpStream::connect(cc.control_addr()); // unblock accept()
+    for (_, mut w) in writers.lock().unwrap().drain() {
+        let _ = write_ctrl(&mut w, &CtrlMsg::Shutdown);
+    }
+    let reap_deadline = Instant::now() + Duration::from_secs(10);
+    for silo in silos.iter_mut() {
+        if let Some(child) = silo.child.as_mut() {
+            while child.try_wait().ok().flatten().is_none() {
+                if Instant::now() > reap_deadline {
+                    let _ = child.kill();
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            let _ = child.wait();
+            silo.child = None;
+        }
+    }
+    let _ = accept_thread.join();
+    result
+}
+
+fn control_accept_loop(
+    listener: TcpListener,
+    tx: Sender<(NodeId, CtrlMsg)>,
+    writers: Arc<Mutex<HashMap<NodeId, TcpStream>>>,
+    closed: Arc<AtomicBool>,
+) {
+    loop {
+        let Ok((stream, _)) = listener.accept() else {
+            if closed.load(Ordering::SeqCst) {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+            continue;
+        };
+        if closed.load(Ordering::SeqCst) {
+            return;
+        }
+        let tx = tx.clone();
+        let writers = writers.clone();
+        std::thread::spawn(move || {
+            let mut stream = stream;
+            stream
+                .set_read_timeout(Some(Duration::from_secs(5)))
+                .ok();
+            let Ok(CtrlMsg::Hello { node }) = read_ctrl(&mut stream) else {
+                return; // not a silo
+            };
+            stream.set_read_timeout(None).ok();
+            if let Ok(w) = stream.try_clone() {
+                writers.lock().unwrap().insert(node, w);
+            }
+            if tx.send((node, CtrlMsg::Hello { node })).is_err() {
+                return;
+            }
+            loop {
+                match read_ctrl(&mut stream) {
+                    Ok(msg) => {
+                        if tx.send((node, msg)).is_err() {
+                            return;
+                        }
+                    }
+                    Err(_) => return, // silo gone (exit or crash)
+                }
+            }
+        });
+    }
+}
+
+fn supervise(
+    cc: &ClusterConfig,
+    opts: &SupervisorOpts,
+    silos: &mut [Silo],
+    rx: &std::sync::mpsc::Receiver<(NodeId, CtrlMsg)>,
+) -> Result<SupervisorReport> {
+    let n = cc.n_nodes;
+    println!(
+        "[supervisor] spawning {n} silos ({} mode) on {}:{}..{}, control {}",
+        cc.mode.name(),
+        cc.host,
+        cc.base_port,
+        cc.base_port + n as u16 - 1,
+        cc.control_addr(),
+    );
+    for (id, silo) in silos.iter_mut().enumerate() {
+        silo.child = Some(spawn_silo(opts, id as NodeId, false)?);
+    }
+
+    let start = Instant::now();
+    let mut killed_at: Option<(NodeId, u64)> = None;
+    let mut rejoin_round: Option<u64> = None;
+    let mut last_summary_round: Option<u64> = None;
+
+    loop {
+        if start.elapsed() > opts.deadline {
+            bail!(
+                "deadline {:?} expired with {}/{} silos done — cluster hung",
+                opts.deadline,
+                silos.iter().filter(|s| s.done.is_some()).count(),
+                n
+            );
+        }
+
+        // Drain control-plane events (blocking up to one tick).
+        let mut first = true;
+        while let Ok((node, msg)) = if first {
+            rx.recv_timeout(Duration::from_millis(50))
+        } else {
+            rx.try_recv().map_err(|_| std::sync::mpsc::RecvTimeoutError::Timeout)
+        } {
+            first = false;
+            let Some(silo) = silos.get_mut(node as usize) else {
+                log::warn!("[supervisor] frame from unknown node id {node} — ignoring");
+                continue;
+            };
+            match msg {
+                CtrlMsg::Hello { .. } => {
+                    log::debug!("[supervisor] silo {node} connected to the control plane");
+                }
+                CtrlMsg::Heartbeat(snap) => {
+                    // A restarted silo's first heartbeats report round 0
+                    // (fresh state, catch-up still running); the first
+                    // one showing real progress marks the rejoin point
+                    // for the recovery assertion. If it never reports
+                    // progress, the final check falls back to the round
+                    // the kill happened at.
+                    if silo.restarts > 0 && rejoin_round.is_none() && snap.round > 0 {
+                        rejoin_round = Some(snap.round);
+                        println!("[supervisor] silo {node} rejoined at round {}", snap.round);
+                    }
+                    silo.snap = snap;
+                }
+                CtrlMsg::Done { rounds, digest, .. } => {
+                    println!(
+                        "[supervisor] silo {node} done: {rounds} rounds, digest {}",
+                        digest.short()
+                    );
+                    silo.done = Some((rounds, digest));
+                }
+                CtrlMsg::Shutdown => {} // silos never send this
+            }
+        }
+
+        // Kill scenario: the target reported the trigger round.
+        if let (Some(k), None) = (opts.kill, killed_at) {
+            let silo = &mut silos[k.node as usize];
+            if silo.snap.round >= k.at_round && silo.done.is_none() {
+                if let Some(child) = silo.child.as_mut() {
+                    child.kill().context("SIGKILL silo")?;
+                    killed_at = Some((k.node, silo.snap.round));
+                    println!(
+                        "[supervisor] SIGKILLed silo {} at round {} (scenario)",
+                        k.node, silo.snap.round
+                    );
+                }
+            }
+        }
+
+        // Crash detection + restart with exponential backoff.
+        for (id, silo) in silos.iter_mut().enumerate() {
+            let exited = silo
+                .child
+                .as_mut()
+                .and_then(|c| c.try_wait().ok().flatten());
+            if let Some(status) = exited {
+                silo.child = None;
+                if silo.done.is_some() {
+                    continue; // clean exit after Done
+                }
+                if status.success() {
+                    // Exit 0 races the Done frame still in flight on the
+                    // control plane: wait for it instead of restarting a
+                    // silo that finished (a 0-exit without a Done would
+                    // park on the deadline, which is the bug signal we
+                    // want).
+                    continue;
+                }
+                if silo.restarts >= cc.max_restarts {
+                    bail!("silo {id} crashed ({status}) after {} restarts — giving up", silo.restarts);
+                }
+                println!(
+                    "[supervisor] silo {id} exited ({status}) before Done — restart in {} ms \
+                     (attempt {})",
+                    silo.backoff_ms,
+                    silo.restarts + 1
+                );
+                silo.restart_at = Some(Instant::now() + Duration::from_millis(silo.backoff_ms));
+                silo.backoff_ms = next_backoff(silo.backoff_ms, cc.restart_backoff_max_ms);
+            }
+            if silo.restart_at.is_some_and(|t| Instant::now() >= t) {
+                silo.restart_at = None;
+                silo.restarts += 1;
+                silo.child = Some(spawn_silo(opts, id as NodeId, true)?);
+                println!("[supervisor] restarted silo {id} (restart #{})", silo.restarts);
+            }
+        }
+
+        // Cluster summary at round boundaries.
+        let snaps: Vec<StatsSnapshot> = silos.iter().map(|s| s.snap.clone()).collect();
+        let cluster_round = snaps.iter().map(|s| s.round).min().unwrap_or(0);
+        if snaps.iter().all(|s| s.round > 0 || s.done) && last_summary_round != Some(cluster_round)
+        {
+            last_summary_round = Some(cluster_round);
+            let restarts: u32 = silos.iter().map(|s| s.restarts).sum();
+            println!("[supervisor] {}", summary_line(&snaps, restarts));
+        }
+
+        if silos.iter().all(|s| s.done.is_some()) {
+            break;
+        }
+    }
+
+    // Exit summary + agreement check.
+    let snaps: Vec<StatsSnapshot> = silos.iter().map(|s| s.snap.clone()).collect();
+    let total_restarts: u32 = silos.iter().map(|s| s.restarts).sum();
+    println!("[supervisor] final: {}", summary_line(&snaps, total_restarts));
+
+    // Lite silos are all honest; full mode grades only ids ≥ f.
+    let honest_from = match cc.mode {
+        SiloMode::Lite => 0,
+        SiloMode::Full => cc.exp.f_byzantine,
+    };
+    let honest: Vec<(u64, Digest)> =
+        silos[honest_from..].iter().map(|s| s.done.unwrap()).collect();
+    let (rounds, digest) = honest[0];
+    for (i, (r, d)) in honest.iter().enumerate() {
+        if (*r, *d) != (rounds, digest) {
+            bail!(
+                "honest silo {} disagrees: ({r}, {}) vs ({rounds}, {})",
+                honest_from + i,
+                d.short(),
+                digest.short()
+            );
+        }
+    }
+    if let Some((node, round)) = killed_at {
+        let rejoin = rejoin_round.unwrap_or(round);
+        if rounds <= rejoin {
+            bail!("cluster never committed past silo {node}'s rejoin round {rejoin}");
+        }
+        println!(
+            "[supervisor] recovery: silo {node} killed at round {round}, rejoined at {rejoin}, \
+             cluster committed through round {rounds}"
+        );
+    }
+    Ok(SupervisorReport { rounds, digest, restarts: total_restarts, rejoin_round })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::PeerServe;
+
+    #[test]
+    fn kill_spec_parses() {
+        assert_eq!(KillSpec::parse("2@1").unwrap(), KillSpec { node: 2, at_round: 1 });
+        assert_eq!(KillSpec::parse("0@10").unwrap(), KillSpec { node: 0, at_round: 10 });
+        assert!(KillSpec::parse("2").is_err());
+        assert!(KillSpec::parse("x@1").is_err());
+        assert!(KillSpec::parse("1@y").is_err());
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        assert_eq!(next_backoff(250, 4_000), 500);
+        assert_eq!(next_backoff(500, 4_000), 1_000);
+        assert_eq!(next_backoff(3_000, 4_000), 4_000);
+        assert_eq!(next_backoff(4_000, 4_000), 4_000);
+        assert_eq!(next_backoff(u64::MAX, 4_000), 4_000);
+    }
+
+    #[test]
+    fn summary_aggregates_across_silos() {
+        let snaps = vec![
+            StatsSnapshot {
+                node: 0,
+                round: 3,
+                decided_height: 9,
+                pool_bytes: 1024,
+                fetches_sent: 2,
+                blobs_recovered: 1,
+                peer_serves: vec![PeerServe { peer: 1, bytes_served: 512, reqs_throttled: 1 }],
+                ..Default::default()
+            },
+            StatsSnapshot {
+                node: 1,
+                round: 4,
+                decided_height: 11,
+                pool_bytes: 2048,
+                peer_serves: vec![PeerServe { peer: 0, bytes_served: 256, reqs_throttled: 0 }],
+                ..Default::default()
+            },
+        ];
+        let line = summary_line(&snaps, 1);
+        assert!(line.contains("round 3..4"), "{line}");
+        assert!(line.contains("height 9..11"), "{line}");
+        assert!(line.contains("fetch sent 2 recovered 1"), "{line}");
+        assert!(line.contains("throttled 1"), "{line}");
+        assert!(line.contains("restarts 1"), "{line}");
+        // Empty input must not panic (startup, before any heartbeat).
+        let _ = summary_line(&[], 0);
+    }
+}

@@ -166,7 +166,7 @@ impl Attack {
 }
 
 /// One experiment = system × model × scale × attack × schedule.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
     pub system: System,
     pub model: Model,

@@ -55,6 +55,14 @@ pub struct LiteConfig {
     pub timeout_base_us: u64,
     /// Pull-protocol tick period / per-holder fetch timeout (µs).
     pub fetch_retry_us: u64,
+    /// AGG quorum override. `None` = f_tol + 1 (= ⌊(n−1)/3⌋ + 1): small
+    /// enough that a partitioned minority cannot stall rounds, large
+    /// enough that it cannot advance them. `Some(n)` holds every round
+    /// for every node's UPD — what the multi-process cluster smoke uses
+    /// so a crash-restarted silo's run stays bit-identical to an
+    /// uninterrupted one (rounds decided without the dead silo's row
+    /// would legitimately diverge otherwise).
+    pub agg_quorum: Option<usize>,
 }
 
 impl Default for LiteConfig {
@@ -69,6 +77,7 @@ impl Default for LiteConfig {
             batch_consensus: true,
             timeout_base_us: 100_000,
             fetch_retry_us: 50_000,
+            agg_quorum: None,
         }
     }
 }
@@ -101,9 +110,7 @@ impl LiteNode {
             batch_submit: cfg.batch_consensus,
             ..Default::default()
         };
-        // AGG quorum f_tol + 1: small enough that a partitioned minority
-        // cannot stall rounds, large enough that it cannot advance them.
-        let agg_quorum = (cfg.n_nodes - 1) / 3 + 1;
+        let agg_quorum = cfg.agg_quorum.unwrap_or((cfg.n_nodes - 1) / 3 + 1);
         LiteNode {
             id,
             hs: HotStuff::new(id, cfg.n_nodes, registry, hs_cfg, ByzMode::Honest),
@@ -168,7 +175,7 @@ impl LiteNode {
             }
         }
         if executed {
-            pull::refresh_wants(&mut self.puller, &self.replica, &self.pool, ctx, self.id);
+            pull::refresh_wants(&mut self.puller, &self.replica, &self.pool, ctx);
         }
     }
 
@@ -240,6 +247,16 @@ impl LiteNode {
         self.done = true;
         self.rounds_done = self.replica.r_round;
         self.final_digest = Some(Weights::new(self.aggregate_last()).digest());
+    }
+
+    /// Clean-shutdown hook (see [`super::DeflNode::shutdown`]).
+    pub fn shutdown(&mut self) {
+        self.finish();
+    }
+
+    /// Control-plane snapshot of this node's live state (heartbeats).
+    pub fn snapshot(&self) -> crate::metrics::StatsSnapshot {
+        super::node::snapshot_of(self.id, &self.replica, &self.hs, &self.pool, &self.puller, self.done)
     }
 }
 

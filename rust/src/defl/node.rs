@@ -64,6 +64,11 @@ pub struct NodeStats {
     pub agg_native: u64,
     /// Blobs recovered through the digest-addressed pull protocol.
     pub fetched_blobs: u64,
+    /// Full pull-protocol counters, including the per-peer serve-budget
+    /// accounting (bytes served / requests throttled per peer) — copied
+    /// from the [`Puller`] at finish so drivers and the cluster control
+    /// plane see the storage layer's health without reaching into it.
+    pub fetch: crate::defl::pull::FetchStats,
 }
 
 pub struct DeflNode {
@@ -187,7 +192,7 @@ impl DeflNode {
             }
         }
         if executed {
-            pull::refresh_wants(&mut self.puller, &self.replica, &self.pool, ctx, self.id);
+            pull::refresh_wants(&mut self.puller, &self.replica, &self.pool, ctx);
         }
     }
 
@@ -337,6 +342,21 @@ impl DeflNode {
         self.stats.pool_peak_bytes = self.pool.peak_bytes();
         self.stats.pool_bytes = self.pool.bytes();
         self.stats.fetched_blobs = self.puller.stats.blobs_recovered;
+        self.stats.fetch = self.puller.stats.clone();
+    }
+
+    /// Clean-shutdown hook for process hosts (the cluster silo binary):
+    /// finalize the node NOW — aggregate the final model from whatever
+    /// round the replica reached, seal the stats — so the host's `done`
+    /// predicate ends the transport loop gracefully instead of killing
+    /// the process mid-round.
+    pub fn shutdown(&mut self) {
+        self.finish();
+    }
+
+    /// Control-plane snapshot of this node's live state (heartbeats).
+    pub fn snapshot(&self) -> crate::metrics::StatsSnapshot {
+        snapshot_of(self.id, &self.replica, &self.hs, &self.pool, &self.puller, self.done)
     }
 
     pub fn pool(&self) -> &WeightPool {
@@ -350,6 +370,54 @@ impl DeflNode {
     pub fn puller(&self) -> &Puller {
         &self.puller
     }
+}
+
+/// Build the control-plane [`crate::metrics::StatsSnapshot`] from a
+/// node's component state. ONE implementation shared by `DeflNode` and
+/// `LiteNode`, so the lite and full heartbeats can never silently
+/// diverge field-by-field.
+pub(crate) fn snapshot_of(
+    id: NodeId,
+    replica: &ReplicaState,
+    hs: &HotStuff,
+    pool: &WeightPool,
+    puller: &Puller,
+    done: bool,
+) -> crate::metrics::StatsSnapshot {
+    let fs = &puller.stats;
+    crate::metrics::StatsSnapshot {
+        node: id,
+        round: replica.r_round,
+        decided_height: hs.decided_height(),
+        view: hs.view(),
+        txs_executed: replica.executed,
+        txs_rejected: replica.rejected,
+        pool_bytes: pool.bytes(),
+        pool_peak_bytes: pool.peak_bytes(),
+        fetches_sent: fs.fetches_sent,
+        blobs_recovered: fs.blobs_recovered,
+        fetch_rotations: fs.rotations,
+        fetch_gave_up: fs.gave_up,
+        serve_denied: fs.serve_denied,
+        peer_serves: peer_serves(fs),
+        done,
+    }
+}
+
+/// Flatten a puller's per-peer serve maps into the snapshot rows (sorted
+/// by peer id — both sources are BTreeMaps).
+fn peer_serves(fs: &crate::defl::pull::FetchStats) -> Vec<crate::metrics::PeerServe> {
+    let mut peers: std::collections::BTreeSet<NodeId> =
+        fs.served_bytes_by_peer.keys().copied().collect();
+    peers.extend(fs.throttled_by_peer.keys().copied());
+    peers
+        .into_iter()
+        .map(|peer| crate::metrics::PeerServe {
+            peer,
+            bytes_served: fs.served_bytes_by_peer.get(&peer).copied().unwrap_or(0),
+            reqs_throttled: fs.throttled_by_peer.get(&peer).copied().unwrap_or(0),
+        })
+        .collect()
 }
 
 impl Actor for DeflNode {

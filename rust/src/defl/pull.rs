@@ -80,7 +80,8 @@ impl Default for FetchConfig {
     }
 }
 
-/// Pull-protocol counters (surfaced by node stats and the fault suite).
+/// Pull-protocol counters (surfaced by node stats, the cluster control
+/// plane, and the fault suite).
 #[derive(Debug, Default, Clone)]
 pub struct FetchStats {
     /// Fetch frames sent.
@@ -101,6 +102,13 @@ pub struct FetchStats {
     pub serve_denied: u64,
     /// Wants abandoned after `max_cycles` fruitless rotations.
     pub gave_up: u64,
+    /// Reply payload bytes served, per requesting peer, over the node's
+    /// lifetime (the per-round budget windows reset; these do not) — the
+    /// metrics surface of the serve budgets, aggregated cluster-wide by
+    /// the supervisor.
+    pub served_bytes_by_peer: BTreeMap<NodeId, u64>,
+    /// Fetch requests denied by the serve budgets, per requesting peer.
+    pub throttled_by_peer: BTreeMap<NodeId, u64>,
 }
 
 /// One outstanding blob want.
@@ -306,6 +314,7 @@ impl Puller {
         let reqs = self.served_reqs.entry(from).or_default();
         if *reqs >= self.cfg.serve_budget_reqs {
             self.stats.serve_denied += 1;
+            *self.stats.throttled_by_peer.entry(from).or_default() += 1;
             return;
         }
         *reqs += 1;
@@ -327,6 +336,7 @@ impl Puller {
             let hi = (fetch.to_byte as usize).min(total);
             if lo >= hi {
                 self.stats.serve_denied += 1;
+                *self.stats.throttled_by_peer.entry(from).or_default() += 1;
                 return;
             }
             (lo, hi)
@@ -335,9 +345,11 @@ impl Puller {
         let used = self.served_bytes.entry(from).or_default();
         if *used + span > self.cfg.serve_budget_bytes {
             self.stats.serve_denied += 1;
+            *self.stats.throttled_by_peer.entry(from).or_default() += 1;
             return;
         }
         *used += span;
+        *self.stats.served_bytes_by_peer.entry(from).or_default() += span;
         let step = if self.cfg.chunk_bytes == 0 { hi - lo } else { self.cfg.chunk_bytes };
         let mut off = lo;
         while off < hi {
@@ -424,19 +436,25 @@ impl Puller {
 /// the fetch ticker is armed while any want remains. A healed replica's
 /// replayed UPD txs land in W^CUR/W^LAST, so this single hook also
 /// refills its pool after catch-up.
+///
+/// A node's OWN committed blobs are wanted too when missing: a running
+/// node always holds what it committed (the want never triggers), but a
+/// silo process restarted after a crash replays its own pre-crash UPDs
+/// with an empty pool and must refill its W^LAST row from peers — the
+/// holder ring simply starts at the origin's successor since the origin
+/// is the requester itself.
 pub fn refresh_wants(
     puller: &mut Puller,
     replica: &ReplicaState,
     pool: &WeightPool,
     ctx: &mut dyn Ctx,
-    my_id: NodeId,
 ) {
     let refs = replica.referenced_blobs();
     let referenced: HashSet<Digest> = refs.iter().map(|(_, _, d)| *d).collect();
     puller.retain_referenced(&referenced);
     let now = ctx.now_us();
     for (node, round, digest) in refs {
-        if node != my_id && !pool.contains(&digest) {
+        if !pool.contains(&digest) {
             puller.want(digest, round, node, now);
         }
     }
@@ -849,6 +867,15 @@ mod tests {
         let denied_before = puller.stats.serve_denied;
         puller.serve_fetch(&mut ctx, &pool, 3, fetch(0, 0));
         assert_eq!(puller.stats.serve_denied, denied_before + 1, "request budget must deny");
+
+        // The per-peer metrics surface: cumulative bytes served and
+        // throttle counts per requester (NOT reset by on_round — these
+        // feed the cluster-wide supervisor summary).
+        assert_eq!(puller.stats.served_bytes_by_peer.get(&0).copied(), Some(512));
+        assert_eq!(puller.stats.served_bytes_by_peer.get(&2).copied(), Some(128));
+        assert_eq!(puller.stats.throttled_by_peer.get(&0).copied(), Some(1));
+        assert_eq!(puller.stats.throttled_by_peer.get(&2).copied(), Some(1));
+        assert_eq!(puller.stats.throttled_by_peer.get(&3).copied(), Some(1));
     }
 
     #[test]

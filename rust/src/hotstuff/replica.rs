@@ -463,8 +463,8 @@ impl HotStuff {
         self.send(out, from, req);
     }
 
-    fn push_decided(&mut self, qc: &Qc, block: &Block) {
-        self.decided_height += 1;
+    fn push_decided(&mut self, qc: &Qc, block: &Block, height: u64) {
+        self.decided_height = height;
         let entry = SyncEntry {
             height: self.decided_height,
             prev: self.decided_tip,
@@ -535,8 +535,9 @@ impl HotStuff {
     /// missing range per view; after `GAP_JUMP_AFTER` fruitless attempts
     /// the replayer jumps best-effort (old behaviour) so an evicted
     /// prefix cannot stall liveness forever. Every entry, strict or
-    /// jumped, still needs a verifying commit QC — history cannot be
-    /// forged, only withheld.
+    /// jumped, still needs a verifying commit QC that also covers the
+    /// claimed height — history cannot be forged or relabelled, only
+    /// withheld.
     fn on_sync_reply(
         &mut self,
         from: NodeId,
@@ -545,24 +546,19 @@ impl HotStuff {
     ) -> Result<()> {
         entries.sort_by_key(|e| e.height);
         entries.dedup_by_key(|e| e.height);
-        // Height repair: a replica that misses a DECIDE but live-decides
-        // the NEXT view counts its tip one short of the honest sequence
-        // forever (the missed block's commands are lost either way — the
-        // pre-validation code had the same hole). If the server's
-        // sequence contains OUR decided tip at a higher height, adopt
-        // that height so strict chain validation can keep extending from
-        // the tip instead of rejecting every honest reply. Heights are
-        // NOT QC-covered, so the repair is guarded against a Byzantine
-        // server inflating our counter: the claimed height must lie
-        // within one sync window of ours, and the reply must contain a
-        // strictly valid successor (chains from the tip via `prev`, own
-        // verifying commit QC, later view) — an honest server always
-        // has one when there is anything to catch up on, while an
-        // attacker must burn a real decided block per attempt and can
-        // never push us further than the window per burned block.
+        // Height repair: a replica that missed DECIDEs can find its own
+        // decided tip at a higher position in the server's sequence and
+        // adopt that height so strict chain validation can keep extending
+        // from the tip instead of rejecting every honest reply. Heights
+        // are covered by the commit QC now (`qc.height`), so a server
+        // cannot fabricate the claimed position — the window clamp and
+        // the strictly-valid-successor requirement below are kept as
+        // defense in depth (they were the only guard before the QC
+        // coverage and cost nothing).
         let repair = entries.iter().position(|e| {
             e.height > self.decided_height
                 && e.height <= self.decided_height + self.cfg.sync_window as u64
+                && e.qc.height == e.height
                 && e.block.digest() == self.decided_tip
                 && e.qc.phase == Phase::Commit
                 && e.qc.block == self.decided_tip
@@ -572,6 +568,7 @@ impl HotStuff {
             let h = entries[i].height;
             let has_successor = entries.get(i + 1).is_some_and(|s| {
                 s.height == h + 1
+                    && s.qc.height == s.height
                     && s.prev == self.decided_tip
                     && s.qc.phase == Phase::Commit
                     && s.qc.block == s.block.digest()
@@ -591,6 +588,18 @@ impl HotStuff {
         for e in entries {
             if e.height <= self.decided_height {
                 continue;
+            }
+            // The claimed position must be covered by the entry's own
+            // commit QC — checked BEFORE gap detection, so a relabelled
+            // height cannot even fake a gap (it is rejected outright, the
+            // close of the ROADMAP pull-protocol follow-on).
+            if e.qc.height != e.height {
+                self.sync_rejects += 1;
+                result = Err(anyhow::anyhow!(
+                    "sync entry height {} not covered by its commit QC (qc height {})",
+                    e.height, e.qc.height
+                ));
+                break;
             }
             let mut jump = false;
             if e.height > self.decided_height + 1 {
@@ -613,13 +622,13 @@ impl HotStuff {
                     ));
                     break;
                 }
-                // Heights are not QC-covered: an unclamped jump would let
-                // a Byzantine server park our counter at u64::MAX (dead
-                // sync path + overflow in request_sync). Bound every
-                // jump to one sync window past our tip; a deeper honest
-                // lag falls back to the pacemaker-based rejoin (live
-                // consensus still progresses, like the pre-validation
-                // code after its best-effort skip).
+                // The jump target's height is QC-covered (checked above),
+                // so a Byzantine server can no longer park our counter at
+                // u64::MAX — but the one-window clamp stays as defense in
+                // depth (it bounds any residual skew at zero cost); a
+                // deeper honest lag falls back to the pacemaker-based
+                // rejoin (live consensus still progresses, like the
+                // pre-validation code after its best-effort skip).
                 if e.height > self.decided_height + self.cfg.sync_window as u64 {
                     self.sync_rejects += 1;
                     result = Err(anyhow::anyhow!(
@@ -792,7 +801,12 @@ impl HotStuff {
         if sig.node != from {
             bail!("vote signature node mismatch");
         }
-        let vd = vote_digest(phase, view, &block);
+        // Votes sign the decided height the block would commit at; an
+        // out-of-sync voter (stale decided log) signs a different height
+        // and its vote simply fails verification here — the quorum forms
+        // from the n − f in-sync replicas.
+        let height = self.decided_height + 1;
+        let vd = vote_digest(phase, view, &block, height);
         if !self.registry.verify(&vd, &sig) {
             bail!("bad vote signature from {from}");
         }
@@ -807,7 +821,7 @@ impl HotStuff {
         let count = qc_entry.add(sig);
         if count >= self.quorum {
             self.leader.done.push(phase);
-            let qc = Qc { phase, view, block, cert: qc_entry.clone() };
+            let qc = Qc { phase, view, block, height, cert: qc_entry.clone() };
             let msg = match phase {
                 Phase::Prepare => Msg::PreCommit { view, qc: qc.clone() },
                 Phase::PreCommit => Msg::Commit { view, qc: qc.clone() },
@@ -830,7 +844,7 @@ impl HotStuff {
     }
 
     fn vote(&mut self, phase: Phase, block: Digest, out: &mut Vec<Action>) -> Result<()> {
-        let vd = vote_digest(phase, self.view, &block);
+        let vd = vote_digest(phase, self.view, &block, self.decided_height + 1);
         let sig = self.signer.sign(&vd);
         let leader = leader_of(self.view, self.n);
         let msg = Msg::Vote { phase, view: self.view, block, sig };
@@ -914,7 +928,32 @@ impl HotStuff {
         self.last_decided_view = view;
         self.decided_blocks += 1;
         self.consecutive_timeouts = 0;
-        self.push_decided(&qc, &block);
+        // The commit QC covers the decided height and was verified above
+        // (quorum signatures) — it is authoritative. In sync it equals
+        // our local `decided_height + 1`; if it is ahead we missed
+        // DECIDEs (the missed-decide-then-live-decide race, or a deep
+        // lag rejoined via the pacemaker) and adopt the certified height
+        // so our subsequent votes AND the entries we serve to syncing
+        // peers stay consistent — an entry whose label its own QC does
+        // not cover would be rejected by every peer's `qc.height ==
+        // height` replay check forever. The pathological converse
+        // (qc.height at or below our tip: our counter ran ahead, which a
+        // verified quorum cannot honestly produce) delivers the commands
+        // but logs nothing rather than fabricate an uncovered label.
+        if qc.height > self.decided_height {
+            if qc.height != self.decided_height + 1 {
+                log::warn!(
+                    "n{}: decide at height {} but local tip is {} — adopting the QC height",
+                    self.id, qc.height, self.decided_height
+                );
+            }
+            self.push_decided(&qc, &block, qc.height);
+        } else {
+            log::warn!(
+                "n{}: decide at height {} at or below local tip {} — executing without logging",
+                self.id, qc.height, self.decided_height
+            );
+        }
         self.mark_delivered(&block.cmds);
         if !block.cmds.is_empty() {
             out.push(Action::Deliver { view, cmds: block.cmds });
@@ -1308,12 +1347,12 @@ mod tests {
                 cmds: vec![format!("chain-cmd-{h}").into_bytes()],
             };
             let digest = block.digest();
-            let vd = vote_digest(Phase::Commit, view, &digest);
+            let vd = vote_digest(Phase::Commit, view, &digest, h);
             let mut cert = QuorumCert::new(vd);
             for i in 0..quorum {
                 cert.add(registry.signer(i as NodeId).sign(&vd));
             }
-            let qc = Qc { phase: Phase::Commit, view, block: digest, cert };
+            let qc = Qc { phase: Phase::Commit, view, block: digest, height: h, cert };
             out.push(SyncEntry { height: h, prev, qc, block });
             prev = digest;
         }
@@ -1359,6 +1398,32 @@ mod tests {
         assert_eq!(hs.synced_blocks, 8);
         assert_eq!(hs.sync_rejects, 0);
         assert!(sync_requests(&out).is_empty(), "no gap, no re-request");
+    }
+
+    #[test]
+    fn relabeled_heights_are_rejected_by_the_qc_coverage() {
+        // A Byzantine sync server shifts an entry's height label without
+        // being able to re-sign the quorum certificate. Before heights
+        // were QC-covered this could only be bounded (fake gaps, clamped
+        // jumps); now the entry is rejected outright and replay stops at
+        // the last honest prefix.
+        let registry = KeyRegistry::new(4, 81);
+        let (mut hs, mut out) = fresh_replica(&registry);
+        let entries = synthetic_chain(&registry, hs.quorum(), 6, 3);
+        let mut served = entries.clone();
+        served[3].height += 1; // claim height 5 for the height-4 block
+        let res = hs.on_message(1, Msg::SyncReply { entries: served }, &mut out);
+        assert!(res.is_err(), "relabelled height must be rejected");
+        assert_eq!(hs.decided_height(), 3, "replay stops at the honest prefix");
+        assert_eq!(hs.sync_rejects, 1);
+        assert!(
+            sync_requests(&out).is_empty(),
+            "a relabelled height is a validation reject, not a gap"
+        );
+        // The honest chain still replays fine afterwards.
+        let mut out2 = Vec::new();
+        hs.on_message(1, Msg::SyncReply { entries }, &mut out2).unwrap();
+        assert_eq!(hs.decided_height(), 6);
     }
 
     #[test]

@@ -72,22 +72,33 @@ impl Decode for Block {
     }
 }
 
-/// What a vote signs: domain-separated (phase, view, block digest).
-pub fn vote_digest(phase: Phase, view: u64, block: &Digest) -> Digest {
-    let mut buf = Vec::with_capacity(1 + 8 + 32);
+/// What a vote signs: domain-separated (phase, view, block digest,
+/// decided height). Covering the height — the 1-based position the block
+/// takes in the decided sequence if this view commits — makes the sync
+/// protocol's height labels unspoofable: a Byzantine catch-up server that
+/// relabels entry heights can no longer produce a QC matching the forged
+/// label, so a relabelled entry is rejected outright instead of merely
+/// being bounded by the window-clamped repair heuristics.
+pub fn vote_digest(phase: Phase, view: u64, block: &Digest, height: u64) -> Digest {
+    let mut buf = Vec::with_capacity(1 + 8 + 32 + 8);
     (phase as u8).encode(&mut buf);
     view.encode(&mut buf);
     block.encode(&mut buf);
+    height.encode(&mut buf);
     Digest::of_bytes(&buf)
 }
 
-/// A quorum certificate bound to its phase/view/block (the QC's inner
-/// digest is `vote_digest(phase, view, block)`).
+/// A quorum certificate bound to its phase/view/block/height (the QC's
+/// inner digest is `vote_digest(phase, view, block, height)`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Qc {
     pub phase: Phase,
     pub view: u64,
     pub block: Digest,
+    /// Decided height the certified block commits at (1-based; Lemma 1
+    /// makes it identical on every honest replica, so in-sync voters
+    /// agree on it and the quorum forms).
+    pub height: u64,
     pub cert: QuorumCert,
 }
 
@@ -98,7 +109,8 @@ impl Qc {
             phase: Phase::Prepare,
             view: 0,
             block: Digest::zero(),
-            cert: QuorumCert::new(vote_digest(Phase::Prepare, 0, &Digest::zero())),
+            height: 0,
+            cert: QuorumCert::new(vote_digest(Phase::Prepare, 0, &Digest::zero(), 0)),
         }
     }
 
@@ -111,9 +123,9 @@ impl Qc {
         if self.is_genesis() {
             return Ok(());
         }
-        let want = vote_digest(self.phase, self.view, &self.block);
+        let want = vote_digest(self.phase, self.view, &self.block, self.height);
         if self.cert.msg != want {
-            anyhow::bail!("qc digest does not bind phase/view/block");
+            anyhow::bail!("qc digest does not bind phase/view/block/height");
         }
         self.cert.verify(registry, quorum)
     }
@@ -124,10 +136,11 @@ impl Encode for Qc {
         self.phase.encode(out);
         self.view.encode(out);
         self.block.encode(out);
+        self.height.encode(out);
         self.cert.encode(out);
     }
     fn encoded_len(&self) -> usize {
-        1 + 8 + 32 + self.cert.encoded_len()
+        1 + 8 + 32 + 8 + self.cert.encoded_len()
     }
 }
 
@@ -137,6 +150,7 @@ impl Decode for Qc {
             phase: Phase::decode(cur)?,
             view: u64::decode(cur)?,
             block: Digest::decode(cur)?,
+            height: u64::decode(cur)?,
             cert: QuorumCert::decode(cur)?,
         })
     }
@@ -151,10 +165,13 @@ impl Decode for Qc {
 /// `prev` the digest of the decided block immediately before it (zero
 /// for the first). Lemma 1 makes both identical on every honest replica,
 /// so replay can validate parent-chain contiguity — an interior entry a
-/// server omitted (or a relabelled height) shows up as a gap, answered
-/// with a ranged re-request instead of a silent skip. Neither field is
-/// QC-covered: a lying server can only cause its entries to be REJECTED
-/// (each block still needs a valid commit QC), never accepted wrongly.
+/// server omitted shows up as a gap, answered with a ranged re-request
+/// instead of a silent skip. `height` is additionally covered by the
+/// commit QC (votes sign `(phase, view, block, height)`), so a server
+/// that relabels heights is rejected outright (`qc.height != height`);
+/// `prev` remains node-local, where a lie can only cause its entries to
+/// be REJECTED (each block still needs a valid commit QC), never
+/// accepted wrongly.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SyncEntry {
     pub height: u64,
@@ -359,11 +376,11 @@ mod tests {
     fn msgs_roundtrip() {
         let reg = KeyRegistry::new(4, 1);
         let block = Block { view: 3, parent: Digest::zero(), cmds: vec![vec![1], vec![2, 3]] };
-        let vd = vote_digest(Phase::Prepare, 3, &block.digest());
+        let vd = vote_digest(Phase::Prepare, 3, &block.digest(), 1);
         let mut cert = QuorumCert::new(vd);
         cert.add(reg.signer(0).sign(&vd));
         cert.add(reg.signer(1).sign(&vd));
-        let qc = Qc { phase: Phase::Prepare, view: 3, block: block.digest(), cert };
+        let qc = Qc { phase: Phase::Prepare, view: 3, block: block.digest(), height: 1, cert };
 
         let msgs = vec![
             Msg::NewView { view: 4, prepare_qc: qc.clone(), batch: vec![vec![9; 45], vec![8]] },
@@ -391,12 +408,12 @@ mod tests {
     fn batched_and_sync_msgs_roundtrip() {
         let reg = KeyRegistry::new(4, 7);
         let block = Block { view: 9, parent: Digest::zero(), cmds: vec![vec![1, 2, 3]] };
-        let vd = vote_digest(Phase::Commit, 9, &block.digest());
+        let vd = vote_digest(Phase::Commit, 9, &block.digest(), 6);
         let mut cert = QuorumCert::new(vd);
         for i in 0..3 {
             cert.add(reg.signer(i).sign(&vd));
         }
-        let qc = Qc { phase: Phase::Commit, view: 9, block: block.digest(), cert };
+        let qc = Qc { phase: Phase::Commit, view: 9, block: block.digest(), height: 6, cert };
         let msgs = vec![
             Msg::SubmitBatch { cmds: vec![vec![1; 45], vec![2; 13], Vec::new()] },
             Msg::SubmitBatch { cmds: Vec::new() },
@@ -422,19 +439,23 @@ mod tests {
     }
 
     #[test]
-    fn qc_verify_binds_phase_view_block() {
+    fn qc_verify_binds_phase_view_block_height() {
         let reg = KeyRegistry::new(4, 2);
         let block = Digest::of_bytes(b"b");
-        let vd = vote_digest(Phase::PreCommit, 5, &block);
+        let vd = vote_digest(Phase::PreCommit, 5, &block, 3);
         let mut cert = QuorumCert::new(vd);
         for i in 0..3 {
             cert.add(reg.signer(i).sign(&vd));
         }
-        let qc = Qc { phase: Phase::PreCommit, view: 5, block, cert: cert.clone() };
+        let qc = Qc { phase: Phase::PreCommit, view: 5, block, height: 3, cert: cert.clone() };
         assert!(qc.verify(&reg, 3).is_ok());
         // Rebinding the same cert to another view must fail.
-        let forged = Qc { phase: Phase::PreCommit, view: 6, block, cert };
+        let forged = Qc { phase: Phase::PreCommit, view: 6, block, height: 3, cert: cert.clone() };
         assert!(forged.verify(&reg, 3).is_err());
+        // …and so must relabelling the decided height (the sync-server
+        // attack the QC coverage closes).
+        let relabeled = Qc { phase: Phase::PreCommit, view: 5, block, height: 4, cert };
+        assert!(relabeled.verify(&reg, 3).is_err());
     }
 
     #[test]

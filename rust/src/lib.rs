@@ -21,6 +21,7 @@
 pub mod attacks;
 pub mod baselines;
 pub mod blockchain;
+pub mod cluster;
 pub mod config;
 pub mod crypto;
 pub mod defl;

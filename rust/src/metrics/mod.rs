@@ -1,10 +1,15 @@
 //! Measurement instrumentation for the paper's Figure 2/3 overheads:
 //! per-node network bytes (split by traffic class), storage gauges
-//! (blockchain vs mempool), a RAM model, and latency histograms.
+//! (blockchain vs mempool), a RAM model, latency histograms, and the
+//! wire-serializable [`StatsSnapshot`] the multi-process cluster's
+//! control plane ships from each silo to the supervisor.
 
 use std::collections::BTreeMap;
 
+use anyhow::Result;
+
 use crate::crypto::NodeId;
+use crate::util::codec::{Cursor, Decode, Encode};
 
 /// Traffic classes so experiments can report consensus vs weight-transfer
 /// bandwidth separately (DeFL's sending-bandwidth win comes from the
@@ -148,6 +153,118 @@ impl NetMeter {
         for (k, v) in &other.msgs_dropped {
             *self.msgs_dropped.entry(*k).or_default() += v;
         }
+    }
+}
+
+/// Pull-protocol serve accounting for one peer, as shipped over the
+/// cluster control plane (the metrics surface of the per-peer serve
+/// budgets: how many reply bytes this node served the peer, and how many
+/// of the peer's fetch requests the budgets denied).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PeerServe {
+    pub peer: NodeId,
+    pub bytes_served: u64,
+    pub reqs_throttled: u64,
+}
+
+impl Encode for PeerServe {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.peer.encode(out);
+        self.bytes_served.encode(out);
+        self.reqs_throttled.encode(out);
+    }
+    fn encoded_len(&self) -> usize {
+        4 + 8 + 8
+    }
+}
+
+impl Decode for PeerServe {
+    fn decode(cur: &mut Cursor<'_>) -> Result<Self> {
+        Ok(PeerServe {
+            peer: NodeId::decode(cur)?,
+            bytes_served: u64::decode(cur)?,
+            reqs_throttled: u64::decode(cur)?,
+        })
+    }
+}
+
+/// One node's observable state at a point in time, serializable for the
+/// cluster control plane: each `defl-silo` process ships this in its
+/// heartbeat frames, and `defl-supervisor` aggregates the snapshots into
+/// the cluster-wide summary it prints at round boundaries and on exit.
+///
+/// The fields mirror `defl::NodeStats` + `defl::FetchStats` + the
+/// consensus gauges; they are a *copy*, not a reference, so the snapshot
+/// can cross the process boundary.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StatsSnapshot {
+    pub node: NodeId,
+    /// Synchronized training round r_round.
+    pub round: u64,
+    /// 1-based decided consensus height.
+    pub decided_height: u64,
+    /// Current HotStuff view.
+    pub view: u64,
+    /// Transactions executed / rejected by the Algorithm-2 replica.
+    pub txs_executed: u64,
+    pub txs_rejected: u64,
+    /// Weight-pool gauges.
+    pub pool_bytes: u64,
+    pub pool_peak_bytes: u64,
+    /// Pull-protocol health (cluster-wide visibility of `FetchStats`).
+    pub fetches_sent: u64,
+    pub blobs_recovered: u64,
+    pub fetch_rotations: u64,
+    pub fetch_gave_up: u64,
+    pub serve_denied: u64,
+    /// Per-peer serve-budget accounting, sorted by peer id.
+    pub peer_serves: Vec<PeerServe>,
+    /// The node finished its configured rounds.
+    pub done: bool,
+}
+
+impl Encode for StatsSnapshot {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.node.encode(out);
+        self.round.encode(out);
+        self.decided_height.encode(out);
+        self.view.encode(out);
+        self.txs_executed.encode(out);
+        self.txs_rejected.encode(out);
+        self.pool_bytes.encode(out);
+        self.pool_peak_bytes.encode(out);
+        self.fetches_sent.encode(out);
+        self.blobs_recovered.encode(out);
+        self.fetch_rotations.encode(out);
+        self.fetch_gave_up.encode(out);
+        self.serve_denied.encode(out);
+        crate::util::codec::encode_list(&self.peer_serves, out);
+        self.done.encode(out);
+    }
+    fn encoded_len(&self) -> usize {
+        4 + 8 * 12 + 4 + self.peer_serves.len() * 20 + 1
+    }
+}
+
+impl Decode for StatsSnapshot {
+    fn decode(cur: &mut Cursor<'_>) -> Result<Self> {
+        Ok(StatsSnapshot {
+            node: NodeId::decode(cur)?,
+            round: u64::decode(cur)?,
+            decided_height: u64::decode(cur)?,
+            view: u64::decode(cur)?,
+            txs_executed: u64::decode(cur)?,
+            txs_rejected: u64::decode(cur)?,
+            pool_bytes: u64::decode(cur)?,
+            pool_peak_bytes: u64::decode(cur)?,
+            fetches_sent: u64::decode(cur)?,
+            blobs_recovered: u64::decode(cur)?,
+            fetch_rotations: u64::decode(cur)?,
+            fetch_gave_up: u64::decode(cur)?,
+            serve_denied: u64::decode(cur)?,
+            peer_serves: crate::util::codec::decode_list(cur)?,
+            done: bool::decode(cur)?,
+        })
     }
 }
 
@@ -359,6 +476,43 @@ mod tests {
         let ram = RamModel { fixed_bytes: 1_000_000, weight_bytes: 40_000 };
         assert_eq!(ram.resident(2), 1_080_000);
         assert!(ram.resident(20) > ram.resident(2));
+    }
+
+    #[test]
+    fn stats_snapshot_roundtrips_exactly() {
+        let snap = StatsSnapshot {
+            node: 3,
+            round: 7,
+            decided_height: 21,
+            view: 25,
+            txs_executed: 80,
+            txs_rejected: 2,
+            pool_bytes: 4096,
+            pool_peak_bytes: 8192,
+            fetches_sent: 5,
+            blobs_recovered: 4,
+            fetch_rotations: 1,
+            fetch_gave_up: 0,
+            serve_denied: 3,
+            peer_serves: vec![
+                PeerServe { peer: 0, bytes_served: 1024, reqs_throttled: 0 },
+                PeerServe { peer: 2, bytes_served: 0, reqs_throttled: 3 },
+            ],
+            done: true,
+        };
+        let bytes = snap.to_bytes();
+        assert_eq!(bytes.len(), snap.encoded_len(), "encoded_len mismatch");
+        assert_eq!(StatsSnapshot::from_bytes(&bytes).unwrap(), snap);
+        // Truncations must error, never panic (the supervisor decodes
+        // bytes a child process controls).
+        for cut in 0..bytes.len() {
+            assert!(StatsSnapshot::from_bytes(&bytes[..cut]).is_err());
+        }
+        let empty = StatsSnapshot::default();
+        assert_eq!(
+            StatsSnapshot::from_bytes(&empty.to_bytes()).unwrap(),
+            empty
+        );
     }
 
     #[test]

@@ -29,12 +29,14 @@
 //!   `SyncRequest { from_height: u64, to_height: u64 }` (`to_height =
 //!   u64::MAX` = everything retained) → `SyncReply { entries }`. Each
 //!   [`crate::hotstuff::SyncEntry`] is `height: u64, prev: 32 B digest,
-//!   qc, block`: the commit QC makes it self-certifying, while `height`
-//!   (1-based position in the decided sequence) and `prev` (digest of
-//!   the preceding decided block) let replay validate parent-chain
-//!   contiguity — an omitted interior entry shows up as a height gap and
-//!   earns exactly one ranged re-request for the missing span per view
-//!   (see `hotstuff::replica::on_sync_reply`).
+//!   qc, block`: the commit QC makes it self-certifying — votes sign
+//!   `(phase, view, block, height)`, so the entry's 1-based position in
+//!   the decided sequence is quorum-certified and a Byzantine server
+//!   cannot relabel it (`qc.height != height` is rejected outright) —
+//!   while `prev` (digest of the preceding decided block) lets replay
+//!   validate parent-chain contiguity: an omitted interior entry shows
+//!   up as a height gap and earns exactly one ranged re-request for the
+//!   missing span per view (see `hotstuff::replica::on_sync_reply`).
 //!
 //! **Storage-layer frames** (`Traffic::Weights`) are
 //! [`crate::defl::WeightMsg`] encodings:
@@ -62,6 +64,33 @@
 //! * tag 5 `FetchMiss { digest: 32 B }` — the serving peer does not hold
 //!   the blob; the requester rotates immediately instead of waiting out
 //!   its per-holder timeout.
+//!
+//! # Running a real multi-process cluster
+//!
+//! `examples/tcp_cluster.rs` hosts n node THREADS in one process — fine
+//! for a demo, but a single crash kills every silo at once. The
+//! [`crate::cluster`] subsystem promotes the same `tcp::run_actor` path
+//! to one OS process per silo:
+//!
+//! ```text
+//! cargo build --release --bin defl-silo --bin defl-supervisor
+//! target/release/defl-supervisor --config cluster.toml
+//! target/release/defl-supervisor --config cluster.toml --kill 2@1   # recovery drill
+//! ```
+//!
+//! The supervisor parses the cluster TOML (node count, mesh/control
+//! ports, experiment — see `cluster::config`), spawns one `defl-silo
+//! --config cluster.toml --id i` per node, and supervises them over a
+//! TCP control plane (`len: u32 LE` + `CtrlMsg`: Hello / Heartbeat
+//! carrying a [`crate::metrics::StatsSnapshot`] / Done / Shutdown,
+//! reusing `util::codec`). Crashed silos are restarted with exponential
+//! backoff and rejoin via [`tcp::TcpNode::rejoin_mesh`]: every surviving
+//! peer's always-on acceptor swaps the dead connection for the fresh
+//! one, and the rejoined process recovers consensus state through the
+//! QC-chain sync and its weight pool (including its OWN pre-crash
+//! blobs) through the digest-addressed pull protocol above. See
+//! `cluster`'s module docs for the exact crash-restart guarantees
+//! (bit-identical recovery under `agg_quorum = "all"`).
 
 pub mod sim;
 pub mod tcp;

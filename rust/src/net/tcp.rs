@@ -3,15 +3,35 @@
 //! drives any [`Actor`] (the very same `DeflNode` the simulator runs)
 //! over a socket mesh with wall-clock timers.
 //!
-//! Used by `examples/tcp_cluster.rs` for the deployment path and by the
-//! integration tests over localhost.
+//! Used by `examples/tcp_cluster.rs` (threads-in-one-process), by the
+//! `defl-silo` binary (one OS process per silo, supervised by
+//! `defl-supervisor` — see [`crate::cluster`]), and by the integration
+//! tests over localhost.
 //!
-//! Frame layout (little-endian): `from: u32, class: u8, len: u32, payload`.
+//! Frame layout (little-endian): `from: u32, class: u8, len: u32,
+//! payload`. A connection's first frame is a `hello` (class Consensus,
+//! payload `b"hello"`) identifying the dialing peer.
+//!
+//! # Mesh lifecycle
+//!
+//! Every node keeps its listener (and an acceptor thread) alive for the
+//! life of the [`TcpNode`], and the acceptor installs — or **replaces** —
+//! the peer connection a `hello` identifies. That is what makes silo
+//! crash-restart recovery work over real sockets: a restarted process
+//! calls [`TcpNode::rejoin_mesh`], which dials *every* peer with
+//! exponential backoff, and each surviving peer's acceptor swaps the dead
+//! connection for the fresh one. Sends to a peer whose connection died
+//! fail and are logged/skipped by [`run_actor`] (the simulator's
+//! crashed-node semantics); frames lost that way are recovered by the
+//! protocol layers (QC-chain sync + digest-addressed blob pull), not the
+//! transport. [`TcpNode::shutdown`] (also run on drop) closes the
+//! listener and every peer socket gracefully.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -72,84 +92,220 @@ fn read_frame(stream: &mut TcpStream) -> Result<Inbound> {
     Ok(Inbound { from, class, bytes })
 }
 
-/// One node's endpoint in a fully-connected TCP mesh.
+/// One node's endpoint in a fully-connected TCP mesh. The listener stays
+/// open (acceptor thread) for the node's lifetime, so peers restarted
+/// after a crash can redial and replace their dead connection at any
+/// point — see the module docs for the mesh lifecycle.
 pub struct TcpNode {
     pub id: NodeId,
-    peers: Vec<Option<Arc<Mutex<TcpStream>>>>,
+    /// Per-peer connection slots (write side). The acceptor thread
+    /// replaces a slot when the peer redials, so each slot has its own
+    /// lock and sends to different peers never serialize on each other.
+    peers: Arc<Vec<Mutex<Option<TcpStream>>>>,
     rx: Receiver<Inbound>,
-    _threads: Vec<JoinHandle<()>>,
+    tx: Sender<Inbound>,
+    listen_addr: SocketAddr,
+    closed: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
 }
 
+/// How long the acceptor waits for a fresh connection's `hello` frame
+/// before giving up on it (a peer that connects and sends nothing would
+/// otherwise block all other accepts).
+const HELLO_TIMEOUT: Duration = Duration::from_secs(5);
+
 impl TcpNode {
-    /// Join a mesh: listen on `addrs[id]`, accept connections from lower
-    /// ids, dial higher ids. Returns once fully connected to all peers.
-    pub fn connect_mesh(id: NodeId, addrs: &[SocketAddr]) -> Result<TcpNode> {
+    /// Bind the node's listener and start the acceptor, with every peer
+    /// slot still empty. [`connect_mesh`](Self::connect_mesh) and
+    /// [`rejoin_mesh`](Self::rejoin_mesh) build on this.
+    pub fn bind(id: NodeId, addrs: &[SocketAddr]) -> Result<TcpNode> {
         let n = addrs.len();
-        let listener = TcpListener::bind(addrs[id as usize])
-            .with_context(|| format!("bind {}", addrs[id as usize]))?;
+        if id as usize >= n {
+            bail!("node id {id} outside the {n}-address mesh");
+        }
+        let listen_addr = addrs[id as usize];
+        let listener =
+            TcpListener::bind(listen_addr).with_context(|| format!("bind {listen_addr}"))?;
         let (tx, rx) = channel::<Inbound>();
-        let mut peers: Vec<Option<Arc<Mutex<TcpStream>>>> = (0..n).map(|_| None).collect();
-        let mut threads = Vec::new();
+        let peers: Arc<Vec<Mutex<Option<TcpStream>>>> =
+            Arc::new((0..n).map(|_| Mutex::new(None)).collect());
+        let closed = Arc::new(AtomicBool::new(false));
+        let acceptor = {
+            let (peers, tx, closed) = (peers.clone(), tx.clone(), closed.clone());
+            Some(std::thread::spawn(move || {
+                Self::accept_loop(id, listener, peers, tx, closed)
+            }))
+        };
+        Ok(TcpNode { id, peers, rx, tx, listen_addr, closed, acceptor })
+    }
 
-        // Accept from lower ids; they identify themselves with a hello byte
-        // frame (from field of the first frame).
-        let mut expected_accepts = id as usize;
-        while expected_accepts > 0 {
-            let (mut stream, _) = listener.accept()?;
-            stream.set_nodelay(true).ok();
-            let hello = read_frame(&mut stream)?;
-            let peer_id = hello.from;
-            if peer_id as usize >= n || peer_id >= id {
-                bail!("unexpected hello from {peer_id}");
+    /// Join a mesh at cluster start: listen on `addrs[id]`, dial higher
+    /// ids (lower ids dial us). Returns once fully connected to all
+    /// peers.
+    pub fn connect_mesh(id: NodeId, addrs: &[SocketAddr]) -> Result<TcpNode> {
+        let node = Self::bind(id, addrs)?;
+        for peer in (id as usize + 1)..addrs.len() {
+            node.dial_peer(peer as NodeId, addrs[peer], Duration::from_secs(10))?;
+        }
+        node.await_connected(Duration::from_secs(30))?;
+        Ok(node)
+    }
+
+    /// Rejoin a running mesh after a crash restart: listen on
+    /// `addrs[id]` again and dial EVERY peer (they are already up, their
+    /// acceptors replace the dead connection) with per-dial exponential
+    /// backoff. A peer that stays unreachable within `budget` is left
+    /// unconnected — sends to it are dropped like a crashed node's, and
+    /// it can still dial us later.
+    pub fn rejoin_mesh(id: NodeId, addrs: &[SocketAddr], budget: Duration) -> Result<TcpNode> {
+        let node = Self::bind(id, addrs)?;
+        let deadline = Instant::now() + budget;
+        for (peer, addr) in addrs.iter().enumerate() {
+            if peer == id as usize {
+                continue;
             }
-            peers[peer_id as usize] = Some(Arc::new(Mutex::new(stream.try_clone()?)));
-            threads.push(Self::reader(stream, tx.clone()));
-            expected_accepts -= 1;
+            let left = deadline.saturating_duration_since(Instant::now());
+            let per_peer = left.min(Duration::from_secs(5)).max(Duration::from_millis(50));
+            if let Err(e) = node.dial_peer(peer as NodeId, *addr, per_peer) {
+                log::warn!("tcp n{id}: rejoin dial to {peer} failed: {e}");
+            }
         }
+        Ok(node)
+    }
 
-        // Dial higher ids (retry while they come up).
-        for peer in (id as usize + 1)..n {
-            let stream = Self::dial(addrs[peer], Duration::from_secs(10))?;
-            stream.set_nodelay(true).ok();
-            let mut s = stream.try_clone()?;
-            write_frame(&mut s, id, Traffic::Consensus, b"hello")?; // hello frame
-            peers[peer] = Some(Arc::new(Mutex::new(stream.try_clone()?)));
-            threads.push(Self::reader(stream, tx.clone()));
+    /// Accept connections for the node's lifetime. Each connection is
+    /// handed to its own handshake thread (a slow or wedged dialer must
+    /// never stall the acceptor — a crash-restarted silo's rejoin dial
+    /// has to get through): the thread reads the `hello` frame naming
+    /// the dialer, installs the connection in (or replaces) that peer's
+    /// slot, and then becomes the connection's reader. Ends when
+    /// [`shutdown`](Self::shutdown) sets the flag and unblocks the
+    /// accept with a loopback connection.
+    fn accept_loop(
+        my_id: NodeId,
+        listener: TcpListener,
+        peers: Arc<Vec<Mutex<Option<TcpStream>>>>,
+        tx: Sender<Inbound>,
+        closed: Arc<AtomicBool>,
+    ) {
+        loop {
+            let Ok((stream, _)) = listener.accept() else {
+                if closed.load(Ordering::SeqCst) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            };
+            if closed.load(Ordering::SeqCst) {
+                return;
+            }
+            let (peers, tx) = (peers.clone(), tx.clone());
+            std::thread::spawn(move || {
+                let mut stream = stream;
+                stream.set_nodelay(true).ok();
+                stream.set_read_timeout(Some(HELLO_TIMEOUT)).ok();
+                let hello = match read_frame(&mut stream) {
+                    Ok(h) => h,
+                    Err(e) => {
+                        log::debug!("tcp n{my_id}: dropping connection without hello: {e}");
+                        return;
+                    }
+                };
+                stream.set_read_timeout(None).ok();
+                let peer = hello.from;
+                if peer as usize >= peers.len()
+                    || peer == my_id
+                    || hello.class != Traffic::Consensus
+                    || hello.bytes != b"hello"
+                {
+                    log::debug!("tcp n{my_id}: rejecting bad hello from {peer}");
+                    return;
+                }
+                let Ok(write_half) = stream.try_clone() else { return };
+                let had_conn = {
+                    let mut slot = peers[peer as usize].lock().unwrap();
+                    slot.replace(write_half).is_some()
+                };
+                if had_conn {
+                    log::info!(
+                        "tcp n{my_id}: peer {peer} reconnected, replacing its connection"
+                    );
+                }
+                Self::pump(stream, tx);
+            });
         }
+    }
 
-        Ok(TcpNode { id, peers, rx, _threads: threads })
+    /// Dial one peer (retrying with exponential backoff within `budget`),
+    /// introduce ourselves with a hello frame, and install the
+    /// connection.
+    fn dial_peer(&self, peer: NodeId, addr: SocketAddr, budget: Duration) -> Result<()> {
+        let stream = Self::dial(addr, budget)?;
+        stream.set_nodelay(true).ok();
+        let mut s = stream.try_clone()?;
+        write_frame(&mut s, self.id, Traffic::Consensus, b"hello")?;
+        *self.peers[peer as usize].lock().unwrap() = Some(stream.try_clone()?);
+        Self::reader(stream, self.tx.clone());
+        Ok(())
+    }
+
+    /// Block until every peer slot is connected (mesh start).
+    fn await_connected(&self, budget: Duration) -> Result<()> {
+        let deadline = Instant::now() + budget;
+        loop {
+            let missing: Vec<usize> = self
+                .peers
+                .iter()
+                .enumerate()
+                .filter(|(i, slot)| *i != self.id as usize && slot.lock().unwrap().is_none())
+                .map(|(i, _)| i)
+                .collect();
+            if missing.is_empty() {
+                return Ok(());
+            }
+            if Instant::now() > deadline {
+                bail!("tcp n{}: peers {missing:?} never connected", self.id);
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
     }
 
     fn dial(addr: SocketAddr, budget: Duration) -> Result<TcpStream> {
-        let deadline = std::time::Instant::now() + budget;
+        let deadline = Instant::now() + budget;
+        let mut backoff = Duration::from_millis(20);
         loop {
             match TcpStream::connect(addr) {
                 Ok(s) => return Ok(s),
                 Err(e) => {
-                    if std::time::Instant::now() > deadline {
+                    if Instant::now() > deadline {
                         bail!("dial {addr}: {e}");
                     }
-                    std::thread::sleep(Duration::from_millis(20));
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(Duration::from_millis(500));
                 }
             }
         }
     }
 
-    fn reader(mut stream: TcpStream, tx: Sender<Inbound>) -> JoinHandle<()> {
-        std::thread::spawn(move || loop {
+    /// Pump frames from one established connection into the shared
+    /// inbound channel until the peer closes (or crashes). Blocking —
+    /// run on a dedicated thread.
+    fn pump(mut stream: TcpStream, tx: Sender<Inbound>) {
+        loop {
             match read_frame(&mut stream) {
                 Ok(msg) => {
-                    // Swallow the handshake frame.
-                    if msg.bytes == b"hello" && msg.class == Traffic::Consensus {
-                        continue;
-                    }
                     if tx.send(msg).is_err() {
                         return;
                     }
                 }
                 Err(_) => return, // peer closed
             }
-        })
+        }
+    }
+
+    /// Spawn a reader thread for one established connection.
+    fn reader(stream: TcpStream, tx: Sender<Inbound>) {
+        std::thread::spawn(move || Self::pump(stream, tx));
     }
 
     /// Mesh size (peers + self).
@@ -157,25 +313,78 @@ impl TcpNode {
         self.peers.len()
     }
 
-    pub fn send(&self, to: NodeId, class: Traffic, bytes: &[u8]) -> Result<()> {
-        let Some(peer) = self.peers.get(to as usize).and_then(|p| p.as_ref()) else {
-            bail!("no connection to {to}");
-        };
-        let mut stream = peer.lock().unwrap();
-        write_frame(&mut stream, self.id, class, bytes)
+    /// Peers with a live connection slot (restarted peers reappear here
+    /// once they redial).
+    pub fn connected_peers(&self) -> usize {
+        self.peers
+            .iter()
+            .filter(|slot| slot.lock().unwrap().is_some())
+            .count()
     }
 
+    pub fn send(&self, to: NodeId, class: Traffic, bytes: &[u8]) -> Result<()> {
+        let Some(slot) = self.peers.get(to as usize) else {
+            bail!("no such peer {to}");
+        };
+        let mut guard = slot.lock().unwrap();
+        let Some(stream) = guard.as_mut() else {
+            bail!("no connection to {to}");
+        };
+        write_frame(stream, self.id, class, bytes)
+        // A failed write is NOT cleared from the slot: the acceptor
+        // replaces it when the peer redials, and clearing here would race
+        // that replacement. Until then every send fails like the
+        // simulator's sends to a crashed node.
+    }
+
+    /// Best-effort broadcast: tries every connected peer even when some
+    /// sends fail (a crashed silo must not shadow the rest of the mesh),
+    /// then reports the failures.
     pub fn broadcast(&self, class: Traffic, bytes: &[u8]) -> Result<()> {
-        for (peer, conn) in self.peers.iter().enumerate() {
-            if conn.is_some() {
-                self.send(peer as NodeId, class, bytes)?;
+        let mut failed: Vec<NodeId> = Vec::new();
+        for (i, slot) in self.peers.iter().enumerate() {
+            let peer = i as NodeId;
+            if peer == self.id || slot.lock().unwrap().is_none() {
+                continue; // self, or never-connected: crashed-node semantics
+            }
+            if self.send(peer, class, bytes).is_err() {
+                failed.push(peer);
             }
         }
-        Ok(())
+        if failed.is_empty() {
+            Ok(())
+        } else {
+            bail!("broadcast failed to peers {failed:?}")
+        }
     }
 
     pub fn recv_timeout(&self, timeout: Duration) -> Option<Inbound> {
         self.rx.recv_timeout(timeout).ok()
+    }
+
+    /// Graceful shutdown: stop accepting, close every peer socket (their
+    /// readers see EOF), release the listen port. Idempotent; also runs
+    /// on drop.
+    pub fn shutdown(&mut self) {
+        if self.closed.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Unblock the acceptor's blocking accept().
+        let _ = TcpStream::connect(self.listen_addr);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        for slot in self.peers.iter() {
+            if let Some(s) = slot.lock().unwrap().take() {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+}
+
+impl Drop for TcpNode {
+    fn drop(&mut self) {
+        self.shutdown();
     }
 }
 
@@ -380,6 +589,42 @@ mod tests {
     fn bad_class_rejected() {
         assert!(class_from_u8(9).is_err());
         assert_eq!(class_from_u8(1).unwrap(), Traffic::Weights);
+    }
+
+    /// The crash-restart seam of the cluster subsystem: a peer's process
+    /// goes away, a fresh process rejoins under the same id, and the
+    /// surviving node's acceptor replaces the dead connection so both
+    /// directions work again — no restart of the survivor required.
+    #[test]
+    fn restarted_peer_rejoins_and_replaces_its_connection() {
+        let addrs = local_addrs(2, 39715);
+        let a_addrs = addrs.clone();
+        let t0 = std::thread::spawn(move || {
+            let node = TcpNode::connect_mesh(0, &a_addrs).unwrap();
+            // Generation 1 of peer 1.
+            let m = node.recv_timeout(Duration::from_secs(10)).expect("gen1 frame");
+            assert_eq!((m.from, m.bytes.as_slice()), (1, &[1u8][..]));
+            // Peer 1 "crashed" and rejoined: its fresh connection must
+            // have replaced the dead one transparently.
+            let m = node.recv_timeout(Duration::from_secs(10)).expect("gen2 frame");
+            assert_eq!((m.from, m.bytes.as_slice()), (1, &[2u8][..]));
+            // …and the write path must reach the REJOINED process.
+            node.send(1, Traffic::Weights, &[3]).unwrap();
+            let m = node.recv_timeout(Duration::from_secs(10)).expect("gen2 ack");
+            assert_eq!(m.bytes, vec![4u8]);
+        });
+        {
+            let node1 = TcpNode::connect_mesh(1, &addrs).unwrap();
+            node1.send(0, Traffic::Weights, &[1]).unwrap();
+            // Dropping = graceful shutdown: sockets closed, port freed.
+        }
+        let node1 = TcpNode::rejoin_mesh(1, &addrs, Duration::from_secs(10)).unwrap();
+        assert_eq!(node1.connected_peers(), 1);
+        node1.send(0, Traffic::Weights, &[2]).unwrap();
+        let m = node1.recv_timeout(Duration::from_secs(10)).expect("frame from 0");
+        assert_eq!(m.bytes, vec![3u8]);
+        node1.send(0, Traffic::Weights, &[4]).unwrap();
+        t0.join().unwrap();
     }
 
     /// Transport-agnostic ping-pong actor: proves `run_actor` hosts the

@@ -378,6 +378,8 @@ mod fuzz_tests {
         let _ = crate::defl::BlobChunk::from_bytes(bytes);
         let _ = crate::weights::Weights::from_bytes(bytes);
         let _ = crate::blockchain::ChainBlock::from_bytes(bytes);
+        let _ = crate::metrics::StatsSnapshot::from_bytes(bytes);
+        let _ = crate::cluster::CtrlMsg::from_bytes(bytes);
     }
 
     #[test]

@@ -1,0 +1,129 @@
+//! Multi-process cluster integration: the REAL `defl-supervisor` and
+//! `defl-silo` binaries, four OS processes per run, localhost TCP.
+//!
+//! The acceptance scenario of the cluster subsystem: the supervisor
+//! SIGKILLs one silo mid-training and restarts it; the rejoined process
+//! catches up through QC-chain sync + digest-addressed blob pulls, the
+//! cluster commits past the rejoin round, and — because the smoke config
+//! pins `agg_quorum = "all"` and the lite node's update is a pure
+//! function of (seed, node, round) — the final model digest is
+//! bit-identical to an uninterrupted run of the same seed.
+//!
+//! A hang cannot stall CI: the supervisor enforces a hard wall-clock
+//! deadline and exits nonzero, which fails this test fast.
+
+use std::path::Path;
+use std::process::Command;
+
+/// Supervisor hard deadline per run (also this test's effective cap).
+const DEADLINE_S: u64 = 150;
+
+fn cluster_toml(base_port: u16, control_port: u16) -> String {
+    format!(
+        "[cluster]\n\
+         nodes = 4\n\
+         base_port = {base_port}\n\
+         control_port = {control_port}\n\
+         heartbeat_ms = 100\n\
+         restart_backoff_ms = 250\n\
+         restart_backoff_max_ms = 2000\n\
+         max_restarts = 4\n\
+         mode = \"lite\"\n\
+         agg_quorum = \"all\"\n\
+         deadline_s = {DEADLINE_S}\n\
+         linger_ms = 2000\n\
+         \n\
+         [experiment]\n\
+         rounds = 4\n\
+         seed = 1234\n\
+         gst_ms = 200\n\
+         chunk_bytes = 256\n\
+         fetch_retry_ms = 50\n\
+         dim = 256\n\
+         hs_timeout_ms = 100\n"
+    )
+}
+
+struct RunOutcome {
+    rounds: u64,
+    digest: String,
+    restarts: u64,
+    stdout: String,
+}
+
+fn run_supervisor(cfg_path: &Path, kill: Option<&str>) -> RunOutcome {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_defl-supervisor"));
+    cmd.arg("--config")
+        .arg(cfg_path)
+        .arg("--silo-bin")
+        .arg(env!("CARGO_BIN_EXE_defl-silo"))
+        .arg("--deadline-s")
+        .arg(DEADLINE_S.to_string());
+    if let Some(k) = kill {
+        cmd.arg("--kill").arg(k);
+    }
+    let out = cmd.output().expect("running defl-supervisor");
+    let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+    let stderr = String::from_utf8_lossy(&out.stderr).into_owned();
+    assert!(
+        out.status.success(),
+        "supervisor failed (kill={kill:?}):\n--- stdout ---\n{stdout}\n--- stderr ---\n{stderr}"
+    );
+    let grab = |key: &str| -> String {
+        stdout
+            .lines()
+            .rev()
+            .find_map(|l| l.strip_prefix(key).map(|v| v.trim().to_string()))
+            .unwrap_or_else(|| panic!("missing `{key}` line in:\n{stdout}"))
+    };
+    RunOutcome {
+        rounds: grab("CLUSTER_ROUNDS ").parse().expect("rounds"),
+        digest: grab("CLUSTER_DIGEST "),
+        restarts: grab("CLUSTER_RESTARTS ").parse().expect("restarts"),
+        stdout,
+    }
+}
+
+#[test]
+fn supervised_kill_restart_recovers_bit_identically() {
+    let dir = std::env::temp_dir().join(format!("defl-cluster-proc-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Baseline: uninterrupted 4-silo run.
+    let base_cfg = dir.join("baseline.toml");
+    std::fs::write(&base_cfg, cluster_toml(40915, 40910)).unwrap();
+    let baseline = run_supervisor(&base_cfg, None);
+    assert_eq!(baseline.rounds, 4, "baseline rounds:\n{}", baseline.stdout);
+    assert_eq!(baseline.restarts, 0, "baseline must not restart anything");
+
+    // Scenario: SIGKILL silo 2 once it reports round 1, restart it, and
+    // require full recovery (different ports so stray sockets from the
+    // first run cannot interfere).
+    let kill_cfg = dir.join("kill.toml");
+    std::fs::write(&kill_cfg, cluster_toml(41015, 41010)).unwrap();
+    let killed = run_supervisor(&kill_cfg, Some("2@1"));
+    assert!(
+        killed.restarts >= 1,
+        "the kill scenario must actually restart a silo:\n{}",
+        killed.stdout
+    );
+    assert!(
+        killed.stdout.contains("SIGKILLed silo 2"),
+        "kill marker missing:\n{}",
+        killed.stdout
+    );
+    assert_eq!(
+        killed.rounds, 4,
+        "cluster must commit through all rounds past the rejoin:\n{}",
+        killed.stdout
+    );
+    // The headline property: recovery through real process boundaries is
+    // bit-identical to never having crashed.
+    assert_eq!(
+        killed.digest, baseline.digest,
+        "kill+restart diverged from the uninterrupted run\n--- baseline ---\n{}\n--- killed ---\n{}",
+        baseline.stdout, killed.stdout
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -26,6 +26,7 @@ fn cfg(n: usize, rounds: u64) -> LiteConfig {
         batch_consensus: true,
         timeout_base_us: 100_000,
         fetch_retry_us: 50_000,
+        agg_quorum: None,
     }
 }
 

@@ -178,6 +178,7 @@ fn sim_and_tcp_agree_on_batched_chunked_path() {
         batch_consensus: true,
         timeout_base_us: 100_000,
         fetch_retry_us: 50_000,
+        agg_quorum: None,
     };
 
     // Simulator run.
@@ -287,6 +288,7 @@ fn sim_and_tcp_recover_identically_from_a_dropped_chunk() {
         batch_consensus: true,
         timeout_base_us: 100_000,
         fetch_retry_us: 60_000,
+        agg_quorum: None,
     };
 
     let build = |id: NodeId, c: &LiteConfig| {
