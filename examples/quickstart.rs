@@ -23,9 +23,9 @@ fn main() -> anyhow::Result<()> {
 
     // 2. Local training on synthetic CIFAR.
     let (train, test) = fl::synth_cifar(768, 7).split(512);
-    let mut shard = Shard::new((0..512).collect());
+    let shard = Shard::new((0..512).collect());
     let theta0 = engine.init_params(42)?;
-    let (theta, loss) = fl::local_train(&engine, &train, &mut shard, theta0.clone(), 30, 0.05)?;
+    let (theta, loss) = fl::local_train(&engine, &train, &shard, 1, theta0.clone(), 30, 0.05)?;
     let (acc, _) = fl::evaluate(&engine, &test, &theta)?;
     println!("local training: 30 steps, loss {loss:.3}, test accuracy {acc:.3}");
 

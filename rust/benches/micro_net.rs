@@ -87,6 +87,8 @@ fn main() {
             timeout_base_us: 200_000,
             fetch_retry_us: 50_000,
             agg_quorum: None,
+            pipeline: true,
+            train_us: 0,
         };
         let batched = run_cluster(&mk(true), 21);
         let unbatched = run_cluster(&mk(false), 21);
@@ -144,6 +146,8 @@ fn main() {
                 timeout_base_us: 200_000,
                 fetch_retry_us: 50_000,
                 agg_quorum: None,
+                pipeline: true,
+                train_us: 0,
             };
             let r = run_cluster(&cfg, 33);
             let bpr = r.weights_bytes as f64 / r.rounds as f64;

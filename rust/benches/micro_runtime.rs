@@ -8,13 +8,124 @@
 mod common;
 
 use defl::config::Model;
+use defl::crypto::{Digest, NodeId};
+use defl::defl::lite::{lite_cluster, LiteConfig, LiteNode};
+use defl::metrics::PipelineStats;
+use defl::net::sim::{SimConfig, SimNet};
 use defl::runtime::Batch;
 use defl::util::bench::{bench, BenchReport};
 use defl::util::Pcg;
 
+/// Pipelined vs lockstep round engine in VIRTUAL time, on the
+/// engine-free lite cluster (artifact-free, so this always runs in CI):
+/// n = 8 silos, each round modelling 100 ms of training against a
+/// 100 ms GST_LT wait — the regime the round pipeline exists for.
+/// Records virtual rounds/sec for both engines, the speculation
+/// occupancy counters, and whether they finished on the same final
+/// digest. Returns false on a digest mismatch so main can fail the run
+/// (CI additionally gates rounds/sec ratio ≥ 1.5 from the JSON).
+fn lite_pipeline_rounds(report: &mut BenchReport) -> bool {
+    let n = 8usize;
+    let rounds = 8u64;
+    let run = |pipeline: bool| {
+        let c = LiteConfig {
+            n_nodes: n,
+            rounds,
+            dim: 1024,
+            seed: 7,
+            gst_us: 100_000,
+            chunk_bytes: 1 << 16,
+            batch_consensus: true,
+            timeout_base_us: 100_000,
+            fetch_retry_us: 50_000,
+            // Unanimous AGG quorum: every round's decide waits for the
+            // slowest silo, the worst (and most realistic) case for the
+            // lockstep baseline.
+            agg_quorum: Some(n),
+            pipeline,
+            train_us: 100_000,
+        };
+        let sim = SimConfig { n_nodes: n, latency_us: 200, jitter_us: 50, drop_prob: 0.0, seed: 5 };
+        let mut net = SimNet::new(sim, lite_cluster(&c));
+        // 1 ms stepping: the finish time (the measurement) resolves to
+        // ~0.1% of a run. Virtual time, so perfectly reproducible.
+        let mut t = net.now_us();
+        loop {
+            t += 1_000;
+            net.run_until(t, u64::MAX);
+            let done = (0..n as NodeId)
+                .all(|i| net.actor_as::<LiteNode>(i).map(|a| a.done).unwrap_or(false));
+            if done {
+                break;
+            }
+            assert!(t < 120_000_000, "lite pipeline bench did not finish (pipeline={pipeline})");
+        }
+        let finished_us = net.now_us();
+        let digests: Vec<Option<Digest>> = (0..n as NodeId)
+            .map(|i| net.actor_as::<LiteNode>(i).unwrap().final_digest)
+            .collect();
+        let stats: Vec<PipelineStats> = (0..n as NodeId)
+            .map(|i| net.actor_as::<LiteNode>(i).unwrap().pipeline)
+            .collect();
+        (finished_us, digests, stats)
+    };
+
+    println!("\n== micro: pipelined vs lockstep rounds (lite, virtual time, n={n}) ==");
+    let (lock_us, lock_digests, _) = run(false);
+    let (pipe_us, pipe_digests, pipe_stats) = run(true);
+    let rps = |us: u64| rounds as f64 * 1e6 / us as f64;
+    let hits: u64 = pipe_stats.iter().map(|s| s.spec_hits).sum();
+    let discards: u64 = pipe_stats.iter().map(|s| s.spec_discards).sum();
+    let overlap_us: u64 = pipe_stats.iter().map(|s| s.train_overlap_us).sum();
+    let busy_us: u64 = pipe_stats.iter().map(|s| s.train_busy_us).sum();
+    let digest_match = pipe_digests.iter().all(|d| d.is_some() && *d == lock_digests[0])
+        && lock_digests.iter().all(|d| d.is_some() && *d == lock_digests[0]);
+    println!(
+        "lockstep  {:>8.3} rounds/s ({} virtual ms)",
+        rps(lock_us),
+        lock_us / 1_000
+    );
+    println!(
+        "pipelined {:>8.3} rounds/s ({} virtual ms)  speedup {:.2}x  \
+         hits {hits} discards {discards} overlap {} ms  digest_match {digest_match}",
+        rps(pipe_us),
+        pipe_us / 1_000,
+        lock_us as f64 / pipe_us as f64,
+        overlap_us / 1_000,
+    );
+    report.record_metrics(
+        "lite/rounds_per_sec lockstep",
+        &[("n", n as f64), ("rounds", rounds as f64)],
+        &[("rounds_per_sec", rps(lock_us)), ("virtual_us", lock_us as f64)],
+    );
+    report.record_metrics(
+        "lite/rounds_per_sec pipelined",
+        &[("n", n as f64), ("rounds", rounds as f64)],
+        &[
+            ("rounds_per_sec", rps(pipe_us)),
+            ("virtual_us", pipe_us as f64),
+            ("spec_hits", hits as f64),
+            ("spec_discards", discards as f64),
+            ("train_overlap_us", overlap_us as f64),
+            ("train_busy_us", busy_us as f64),
+        ],
+    );
+    report.record_metrics(
+        "lite/pipeline_digest_match",
+        &[("n", n as f64)],
+        &[
+            ("digest_match", if digest_match { 1.0 } else { 0.0 }),
+            ("speedup", lock_us as f64 / pipe_us as f64),
+        ],
+    );
+    digest_match
+}
+
 fn main() {
     common::bench_scale();
     let mut report = BenchReport::new("micro_runtime");
+
+    let digests_ok = lite_pipeline_rounds(&mut report);
 
     // Artifact-free baseline: the native weighted-mean aggregation pass
     // (the fallback every node runs when no fedavg artifact is exported).
@@ -76,4 +187,8 @@ fn main() {
     let path = common::bench_report_path("BENCH_runtime.json");
     report.write(&path).expect("write BENCH_runtime.json");
     println!("wrote {} ({} entries)", path.display(), report.len());
+    if !digests_ok {
+        eprintln!("FAIL: pipelined and lockstep engines diverged on final digests");
+        std::process::exit(1);
+    }
 }

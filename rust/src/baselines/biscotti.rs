@@ -128,7 +128,8 @@ impl BiscottiNode {
         match local_train(
             &self.engine,
             &self.data,
-            &mut self.shard,
+            &self.shard,
+            round,
             self.theta.clone(),
             self.cfg.local_steps,
             self.cfg.lr_at(round - 1),

@@ -137,7 +137,8 @@ impl ServerFlNode {
         match local_train(
             &self.engine,
             &self.data,
-            &mut self.shard,
+            &self.shard,
+            round,
             self.theta.clone(),
             self.cfg.local_steps,
             self.cfg.lr_at(round - 1),

@@ -30,9 +30,10 @@ pub enum SiloMode {
     /// (seed, node, round)).
     Lite,
     /// Full `DeflNode` (Algorithm 1 + 2 over real training); requires
-    /// the AOT artifacts. Crash-restart recovers to cluster-wide
-    /// agreement; bit-identity to an uninterrupted run additionally
-    /// needs restart-deterministic trainer state (ROADMAP follow-on).
+    /// the AOT artifacts. Crash-restart recovery is bit-identical to an
+    /// uninterrupted run, same as lite: batch draws are a pure function
+    /// of (shard, round, step) and the local update of (seed, node,
+    /// round, aggregate), so a restarted silo retrains the same bits.
     Full,
 }
 
@@ -148,6 +149,7 @@ const EXPERIMENT_KEYS: &[&str] = &[
     "experiment.gst_ms",
     "experiment.chunk_bytes",
     "experiment.batch_consensus",
+    "experiment.pipeline",
     "experiment.fetch_retry_ms",
     "experiment.dim",
     "experiment.hs_timeout_ms",
@@ -225,6 +227,7 @@ impl ClusterConfig {
         e.batch_consensus = doc
             .get_parse("experiment.batch_consensus")?
             .unwrap_or(e.batch_consensus);
+        e.pipeline = doc.get_parse("experiment.pipeline")?.unwrap_or(e.pipeline);
         e.fetch_retry_ms = doc
             .get_parse("experiment.fetch_retry_ms")?
             .unwrap_or(e.fetch_retry_ms);
@@ -283,6 +286,7 @@ impl ClusterConfig {
              gst_ms = {}\n\
              chunk_bytes = {}\n\
              batch_consensus = {}\n\
+             pipeline = {}\n\
              fetch_retry_ms = {}\n\
              dim = {}\n\
              hs_timeout_ms = {}\n",
@@ -311,6 +315,7 @@ impl ClusterConfig {
             self.exp.gst_lt_ms,
             self.exp.chunk_bytes,
             self.exp.batch_consensus,
+            self.exp.pipeline,
             self.exp.fetch_retry_ms,
             self.dim,
             self.hs_timeout_ms,
@@ -386,6 +391,11 @@ impl ClusterConfig {
             timeout_base_us: self.hs_timeout_ms * 1_000,
             fetch_retry_us: self.exp.fetch_retry_ms * 1_000,
             agg_quorum: Some(self.agg_quorum()),
+            pipeline: self.exp.pipeline,
+            // Lite silos run against wall-clock sockets, not the virtual
+            // sim: training cost is already zero, so the pipeline knob
+            // only changes WHEN the synthetic update is computed.
+            train_us: 0,
         }
     }
 
@@ -419,6 +429,8 @@ mod tests {
         assert_eq!(minimal.exp.gst_lt_ms, want.gst_lt_ms);
         assert_eq!(minimal.exp.chunk_bytes, want.chunk_bytes);
         assert_eq!(minimal.exp.batch_consensus, want.batch_consensus);
+        assert_eq!(minimal.exp.pipeline, want.pipeline);
+        assert!(minimal.exp.pipeline, "pipelined rounds are the default");
         assert_eq!(minimal.exp.fetch_retry_ms, want.fetch_retry_ms);
         assert_eq!(minimal.exp.n_nodes, 7);
     }
@@ -462,6 +474,14 @@ mod tests {
         assert_eq!(lc.fetch_retry_us, 60_000);
         assert_eq!(lc.timeout_base_us, 80_000);
         assert_eq!(lc.agg_quorum, Some(4), "agg_quorum=all means unanimity");
+        assert!(lc.pipeline, "pipeline defaults on");
+        assert_eq!(lc.train_us, 0, "wall-clock silos model no virtual train cost");
+        let lockstep = ClusterConfig::parse(
+            "[cluster]\nnodes = 4\n[experiment]\npipeline = false\n",
+        )
+        .unwrap();
+        assert!(!lockstep.lite_config().pipeline);
+        assert!(!lockstep.full_config().pipeline);
         // The full-mode config is the experiment section verbatim, with
         // the cluster's n.
         assert_eq!(cfg.full_config().n_nodes, 4);
@@ -521,6 +541,7 @@ mod tests {
                 cfg.exp.gst_lt_ms = 100 + rng.gen_range(4_000);
                 cfg.exp.chunk_bytes = rng.gen_usize(1 << 20);
                 cfg.exp.batch_consensus = rng.f64() < 0.5;
+                cfg.exp.pipeline = rng.f64() < 0.5;
                 cfg.exp.fetch_retry_ms = 10 + rng.gen_range(400);
                 cfg.exp.attack = *rng.choose(&[
                     Attack::None,

@@ -45,16 +45,29 @@
 //!    the recovered aggregate is bit-identical, not row-dropped.
 //!
 //! With `agg_quorum = "all"` no round can advance without every silo's
-//! UPD, so a lite-mode cluster's final model digest after kill + restart
-//! is **bit-identical to an uninterrupted run of the same seed** (the
-//! lite local update is a pure function of (seed, node, round); the CI
-//! smoke and `tests/cluster_process.rs` assert exactly this). With the
+//! UPD, so a cluster's final model digest after kill + restart is
+//! **bit-identical to an uninterrupted run of the same seed** — in lite
+//! mode (the local update is a pure function of (seed, node, round); the
+//! CI smoke and `tests/cluster_process.rs` assert exactly this) and in
+//! full mode alike, since the trainer's batch draws are a pure function
+//! of (shard, round, step) rather than a crash-lost cursor. With the
 //! default minority AGG quorum, rounds keep advancing while a silo is
 //! down — recovery then guarantees cluster-wide agreement, and the runs
 //! legitimately diverge from an uninterrupted one by the rows decided
 //! without the dead silo. Crash-restart also resets a replica's HotStuff
 //! lock state: safe under the crash-fault model supervised here, and
 //! counted against the Byzantine budget otherwise.
+//!
+//! # Pipelined rounds in a cluster
+//!
+//! `experiment.pipeline` (TOML; default `true`) selects the pipelined
+//! round engine on every silo: while round r waits out GST_LT and the
+//! AGG quorum, the silo speculatively trains round r + 1 against the
+//! committed W^CUR rows and publishes the moment r decides; a wrong
+//! prediction is discarded and recomputed, keeping final digests
+//! bit-identical to `pipeline = false` (the lockstep baseline kept for
+//! A/B runs). See the [`crate::defl`] module docs for the lifecycle and
+//! the one-round-lookahead bound.
 
 pub mod config;
 pub mod control;

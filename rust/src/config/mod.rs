@@ -207,6 +207,14 @@ pub struct ExperimentConfig {
     /// from the committing node first, rotating to other holders on
     /// timeout, miss, or a digest-mismatched reply).
     pub fetch_retry_ms: u64,
+    /// Pipelined round engine: while round r sits in
+    /// multicast/consensus/aggregate, speculatively train round r + 1
+    /// against the already-committed W^CUR and publish the UPD the
+    /// moment round r decides. One round of lookahead only, so the
+    /// τ-round storage bound holds; a speculation whose basis changed is
+    /// discarded, never committed, keeping final digests bit-identical
+    /// to the lockstep baseline (`false` = that baseline).
+    pub pipeline: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -230,6 +238,7 @@ impl Default for ExperimentConfig {
             chunk_bytes: 256 * 1024,
             batch_consensus: true,
             fetch_retry_ms: 150,
+            pipeline: true,
         }
     }
 }

@@ -23,7 +23,7 @@ use crate::crypto::{Digest, KeyRegistry, NodeId};
 use crate::hotstuff::{Action, ByzMode, HotStuff, HsConfig, Msg};
 use crate::krum;
 use crate::mempool::{ChunkAssembler, WeightPool};
-use crate::metrics::Traffic;
+use crate::metrics::{PipelineStats, Traffic};
 use crate::net::transport::{Actor, Ctx};
 use crate::util::{Decode, Encode, Pcg};
 use crate::weights::Weights;
@@ -35,6 +35,8 @@ use super::tx::{multicast_blob, Tx, WeightBlob};
 /// Timer namespaces (match `DeflNode`; `pull::TIMER_FETCH` is 1 << 60).
 const TIMER_HS: u64 = 1 << 62;
 const TIMER_GST: u64 = 1 << 61;
+/// Deferred UPD publish: local training for `id & !TIMER_TRAIN` lands.
+const TIMER_TRAIN: u64 = 1 << 59;
 
 /// Knobs for a [`LiteNode`] cluster.
 #[derive(Debug, Clone)]
@@ -63,6 +65,17 @@ pub struct LiteConfig {
     /// uninterrupted one (rounds decided without the dead silo's row
     /// would legitimately diverge otherwise).
     pub agg_quorum: Option<usize>,
+    /// Pipelined round engine: speculatively train round r + 1 against
+    /// the committed W^CUR while round r waits out GST/consensus, and
+    /// publish the precomputed UPD the moment round r decides. A
+    /// speculation whose basis changed is discarded, never committed, so
+    /// final digests stay bit-identical to the lockstep baseline
+    /// (`false`).
+    pub pipeline: bool,
+    /// Simulated local-training duration (µs): a round's UPD publish
+    /// lands this long after its training starts. 0 = instantaneous
+    /// (the legacy timing; pipelining then changes nothing observable).
+    pub train_us: u64,
 }
 
 impl Default for LiteConfig {
@@ -78,8 +91,27 @@ impl Default for LiteConfig {
             timeout_base_us: 100_000,
             fetch_retry_us: 50_000,
             agg_quorum: None,
+            pipeline: true,
+            train_us: 0,
         }
     }
+}
+
+/// One round of speculative lookahead (the pipelined engine's bound):
+/// weights trained against a *predicted* W^LAST — the W^CUR snapshot at
+/// speculation time — held locally until the preceding round decides.
+/// Published only if the decided W^LAST matches the prediction row for
+/// row; discarded otherwise. Never inserted into the pool or multicast
+/// before resolution, so the τ = 2 storage invariant is untouched.
+struct SpecRound {
+    /// Round the speculative UPD would target (deciding round + 1).
+    target: u64,
+    /// Predicted W^LAST: the W^CUR snapshot the aggregate was built on.
+    predicted: Vec<Option<Digest>>,
+    /// Speculatively trained weights.
+    theta: Weights,
+    /// Virtual time the speculative training completes.
+    ready_at_us: u64,
 }
 
 /// The protocol node. Public state (`done`, `rounds_done`,
@@ -96,6 +128,13 @@ pub struct LiteNode {
     /// Highest round whose own UPD executed Ok (duplicate-decision guard).
     l_round: u64,
     round_in_flight: Option<u64>,
+    /// Speculative next-round training awaiting resolution (pipeline).
+    spec: Option<SpecRound>,
+    /// A round whose training is still running: its UPD publish is
+    /// deferred to `TIMER_TRAIN | target`.
+    pending_publish: Option<u64>,
+    /// Overlap-occupancy counters (speculation hits/discards, busy time).
+    pub pipeline: PipelineStats,
     pub done: bool,
     pub rounds_done: u64,
     /// Digest of the final aggregate (the cross-transport parity probe).
@@ -127,6 +166,9 @@ impl LiteNode {
             theta: Weights::new(vec![0.0f32; cfg.dim]),
             l_round: 0,
             round_in_flight: None,
+            spec: None,
+            pending_publish: None,
+            pipeline: PipelineStats::default(),
             done: false,
             rounds_done: 0,
             final_digest: None,
@@ -221,13 +263,61 @@ impl LiteNode {
         if self.round_in_flight == Some(target) {
             return;
         }
+        if let Some(t) = self.pending_publish {
+            if t == target {
+                return; // training for this round is still running
+            }
+            // The pending round decided without our row: abandon the
+            // stale job (its TIMER_TRAIN fires into the void).
+            self.pending_publish = None;
+        }
         self.round_in_flight = Some(target);
+
+        // Resolve the speculative lookahead, if any: publish it only if
+        // the decided W^LAST matches the predicted basis row for row;
+        // anything else is discarded, never committed.
+        if let Some(spec) = self.spec.take() {
+            if spec.target == target && spec.predicted == self.replica.w_last {
+                self.pipeline.spec_hits += 1;
+                self.theta = spec.theta;
+                let now = ctx.now_us();
+                if spec.ready_at_us > now {
+                    // Training still running: the decide wait hid part.
+                    self.pipeline.train_overlap_us +=
+                        self.cfg.train_us.saturating_sub(spec.ready_at_us - now);
+                    self.schedule_publish(ctx, target, spec.ready_at_us - now);
+                } else {
+                    self.pipeline.train_overlap_us += self.cfg.train_us;
+                    self.publish_update(ctx, target);
+                }
+                return;
+            }
+            self.pipeline.spec_discards += 1;
+        }
 
         let agg = self.aggregate_last();
         self.theta = self.local_update(agg, target);
+        self.pipeline.train_busy_us += self.cfg.train_us;
+        if self.cfg.train_us > 0 {
+            self.schedule_publish(ctx, target, self.cfg.train_us);
+        } else {
+            self.publish_update(ctx, target);
+        }
+    }
 
-        // Storage layer first (one shared tensor), then the UPD digest
-        // through consensus, then AGG after the GST_LT analogue.
+    /// Defer the UPD publish for `target` until its training lands.
+    fn schedule_publish(&mut self, ctx: &mut dyn Ctx, target: u64, delay_us: u64) {
+        self.pending_publish = Some(target);
+        ctx.set_timer(delay_us, TIMER_TRAIN | target);
+    }
+
+    /// Storage layer first (one shared tensor), then the UPD digest
+    /// through consensus, then AGG after the GST_LT analogue.
+    fn publish_update(&mut self, ctx: &mut dyn Ctx, target: u64) {
+        self.pending_publish = None;
+        if self.replica.r_round + 1 != target {
+            return; // round raced past while the publish was deferred
+        }
         let digest = self.theta.digest();
         let blob = WeightBlob { node: self.id, round: target, weights: self.theta.clone() };
         self.pool.put(target, self.theta.clone());
@@ -238,6 +328,76 @@ impl LiteNode {
         self.hs.submit_and_gossip(upd.to_bytes(), &mut out);
         ctx.set_timer(self.cfg.gst_us, TIMER_GST | target);
         self.apply_actions(ctx, out);
+    }
+
+    /// Start (or refresh) the one-round speculative lookahead: train the
+    /// NEXT round against the committed W^CUR while the current one
+    /// waits out GST/consensus. Without `force`, speculation waits for a
+    /// full basis (every node's UPD committed — see
+    /// [`ReplicaState::committed_cur`]), which no honest UPD can still
+    /// change; `force` (GST fired, the node is now idle anyway) accepts
+    /// a partial basis and bets the remaining rows miss the round.
+    fn maybe_speculate(&mut self, ctx: &mut dyn Ctx, force: bool) {
+        if !self.cfg.pipeline || self.done {
+            return;
+        }
+        let deciding = self.replica.r_round + 1;
+        if self.round_in_flight != Some(deciding) {
+            return; // our own UPD isn't in flight — nothing to overlap
+        }
+        let target = deciding + 1;
+        if target > self.cfg.rounds {
+            return;
+        }
+        let predicted = self.replica.w_cur.clone();
+        let committed = self.replica.committed_cur();
+        if committed == 0 {
+            return;
+        }
+        let full = committed == self.cfg.n_nodes;
+        match &self.spec {
+            // The current guess already matches the basis: keep it.
+            Some(s) if s.target == target && s.predicted == predicted => return,
+            // A partial basis only replaces an existing guess (or seeds
+            // one) when forced or complete; otherwise wait for it to
+            // settle instead of churning the trainer.
+            Some(_) | None if !(force || full) => return,
+            _ => {}
+        }
+        // The aggregate needs every predicted row resident (the rows are
+        // digest-addressed, so a resident blob is the right content). A
+        // missing one: prefetch now, retry when it arrives.
+        let mut rows = Vec::new();
+        for d in predicted.iter().flatten() {
+            match self.pool.get(d) {
+                Ok(w) => {
+                    if w.len() == self.cfg.dim {
+                        rows.push(w);
+                    }
+                }
+                Err(_) => {
+                    pull::refresh_wants(&mut self.puller, &self.replica, &self.pool, ctx);
+                    return;
+                }
+            }
+        }
+        if rows.is_empty() {
+            return;
+        }
+        let sw = vec![1.0f32; rows.len()];
+        let agg = krum::fedavg(&rows, &sw).unwrap_or_else(|_| self.theta.to_vec());
+        let theta = self.local_update(agg, target);
+        if self.spec.take().is_some() {
+            // Basis changed under the trainer: the old guess is dead.
+            self.pipeline.spec_discards += 1;
+        }
+        self.pipeline.train_busy_us += self.cfg.train_us;
+        self.spec = Some(SpecRound {
+            target,
+            predicted,
+            theta,
+            ready_at_us: ctx.now_us() + self.cfg.train_us,
+        });
     }
 
     fn finish(&mut self) {
@@ -280,7 +440,12 @@ impl Actor for LiteNode {
                     from,
                     bytes,
                 ) {
-                    Ok(true) => self.try_start_round(ctx),
+                    Ok(true) => {
+                        self.try_start_round(ctx);
+                        // A completed blob may be the row a pending
+                        // speculation was waiting on.
+                        self.maybe_speculate(ctx, false);
+                    }
                     Ok(false) => {}
                     Err(e) => log::debug!("lite n{}: weight frame rejected: {e:#}", self.id),
                 }
@@ -291,6 +456,9 @@ impl Actor for LiteNode {
                     let _ = self.hs.on_message(from, msg, &mut out);
                     self.apply_actions(ctx, out);
                     self.try_start_round(ctx);
+                    // Decided UPDs may have grown (or completed) the
+                    // W^CUR basis the lookahead trains against.
+                    self.maybe_speculate(ctx, false);
                 }
             }
             Traffic::Blocks => {}
@@ -313,9 +481,22 @@ impl Actor for LiteNode {
             self.hs.submit_and_gossip(agg_tx.to_bytes(), &mut out);
             self.apply_actions(ctx, out);
             self.try_start_round(ctx);
+            if self.cfg.pipeline {
+                // GST idle begins: the node now just waits for the round
+                // to decide. Put the dead time to work — force the
+                // speculative lookahead even on a partial basis, and
+                // prefetch any referenced blob still missing.
+                self.maybe_speculate(ctx, true);
+                pull::prefetch_idle(&mut self.puller, &self.replica, &self.pool, &self.chunks, ctx);
+            }
         } else if id & TIMER_FETCH != 0 {
             pull::on_fetch_timer(&mut self.puller, &self.pool, &self.chunks, ctx);
             self.try_start_round(ctx);
+        } else if id & TIMER_TRAIN != 0 {
+            let target = id & !TIMER_TRAIN;
+            if !self.done && self.pending_publish == Some(target) {
+                self.publish_update(ctx, target);
+            }
         }
     }
 
@@ -387,6 +568,42 @@ mod tests {
         let mono = run(0);
         for chunk in [400, 128, 32] {
             assert_eq!(run(chunk), mono, "chunk size {chunk} changed the outcome");
+        }
+    }
+
+    /// The tentpole invariant: the pipelined engine (with and without a
+    /// nonzero simulated training time) reaches final digests
+    /// bit-identical to the lockstep baseline, while actually
+    /// overlapping training with the consensus wait.
+    #[test]
+    fn pipelined_matches_lockstep_and_actually_speculates() {
+        let run = |pipeline: bool, train_us: u64| {
+            let cfg = LiteConfig {
+                n_nodes: 4,
+                rounds: 4,
+                dim: 64,
+                agg_quorum: Some(4),
+                pipeline,
+                train_us,
+                ..Default::default()
+            };
+            let sim = SimConfig { n_nodes: 4, seed: 11, ..Default::default() };
+            let mut net = SimNet::new(sim, lite_cluster(&cfg));
+            drive(&mut net, 4, 120_000_000);
+            let ds = digests(&mut net, 4);
+            let hits: u64 = (0..4u32)
+                .map(|i| net.actor_as::<LiteNode>(i).unwrap().pipeline.spec_hits)
+                .sum();
+            (ds, hits)
+        };
+        let (base, base_hits) = run(false, 0);
+        assert_eq!(base_hits, 0, "lockstep must never speculate");
+        for (pipeline, train_us) in [(true, 0u64), (true, 50_000), (false, 50_000)] {
+            let (ds, hits) = run(pipeline, train_us);
+            assert_eq!(ds, base, "pipeline={pipeline} train_us={train_us} diverged");
+            if pipeline && train_us > 0 {
+                assert!(hits > 0, "pipelined run never hit a speculation");
+            }
         }
     }
 }

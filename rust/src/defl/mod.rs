@@ -3,6 +3,42 @@
 //! GST_LT wait → AGG commit) and a replica (Algorithm 2: executing
 //! HotStuff-ordered UPD/AGG transactions over round_id, W^CUR, W^LAST),
 //! with weight blobs decoupled into the storage layer (§3.4).
+//!
+//! # Pipelined rounds (the `pipeline` knob)
+//!
+//! Run lockstep, a round spends most of its wall clock *waiting*: after
+//! the UPD is committed, the node sits out GST_LT plus however long the
+//! AGG quorum takes, with the trainer idle. With
+//! [`crate::config::ExperimentConfig::pipeline`] (default **on**; the
+//! cluster TOML key is `experiment.pipeline`, and lockstep stays
+//! available as the baseline), a node hides the NEXT round's work inside
+//! that window:
+//!
+//! 1. While round r is in its decide window, the already-committed
+//!    W^CUR rows for r are a prediction of what W^LAST will be once r
+//!    decides. The node aggregates that prediction and trains round
+//!    r + 1 against it — speculatively, on the same thread that would
+//!    otherwise be idle, while the storage layer prefetches any
+//!    referenced blob still missing.
+//! 2. The speculative θ stays private: it is **never** pooled,
+//!    multicast, or submitted until r decides. The τ = 2 round storage
+//!    bound and the commit order are therefore untouched.
+//! 3. When r decides, the speculation resolves. If the decided W^LAST
+//!    equals the predicted snapshot row for row, the node publishes the
+//!    precomputed UPD immediately (a *hit*: the round's training cost
+//!    vanishes from the critical path). Any mismatch *discards* the
+//!    speculation unseen and recomputes lockstep — and because both the
+//!    aggregate (node-id-ordered rows through the same Krum/FedAvg
+//!    dispatch) and the trainer (batches pure in (shard, round, step))
+//!    are deterministic, final model digests are **bit-identical** to a
+//!    lockstep run either way.
+//!
+//! Lookahead is bounded to ONE round: speculating round r + 2 would
+//! need W^CUR rows of r + 1, which cannot exist before r + 1's UPDs
+//! commit. Byzantine nodes never speculate (their commit-time poison
+//! consumes attack-rng draws in round order). Occupancy is reported per
+//! node in [`crate::metrics::PipelineStats`]: hits, discards, and how
+//! much training time ran hidden behind the wait.
 
 pub mod lite;
 pub mod node;

@@ -29,7 +29,7 @@ use crate::fl::data::{Dataset, Shard};
 use crate::fl::trainer::local_train;
 use crate::hotstuff::{Action, ByzMode, HotStuff, HsConfig};
 use crate::mempool::{ChunkAssembler, WeightPool};
-use crate::metrics::Traffic;
+use crate::metrics::{PipelineStats, Traffic};
 use crate::net::transport::{Actor, Ctx};
 use crate::runtime::{AggPath, Engine};
 use crate::util::{Decode, Encode};
@@ -50,6 +50,21 @@ const CHUNK_ASM_CAP: u64 = 256 << 20;
 const TIMER_HS: u64 = 1 << 62;
 const TIMER_GST: u64 = 1 << 61;
 
+/// A speculative next-round training result awaiting resolution: it is
+/// published only if the decided W^LAST matches `predicted` row for row,
+/// and discarded (never pooled, multicast, or committed) otherwise — so
+/// the τ-round storage invariant and the lockstep digests are preserved.
+struct SpecTrain {
+    /// Round the speculative UPD would target (deciding round + 1).
+    target: u64,
+    /// Predicted W^LAST: the W^CUR snapshot the aggregate was built on.
+    predicted: Vec<Option<Digest>>,
+    theta: Weights,
+    loss: f32,
+    /// Wall time the speculative training took (occupancy accounting).
+    train_us: u64,
+}
+
 /// Per-node observable results, extracted by the experiment driver.
 #[derive(Debug, Default, Clone)]
 pub struct NodeStats {
@@ -69,6 +84,9 @@ pub struct NodeStats {
     /// from the [`Puller`] at finish so drivers and the cluster control
     /// plane see the storage layer's health without reaching into it.
     pub fetch: crate::defl::pull::FetchStats,
+    /// Pipelined-round occupancy: speculation hits/discards and how much
+    /// training time (wall µs) ran, and ran hidden behind the GST wait.
+    pub pipeline: PipelineStats,
 }
 
 pub struct DeflNode {
@@ -90,6 +108,10 @@ pub struct DeflNode {
     l_round: u64,
     theta: Weights,
     round_in_flight: Option<u64>,
+    /// One round of speculative lookahead (pipeline mode): weights
+    /// trained against the committed W^CUR while the preceding round
+    /// waits out GST/consensus, held locally until that round decides.
+    spec: Option<SpecTrain>,
     attack: Attack,
     is_byzantine: bool,
 
@@ -145,6 +167,7 @@ impl DeflNode {
             l_round: 0,
             theta: Weights::new(theta0),
             round_in_flight: None,
+            spec: None,
             attack,
             is_byzantine,
             stats: NodeStats::default(),
@@ -201,6 +224,25 @@ impl DeflNode {
     /// (round 1 bootstrap: all nodes share the same seed-0 init).
     fn aggregate_last(&mut self) -> Result<Vec<f32>> {
         let digs = self.replica.last_round_digests();
+        Ok(self
+            .aggregate_digests(&digs, false)?
+            .expect("the committed path never requires all rows"))
+    }
+
+    /// Shared aggregation core for the committed path (`aggregate_last`)
+    /// and the speculative lookahead. Both walk the SAME node-id-ordered
+    /// digest rows through the SAME Krum/FedAvg dispatch, which is what
+    /// makes a speculation hit bit-identical to the lockstep recompute.
+    /// `require_all = true` (the speculative path) returns `Ok(None)` if
+    /// any row is missing from the pool — a prediction must never be
+    /// built on partial data, because the committed round won't be;
+    /// `false` tolerates absent rows (a blob the pull protocol gave up
+    /// on) by dropping them, as the committed path always has.
+    fn aggregate_digests(
+        &mut self,
+        digs: &[(NodeId, Digest)],
+        require_all: bool,
+    ) -> Result<Option<Vec<f32>>> {
         // Rows leave the pool as shared Weights handles — no per-row copy
         // on either the artifact or the native path; the only full-model
         // write is the aggregation output itself (a fresh tensor the next
@@ -214,6 +256,9 @@ impl DeflNode {
         let fetched: Vec<Option<Weights>> = match self.pool.get_many(&wanted) {
             Ok(ws) => ws.into_iter().map(Some).collect(),
             Err(e) => {
+                if require_all {
+                    return Ok(None);
+                }
                 log::warn!("n{}: last-round weights incomplete: {e:#}", self.id);
                 wanted.iter().map(|d| self.pool.get(d).ok()).collect()
             }
@@ -227,10 +272,10 @@ impl DeflNode {
             }
         }
         if present.is_empty() {
-            return Ok(self.theta.to_vec());
+            return Ok(Some(self.theta.to_vec()));
         }
         if present.len() == 1 {
-            return Ok(present.remove(0).1.to_vec());
+            return Ok(Some(present.remove(0).1.to_vec()));
         }
         let sw: Vec<f32> = present
             .iter()
@@ -244,7 +289,7 @@ impl DeflNode {
             AggPath::Artifact => self.stats.agg_artifact += 1,
             AggPath::Native => self.stats.agg_native += 1,
         }
-        Ok(agg)
+        Ok(Some(agg))
     }
 
     /// Algorithm 1: aggregate → local train → UPD → (GST_LT) → AGG.
@@ -265,6 +310,24 @@ impl DeflNode {
         }
         self.round_in_flight = Some(target);
 
+        // Resolve the speculative lookahead, if one was trained while the
+        // previous round waited out GST/consensus. It is published only
+        // if the decided W^LAST is exactly the predicted snapshot — then
+        // the aggregate and the training are, by purity of both, the
+        // bits the lockstep path would recompute. Anything else (a row
+        // landed late, a different quorum shape) is discarded unseen.
+        if let Some(spec) = self.spec.take() {
+            if spec.target == target && spec.predicted == self.replica.w_last {
+                self.stats.pipeline.spec_hits += 1;
+                self.stats.pipeline.train_overlap_us += spec.train_us;
+                self.theta = spec.theta;
+                self.stats.losses.push(spec.loss);
+                self.commit_update(ctx, target);
+                return;
+            }
+            self.stats.pipeline.spec_discards += 1;
+        }
+
         let agg = match self.aggregate_last() {
             Ok(a) => a,
             Err(e) => {
@@ -277,8 +340,10 @@ impl DeflNode {
         }
         let lr = self.cfg.lr_at(target - 1);
         let steps = self.cfg.local_steps;
-        match local_train(&self.engine, &self.data, &mut self.shard, agg, steps, lr) {
+        let t0 = std::time::Instant::now();
+        match local_train(&self.engine, &self.data, &self.shard, target, agg, steps, lr) {
             Ok((theta_new, loss)) => {
+                self.stats.pipeline.train_busy_us += t0.elapsed().as_micros() as u64;
                 self.theta = Weights::new(theta_new);
                 self.stats.losses.push(loss);
             }
@@ -287,7 +352,14 @@ impl DeflNode {
                 return;
             }
         }
+        self.commit_update(ctx, target);
+    }
 
+    /// Commit tail of a round: pool + multicast the (possibly poisoned)
+    /// weights, submit the UPD transaction, and arm the GST_LT timer.
+    /// Shared verbatim by the lockstep path and a speculation hit — the
+    /// only difference between the two is WHEN θ was computed.
+    fn commit_update(&mut self, ctx: &mut dyn Ctx, target: u64) {
         // Poisoning attacks transform the weights the node COMMITS; honest
         // nodes commit the very tensor they keep (zero-copy).
         let committed = if self.is_byzantine {
@@ -327,6 +399,95 @@ impl DeflNode {
             ctx.set_timer(self.cfg.gst_lt_ms * 1000, TIMER_GST | target);
         }
         self.apply_actions(ctx, out);
+    }
+
+    /// Pipelined lookahead (the perf tentpole): while round `deciding`
+    /// sits in its GST_LT / consensus window, aggregate the already
+    /// committed W^CUR rows and train round `deciding + 1` against them.
+    /// The result stays in `self.spec` — never pooled, multicast, or
+    /// submitted — until `deciding` actually decides, so the τ-round
+    /// storage invariant and the commit order are untouched. Bounded to
+    /// ONE round: a speculation for a further round would need W^CUR
+    /// rows that cannot exist yet.
+    ///
+    /// `force` is the GST-timer edge: mid-window we only speculate once
+    /// EVERY row is in (the prediction can no longer change), because an
+    /// early partial prediction would likely be discarded; once our own
+    /// AGG is submitted the quorum may close on the current shape any
+    /// moment, so the timer speculates on whatever is committed.
+    ///
+    /// Byzantine nodes never speculate: their commit-time poison draws
+    /// from `atk_rng` in round order, which a discarded-then-retrained
+    /// round would double-draw. History recording also disables it (the
+    /// lookahead has no place to put the round-start aggregate).
+    fn maybe_speculate(&mut self, ctx: &mut dyn Ctx, force: bool) {
+        if !self.cfg.pipeline
+            || self.done
+            || self.is_byzantine
+            || self.attack != Attack::None
+            || self.record_history
+        {
+            return;
+        }
+        let deciding = self.replica.r_round + 1;
+        if self.round_in_flight != Some(deciding) {
+            return; // nothing in its decide window to hide work behind
+        }
+        let target = deciding + 1;
+        if target > self.cfg.rounds as u64 {
+            return;
+        }
+        let predicted = self.replica.w_cur.clone();
+        let committed = self.replica.committed_cur();
+        if committed == 0 {
+            return;
+        }
+        let full = committed == self.cfg.n_nodes;
+        match &self.spec {
+            Some(s) if s.target == target && s.predicted == predicted => return,
+            Some(_) | None if !(force || full) => return,
+            _ => {}
+        }
+        let digs: Vec<(NodeId, Digest)> = predicted
+            .iter()
+            .enumerate()
+            .filter_map(|(i, d)| d.map(|d| (i as NodeId, d)))
+            .collect();
+        let agg = match self.aggregate_digests(&digs, true) {
+            Ok(Some(a)) => a,
+            Ok(None) => {
+                // A committed row's blob hasn't landed yet — chase it now
+                // (the decide path would need it anyway) and keep any
+                // prior speculation in place rather than discarding it
+                // for a prediction we cannot compute.
+                pull::refresh_wants(&mut self.puller, &self.replica, &self.pool, ctx);
+                return;
+            }
+            Err(e) => {
+                log::warn!("n{}: speculative aggregation failed: {e:#}", self.id);
+                return;
+            }
+        };
+        let lr = self.cfg.lr_at(target - 1);
+        let t0 = std::time::Instant::now();
+        match local_train(&self.engine, &self.data, &self.shard, target, agg, self.cfg.local_steps, lr)
+        {
+            Ok((theta_new, loss)) => {
+                let train_us = t0.elapsed().as_micros() as u64;
+                self.stats.pipeline.train_busy_us += train_us;
+                if self.spec.take().is_some() {
+                    self.stats.pipeline.spec_discards += 1;
+                }
+                self.spec = Some(SpecTrain {
+                    target,
+                    predicted,
+                    theta: Weights::new(theta_new),
+                    loss,
+                    train_us,
+                });
+            }
+            Err(e) => log::error!("n{}: speculative training failed: {e:#}", self.id),
+        }
     }
 
     fn finish(&mut self) {
@@ -442,8 +603,9 @@ impl Actor for DeflNode {
                 Ok(true) => {
                     self.stats.pool_peak_bytes = self.pool.peak_bytes();
                     // A recovered blob may be the one the round is held
-                    // on.
+                    // on — or the last row the lookahead was waiting for.
                     self.try_start_round(ctx);
+                    self.maybe_speculate(ctx, false);
                 }
                 Ok(false) => {}
                 Err(e) => log::debug!("n{}: weight frame rejected: {e:#}", self.id),
@@ -456,6 +618,9 @@ impl Actor for DeflNode {
                     }
                     self.apply_actions(ctx, out);
                     self.try_start_round(ctx);
+                    // A decided command may have committed a W^CUR row —
+                    // (re)speculate against the updated prediction.
+                    self.maybe_speculate(ctx, false);
                 }
             }
             Traffic::Blocks => {}
@@ -479,6 +644,14 @@ impl Actor for DeflNode {
             self.hs.submit_and_gossip(agg_tx.to_bytes(), &mut out);
             self.apply_actions(ctx, out);
             self.try_start_round(ctx);
+            if self.cfg.pipeline {
+                // The decide window is now open (our AGG is in): this is
+                // the idle stretch the pipeline hides work in. Train the
+                // lookahead round, then put the wire idle time to use
+                // prefetching any referenced blob still missing.
+                self.maybe_speculate(ctx, true);
+                pull::prefetch_idle(&mut self.puller, &self.replica, &self.pool, &self.chunks, ctx);
+            }
         } else if id & TIMER_FETCH != 0 {
             pull::on_fetch_timer(&mut self.puller, &self.pool, &self.chunks, ctx);
             self.try_start_round(ctx);

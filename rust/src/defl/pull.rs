@@ -464,6 +464,29 @@ pub fn refresh_wants(
     }
 }
 
+/// GST-idle prefetch for the pipelined round engine: the AGG timer just
+/// fired, so the node is about to sit idle waiting for the round to
+/// decide. Re-derive the want-set — catching W^CUR rows, i.e. the NEXT
+/// round's W^LAST, whose multicast lost chunks — and issue every due
+/// fetch immediately instead of leaving it to the next retry tick. The
+/// pull then overlaps the consensus wait, so the round boundary (and
+/// with it the speculative trainer's aggregate) finds the rows already
+/// resident instead of stalling behind a cold fetch. Wants inside their
+/// first `retry_us` grace window still wait it out (in-flight multicast
+/// chunks routinely beat the fetch; the grace avoids redundant traffic).
+pub fn prefetch_idle(
+    puller: &mut Puller,
+    replica: &ReplicaState,
+    pool: &WeightPool,
+    chunks: &ChunkAssembler,
+    ctx: &mut dyn Ctx,
+) {
+    refresh_wants(puller, replica, pool, ctx);
+    if puller.has_wants() {
+        puller.tick(ctx, pool, chunks);
+    }
+}
+
 /// A W^LAST blob is missing but an active fetch is still chasing it:
 /// the node holds its round (aggregation would silently drop the row)
 /// until the pull resolves or gives up, keeping recovery bit-identical
@@ -835,7 +858,7 @@ mod tests {
     #[test]
     fn serve_budgets_deny_floods_and_reset_per_round() {
         let w = tensor(2.0, 64); // 256-byte image
-        let mut pool = WeightPool::new(2);
+        let pool = WeightPool::new(2);
         pool.put(1, w.clone());
         let mut puller = Puller::new(FetchConfig {
             serve_budget_bytes: 300,

@@ -120,6 +120,15 @@ impl ReplicaState {
     pub fn agg_votes(&self) -> usize {
         self.votes.len()
     }
+
+    /// W^CUR rows already committed for round `r_round + 1` — the
+    /// speculation-readiness signal of the pipelined round engine. Once
+    /// every node's row is in (`committed_cur() == n`), no honest UPD
+    /// can still change the next W^LAST, so a speculative round trained
+    /// on this basis can only be invalidated by a raced round change.
+    pub fn committed_cur(&self) -> usize {
+        self.w_cur.iter().filter(|d| d.is_some()).count()
+    }
 }
 
 /// Result of executing one decided command batch (the Algorithm-2
@@ -287,6 +296,7 @@ mod tests {
             r.referenced_blobs(),
             vec![(0, 1, d(1)), (2, 1, d(2)), (1, 2, d(3))]
         );
+        assert_eq!(r.committed_cur(), 1, "one W^CUR row committed");
     }
 
     #[test]

@@ -580,7 +580,7 @@ mod tests {
             multicast_blob(&mut ctx, &blob, *chunk);
             let mut rng = crate::util::Pcg::new(*order_seed, 1);
             rng.shuffle(&mut ctx.frames);
-            let mut asm = ChunkAssembler::new(1 << 24);
+            let asm = ChunkAssembler::new(1 << 24);
             let mut done: Option<WeightBlob> = None;
             for frame in &ctx.frames {
                 match WeightMsg::from_bytes(frame).map_err(|e| e.to_string())? {

@@ -155,18 +155,23 @@ pub fn synth_for(meta: &ModelMeta, n: usize, seed: u64) -> Dataset {
     }
 }
 
-/// A silo's view of the dataset: indices + a wrap-around batch cursor.
+/// A silo's view of the dataset: indices + a stateless batch schedule.
+///
+/// Batch draws carry NO cursor state: [`Shard::batch_at`] is a pure
+/// function of the shard and an absolute step number, so any consumer
+/// that derives the step from (round, step-in-round) — see
+/// [`crate::fl::trainer::local_train`] — redraws bit-identical batches
+/// after a crash-restart or when a speculative round is recomputed.
 #[derive(Debug, Clone)]
 pub struct Shard {
     pub indices: Vec<usize>,
-    cursor: usize,
     /// Label-flipping attack (Biggio et al.): train on (y+1) mod C.
     pub flip_labels: bool,
 }
 
 impl Shard {
     pub fn new(indices: Vec<usize>) -> Shard {
-        Shard { indices, cursor: 0, flip_labels: false }
+        Shard { indices, flip_labels: false }
     }
 
     pub fn len(&self) -> usize {
@@ -177,15 +182,20 @@ impl Shard {
         self.indices.is_empty()
     }
 
-    /// Next batch of exactly `batch` examples (wraps around the shard).
-    pub fn next_batch(&mut self, data: &Dataset, batch: usize) -> (Batch, Vec<i32>) {
+    /// The batch of exactly `batch` examples for absolute training step
+    /// `global_step`, wrapping around the shard. Position is
+    /// `(global_step · batch) mod len` — exactly where a sequential
+    /// cursor would sit after `global_step` draws, but derived, not
+    /// stored, so re-reading any step is idempotent.
+    pub fn batch_at(&self, data: &Dataset, batch: usize, global_step: u64) -> (Batch, Vec<i32>) {
         assert!(!self.indices.is_empty(), "empty shard");
+        let len = self.indices.len();
+        let start = ((global_step as u128 * batch as u128) % len as u128) as usize;
         let mut xf = Vec::new();
         let mut xi = Vec::new();
         let mut y = Vec::with_capacity(batch);
-        for _ in 0..batch {
-            let idx = self.indices[self.cursor];
-            self.cursor = (self.cursor + 1) % self.indices.len();
+        for k in 0..batch {
+            let idx = self.indices[(start + k) % len];
             data.copy_example(idx, &mut xf, &mut xi);
             let label = data.y[idx];
             y.push(if self.flip_labels {
@@ -376,8 +386,8 @@ mod tests {
     #[test]
     fn batches_wrap_and_flip() {
         let d = synth_cifar(10, 13);
-        let mut s = Shard::new((0..10).collect());
-        let (x, y) = s.next_batch(&d, 32); // wraps 3x
+        let s = Shard::new((0..10).collect());
+        let (x, y) = s.batch_at(&d, 32, 0); // wraps 3x
         match x {
             Batch::F32(v) => assert_eq!(v.len(), 32 * 3072),
             _ => panic!("wrong dtype"),
@@ -387,9 +397,35 @@ mod tests {
 
         let mut flipped = Shard::new((0..10).collect());
         flipped.flip_labels = true;
-        let (_, yf) = flipped.next_batch(&d, 10);
+        let (_, yf) = flipped.batch_at(&d, 10, 0);
         for (a, b) in y[..10].iter().zip(yf.iter()) {
             assert_eq!((a + 1) % 10, *b);
+        }
+    }
+
+    #[test]
+    fn batch_draws_are_pure_in_the_step() {
+        let d = synth_cifar(30, 17);
+        let s = Shard::new((3..27).collect()); // len 24, batch 10: wraps
+        // Re-reading any step yields the identical batch (idempotent) …
+        for step in [0u64, 1, 5, 100] {
+            let (ax, ay) = s.batch_at(&d, 10, step);
+            let (bx, by) = s.batch_at(&d, 10, step);
+            match (ax, bx) {
+                (Batch::F32(a), Batch::F32(b)) => assert_eq!(a, b),
+                _ => panic!("wrong dtype"),
+            }
+            assert_eq!(ay, by);
+        }
+        // … and a "restart" at step k sees exactly the continuation a
+        // straight-through run saw: step positions equal the old
+        // sequential cursor, (step·batch) mod len.
+        for step in 0..7u64 {
+            let (_, y) = s.batch_at(&d, 10, step);
+            let start = (step as usize * 10) % 24;
+            let expect: Vec<i32> =
+                (0..10).map(|k| d.y[s.indices[(start + k) % 24]]).collect();
+            assert_eq!(y, expect, "step {step} diverged from cursor order");
         }
     }
 }

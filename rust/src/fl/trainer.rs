@@ -7,20 +7,29 @@ use anyhow::Result;
 use super::data::{Dataset, Shard};
 use crate::runtime::Engine;
 
-/// Run `steps` local SGD steps on a shard. Returns new params + mean loss.
+/// Run `steps` local SGD steps on a shard for 1-based training round
+/// `round`. Returns new params + mean loss.
+///
+/// Step i of round r draws the batch at absolute step (r−1)·steps + i,
+/// so the whole run is a pure function of (shard, round, step): a
+/// crash-restarted silo resuming at round r — or a speculative round
+/// recomputed after a discard — redraws bit-identical batches instead
+/// of continuing from wherever a stateful cursor happened to be.
 pub fn local_train(
     engine: &Arc<Engine>,
     data: &Dataset,
-    shard: &mut Shard,
+    shard: &Shard,
+    round: u64,
     theta: Vec<f32>,
     steps: usize,
     lr: f32,
 ) -> Result<(Vec<f32>, f32)> {
     let batch = engine.batch_size();
+    let base = round.saturating_sub(1) * steps as u64;
     let mut theta = theta;
     let mut loss_sum = 0.0f64;
-    for _ in 0..steps {
-        let (x, y) = shard.next_batch(data, batch);
+    for i in 0..steps {
+        let (x, y) = shard.batch_at(data, batch, base + i as u64);
         let out = engine.train_step(&theta, &x, &y, lr)?;
         theta = out.theta;
         loss_sum += out.loss as f64;
@@ -31,13 +40,13 @@ pub fn local_train(
 /// Evaluate params over (up to) the whole test set; returns (accuracy, loss).
 pub fn evaluate(engine: &Arc<Engine>, test: &Dataset, theta: &[f32]) -> Result<(f64, f64)> {
     let batch = engine.batch_size();
-    let mut shard = Shard::new((0..test.len()).collect());
+    let shard = Shard::new((0..test.len()).collect());
     let batches = (test.len() / batch).max(1);
     let mut correct = 0.0f64;
     let mut loss_sum = 0.0f64;
     let mut seen = 0usize;
-    for _ in 0..batches {
-        let (x, y) = shard.next_batch(test, batch);
+    for b in 0..batches {
+        let (x, y) = shard.batch_at(test, batch, b as u64);
         let (loss, ncorrect) = engine.eval_batch(theta, &x, &y)?;
         correct += ncorrect as f64;
         loss_sum += loss as f64;
@@ -67,11 +76,11 @@ mod tests {
         let Some(e) = engine() else { return };
         let (train, test) = synth_cifar(768, 21).split(512);
         let mut rng = Pcg::seeded(1);
-        let mut shards = partition_iid(&train, 1, &mut rng);
+        let shards = partition_iid(&train, 1, &mut rng);
         let theta0 = e.init_params(7).unwrap();
 
         let (acc0, _) = evaluate(&e, &test, &theta0).unwrap();
-        let (theta, loss) = local_train(&e, &train, &mut shards[0], theta0, 120, 0.05).unwrap();
+        let (theta, loss) = local_train(&e, &train, &shards[0], 1, theta0, 120, 0.05).unwrap();
         let (acc1, _) = evaluate(&e, &test, &theta).unwrap();
         assert!(loss.is_finite());
         assert!(

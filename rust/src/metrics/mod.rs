@@ -268,6 +268,39 @@ impl Decode for StatsSnapshot {
     }
 }
 
+/// Overlap-occupancy counters for the pipelined round engine: how often
+/// the speculative next-round training was usable (its predicted W^LAST
+/// basis matched the decided one) vs discarded, and how much training
+/// time ran at all vs ran hidden behind the consensus/GST wait. Hits
+/// publish a precomputed UPD the moment the round decides; discards cost
+/// only wasted trainer time — speculative weights are never committed.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PipelineStats {
+    /// Speculative updates published as-is when their round decided.
+    pub spec_hits: u64,
+    /// Speculative updates discarded: the aggregate basis changed under
+    /// the trainer (late UPD, quorum without us, raced round).
+    pub spec_discards: u64,
+    /// Total training time spent, speculative or not (µs; simulated time
+    /// in lite mode, wall time in full mode).
+    pub train_busy_us: u64,
+    /// Portion of training time that overlapped the consensus wait
+    /// instead of extending the round (µs).
+    pub train_overlap_us: u64,
+}
+
+impl PipelineStats {
+    /// Fraction of resolved speculations that hit (0 when none resolved).
+    pub fn hit_rate(&self) -> f64 {
+        let resolved = self.spec_hits + self.spec_discards;
+        if resolved == 0 {
+            0.0
+        } else {
+            self.spec_hits as f64 / resolved as f64
+        }
+    }
+}
+
 /// Storage gauges per node: persistent chain bytes vs transient pool bytes.
 #[derive(Debug, Clone, Default)]
 pub struct StorageMeter {
@@ -513,6 +546,18 @@ mod tests {
             StatsSnapshot::from_bytes(&empty.to_bytes()).unwrap(),
             empty
         );
+    }
+
+    #[test]
+    fn pipeline_stats_hit_rate() {
+        let mut p = PipelineStats::default();
+        assert_eq!(p.hit_rate(), 0.0, "no resolutions yet");
+        p.spec_hits = 3;
+        p.spec_discards = 1;
+        assert!((p.hit_rate() - 0.75).abs() < 1e-12);
+        p.train_busy_us = 400;
+        p.train_overlap_us = 300;
+        assert!(p.train_overlap_us <= p.train_busy_us);
     }
 
     #[test]

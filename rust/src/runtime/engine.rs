@@ -66,6 +66,12 @@ pub struct Engine {
     exes: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
     /// Executions performed, by artifact stem (profiling hook).
     exec_counts: Mutex<HashMap<String, u64>>,
+    /// Wall µs spent executing, by artifact stem. Together with
+    /// `exec_counts` this is the per-phase busy-time ledger the pipelined
+    /// round engine reads to report how much compute it managed to hide
+    /// inside the GST/consensus wait (compile time is excluded — it is a
+    /// once-per-stem cost, not round work).
+    exec_us: Mutex<HashMap<String, u64>>,
 }
 
 impl Engine {
@@ -80,6 +86,7 @@ impl Engine {
             model,
             exes: Mutex::new(HashMap::new()),
             exec_counts: Mutex::new(HashMap::new()),
+            exec_us: Mutex::new(HashMap::new()),
         })
     }
 
@@ -125,24 +132,33 @@ impl Engine {
         }
         let exes = self.exes.lock().unwrap();
         let exe = exes.get(stem).unwrap();
+        let t0 = std::time::Instant::now();
         let result = exe
             .execute::<xla::Literal>(inputs)
             .map_err(|e| anyhow!("execute {stem}: {e:?}"))?;
         let lit = result[0][0]
             .to_literal_sync()
             .map_err(|e| anyhow!("fetch {stem}: {e:?}"))?;
+        let elapsed_us = t0.elapsed().as_micros() as u64;
         *self
             .exec_counts
             .lock()
             .unwrap()
             .entry(stem.to_string())
             .or_default() += 1;
+        *self.exec_us.lock().unwrap().entry(stem.to_string()).or_default() += elapsed_us;
         // aot.py lowers with return_tuple=True: always a tuple literal.
         lit.to_tuple().map_err(|e| anyhow!("untuple {stem}: {e:?}"))
     }
 
     pub fn exec_counts(&self) -> HashMap<String, u64> {
         self.exec_counts.lock().unwrap().clone()
+    }
+
+    /// Accumulated artifact execution wall time by stem (µs). Execution
+    /// and device→host fetch only; compile-on-first-use is excluded.
+    pub fn exec_us(&self) -> HashMap<String, u64> {
+        self.exec_us.lock().unwrap().clone()
     }
 
     fn lit_f32(v: &[f32], dims: &[i64]) -> Result<xla::Literal> {
@@ -430,6 +446,14 @@ mod tests {
         // lr = 0 must be the identity (fused Pallas SGD kernel property).
         let frozen = e.train_step(&theta, &x, &y, 0.0).unwrap();
         assert_eq!(frozen.theta, theta);
+        // The busy-time ledger saw both executions under the train stem.
+        let counts = e.exec_counts();
+        let (stem, n) = counts.iter().find(|(s, _)| s.contains("train")).unwrap();
+        assert!(*n >= 2, "train stem {stem} executed {n} times");
+        assert!(
+            e.exec_us().values().sum::<u64>() > 0,
+            "execution wall time was accounted"
+        );
     }
 
     #[test]

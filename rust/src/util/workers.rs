@@ -127,6 +127,59 @@ impl WorkerPool {
     }
 }
 
+/// A join handle for one detached job submitted with
+/// [`WorkerPool::spawn_task`]: `join` blocks until the job's result is
+/// available and re-panics on the caller if the job panicked.
+pub struct TaskHandle<T> {
+    rx: std::sync::mpsc::Receiver<std::thread::Result<T>>,
+}
+
+impl<T> TaskHandle<T> {
+    /// Wait for the task and take its result. Panics if the job panicked
+    /// (mirroring [`WorkerPool::scope`]'s propagation contract).
+    pub fn join(self) -> T {
+        match self.rx.recv() {
+            Ok(Ok(v)) => v,
+            Ok(Err(_)) => panic!("worker pool task panicked"),
+            Err(_) => panic!("worker pool task lost (queue closed)"),
+        }
+    }
+
+    /// Non-blocking probe: `Some(result)` once the task finished, `None`
+    /// while it is still running. Panics if the job panicked.
+    pub fn try_join(&mut self) -> Option<T> {
+        match self.rx.try_recv() {
+            Ok(Ok(v)) => Some(v),
+            Ok(Err(_)) => panic!("worker pool task panicked"),
+            Err(std::sync::mpsc::TryRecvError::Empty) => None,
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                panic!("worker pool task lost (queue closed)")
+            }
+        }
+    }
+}
+
+impl WorkerPool {
+    /// Submit one `'static` job and return a handle to its result —
+    /// the fire-and-join shape (a speculative training round, a blob
+    /// decode) as opposed to `scope`'s borrow-and-barrier fan-out. The
+    /// job starts as soon as a worker frees up; the caller keeps running
+    /// and `join`s (or `try_join`s) when it needs the value.
+    pub fn spawn_task<T, F>(&self, f: F) -> TaskHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let (tx, rx) = channel();
+        let job: Job = Box::new(move || {
+            // The receiver may be gone (handle dropped): discard then.
+            let _ = tx.send(catch_unwind(AssertUnwindSafe(f)));
+        });
+        self.tx.lock().unwrap().send(job).expect("worker pool queue closed");
+        TaskHandle { rx }
+    }
+}
+
 /// Split `out` into at most `pieces` contiguous chunks and run
 /// `f(chunk_offset, chunk)` for each on the pool. With one piece (or an
 /// empty slice) `f` runs inline — identical observable behaviour, no
@@ -257,6 +310,49 @@ mod tests {
             }
         });
         assert_eq!(one, vec![100, 101, 102, 103, 104]);
+    }
+
+    #[test]
+    fn spawn_task_returns_results_out_of_order() {
+        let pool = WorkerPool::new(2);
+        let handles: Vec<TaskHandle<usize>> =
+            (0..8).map(|i| pool.spawn_task(move || i * i)).collect();
+        // Join in reverse submission order: results are per-handle, not
+        // a shared queue, so order cannot mix them up.
+        for (i, h) in handles.into_iter().enumerate().rev() {
+            assert_eq!(h.join(), i * i);
+        }
+    }
+
+    #[test]
+    fn spawn_task_try_join_eventually_lands() {
+        let pool = WorkerPool::new(1);
+        let mut h = pool.spawn_task(|| 41 + 1);
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        loop {
+            if let Some(v) = h.try_join() {
+                assert_eq!(v, 42);
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "task never finished");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "worker pool task panicked")]
+    fn spawn_task_panic_propagates_on_join() {
+        let pool = WorkerPool::new(1);
+        let h: TaskHandle<()> = pool.spawn_task(|| panic!("inner"));
+        h.join();
+    }
+
+    #[test]
+    fn spawn_task_dropped_handle_does_not_wedge_the_pool() {
+        let pool = WorkerPool::new(1);
+        drop(pool.spawn_task(|| vec![0u8; 64]));
+        // The worker must survive the dead receiver and serve new jobs.
+        assert_eq!(pool.spawn_task(|| 7).join(), 7);
     }
 
     #[test]

@@ -27,6 +27,11 @@ fn cfg(n: usize, rounds: u64) -> LiteConfig {
         timeout_base_us: 100_000,
         fetch_retry_us: 50_000,
         agg_quorum: None,
+        // Every fault schedule below also exercises the pipelined round
+        // engine (the default): speculation must survive drops, jitter,
+        // partitions, and Byzantine serves without digest divergence.
+        pipeline: true,
+        train_us: 0,
     }
 }
 
@@ -318,6 +323,60 @@ fn healed_minority_refills_its_weight_pool_after_partition_and_gst() {
             healed.pool().contains(d),
             "healed pool missing blob of node {node} round {round}"
         );
+    }
+}
+
+// ---------------- pipelined speculation under faults ----------------
+
+/// Force a speculation discard and prove it is invisible in the bits.
+///
+/// Schedule: node 3 is partitioned away BEFORE the cluster starts. With
+/// `agg_quorum = all`, round 1 cannot decide without node 3's AGG, but
+/// HotStuff still holds a 3/4 quorum, so nodes 0–2 commit their UPDs and
+/// sit in the decide window — where the GST edge force-speculates round 2
+/// against the 3-row W^CUR prediction. After healing, node 3's UPD
+/// commits, the prediction grows to 4 rows, and the stale 3-row
+/// speculation MUST be discarded (re-speculated on the fuller prediction,
+/// or resolved as a miss at decide — the decided W^LAST has 4 rows).
+/// Either way the final digests must equal a lockstep run of the exact
+/// same fault schedule, bit for bit.
+#[test]
+fn forced_speculation_discard_keeps_digests_bit_identical_to_lockstep() {
+    let n = 4;
+    let run = |pipeline: bool| {
+        let mut c = cfg(n, 3);
+        c.agg_quorum = Some(n);
+        c.pipeline = pipeline;
+        let sim =
+            SimConfig { n_nodes: n, latency_us: 200, jitter_us: 50, drop_prob: 0.0, seed: 131 };
+        let mut net = SimNet::new(sim, lite_cluster(&c));
+        for peer in 0..3 {
+            net.partition(3, peer);
+        }
+        net.run_until(2_000_000, u64::MAX);
+        for peer in 0..3 {
+            net.heal(3, peer);
+        }
+        drive(&mut net, n, 240_000_000);
+        let rs = results(&mut net, n);
+        let stats: Vec<_> = (0..n as NodeId)
+            .map(|i| net.actor_as::<LiteNode>(i).unwrap().pipeline)
+            .collect();
+        (rs, stats)
+    };
+    let (lock, lock_stats) = run(false);
+    let (pipe, pipe_stats) = run(true);
+    assert!(
+        lock_stats.iter().all(|s| s.spec_hits == 0 && s.spec_discards == 0),
+        "lockstep must never speculate"
+    );
+    let discards: u64 = pipe_stats.iter().map(|s| s.spec_discards).sum();
+    let hits: u64 = pipe_stats.iter().map(|s| s.spec_hits).sum();
+    assert!(discards >= 1, "the schedule must force at least one discarded speculation");
+    assert!(hits >= 1, "post-heal rounds should speculate successfully");
+    for (i, ((lr, ld), (pr, pd))) in lock.iter().zip(pipe.iter()).enumerate() {
+        assert_eq!(lr, pr, "node {i} round count diverged");
+        assert_eq!(ld, pd, "node {i}: discarded speculation leaked into the model bits");
     }
 }
 

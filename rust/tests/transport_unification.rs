@@ -179,6 +179,8 @@ fn sim_and_tcp_agree_on_batched_chunked_path() {
         timeout_base_us: 100_000,
         fetch_retry_us: 50_000,
         agg_quorum: None,
+        pipeline: true,
+        train_us: 0,
     };
 
     // Simulator run.
@@ -289,6 +291,8 @@ fn sim_and_tcp_recover_identically_from_a_dropped_chunk() {
         timeout_base_us: 100_000,
         fetch_retry_us: 60_000,
         agg_quorum: None,
+        pipeline: true,
+        train_us: 0,
     };
 
     let build = |id: NodeId, c: &LiteConfig| {
