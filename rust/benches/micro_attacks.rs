@@ -1,0 +1,240 @@
+//! L2 micro-bench: the adaptive-attack gallery driven through the lite
+//! harness with the Multi-Krum defense on — per-attack robustness at the
+//! paper's Byzantine rate (f = 2 of n = 8, 25% < n/3).
+//!
+//! Every run executes on the simulator with per-frame authentication
+//! enabled (the signed wire is part of the measured system), the round
+//! pipeline on, and unanimous AGG quorum so each attack's latency cost
+//! is visible in the virtual clock. For each gallery attack the report
+//! records, against the no-attack control:
+//!
+//! * `accuracy` / `accuracy_delta` — a synthetic-model quality proxy,
+//!   `1 / (1 + mean θ²)`: honest lite training contracts θ toward 0, so
+//!   poison that survives aggregation inflates mean θ² and drops the
+//!   proxy. CI gates |delta| ≤ 0.02 per attack.
+//! * `commit_latency_us` / `commit_latency_delta_us` — virtual time per
+//!   committed round; equivocation and chunk-griefing pay here, not in
+//!   accuracy.
+//! * `auth_rejects` — per-run signature rejections. Gallery attacks are
+//!   INSIDER attacks (correctly signed malicious content), so this stays
+//!   0 for them; the separate `forged_frames` row injects outsider
+//!   forgeries and must reject all of them with zero digest impact.
+//! * `pull_recoveries` — blobs recovered through the digest-addressed
+//!   pull path (the chunk-grief attack's entire footprint).
+//!
+//! Emits `BENCH_attacks.json` (uploaded by CI, gated like the other
+//! perf-trajectory reports).
+mod common;
+
+use std::sync::Arc;
+
+use defl::attacks;
+use defl::config::Attack;
+use defl::crypto::{Digest, KeyRegistry, NodeId, SignedFrame};
+use defl::defl::lite::{lite_cluster, lite_registry, LiteConfig, LiteNode};
+use defl::metrics::Traffic;
+use defl::net::sim::{SimConfig, SimNet};
+use defl::net::transport::class_wire_byte;
+use defl::util::bench::BenchReport;
+
+const N: usize = 8;
+const F: usize = 2;
+const ROUNDS: u64 = 6;
+const DIM: usize = 256;
+
+fn cfg(attack: Attack, n_byzantine: usize) -> LiteConfig {
+    LiteConfig {
+        n_nodes: N,
+        rounds: ROUNDS,
+        dim: DIM,
+        seed: 23,
+        gst_us: 50_000,
+        // 1 KiB blobs over 256-byte chunks: the chunked multicast path is
+        // live, so chunk-griefing has a surface to attack.
+        chunk_bytes: 256,
+        batch_consensus: true,
+        timeout_base_us: 100_000,
+        fetch_retry_us: 30_000,
+        // Unanimous AGG quorum: every round aggregates all n rows, the
+        // worst case for the defense (every Byzantine row is a candidate).
+        agg_quorum: Some(N),
+        pipeline: true,
+        train_us: 0,
+        n_byzantine,
+        attack,
+        krum_f: Some(F),
+    }
+}
+
+struct RunOut {
+    per_round_us: f64,
+    accuracy: f64,
+    auth_rejects: u64,
+    pulls: u64,
+    digests: Vec<Digest>,
+}
+
+/// Synthetic-model quality in (0, 1]: 1.0 = perfectly contracted.
+fn accuracy_proxy(model: &[f32]) -> f64 {
+    let mse =
+        model.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>() / model.len().max(1) as f64;
+    1.0 / (1.0 + mse)
+}
+
+/// One gallery run to completion; `forge` additionally fires a burst of
+/// outsider forgeries (wrong-key envelope + bare frame, claiming an
+/// honest sender) at every node early in the run.
+fn run(c: &LiteConfig, forge: bool) -> RunOut {
+    let sim = SimConfig { n_nodes: N, latency_us: 200, jitter_us: 50, drop_prob: 0.0, seed: 9 };
+    let mut net = SimNet::new(sim, lite_cluster(c));
+    net.enable_auth(Arc::new(lite_registry(c)));
+    let mut forged = false;
+    let mut t = net.now_us();
+    loop {
+        t += 1_000;
+        net.run_until(t, u64::MAX);
+        if forge && !forged && t >= 10_000 {
+            forged = true;
+            let wrong_keys = KeyRegistry::new(N, c.seed ^ 0xbad);
+            for to in 0..N as NodeId {
+                if to == 1 {
+                    continue;
+                }
+                let payload = b"forged-weights".to_vec();
+                let binding =
+                    SignedFrame::binding(1, class_wire_byte(Traffic::Weights), &payload);
+                let sig = wrong_keys.signer(1).sign(&binding);
+                net.inject_raw(1, to, Traffic::Weights, payload.clone(), Some(sig));
+                net.inject_raw(1, to, Traffic::Weights, payload, None);
+            }
+        }
+        let done = (0..N as NodeId)
+            .all(|i| net.actor_as::<LiteNode>(i).map(|a| a.done).unwrap_or(false));
+        if done {
+            break;
+        }
+        assert!(t < 300_000_000, "attack run did not finish ({})", c.attack.name());
+    }
+    let finished_us = net.now_us();
+    // Score an honest node's final aggregate (Byzantine ids are 0..f).
+    let model = net.actor_as::<LiteNode>((N - 1) as NodeId).unwrap().final_model();
+    let digests: Vec<Digest> = (0..N as NodeId)
+        .map(|i| net.actor_as::<LiteNode>(i).unwrap().final_digest.expect("final digest"))
+        .collect();
+    let pulls: u64 = (0..N as NodeId)
+        .map(|i| net.actor_as::<LiteNode>(i).unwrap().puller().stats.blobs_recovered)
+        .sum();
+    RunOut {
+        per_round_us: finished_us as f64 / ROUNDS as f64,
+        accuracy: accuracy_proxy(&model),
+        auth_rejects: net.meter.auth_fail_total(),
+        pulls,
+        digests,
+    }
+}
+
+fn main() {
+    common::bench_scale();
+    let mut report = BenchReport::new("micro_attacks");
+    println!(
+        "== micro: adaptive-attack gallery (lite + multi-krum, n={N}, f={F}, \
+         signed wire, pipelined) =="
+    );
+
+    let control = run(&cfg(Attack::None, 0), false);
+    println!(
+        "{:<14} acc {:.4}            commit {:>7.1} ms/round            rejects {}",
+        "control", control.accuracy, control.per_round_us / 1e3, control.auth_rejects,
+    );
+    report.record_metrics(
+        "attack/none",
+        &[("n", N as f64), ("f", 0.0)],
+        &[
+            ("accuracy", control.accuracy),
+            ("commit_latency_us", control.per_round_us),
+            ("auth_rejects", control.auth_rejects as f64),
+            ("pull_recoveries", control.pulls as f64),
+        ],
+    );
+
+    let mut ok = true;
+    for (name, attack) in attacks::gallery() {
+        let out = run(&cfg(attack, F), false);
+        let acc_delta = out.accuracy - control.accuracy;
+        let lat_delta = out.per_round_us - control.per_round_us;
+        // Lemma 1 under attack: every honest node on the same digest.
+        let honest_agree = out.digests[F..].windows(2).all(|w| w[0] == w[1]);
+        if !honest_agree {
+            eprintln!("FAIL: honest nodes diverged under {name}");
+            ok = false;
+        }
+        println!(
+            "{name:<14} acc {:.4} ({:+.4})  commit {:>7.1} ms/round ({:+.1} ms)  \
+             rejects {}  pulls {}",
+            out.accuracy,
+            acc_delta,
+            out.per_round_us / 1e3,
+            lat_delta / 1e3,
+            out.auth_rejects,
+            out.pulls,
+        );
+        report.record_metrics(
+            &format!("attack/{name}"),
+            &[("n", N as f64), ("f", F as f64)],
+            &[
+                ("accuracy", out.accuracy),
+                ("accuracy_delta", acc_delta),
+                ("commit_latency_us", out.per_round_us),
+                ("commit_latency_delta_us", lat_delta),
+                ("auth_rejects", out.auth_rejects as f64),
+                ("pull_recoveries", out.pulls as f64),
+                ("honest_agree", if honest_agree { 1.0 } else { 0.0 }),
+            ],
+        );
+    }
+
+    // Outsider forgery: same clean cluster, plus a burst of forged frames.
+    // Every forgery must be rejected (per-peer metered) and the run must
+    // end bit-identical to the control — the authenticated wire's whole
+    // claim in one row.
+    let forged = run(&cfg(Attack::None, 0), true);
+    let expected_rejects = 2 * (N - 1) as u64;
+    let digest_match = forged.digests == control.digests;
+    if forged.auth_rejects != expected_rejects || !digest_match {
+        eprintln!(
+            "FAIL: forged-frame run rejects {}/{expected_rejects}, digest_match {digest_match}",
+            forged.auth_rejects,
+        );
+        ok = false;
+    }
+    println!(
+        "{:<14} acc {:.4} ({:+.4})  commit {:>7.1} ms/round ({:+.1} ms)  \
+         rejects {}/{expected_rejects}  digest_match {digest_match}",
+        "forged_frames",
+        forged.accuracy,
+        forged.accuracy - control.accuracy,
+        forged.per_round_us / 1e3,
+        (forged.per_round_us - control.per_round_us) / 1e3,
+        forged.auth_rejects,
+    );
+    report.record_metrics(
+        "attack/forged_frames",
+        &[("n", N as f64), ("f", 0.0)],
+        &[
+            ("accuracy", forged.accuracy),
+            ("accuracy_delta", forged.accuracy - control.accuracy),
+            ("commit_latency_us", forged.per_round_us),
+            ("commit_latency_delta_us", forged.per_round_us - control.per_round_us),
+            ("auth_rejects", forged.auth_rejects as f64),
+            ("digest_match_control", if digest_match { 1.0 } else { 0.0 }),
+        ],
+    );
+
+    let path = common::bench_report_path("BENCH_attacks.json");
+    report.write(&path).expect("write BENCH_attacks.json");
+    println!("wrote {} ({} entries)", path.display(), report.len());
+    if !ok {
+        eprintln!("FAIL: attack gallery invariants violated (see above)");
+        std::process::exit(1);
+    }
+}

@@ -9,7 +9,7 @@ mod common;
 
 use defl::config::Model;
 use defl::crypto::{Digest, NodeId};
-use defl::defl::lite::{lite_cluster, LiteConfig, LiteNode};
+use defl::defl::lite::{lite_cluster, lite_registry, LiteConfig, LiteNode};
 use defl::metrics::PipelineStats;
 use defl::net::sim::{SimConfig, SimNet};
 use defl::runtime::Batch;
@@ -121,11 +121,103 @@ fn lite_pipeline_rounds(report: &mut BenchReport) -> bool {
     digest_match
 }
 
+/// Signed vs unsigned clean-path cost, in WALL time: the same lite
+/// cluster run with per-frame authentication on and off. The virtual
+/// trajectory is identical by construction (the envelope adds no
+/// modelled latency), so the wall clock isolates the real CPU cost of
+/// seal + verify on every frame — the authenticated wire's "clean-path
+/// latency flat" claim. CI gates signed/unsigned rounds/sec ≥ 0.9 from
+/// the JSON. Returns false if the two modes finish on different digests
+/// (auth must be behaviour-invariant on a clean network).
+fn lite_auth_overhead(report: &mut BenchReport) -> bool {
+    use std::sync::Arc;
+    let n = 8usize;
+    let rounds = 8u64;
+    let c = LiteConfig {
+        n_nodes: n,
+        rounds,
+        dim: 4096,
+        seed: 11,
+        gst_us: 20_000,
+        // 16 KiB blobs over 4 KiB chunks: several weight frames per blob
+        // on top of the consensus traffic, so verification is exercised
+        // on every frame class at realistic volume.
+        chunk_bytes: 1 << 12,
+        batch_consensus: true,
+        timeout_base_us: 100_000,
+        fetch_retry_us: 50_000,
+        agg_quorum: Some(n),
+        pipeline: true,
+        train_us: 0,
+        ..Default::default()
+    };
+    let run = |signed: bool| {
+        let sim = SimConfig { n_nodes: n, latency_us: 200, jitter_us: 50, drop_prob: 0.0, seed: 5 };
+        let mut net = SimNet::new(sim, lite_cluster(&c));
+        if signed {
+            net.enable_auth(Arc::new(lite_registry(&c)));
+        }
+        let t0 = std::time::Instant::now();
+        let mut t = net.now_us();
+        loop {
+            t += 10_000;
+            net.run_until(t, u64::MAX);
+            let done = (0..n as NodeId)
+                .all(|i| net.actor_as::<LiteNode>(i).map(|a| a.done).unwrap_or(false));
+            if done {
+                break;
+            }
+            assert!(t < 120_000_000, "lite auth bench did not finish (signed={signed})");
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let digest = net.actor_as::<LiteNode>(0).unwrap().final_digest.expect("final digest");
+        (wall, digest)
+    };
+
+    println!("\n== micro: signed vs unsigned wire (lite, wall time, n={n}) ==");
+    // Interleaved best-of-3 so cache/thermal drift hits both modes alike.
+    let mut best = [f64::INFINITY; 2];
+    let mut digests = [None; 2];
+    for _ in 0..3 {
+        for (slot, signed) in [(0usize, false), (1, true)] {
+            let (wall, d) = run(signed);
+            best[slot] = best[slot].min(wall);
+            digests[slot] = Some(d);
+        }
+    }
+    let rps = |wall: f64| rounds as f64 / wall;
+    let ratio = rps(best[1]) / rps(best[0]);
+    let digest_match = digests[0] == digests[1] && digests[0].is_some();
+    println!("unsigned {:>8.2} rounds/s (wall, best of 3)", rps(best[0]));
+    println!(
+        "signed   {:>8.2} rounds/s (wall, best of 3)  signed/unsigned {ratio:.3}  \
+         digest_match {digest_match}",
+        rps(best[1]),
+    );
+    report.record_metrics(
+        "lite/wire unsigned",
+        &[("n", n as f64), ("rounds", rounds as f64)],
+        &[("rounds_per_sec_wall", rps(best[0]))],
+    );
+    report.record_metrics(
+        "lite/wire signed",
+        &[("n", n as f64), ("rounds", rounds as f64)],
+        &[
+            ("rounds_per_sec_wall", rps(best[1])),
+            ("signed_over_unsigned", ratio),
+            ("digest_match", if digest_match { 1.0 } else { 0.0 }),
+        ],
+    );
+    digest_match
+}
+
 fn main() {
     common::bench_scale();
     let mut report = BenchReport::new("micro_runtime");
 
-    let digests_ok = lite_pipeline_rounds(&mut report);
+    let pipeline_ok = lite_pipeline_rounds(&mut report);
+    let auth_ok = lite_auth_overhead(&mut report);
+    let digests_ok = pipeline_ok && auth_ok;
 
     // Artifact-free baseline: the native weighted-mean aggregation pass
     // (the fallback every node runs when no fedavg artifact is exported).
@@ -188,7 +280,7 @@ fn main() {
     report.write(&path).expect("write BENCH_runtime.json");
     println!("wrote {} ({} entries)", path.display(), report.len());
     if !digests_ok {
-        eprintln!("FAIL: pipelined and lockstep engines diverged on final digests");
+        eprintln!("FAIL: lite runs diverged on final digests (pipeline or signed wire)");
         std::process::exit(1);
     }
 }

@@ -1,6 +1,8 @@
-//! Threat models (paper §3.1): the three weight-poisoning attacks, plus
-//! the protocol-level misbehaviours (stale-round UPD, pre-GST_LT AGG)
-//! exercised by the replica tests.
+//! Threat models: the paper's §3.1 attacks (Table 1) plus an adaptive
+//! gallery of aggregation- and protocol-aware attacks, all driven through
+//! the same [`crate::config::Attack`] knob.
+//!
+//! # Paper attacks (§3.1 / Tables 2–4)
 //!
 //! Poisoning applies to the weights a Byzantine client COMMITS, after its
 //! (honest-looking) local training — matching Fang et al. / Li et al.'s
@@ -10,12 +12,66 @@
 //! * Label-flipping: trains on labels (y+1) mod C (a data attack — see
 //!   [`crate::fl::data::Shard::flip_labels`]); weights pass through here
 //!   unchanged.
+//! * Stale-round UPD / early AGG: protocol misbehaviours exercising the
+//!   replica's round checks and quorum timing rather than accuracy.
+//!
+//! # Adaptive gallery
+//!
+//! The robustness bench (`benches/micro_attacks.rs`, `BENCH_attacks.json`)
+//! additionally runs aggregation-aware and storage/consensus-aware
+//! attackers:
+//!
+//! * **Krum-evade** (colluding): the f attackers all commit the honest
+//!   mean plus an ε-scaled shared direction. Identical colluders have
+//!   zero pairwise distance, so their Krum scores sit at the bottom of
+//!   the benign envelope and Multi-Krum SELECTS them — the multiplicity
+//!   attack Blanchard et al. warn about for f ≥ 2.
+//! * **Min-max / min-sum** (colluding, arXiv:2409.17754): the attackers
+//!   commit μ + γ·(−μ/‖μ‖) with the largest γ keeping their update
+//!   inside the benign distance envelope — max pairwise distance
+//!   (min-max) or max distance-sum (min-sum) — found by bisection in
+//!   [`craft_min_max`] / [`craft_min_sum`].
+//! * **Equivocation**: the attacker's consensus replica runs
+//!   [`crate::hotstuff::ByzMode::Equivocate`] — as leader it proposes
+//!   conflicting blocks to the two halves of the cluster, which also
+//!   yields conflicting sync chains to catching-up peers; exercises the
+//!   QC checks of the chain-verified catch-up.
+//! * **Chunk-grief**: the attacker corrupts one chunk of every weight
+//!   blob it multicasts, so receivers fail the SHA-256 reassembly check
+//!   and fall back to the digest-addressed pull protocol (which fetches
+//!   the blob from the committing node — the attacker — first, then
+//!   rotates to honest holders).
+//!
+//! The colluding crafts need the honest updates; the bench grants that
+//! omnisciently (lite local updates are a pure function of (seed, node,
+//! round), so Byzantine nodes can recompute them — the strongest, fully
+//! informed adversary). [`poison_weights`] keeps degenerate single-node
+//! forms for the same variants so a `DeflNode` without peer knowledge
+//! still mounts a best-effort version.
+//!
+//! # Determinism
+//!
+//! All commit-time poison noise draws from [`round_rng`] — a stream that
+//! is a pure function of (seed, node, round). A round that is trained
+//! speculatively, discarded, and retrained therefore redraws identical
+//! noise, which is what lets Byzantine nodes run the pipelined round
+//! engine without perturbing honest-run digests.
 
 use crate::config::Attack;
+use crate::crypto::NodeId;
 use crate::util::Pcg;
 
+/// Per-(node, round) attack RNG stream: a pure function of the triple,
+/// so commit-time poison is independent of HOW MANY times the round was
+/// (speculatively) trained. The stream constant keeps it disjoint from
+/// the trainer's and simulator's streams of the same seed.
+pub fn round_rng(seed: u64, node: NodeId, round: u64) -> Pcg {
+    Pcg::new(seed ^ 0xa77a, ((node as u64) << 32) | round)
+}
+
 /// Apply a weight-poisoning attack in place. `rng` must be the attacker's
-/// own stream so honest nodes' randomness is unaffected.
+/// own stream — [`round_rng`] on the commit path — so honest nodes'
+/// randomness is unaffected and retrained rounds redraw the same noise.
 pub fn poison_weights(weights: &mut [f32], attack: Attack, rng: &mut Pcg) {
     match attack {
         Attack::Gaussian { sigma } => {
@@ -28,8 +84,37 @@ pub fn poison_weights(weights: &mut [f32], attack: Attack, rng: &mut Pcg) {
                 *w *= sigma;
             }
         }
-        // Data / protocol attacks: no weight transformation here.
-        Attack::None | Attack::LabelFlip | Attack::StaleRound | Attack::EarlyAgg => {}
+        // Degenerate single-node Krum-evade (no view of peers): keep the
+        // honest model, add a perturbation of norm ε·‖w‖ in a random
+        // direction — inside the benign score envelope, biasing the
+        // aggregate wherever the direction points.
+        Attack::KrumEvade { eps } => {
+            let norm = l2_norm(weights);
+            let noise: Vec<f32> = weights.iter().map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let nn = l2_norm(&noise);
+            if nn > 0.0 {
+                let scale = eps * norm / nn;
+                for (w, d) in weights.iter_mut().zip(&noise) {
+                    *w += scale * d;
+                }
+            }
+        }
+        // Degenerate single-node AGR forms: with no benign envelope to
+        // bound γ, the inverse-unit direction at γ = 2‖w‖ collapses to
+        // the full flip w ← −w. The envelope-bounded colluding forms are
+        // `craft_min_max` / `craft_min_sum`.
+        Attack::MinMax | Attack::MinSum => {
+            for w in weights.iter_mut() {
+                *w = -*w;
+            }
+        }
+        // Data / protocol / storage attacks: no weight transformation.
+        Attack::None
+        | Attack::LabelFlip
+        | Attack::StaleRound
+        | Attack::EarlyAgg
+        | Attack::Equivocate
+        | Attack::ChunkGrief => {}
     }
 }
 
@@ -48,9 +133,181 @@ pub fn commits_early_agg(attack: Attack) -> bool {
     matches!(attack, Attack::EarlyAgg)
 }
 
+/// Does this attack need the honest updates (the colluding gallery)?
+pub fn colludes(attack: Attack) -> bool {
+    matches!(attack, Attack::KrumEvade { .. } | Attack::MinMax | Attack::MinSum)
+}
+
+/// Does this attack run its consensus replica in equivocating mode?
+pub fn equivocates(attack: Attack) -> bool {
+    matches!(attack, Attack::Equivocate)
+}
+
+/// Does this attack corrupt a chunk of every multicast weight blob?
+pub fn griefs_chunks(attack: Attack) -> bool {
+    matches!(attack, Attack::ChunkGrief)
+}
+
+/// The adaptive gallery the robustness bench sweeps, with the stable row
+/// names `BENCH_attacks.json` (and the CI gate) keys on.
+pub fn gallery() -> Vec<(&'static str, Attack)> {
+    vec![
+        ("gaussian", Attack::Gaussian { sigma: 0.5 }),
+        ("krum_evade", Attack::KrumEvade { eps: 0.5 }),
+        ("min_max", Attack::MinMax),
+        ("min_sum", Attack::MinSum),
+        ("equivocate", Attack::Equivocate),
+        ("chunk_grief", Attack::ChunkGrief),
+    ]
+}
+
+fn l2_norm(v: &[f32]) -> f32 {
+    v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt() as f32
+}
+
+fn sq_dist(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = *x as f64 - *y as f64;
+            d * d
+        })
+        .sum()
+}
+
+/// Unweighted mean of the honest rows (the colluders' anchor point).
+fn mean_rows(honest: &[Vec<f32>]) -> Vec<f32> {
+    let dim = honest[0].len();
+    let mut mean = vec![0.0f32; dim];
+    for row in honest {
+        for (m, x) in mean.iter_mut().zip(row) {
+            *m += *x / honest.len() as f32;
+        }
+    }
+    mean
+}
+
+/// Colluding Krum-evading rows: all `n_byz` attackers commit
+/// `mean(honest) + ε·dir` for one shared random unit direction. Their
+/// pairwise distances are zero and their distance to the benign cluster
+/// is ε, so for ε inside the benign spread their Krum scores UNDERCUT
+/// every honest row and Multi-Krum selects all of them.
+pub fn craft_krum_evade(
+    honest: &[Vec<f32>],
+    n_byz: usize,
+    eps: f32,
+    rng: &mut Pcg,
+) -> Vec<Vec<f32>> {
+    assert!(!honest.is_empty(), "krum-evade needs honest rows to anchor on");
+    let mut mal = mean_rows(honest);
+    let noise: Vec<f32> = mal.iter().map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let nn = l2_norm(&noise);
+    if nn > 0.0 {
+        for (m, d) in mal.iter_mut().zip(&noise) {
+            *m += eps * d / nn;
+        }
+    }
+    vec![mal; n_byz]
+}
+
+/// Min-max AGR rows (arXiv:2409.17754): μ + γ·(−μ/‖μ‖) with the largest
+/// γ whose MAX distance to any benign row stays within the benign max
+/// pairwise distance.
+pub fn craft_min_max(honest: &[Vec<f32>], n_byz: usize) -> Vec<Vec<f32>> {
+    let bound = honest
+        .iter()
+        .enumerate()
+        .flat_map(|(j, a)| honest[j + 1..].iter().map(move |b| sq_dist(a, b)))
+        .fold(0.0f64, f64::max);
+    craft_agr(honest, n_byz, move |mal, honest| {
+        honest.iter().map(|b| sq_dist(mal, b)).fold(0.0f64, f64::max) <= bound
+    })
+}
+
+/// Min-sum AGR rows (arXiv:2409.17754): like min-max, but γ is bounded
+/// by the benign maximum distance-SUM instead of the max pairwise
+/// distance — a tighter envelope, hence a smaller (stealthier) γ.
+pub fn craft_min_sum(honest: &[Vec<f32>], n_byz: usize) -> Vec<Vec<f32>> {
+    let bound = honest
+        .iter()
+        .map(|a| honest.iter().map(|b| sq_dist(a, b)).sum::<f64>())
+        .fold(0.0f64, f64::max);
+    craft_agr(honest, n_byz, move |mal, honest| {
+        honest.iter().map(|b| sq_dist(mal, b)).sum::<f64>() <= bound
+    })
+}
+
+/// Shared AGR core: anchor at μ = mean(honest), perturb along the
+/// inverse unit direction −μ/‖μ‖, and bisect for the largest feasible γ
+/// (`feasible` is the per-variant envelope test). All colluders commit
+/// the same row.
+fn craft_agr(
+    honest: &[Vec<f32>],
+    n_byz: usize,
+    feasible: impl Fn(&[f32], &[Vec<f32>]) -> bool,
+) -> Vec<Vec<f32>> {
+    assert!(!honest.is_empty(), "AGR attacks need honest rows to anchor on");
+    let mean = mean_rows(honest);
+    let norm = l2_norm(&mean);
+    if norm == 0.0 {
+        return vec![mean; n_byz];
+    }
+    let dir: Vec<f32> = mean.iter().map(|m| -m / norm).collect();
+    let at = |gamma: f64| -> Vec<f32> {
+        mean.iter()
+            .zip(&dir)
+            .map(|(m, d)| (*m as f64 + gamma * *d as f64) as f32)
+            .collect()
+    };
+    // Grow an upper bracket, then bisect. γ = 0 (the mean itself) is
+    // always feasible for both envelopes.
+    let mut lo = 0.0f64;
+    let mut hi = 1.0f64;
+    let mut grow = 0;
+    while feasible(&at(hi), honest) && grow < 60 {
+        lo = hi;
+        hi *= 2.0;
+        grow += 1;
+    }
+    for _ in 0..50 {
+        let mid = 0.5 * (lo + hi);
+        if feasible(&at(mid), honest) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    vec![at(lo); n_byz]
+}
+
+/// Craft the colluding rows for `attack` given the honest updates, or
+/// `None` for attacks that don't collude on weights. `n_byz` identical
+/// rows come back — one per attacker.
+pub fn craft_colluding_rows(
+    attack: Attack,
+    honest: &[Vec<f32>],
+    n_byz: usize,
+    rng: &mut Pcg,
+) -> Option<Vec<Vec<f32>>> {
+    match attack {
+        Attack::KrumEvade { eps } => Some(craft_krum_evade(honest, n_byz, eps, rng)),
+        Attack::MinMax => Some(craft_min_max(honest, n_byz)),
+        Attack::MinSum => Some(craft_min_sum(honest, n_byz)),
+        _ => None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::krum::multi_krum;
+
+    fn cluster(rng: &mut Pcg, n: usize, d: usize, spread: f32) -> Vec<Vec<f32>> {
+        let center: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        (0..n)
+            .map(|_| center.iter().map(|c| c + rng.normal_f32(0.0, spread)).collect())
+            .collect()
+    }
 
     #[test]
     fn gaussian_perturbs_with_right_scale() {
@@ -76,11 +333,34 @@ mod tests {
     fn none_and_label_flip_leave_weights() {
         let mut rng = Pcg::seeded(3);
         let orig = vec![1.0f32, 2.0, 3.0];
-        for atk in [Attack::None, Attack::LabelFlip, Attack::StaleRound, Attack::EarlyAgg] {
+        for atk in [
+            Attack::None,
+            Attack::LabelFlip,
+            Attack::StaleRound,
+            Attack::EarlyAgg,
+            Attack::Equivocate,
+            Attack::ChunkGrief,
+        ] {
             let mut w = orig.clone();
             poison_weights(&mut w, atk, &mut rng);
             assert_eq!(w, orig);
         }
+    }
+
+    #[test]
+    fn degenerate_gallery_forms_transform_weights() {
+        let mut rng = Pcg::seeded(4);
+        let orig = vec![1.0f32, -2.0, 0.5, 3.0];
+        let mut w = orig.clone();
+        poison_weights(&mut w, Attack::MinMax, &mut rng);
+        assert_eq!(w, orig.iter().map(|x| -x).collect::<Vec<_>>());
+        let mut w = orig.clone();
+        poison_weights(&mut w, Attack::KrumEvade { eps: 0.1 }, &mut rng);
+        assert_ne!(w, orig);
+        // ε-norm perturbation: ‖w' − w‖ = ε·‖w‖.
+        let delta: Vec<f32> = w.iter().zip(&orig).map(|(a, b)| a - b).collect();
+        let (dn, on) = (l2_norm(&delta), l2_norm(&orig));
+        assert!((dn - 0.1 * on).abs() < 1e-4, "perturbation norm {dn} vs {}", 0.1 * on);
     }
 
     #[test]
@@ -89,5 +369,90 @@ mod tests {
         assert!(!flips_labels(Attack::Gaussian { sigma: 1.0 }));
         assert!(commits_stale_round(Attack::StaleRound));
         assert!(commits_early_agg(Attack::EarlyAgg));
+        assert!(colludes(Attack::KrumEvade { eps: 0.5 }));
+        assert!(colludes(Attack::MinMax) && colludes(Attack::MinSum));
+        assert!(!colludes(Attack::Gaussian { sigma: 1.0 }));
+        assert!(equivocates(Attack::Equivocate));
+        assert!(griefs_chunks(Attack::ChunkGrief));
+        assert!(!griefs_chunks(Attack::Equivocate));
+    }
+
+    #[test]
+    fn round_rng_is_pure_and_stream_distinct() {
+        let a: Vec<u64> = {
+            let mut r = round_rng(42, 3, 7);
+            (0..4).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = round_rng(42, 3, 7);
+            (0..4).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b, "same (seed, node, round) must redraw identically");
+        let mut c = round_rng(42, 3, 8);
+        let mut d = round_rng(42, 4, 7);
+        assert_ne!(a[0], c.next_u64(), "round must move the stream");
+        assert_ne!(a[0], d.next_u64(), "node must move the stream");
+    }
+
+    #[test]
+    fn krum_evade_colluders_get_selected() {
+        // 6 honest rows spread around a center, 2 identical colluders at
+        // the mean + small ε: Multi-Krum (f = 2, m = n − f) must SELECT
+        // both colluders — the evasion the defense gate measures.
+        let mut rng = Pcg::seeded(11);
+        let honest = cluster(&mut rng, 6, 64, 0.5);
+        let byz = craft_krum_evade(&honest, 2, 0.25, &mut rng);
+        let mut rows = byz.clone();
+        rows.extend(honest.clone());
+        let out = multi_krum(&rows, &[1.0; 8], 2, 6).unwrap();
+        assert_eq!(out.mask[0], 1.0, "colluder 0 filtered: scores {:?}", out.scores);
+        assert_eq!(out.mask[1], 1.0, "colluder 1 filtered: scores {:?}", out.scores);
+    }
+
+    #[test]
+    fn agr_rows_stay_inside_their_envelope_and_move_the_mean() {
+        let mut rng = Pcg::seeded(13);
+        let honest = cluster(&mut rng, 6, 64, 0.4);
+        let max_pair = honest
+            .iter()
+            .enumerate()
+            .flat_map(|(j, a)| honest[j + 1..].iter().map(move |b| sq_dist(a, b)))
+            .fold(0.0f64, f64::max);
+        let max_sum = honest
+            .iter()
+            .map(|a| honest.iter().map(|b| sq_dist(a, b)).sum::<f64>())
+            .fold(0.0f64, f64::max);
+
+        let mm = craft_min_max(&honest, 2);
+        assert_eq!(mm.len(), 2);
+        assert_eq!(mm[0], mm[1], "colluders commit the same row");
+        let worst = honest.iter().map(|b| sq_dist(&mm[0], b)).fold(0.0f64, f64::max);
+        assert!(worst <= max_pair * 1.0001, "min-max escaped envelope: {worst} > {max_pair}");
+
+        let ms = craft_min_sum(&honest, 2);
+        let sum = honest.iter().map(|b| sq_dist(&ms[0], b)).sum::<f64>();
+        assert!(sum <= max_sum * 1.0001, "min-sum escaped envelope: {sum} > {max_sum}");
+
+        // Both must actually displace the anchor (γ > 0 for a spread
+        // cluster), and min-sum's tighter envelope yields a smaller γ.
+        let mean = mean_rows(&honest);
+        let g_mm = sq_dist(&mm[0], &mean).sqrt();
+        let g_ms = sq_dist(&ms[0], &mean).sqrt();
+        assert!(g_mm > 0.01, "min-max γ ≈ 0");
+        assert!(g_ms > 0.01, "min-sum γ ≈ 0");
+        assert!(g_ms <= g_mm * 1.1, "min-sum ({g_ms}) should be tighter than min-max ({g_mm})");
+    }
+
+    #[test]
+    fn colluding_dispatch_covers_exactly_the_colluding_attacks() {
+        let mut rng = Pcg::seeded(17);
+        let honest = cluster(&mut rng, 5, 16, 0.3);
+        for atk in [Attack::KrumEvade { eps: 0.5 }, Attack::MinMax, Attack::MinSum] {
+            let rows = craft_colluding_rows(atk, &honest, 3, &mut rng);
+            assert_eq!(rows.expect("colluding").len(), 3, "{atk:?}");
+        }
+        for atk in [Attack::None, Attack::Gaussian { sigma: 1.0 }, Attack::ChunkGrief] {
+            assert!(craft_colluding_rows(atk, &honest, 3, &mut rng).is_none(), "{atk:?}");
+        }
     }
 }

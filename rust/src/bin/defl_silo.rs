@@ -22,7 +22,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use defl::cluster::{read_ctrl, write_ctrl, ClusterConfig, CtrlMsg, SiloMode};
+use defl::cluster::{
+    ctrl_registry, read_ctrl_signed, supervisor_id, write_ctrl_signed, ClusterConfig, CtrlMsg,
+    SiloMode,
+};
 use defl::crypto::{Digest, KeyRegistry, NodeId};
 use defl::defl::{DeflNode, LiteNode};
 use defl::metrics::StatsSnapshot;
@@ -53,20 +56,26 @@ fn run() -> Result<()> {
     // introduce ourselves, then stream heartbeats from a side thread and
     // watch for Shutdown on another. All writes go through one mutex so
     // the heartbeat thread and the final Done frame can never interleave
-    // bytes on the wire.
+    // bytes on the wire. Every frame is signed under this silo's
+    // control-plane key; Shutdown is obeyed only under the supervisor's.
+    let ctrl_reg = ctrl_registry(cc.n_nodes, cc.exp.seed);
+    let ctrl_signer = ctrl_reg.signer(id);
     let mut ctrl = dial_ctrl(&cc, Duration::from_secs(10))?;
-    write_ctrl(&mut ctrl, &CtrlMsg::Hello { node: id })?;
+    write_ctrl_signed(&mut ctrl, &ctrl_signer, &CtrlMsg::Hello { node: id })?;
     let writer = Arc::new(Mutex::new(ctrl.try_clone()?));
     let snap = Arc::new(Mutex::new(StatsSnapshot { node: id, ..Default::default() }));
     let shutdown = Arc::new(AtomicBool::new(false));
     let stop_beats = Arc::new(AtomicBool::new(false));
     let beats = {
         let (snap, stop, writer) = (snap.clone(), stop_beats.clone(), writer.clone());
+        let signer = ctrl_signer.clone();
         let period = Duration::from_millis(cc.heartbeat_ms);
         std::thread::spawn(move || {
             while !stop.load(Ordering::SeqCst) {
                 let s = snap.lock().unwrap().clone();
-                if write_ctrl(&mut *writer.lock().unwrap(), &CtrlMsg::Heartbeat(s)).is_err() {
+                if write_ctrl_signed(&mut *writer.lock().unwrap(), &signer, &CtrlMsg::Heartbeat(s))
+                    .is_err()
+                {
                     return; // supervisor gone; keep running regardless
                 }
                 std::thread::sleep(period);
@@ -75,14 +84,16 @@ fn run() -> Result<()> {
     };
     {
         let shutdown = shutdown.clone();
+        let reg = ctrl_reg.clone();
+        let sup = supervisor_id(cc.n_nodes);
         let mut r = ctrl.try_clone()?;
         std::thread::spawn(move || loop {
-            match read_ctrl(&mut r) {
-                Ok(CtrlMsg::Shutdown) => {
+            match read_ctrl_signed(&mut r, &reg) {
+                Ok((sender, CtrlMsg::Shutdown)) if sender == sup => {
                     shutdown.store(true, Ordering::SeqCst);
                     return;
                 }
-                Ok(_) => {}
+                Ok(_) => {} // anything else (incl. a non-supervisor Shutdown) is ignored
                 Err(_) => return,
             }
         });
@@ -108,8 +119,9 @@ fn run() -> Result<()> {
         SiloMode::Full => run_full(&cc, id, &mesh, &snap, &shutdown)?,
     };
 
-    let _ = write_ctrl(
+    let _ = write_ctrl_signed(
         &mut *writer.lock().unwrap(),
+        &ctrl_signer,
         &CtrlMsg::Done { node: id, rounds, digest },
     );
     stop_beats.store(true, Ordering::SeqCst);
@@ -146,7 +158,7 @@ fn run_lite(
 ) -> Result<(u64, Digest)> {
     let lc = cc.lite_config();
     let registry = KeyRegistry::new(cc.n_nodes, lc.seed);
-    let mut node = LiteNode::new(id, lc, registry);
+    let mut node = LiteNode::new(id, lc, registry.clone());
     // The done predicate runs after every message and idle tick; rebuild
     // the (allocating) snapshot only at the heartbeat cadence.
     let snap_period = Duration::from_millis(cc.heartbeat_ms.max(2) / 2);
@@ -166,6 +178,7 @@ fn run_lite(
             n.done
         },
         Duration::from_millis(cc.linger_ms),
+        Some(&registry),
     )?;
     let digest = node
         .final_digest
@@ -193,7 +206,7 @@ fn run_full(
     let theta0 = engine.init_params(exp.seed as u32)?;
     let shard = shards.remove(id as usize);
     let registry = KeyRegistry::new(exp.n_nodes, exp.seed);
-    let mut node = DeflNode::new(id, exp, engine, train, shard, sizes, registry, theta0);
+    let mut node = DeflNode::new(id, exp, engine, train, shard, sizes, registry.clone(), theta0);
     let snap_period = Duration::from_millis(cc.heartbeat_ms.max(2) / 2);
     let mut next_snap = Instant::now();
     run_actor(
@@ -211,6 +224,7 @@ fn run_full(
             n.done
         },
         Duration::from_millis(cc.linger_ms),
+        Some(&registry),
     )?;
     let digest = node
         .final_theta

@@ -250,6 +250,11 @@ impl ClusterConfig {
             Attack::LabelFlip => "label-flip".to_string(),
             Attack::StaleRound => "stale-round".to_string(),
             Attack::EarlyAgg => "early-agg".to_string(),
+            Attack::KrumEvade { eps } => format!("krum-evade:{eps}"),
+            Attack::MinMax => "min-max".to_string(),
+            Attack::MinSum => "min-sum".to_string(),
+            Attack::Equivocate => "equivocate".to_string(),
+            Attack::ChunkGrief => "chunk-grief".to_string(),
         };
         let partition = match self.exp.partition {
             Partition::Iid => "iid".to_string(),
@@ -396,6 +401,12 @@ impl ClusterConfig {
             // sim: training cost is already zero, so the pipeline knob
             // only changes WHEN the synthetic update is computed.
             train_us: 0,
+            n_byzantine: self.exp.f_byzantine,
+            attack: self.exp.attack,
+            // Lite clusters keep the plain deterministic aggregate so the
+            // crash-restart digest guarantee is unchanged; Krum-mode lite
+            // runs are the attack bench's and the simulator's job.
+            krum_f: None,
         }
     }
 
@@ -550,6 +561,11 @@ mod tests {
                     Attack::EarlyAgg,
                     Attack::Gaussian { sigma: 0.25 },
                     Attack::SignFlip { sigma: -2.0 },
+                    Attack::KrumEvade { eps: 0.5 },
+                    Attack::MinMax,
+                    Attack::MinSum,
+                    Attack::Equivocate,
+                    Attack::ChunkGrief,
                 ]);
                 cfg.exp.partition = *rng.choose(&[
                     Partition::Iid,

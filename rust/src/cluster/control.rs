@@ -19,12 +19,24 @@
 //! The supervisor never trusts these bytes: frames are length-capped and
 //! decode through the bounds-checked cursor, so a wedged or malicious
 //! child can at worst disconnect itself.
+//!
+//! # Authentication
+//!
+//! The deployed control plane runs SIGNED: each length-prefixed frame
+//! carries a [`SignedFrame`] envelope (class byte [`CTRL_WIRE_CLASS`],
+//! distinct from every mesh traffic class) around the `CtrlMsg`
+//! encoding, keyed by [`ctrl_registry`] — one key per silo plus a
+//! reserved supervisor key ([`supervisor_id`]). The supervisor checks
+//! that a silo's frames are signed by the node the connection claims to
+//! be; silos accept `Shutdown` only under the supervisor's key. The
+//! control registry derives from a tweaked seed, so mesh keys and
+//! control keys never coincide even for the same node id.
 
 use std::io::{Read, Write};
 
 use anyhow::{bail, Result};
 
-use crate::crypto::{Digest, NodeId};
+use crate::crypto::{Digest, KeyRegistry, NodeId, SignedFrame, Signer};
 use crate::metrics::StatsSnapshot;
 use crate::util::codec::{Cursor, Decode, Encode};
 
@@ -87,20 +99,35 @@ impl Decode for CtrlMsg {
     }
 }
 
-/// Write one length-prefixed control frame.
-pub fn write_ctrl<W: Write>(w: &mut W, msg: &CtrlMsg) -> Result<()> {
-    let payload = msg.to_bytes();
+/// `SignedFrame` class byte for control-plane frames — deliberately
+/// outside the mesh traffic classes (0..=2), so a captured control frame
+/// can never be replayed onto the data mesh or vice versa.
+pub const CTRL_WIRE_CLASS: u8 = 3;
+
+/// Key registry for a supervised cluster's control plane: one key per
+/// silo plus one reserved for the supervisor (see [`supervisor_id`]).
+/// The seed is tweaked so control keys never coincide with the mesh
+/// registry's keys for the same ids.
+pub fn ctrl_registry(n_silos: usize, cluster_seed: u64) -> KeyRegistry {
+    KeyRegistry::new(n_silos + 1, cluster_seed ^ 0xc791)
+}
+
+/// The supervisor's reserved node id in [`ctrl_registry`].
+pub fn supervisor_id(n_silos: usize) -> NodeId {
+    n_silos as NodeId
+}
+
+fn write_blob<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
     if payload.len() > CTRL_MAX_FRAME {
         bail!("ctrl frame too large: {}", payload.len());
     }
     w.write_all(&(payload.len() as u32).to_le_bytes())?;
-    w.write_all(&payload)?;
+    w.write_all(payload)?;
     w.flush()?;
     Ok(())
 }
 
-/// Read one length-prefixed control frame.
-pub fn read_ctrl<R: Read>(r: &mut R) -> Result<CtrlMsg> {
+fn read_blob<R: Read>(r: &mut R) -> Result<Vec<u8>> {
     let mut len_bytes = [0u8; 4];
     r.read_exact(&mut len_bytes)?;
     let len = u32::from_le_bytes(len_bytes) as usize;
@@ -109,7 +136,38 @@ pub fn read_ctrl<R: Read>(r: &mut R) -> Result<CtrlMsg> {
     }
     let mut payload = vec![0u8; len];
     r.read_exact(&mut payload)?;
-    CtrlMsg::from_bytes(&payload)
+    Ok(payload)
+}
+
+/// Write one length-prefixed control frame (unsigned legacy framing,
+/// still used by tooling that has no registry).
+pub fn write_ctrl<W: Write>(w: &mut W, msg: &CtrlMsg) -> Result<()> {
+    write_blob(w, &msg.to_bytes())
+}
+
+/// Read one length-prefixed control frame (unsigned legacy framing).
+pub fn read_ctrl<R: Read>(r: &mut R) -> Result<CtrlMsg> {
+    CtrlMsg::from_bytes(&read_blob(r)?)
+}
+
+/// Write one signed control frame: the `CtrlMsg` encoding sealed in a
+/// [`SignedFrame`] under `signer`'s control-plane key.
+pub fn write_ctrl_signed<W: Write>(w: &mut W, signer: &Signer, msg: &CtrlMsg) -> Result<()> {
+    let frame = SignedFrame::seal(signer, CTRL_WIRE_CLASS, msg.to_bytes());
+    write_blob(w, &frame.to_bytes())
+}
+
+/// Read one signed control frame, verifying the envelope against the
+/// control-plane registry. Returns the AUTHENTICATED sender with the
+/// message — callers still decide whether that sender may say this
+/// (e.g. only [`supervisor_id`] may order `Shutdown`).
+pub fn read_ctrl_signed<R: Read>(r: &mut R, registry: &KeyRegistry) -> Result<(NodeId, CtrlMsg)> {
+    let payload = read_blob(r)?;
+    let frame = SignedFrame::from_bytes(&payload)?;
+    if frame.class != CTRL_WIRE_CLASS || !frame.verify(registry) {
+        bail!("ctrl frame failed signature verification (claimed sender {})", frame.sender);
+    }
+    Ok((frame.sender, CtrlMsg::from_bytes(&frame.payload)?))
 }
 
 #[cfg(test)]
@@ -159,6 +217,46 @@ mod tests {
         }
         // The stream is fully drained; one more read is a clean error.
         assert!(read_ctrl(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn signed_framing_roundtrips_and_authenticates() {
+        let reg = ctrl_registry(3, 42);
+        let sup = supervisor_id(3);
+        let mut wire = Vec::new();
+        let msgs = sample_msgs();
+        for m in &msgs {
+            write_ctrl_signed(&mut wire, &reg.signer(2), m).unwrap();
+        }
+        write_ctrl_signed(&mut wire, &reg.signer(sup), &CtrlMsg::Shutdown).unwrap();
+        let mut cursor = std::io::Cursor::new(wire);
+        for m in &msgs {
+            assert_eq!(read_ctrl_signed(&mut cursor, &reg).unwrap(), (2, m.clone()));
+        }
+        assert_eq!(read_ctrl_signed(&mut cursor, &reg).unwrap(), (sup, CtrlMsg::Shutdown));
+    }
+
+    #[test]
+    fn signed_framing_rejects_forgery_and_cross_registry_replay() {
+        let reg = ctrl_registry(3, 42);
+        // Tampered payload byte inside the envelope.
+        let mut wire = Vec::new();
+        write_ctrl_signed(&mut wire, &reg.signer(1), &CtrlMsg::Hello { node: 1 }).unwrap();
+        let last = wire.len() - 1;
+        wire[last] ^= 1;
+        assert!(read_ctrl_signed(&mut std::io::Cursor::new(wire), &reg).is_err());
+        // A mesh-keyed signer (same seed, untweaked) must not pass: the
+        // control registry's keys are derived from a tweaked seed.
+        let mesh = KeyRegistry::new(4, 42);
+        let mut wire = Vec::new();
+        write_ctrl_signed(&mut wire, &mesh.signer(1), &CtrlMsg::Shutdown).unwrap();
+        assert!(read_ctrl_signed(&mut std::io::Cursor::new(wire), &reg).is_err());
+        // A frame sealed under a mesh traffic class is rejected even if
+        // someone re-signed it correctly: the class byte is pinned.
+        let frame = SignedFrame::seal(&reg.signer(1), 1, CtrlMsg::Shutdown.to_bytes());
+        let mut wire = Vec::new();
+        write_blob(&mut wire, &frame.to_bytes()).unwrap();
+        assert!(read_ctrl_signed(&mut std::io::Cursor::new(wire), &reg).is_err());
     }
 
     #[test]

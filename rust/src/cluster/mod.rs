@@ -16,7 +16,11 @@
 //!   file.
 //! * [`control`] — the supervisor ⇄ silo control plane: length-prefixed
 //!   `Hello` / `Heartbeat(StatsSnapshot)` / `Done` / `Shutdown` frames
-//!   over one TCP connection per silo, reusing `util::codec`.
+//!   over one TCP connection per silo, reusing `util::codec`. Deployed
+//!   frames are sealed in `SignedFrame` envelopes under the control
+//!   registry ([`control::ctrl_registry`]): the supervisor only binds a
+//!   connection to the node whose KEY signed its Hello, and silos obey
+//!   `Shutdown` only under the supervisor's reserved key.
 //! * [`supervisor`] — spawns `defl-silo` processes, monitors heartbeats,
 //!   restarts crashed silos with exponential backoff (capped, bounded
 //!   attempts), aggregates snapshots into the cluster summary printed at
@@ -74,5 +78,8 @@ pub mod control;
 pub mod supervisor;
 
 pub use config::{ClusterConfig, SiloMode};
-pub use control::{read_ctrl, write_ctrl, CtrlMsg};
+pub use control::{
+    ctrl_registry, read_ctrl, read_ctrl_signed, supervisor_id, write_ctrl, write_ctrl_signed,
+    CtrlMsg,
+};
 pub use supervisor::{run_supervisor, KillSpec, SupervisorOpts, SupervisorReport};

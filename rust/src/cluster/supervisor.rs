@@ -24,12 +24,12 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::crypto::{Digest, NodeId};
+use crate::crypto::{Digest, KeyRegistry, NodeId};
 use crate::metrics::StatsSnapshot;
 use crate::util::bench::fmt_bytes;
 
 use super::config::{ClusterConfig, SiloMode};
-use super::control::{read_ctrl, write_ctrl, CtrlMsg};
+use super::control::{ctrl_registry, read_ctrl_signed, supervisor_id, write_ctrl_signed, CtrlMsg};
 
 /// Kill scenario: SIGKILL `node` once its heartbeats report `at_round`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -153,6 +153,9 @@ pub fn run_supervisor(cc: &ClusterConfig, opts: &SupervisorOpts) -> Result<Super
     }
 
     // Control plane: accept silo connections, forward their frames.
+    // Every frame is signature-verified against the cluster's control
+    // registry; the supervisor signs with its reserved key.
+    let registry = Arc::new(ctrl_registry(n, cc.exp.seed));
     let listener = TcpListener::bind(cc.control_addr())
         .with_context(|| format!("bind control plane {}", cc.control_addr()))?;
     let (tx, rx) = channel::<(NodeId, CtrlMsg)>();
@@ -160,7 +163,8 @@ pub fn run_supervisor(cc: &ClusterConfig, opts: &SupervisorOpts) -> Result<Super
     let closed = Arc::new(AtomicBool::new(false));
     let accept_thread = {
         let (tx, writers, closed) = (tx.clone(), writers.clone(), closed.clone());
-        std::thread::spawn(move || control_accept_loop(listener, tx, writers, closed))
+        let registry = registry.clone();
+        std::thread::spawn(move || control_accept_loop(listener, registry, tx, writers, closed))
     };
     drop(tx);
 
@@ -182,8 +186,9 @@ pub fn run_supervisor(cc: &ClusterConfig, opts: &SupervisorOpts) -> Result<Super
     // (kill whatever ignores the nudge).
     closed.store(true, Ordering::SeqCst);
     let _ = TcpStream::connect(cc.control_addr()); // unblock accept()
+    let sup_signer = registry.signer(supervisor_id(n));
     for (_, mut w) in writers.lock().unwrap().drain() {
-        let _ = write_ctrl(&mut w, &CtrlMsg::Shutdown);
+        let _ = write_ctrl_signed(&mut w, &sup_signer, &CtrlMsg::Shutdown);
     }
     let reap_deadline = Instant::now() + Duration::from_secs(10);
     for silo in silos.iter_mut() {
@@ -205,6 +210,7 @@ pub fn run_supervisor(cc: &ClusterConfig, opts: &SupervisorOpts) -> Result<Super
 
 fn control_accept_loop(
     listener: TcpListener,
+    registry: Arc<KeyRegistry>,
     tx: Sender<(NodeId, CtrlMsg)>,
     writers: Arc<Mutex<HashMap<NodeId, TcpStream>>>,
     closed: Arc<AtomicBool>,
@@ -222,14 +228,24 @@ fn control_accept_loop(
         }
         let tx = tx.clone();
         let writers = writers.clone();
+        let registry = registry.clone();
         std::thread::spawn(move || {
             let mut stream = stream;
             stream
                 .set_read_timeout(Some(Duration::from_secs(5)))
                 .ok();
-            let Ok(CtrlMsg::Hello { node }) = read_ctrl(&mut stream) else {
-                return; // not a silo
+            // The Hello must be signed by the very node it announces —
+            // the signature, not the frame body, binds the connection.
+            let Ok((sender, CtrlMsg::Hello { node })) = read_ctrl_signed(&mut stream, &registry)
+            else {
+                return; // not a silo, or a forged hello
             };
+            if sender != node {
+                log::warn!(
+                    "[supervisor] hello for node {node} signed by {sender} — dropping connection"
+                );
+                return;
+            }
             stream.set_read_timeout(None).ok();
             if let Ok(w) = stream.try_clone() {
                 writers.lock().unwrap().insert(node, w);
@@ -238,13 +254,23 @@ fn control_accept_loop(
                 return;
             }
             loop {
-                match read_ctrl(&mut stream) {
-                    Ok(msg) => {
+                match read_ctrl_signed(&mut stream, &registry) {
+                    Ok((sender, msg)) if sender == node => {
                         if tx.send((node, msg)).is_err() {
                             return;
                         }
                     }
-                    Err(_) => return, // silo gone (exit or crash)
+                    Ok((sender, _)) => {
+                        // A frame signed by a DIFFERENT key on this
+                        // silo's connection: drop the connection rather
+                        // than let it impersonate anyone.
+                        log::warn!(
+                            "[supervisor] frame on silo {node}'s connection signed by {sender} \
+                             — dropping connection"
+                        );
+                        return;
+                    }
+                    Err(_) => return, // silo gone, or unverifiable frame
                 }
             }
         });

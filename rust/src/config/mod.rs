@@ -113,7 +113,8 @@ impl System {
     }
 }
 
-/// Threat models of §3.1 / Table 1. `None` is the no-attack control.
+/// Threat models of §3.1 / Table 1, plus the adaptive gallery
+/// ([`crate::attacks`]). `None` is the no-attack control.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Attack {
     None,
@@ -128,6 +129,24 @@ pub enum Attack {
     StaleRound,
     /// Commit AGG before GST_LT (§3.1); exercises quorum timing.
     EarlyAgg,
+    /// Colluding Krum-evading perturbation: byzantine nodes commit the
+    /// honest mean plus an ε-scaled shared direction, staying inside the
+    /// benign score envelope so Multi-Krum selects them.
+    KrumEvade { eps: f32 },
+    /// Min-max AGR attack (arXiv:2409.17754): the largest γ along a
+    /// shared malicious direction whose *max* distance to any benign
+    /// update stays within the benign max-pairwise distance.
+    MinMax,
+    /// Min-sum AGR attack (arXiv:2409.17754): γ bounded by the benign
+    /// *sum* of squared distances instead of the max.
+    MinSum,
+    /// Sync-server equivocation: a byzantine sync server answers
+    /// catch-up requests with conflicting `SyncEntry` chains; exercises
+    /// the chain-verified catch-up, not accuracy.
+    Equivocate,
+    /// Chunk-level griefing: corrupt one chunk of every multicast blob,
+    /// forcing receivers onto the digest-addressed pull path.
+    ChunkGrief,
 }
 
 impl Attack {
@@ -139,6 +158,11 @@ impl Attack {
             Attack::LabelFlip => "Label-flipping".into(),
             Attack::StaleRound => "Stale-round".into(),
             Attack::EarlyAgg => "Early-AGG".into(),
+            Attack::KrumEvade { eps } => format!("Krum-evade(e={eps})"),
+            Attack::MinMax => "Min-max".into(),
+            Attack::MinSum => "Min-sum".into(),
+            Attack::Equivocate => "Equivocate".into(),
+            Attack::ChunkGrief => "Chunk-grief".into(),
         }
     }
 
@@ -155,11 +179,26 @@ impl Attack {
         if s == "early-agg" {
             return Ok(Attack::EarlyAgg);
         }
+        if s == "min-max" {
+            return Ok(Attack::MinMax);
+        }
+        if s == "min-sum" {
+            return Ok(Attack::MinSum);
+        }
+        if s == "equivocate" {
+            return Ok(Attack::Equivocate);
+        }
+        if s == "chunk-grief" {
+            return Ok(Attack::ChunkGrief);
+        }
         if let Some(v) = s.strip_prefix("gaussian:") {
             return Ok(Attack::Gaussian { sigma: v.parse()? });
         }
         if let Some(v) = s.strip_prefix("sign-flip:") {
             return Ok(Attack::SignFlip { sigma: v.parse()? });
+        }
+        if let Some(v) = s.strip_prefix("krum-evade:") {
+            return Ok(Attack::KrumEvade { eps: v.parse()? });
         }
         bail!("unknown attack `{s}`");
     }
@@ -327,6 +366,14 @@ mod tests {
             Attack::parse("sign-flip:-2").unwrap(),
             Attack::SignFlip { sigma: -2.0 }
         );
+        assert_eq!(
+            Attack::parse("krum-evade:0.5").unwrap(),
+            Attack::KrumEvade { eps: 0.5 }
+        );
+        assert_eq!(Attack::parse("min-max").unwrap(), Attack::MinMax);
+        assert_eq!(Attack::parse("min-sum").unwrap(), Attack::MinSum);
+        assert_eq!(Attack::parse("equivocate").unwrap(), Attack::Equivocate);
+        assert_eq!(Attack::parse("chunk-grief").unwrap(), Attack::ChunkGrief);
     }
 
     #[test]

@@ -19,6 +19,8 @@
 
 use std::any::Any;
 
+use crate::attacks::{self, poison_weights};
+use crate::config::Attack;
 use crate::crypto::{Digest, KeyRegistry, NodeId};
 use crate::hotstuff::{Action, ByzMode, HotStuff, HsConfig, Msg};
 use crate::krum;
@@ -30,7 +32,7 @@ use crate::weights::Weights;
 
 use super::pull::{self, receive_weight_frame, FetchConfig, Puller, TIMER_FETCH};
 use super::replica::{execute_decided_cmds, ReplicaState};
-use super::tx::{multicast_blob, Tx, WeightBlob};
+use super::tx::{multicast_blob, BlobChunk, Tx, WeightBlob, WeightMsg};
 
 /// Timer namespaces (match `DeflNode`; `pull::TIMER_FETCH` is 1 << 60).
 const TIMER_HS: u64 = 1 << 62;
@@ -76,6 +78,19 @@ pub struct LiteConfig {
     /// lands this long after its training starts. 0 = instantaneous
     /// (the legacy timing; pipelining then changes nothing observable).
     pub train_us: u64,
+    /// The first `n_byzantine` node ids mount `attack` (0 = all honest).
+    pub n_byzantine: usize,
+    /// What the byzantine nodes do. Colluding gallery attacks
+    /// (krum-evade / min-max / min-sum) are OMNISCIENT here: the lite
+    /// local update is a pure function of (aggregate, seed, node, round),
+    /// so attackers recompute the honest rows and craft against them —
+    /// the strongest, fully informed adversary.
+    pub attack: Attack,
+    /// `Some(f)` aggregates W^LAST through Multi-Krum(f, m = rows − f)
+    /// — the defense the robustness bench measures; `None` keeps plain
+    /// FedAvg (the legacy lite aggregate, and what the multi-process
+    /// cluster smoke pins its crash-restart digests on).
+    pub krum_f: Option<usize>,
 }
 
 impl Default for LiteConfig {
@@ -93,6 +108,9 @@ impl Default for LiteConfig {
             agg_quorum: None,
             pipeline: true,
             train_us: 0,
+            n_byzantine: 0,
+            attack: Attack::None,
+            krum_f: None,
         }
     }
 }
@@ -125,6 +143,8 @@ pub struct LiteNode {
     chunks: ChunkAssembler,
     puller: Puller,
     theta: Weights,
+    attack: Attack,
+    is_byzantine: bool,
     /// Highest round whose own UPD executed Ok (duplicate-decision guard).
     l_round: u64,
     round_in_flight: Option<u64>,
@@ -150,9 +170,19 @@ impl LiteNode {
             ..Default::default()
         };
         let agg_quorum = cfg.agg_quorum.unwrap_or((cfg.n_nodes - 1) / 3 + 1);
+        let is_byzantine = (id as usize) < cfg.n_byzantine && cfg.attack != Attack::None;
+        // The equivocation attack lives in the consensus replica: as
+        // leader it proposes conflicting blocks to the two cluster
+        // halves, which also hands conflicting sync chains to any peer
+        // catching up through it.
+        let byz_mode = if is_byzantine && attacks::equivocates(cfg.attack) {
+            ByzMode::Equivocate
+        } else {
+            ByzMode::Honest
+        };
         LiteNode {
             id,
-            hs: HotStuff::new(id, cfg.n_nodes, registry, hs_cfg, ByzMode::Honest),
+            hs: HotStuff::new(id, cfg.n_nodes, registry, hs_cfg, byz_mode),
             replica: ReplicaState::new(cfg.n_nodes, agg_quorum),
             pool: WeightPool::new(2),
             chunks: ChunkAssembler::new(1 << 28),
@@ -164,6 +194,8 @@ impl LiteNode {
                 ..Default::default()
             }),
             theta: Weights::new(vec![0.0f32; cfg.dim]),
+            attack: if is_byzantine { cfg.attack } else { Attack::None },
+            is_byzantine,
             l_round: 0,
             round_in_flight: None,
             spec: None,
@@ -178,6 +210,14 @@ impl LiteNode {
 
     pub fn pool(&self) -> &WeightPool {
         &self.pool
+    }
+
+    /// The aggregate this node finished on — the vector `final_digest`
+    /// hashes. The robustness bench scores model quality from this, so
+    /// it must stay derivable after `done` (pool GC keeps the last
+    /// round's blobs).
+    pub fn final_model(&self) -> Vec<f32> {
+        self.aggregate_last()
     }
 
     pub fn hotstuff(&self) -> &HotStuff {
@@ -221,8 +261,28 @@ impl LiteNode {
         }
     }
 
-    /// FedAvg over whatever W^LAST blobs the pool holds (a lost blob just
-    /// drops a row, like `DeflNode::aggregate_last`).
+    /// The aggregation rule applied to one resident row set: Multi-Krum
+    /// when `krum_f` is set (the robustness-bench defense), plain FedAvg
+    /// otherwise (the legacy lite aggregate). Shared by the committed
+    /// path AND the speculative lookahead, so a speculation hit trains
+    /// against exactly the aggregate the lockstep path would have used.
+    fn aggregate_rows(&self, rows: &[Weights]) -> Vec<f32> {
+        if rows.is_empty() {
+            return self.theta.to_vec();
+        }
+        let sw = vec![1.0f32; rows.len()];
+        if let Some(f) = self.cfg.krum_f {
+            if rows.len() >= f + 3 {
+                if let Ok(out) = krum::multi_krum(rows, &sw, f, rows.len() - f) {
+                    return out.aggregate;
+                }
+            }
+        }
+        krum::fedavg(rows, &sw).unwrap_or_else(|_| self.theta.to_vec())
+    }
+
+    /// Aggregate W^LAST from whatever blobs the pool holds (a lost blob
+    /// just drops a row, like `DeflNode::aggregate_last`).
     fn aggregate_last(&self) -> Vec<f32> {
         let digs = self.replica.last_round_digests();
         let rows: Vec<Weights> = digs
@@ -230,22 +290,25 @@ impl LiteNode {
             .filter_map(|(_, d)| self.pool.get(d).ok())
             .filter(|w| w.len() == self.cfg.dim)
             .collect();
-        if rows.is_empty() {
-            return self.theta.to_vec();
-        }
-        let sw = vec![1.0f32; rows.len()];
-        krum::fedavg(&rows, &sw).unwrap_or_else(|_| self.theta.to_vec())
+        self.aggregate_rows(&rows)
     }
 
-    /// Deterministic synthetic "training": a decayed aggregate plus a
-    /// per-(seed, node, round) pseudo-gradient.
-    fn local_update(&self, agg: Vec<f32>, round: u64) -> Weights {
-        let mut rng = Pcg::new(self.cfg.seed ^ 0x117e, ((self.id as u64) << 32) | round);
+    /// Deterministic synthetic "training" for ANY node: a decayed
+    /// aggregate plus a per-(seed, node, round) pseudo-gradient. Pure in
+    /// (aggregate, seed, node, round) — which is both the crash-restart
+    /// determinism claim and what lets colluding attackers recompute the
+    /// honest rows omnisciently.
+    fn local_update_for(&self, node: NodeId, agg: Vec<f32>, round: u64) -> Weights {
+        let mut rng = Pcg::new(self.cfg.seed ^ 0x117e, ((node as u64) << 32) | round);
         let mut w = agg;
         for x in w.iter_mut() {
             *x = 0.9 * *x + rng.normal_f32(0.0, 0.1);
         }
         Weights::new(w)
+    }
+
+    fn local_update(&self, agg: Vec<f32>, round: u64) -> Weights {
+        self.local_update_for(self.id, agg, round)
     }
 
     fn try_start_round(&mut self, ctx: &mut dyn Ctx) {
@@ -311,6 +374,79 @@ impl LiteNode {
         ctx.set_timer(delay_us, TIMER_TRAIN | target);
     }
 
+    /// The weights this node COMMITS for `target`: the honest tensor for
+    /// honest nodes, the attack-crafted one for byzantine nodes. All
+    /// poison randomness draws from [`attacks::round_rng`] — pure in
+    /// (seed, node, round) — so a speculatively trained, discarded, and
+    /// retrained round commits identical bytes.
+    fn committed_weights(&self, target: u64) -> Weights {
+        if !self.is_byzantine || self.attack == Attack::None {
+            return self.theta.clone();
+        }
+        if attacks::colludes(self.attack) {
+            // Omniscient collusion: recompute every honest node's update
+            // from the shared aggregate (purity of `local_update_for`),
+            // then craft against those rows. ALL colluders draw the
+            // shared direction from node 0's round stream — the
+            // collusion channel — so they commit one identical row.
+            let agg = self.aggregate_last();
+            let honest: Vec<Vec<f32>> = (self.cfg.n_byzantine..self.cfg.n_nodes)
+                .map(|j| self.local_update_for(j as NodeId, agg.clone(), target).to_vec())
+                .collect();
+            let mut rng = attacks::round_rng(self.cfg.seed, 0, target);
+            if !honest.is_empty() {
+                if let Some(rows) = attacks::craft_colluding_rows(self.attack, &honest, 1, &mut rng)
+                {
+                    return Weights::new(rows.into_iter().next().unwrap());
+                }
+            }
+        }
+        let mut poisoned = self.theta.to_vec();
+        let mut rng = attacks::round_rng(self.cfg.seed, self.id, target);
+        poison_weights(&mut poisoned, self.attack, &mut rng);
+        Weights::new(poisoned)
+    }
+
+    /// Chunk-griefing multicast: frames carry the TRUE committed digest
+    /// but corrupted payload bytes, so every receiver's SHA-256
+    /// reassembly check rejects the stitched tensor and the blob must be
+    /// recovered through the digest-addressed pull protocol (the griefer
+    /// serves the true bytes from its pool when asked — the attack costs
+    /// latency, not correctness).
+    fn multicast_griefed(&self, ctx: &mut dyn Ctx, blob: &WeightBlob) {
+        let mut corrupt = blob.weights.to_vec();
+        if let Some(x) = corrupt.first_mut() {
+            *x += 1.0e3;
+        }
+        let max = self.cfg.chunk_bytes;
+        let corrupt = Weights::new(corrupt);
+        if max == 0 || corrupt.as_bytes().len() <= max {
+            // Monolithic frames: the corrupted blob pools receiver-side
+            // under its OWN (wrong) digest, so the committed digest stays
+            // unresolved until pulled.
+            let junk = WeightBlob { node: blob.node, round: blob.round, weights: corrupt };
+            ctx.multicast(Traffic::Weights, WeightMsg::Whole(junk).to_bytes());
+            return;
+        }
+        let digest = blob.digest();
+        let bytes = corrupt.as_bytes();
+        let total_bytes = bytes.len() as u32;
+        let mut offset = 0usize;
+        while offset < bytes.len() {
+            let end = (offset + max).min(bytes.len());
+            let chunk = BlobChunk {
+                node: blob.node,
+                round: blob.round,
+                digest,
+                total_bytes,
+                offset: offset as u32,
+                payload: bytes[offset..end].to_vec(),
+            };
+            ctx.multicast(Traffic::Weights, WeightMsg::Chunk(chunk).to_bytes());
+            offset = end;
+        }
+    }
+
     /// Storage layer first (one shared tensor), then the UPD digest
     /// through consensus, then AGG after the GST_LT analogue.
     fn publish_update(&mut self, ctx: &mut dyn Ctx, target: u64) {
@@ -318,10 +454,15 @@ impl LiteNode {
         if self.replica.r_round + 1 != target {
             return; // round raced past while the publish was deferred
         }
-        let digest = self.theta.digest();
-        let blob = WeightBlob { node: self.id, round: target, weights: self.theta.clone() };
-        self.pool.put(target, self.theta.clone());
-        multicast_blob(ctx, &blob, self.cfg.chunk_bytes);
+        let committed = self.committed_weights(target);
+        let digest = committed.digest();
+        let blob = WeightBlob { node: self.id, round: target, weights: committed.clone() };
+        self.pool.put(target, committed);
+        if self.is_byzantine && attacks::griefs_chunks(self.attack) {
+            self.multicast_griefed(ctx, &blob);
+        } else {
+            multicast_blob(ctx, &blob, self.cfg.chunk_bytes);
+        }
 
         let upd = Tx::Upd { id: self.id, target_round: target, digest };
         let mut out = Vec::new();
@@ -384,8 +525,7 @@ impl LiteNode {
         if rows.is_empty() {
             return;
         }
-        let sw = vec![1.0f32; rows.len()];
-        let agg = krum::fedavg(&rows, &sw).unwrap_or_else(|_| self.theta.to_vec());
+        let agg = self.aggregate_rows(&rows);
         let theta = self.local_update(agg, target);
         if self.spec.take().is_some() {
             // Basis changed under the trainer: the old guess is dead.
@@ -465,6 +605,15 @@ impl Actor for LiteNode {
         }
     }
 
+    fn on_auth_fail(&mut self, ctx: &mut dyn Ctx, from: NodeId, class: Traffic) {
+        // Same policy as `DeflNode`: a forged Weights frame disqualifies
+        // the claimed sender as a blob holder.
+        if class == Traffic::Weights {
+            self.puller.on_auth_fail(from);
+            pull::refresh_wants(&mut self.puller, &self.replica, &self.pool, ctx);
+        }
+    }
+
     fn on_timer(&mut self, ctx: &mut dyn Ctx, id: u64) {
         if id & TIMER_HS != 0 {
             let mut out = Vec::new();
@@ -505,10 +654,18 @@ impl Actor for LiteNode {
     }
 }
 
+/// The key registry a lite cluster shares — consensus votes and (when
+/// the transport enables it) `SignedFrame` envelopes all verify against
+/// these keys. Exposed so hosts (benches, the sim) can hand the SAME
+/// registry to `SimNet::enable_auth` / `tcp::run_actor`.
+pub fn lite_registry(cfg: &LiteConfig) -> KeyRegistry {
+    KeyRegistry::new(cfg.n_nodes, cfg.seed)
+}
+
 /// Build a whole LiteNode cluster sharing one key registry, boxed for a
 /// transport host.
 pub fn lite_cluster(cfg: &LiteConfig) -> Vec<Box<dyn Actor>> {
-    let registry = KeyRegistry::new(cfg.n_nodes, cfg.seed);
+    let registry = lite_registry(cfg);
     (0..cfg.n_nodes as NodeId)
         .map(|id| Box::new(LiteNode::new(id, cfg.clone(), registry.clone())) as Box<dyn Actor>)
         .collect()
@@ -603,6 +760,86 @@ mod tests {
             assert_eq!(ds, base, "pipeline={pipeline} train_us={train_us} diverged");
             if pipeline && train_us > 0 {
                 assert!(hits > 0, "pipelined run never hit a speculation");
+            }
+        }
+    }
+
+    /// Drive one gallery configuration to completion and return every
+    /// node's (rounds, digest) plus the pull-recovery count.
+    fn run_attacked(cfg: LiteConfig, sim_seed: u64) -> (Vec<(u64, Digest)>, u64) {
+        let n = cfg.n_nodes;
+        let sim = SimConfig { n_nodes: n, seed: sim_seed, ..Default::default() };
+        let mut net = SimNet::new(sim, lite_cluster(&cfg));
+        drive(&mut net, n, 120_000_000);
+        let ds = digests(&mut net, n);
+        let recovered: u64 = (0..n as NodeId)
+            .map(|i| net.actor_as::<LiteNode>(i).unwrap().puller().stats.blobs_recovered)
+            .sum();
+        (ds, recovered)
+    }
+
+    /// Chunk griefing corrupts every multicast but commits TRUE weights:
+    /// receivers recover the blobs through the pull protocol, so the run
+    /// ends bit-identical to the no-attack run — the attack costs
+    /// latency, not the model.
+    #[test]
+    fn chunk_griefing_forces_pulls_but_not_divergence() {
+        let cfg = LiteConfig {
+            n_nodes: 4,
+            rounds: 3,
+            dim: 100,
+            chunk_bytes: 64,
+            agg_quorum: Some(4),
+            ..Default::default()
+        };
+        let (clean, _) = run_attacked(cfg.clone(), 9);
+        let griefed_cfg =
+            LiteConfig { n_byzantine: 1, attack: Attack::ChunkGrief, ..cfg };
+        let (griefed, recovered) = run_attacked(griefed_cfg, 9);
+        assert_eq!(griefed, clean, "griefing must not change any final model");
+        assert!(recovered > 0, "griefed blobs should be recovered via pulls");
+    }
+
+    /// An equivocating consensus replica (conflicting proposals to the
+    /// two cluster halves) must not break safety: every honest node
+    /// still finishes all rounds and agrees on the final model.
+    #[test]
+    fn equivocating_replica_cannot_split_the_cluster() {
+        let cfg = LiteConfig {
+            n_nodes: 4,
+            rounds: 3,
+            dim: 64,
+            n_byzantine: 1,
+            attack: Attack::Equivocate,
+            ..Default::default()
+        };
+        let (ds, _) = run_attacked(cfg, 13);
+        for (r, d) in &ds[1..] {
+            assert_eq!(*r, 3, "honest node stalled");
+            assert_eq!(*d, ds[1].1, "honest nodes diverged under equivocation");
+        }
+    }
+
+    /// Krum-mode aggregation with colluding Krum-evading attackers: the
+    /// run completes and all nodes (including the colluders, who
+    /// aggregate the same committed rows) agree on the final model.
+    #[test]
+    fn colluding_attack_runs_complete_under_krum_aggregation() {
+        for attack in [Attack::KrumEvade { eps: 0.5 }, Attack::MinMax, Attack::MinSum] {
+            let cfg = LiteConfig {
+                n_nodes: 5,
+                rounds: 3,
+                dim: 64,
+                n_byzantine: 1,
+                attack,
+                krum_f: Some(1),
+                agg_quorum: Some(5),
+                ..Default::default()
+            };
+            let (ds, _) = run_attacked(cfg, 17);
+            for (r, d) in &ds {
+                assert_eq!(*r, 3, "{attack:?}: node stalled");
+                assert_eq!(*d, ds[0].1, "{attack:?}: final models diverged");
             }
         }
     }

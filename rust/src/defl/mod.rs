@@ -35,10 +35,13 @@
 //!
 //! Lookahead is bounded to ONE round: speculating round r + 2 would
 //! need W^CUR rows of r + 1, which cannot exist before r + 1's UPDs
-//! commit. Byzantine nodes never speculate (their commit-time poison
-//! consumes attack-rng draws in round order). Occupancy is reported per
-//! node in [`crate::metrics::PipelineStats`]: hits, discards, and how
-//! much training time ran hidden behind the wait.
+//! commit. Byzantine nodes speculate too: commit-time poison draws from
+//! a per-(node, round) RNG stream ([`crate::attacks::round_rng`], a pure
+//! function of (seed, id, round)), so a discarded-then-retrained round
+//! redraws identical noise and adaptive attacks compose with the
+//! pipeline. Occupancy is reported per node in
+//! [`crate::metrics::PipelineStats`]: hits, discards, and how much
+//! training time ran hidden behind the wait.
 
 pub mod lite;
 pub mod node;
@@ -46,7 +49,7 @@ pub mod pull;
 pub mod replica;
 pub mod tx;
 
-pub use lite::{lite_cluster, LiteConfig, LiteNode};
+pub use lite::{lite_cluster, lite_registry, LiteConfig, LiteNode};
 pub use node::{DeflNode, NodeStats};
 pub use pull::{receive_weight_frame, FetchConfig, FetchStats, Puller};
 pub use replica::{execute_decided_cmds, ExecOutcome, ReplicaState, TxResponse};

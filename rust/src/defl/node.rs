@@ -103,7 +103,6 @@ pub struct DeflNode {
     pool: WeightPool,
     chunks: ChunkAssembler,
     puller: Puller,
-    atk_rng: crate::util::Pcg,
 
     l_round: u64,
     theta: Weights,
@@ -148,8 +147,6 @@ impl DeflNode {
         };
         let n = cfg.n_nodes;
         let agg_quorum = cfg.agg_quorum();
-        let mut atk_rng = crate::util::Pcg::new(cfg.seed ^ 0xa77a, id as u64 + 1);
-        atk_rng.next_u64();
         DeflNode {
             id,
             hs: HotStuff::new(id, n, registry, hs_cfg, ByzMode::Honest),
@@ -163,7 +160,6 @@ impl DeflNode {
                 chunk_bytes: cfg.chunk_bytes,
                 ..Default::default()
             }),
-            atk_rng,
             l_round: 0,
             theta: Weights::new(theta0),
             round_in_flight: None,
@@ -361,10 +357,14 @@ impl DeflNode {
     /// only difference between the two is WHEN θ was computed.
     fn commit_update(&mut self, ctx: &mut dyn Ctx, target: u64) {
         // Poisoning attacks transform the weights the node COMMITS; honest
-        // nodes commit the very tensor they keep (zero-copy).
+        // nodes commit the very tensor they keep (zero-copy). The poison
+        // noise draws from a per-(node, round) RNG stream — a pure
+        // function of (seed, id, target) — so a round trained
+        // speculatively, discarded, and retrained poisons identically.
         let committed = if self.is_byzantine {
             let mut poisoned = self.theta.to_vec();
-            poison_weights(&mut poisoned, self.attack, &mut self.atk_rng);
+            let mut rng = attacks::round_rng(self.cfg.seed, self.id, target);
+            poison_weights(&mut poisoned, self.attack, &mut rng);
             Weights::new(poisoned)
         } else {
             self.theta.clone()
@@ -416,17 +416,14 @@ impl DeflNode {
     /// AGG is submitted the quorum may close on the current shape any
     /// moment, so the timer speculates on whatever is committed.
     ///
-    /// Byzantine nodes never speculate: their commit-time poison draws
-    /// from `atk_rng` in round order, which a discarded-then-retrained
-    /// round would double-draw. History recording also disables it (the
+    /// Byzantine nodes speculate too: their commit-time poison draws from
+    /// a per-(node, round) RNG stream ([`attacks::round_rng`]), so a
+    /// discarded-then-retrained round redraws the SAME noise — adaptive
+    /// attackers get the pipeline's latency hiding without perturbing
+    /// the honest-run digests. History recording still disables it (the
     /// lookahead has no place to put the round-start aggregate).
     fn maybe_speculate(&mut self, ctx: &mut dyn Ctx, force: bool) {
-        if !self.cfg.pipeline
-            || self.done
-            || self.is_byzantine
-            || self.attack != Attack::None
-            || self.record_history
-        {
+        if !self.cfg.pipeline || self.done || self.record_history {
             return;
         }
         let deciding = self.replica.r_round + 1;
@@ -624,6 +621,18 @@ impl Actor for DeflNode {
                 }
             }
             Traffic::Blocks => {}
+        }
+    }
+
+    fn on_auth_fail(&mut self, ctx: &mut dyn Ctx, from: NodeId, class: Traffic) {
+        // A forged Weights frame means the claimed sender cannot be
+        // trusted as a blob holder: blacklist it in the pull protocol and
+        // rotate any fetch currently asked of it. Consensus frames need
+        // no reaction here — HotStuff's own vote/QC signatures already
+        // make an unauthenticated peer inert.
+        if class == Traffic::Weights {
+            self.puller.on_auth_fail(from);
+            pull::refresh_wants(&mut self.puller, &self.replica, &self.pool, ctx);
         }
     }
 

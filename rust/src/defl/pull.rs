@@ -102,6 +102,10 @@ pub struct FetchStats {
     pub serve_denied: u64,
     /// Wants abandoned after `max_cycles` fruitless rotations.
     pub gave_up: u64,
+    /// Transport-reported authentication failures attributed to peers
+    /// (each one blacklists the claimed sender as a holder — see
+    /// [`Puller::on_auth_fail`]).
+    pub auth_rejects: u64,
     /// Reply payload bytes served, per requesting peer, over the node's
     /// lifetime (the per-round budget windows reset; these do not) — the
     /// metrics surface of the serve budgets, aggregated cluster-wide by
@@ -411,6 +415,28 @@ impl Puller {
                 Err(e)
             }
         }
+    }
+
+    /// The transport rejected a frame whose envelope claimed to be from
+    /// `from` (signature verification failed). The claimed sender is no
+    /// longer a trustworthy holder: blacklist it for every outstanding
+    /// want, and rotate any fetch currently in flight to it — a peer
+    /// whose FetchReply cannot authenticate would only burn the timeout.
+    /// Holder-ring forgiveness still applies (if EVERY candidate ends up
+    /// blacklisted the ring is retried from the top), so a transient
+    /// auth failure cannot permanently strand a want.
+    pub fn on_auth_fail(&mut self, from: NodeId) {
+        self.stats.auth_rejects += 1;
+        let mut rotations = 0u64;
+        for w in self.wants.values_mut() {
+            w.bad.insert(from);
+            if w.asked == Some(from) {
+                w.asked = None;
+                w.next_due_us = 0; // rotate on the next tick
+                rotations += 1;
+            }
+        }
+        self.stats.rotations += rotations;
     }
 
     /// The asked holder reported it does not have the blob: rotate on
@@ -853,6 +879,52 @@ mod tests {
         ctx.now = 1_600;
         puller.tick(&mut ctx, &pool, &chunks);
         assert_eq!(ctx.sent_weight_msgs()[0].0, 3, "rotated to the next holder");
+    }
+
+    #[test]
+    fn auth_failure_blacklists_the_holder_and_rotates_inflight_fetches() {
+        let digest = tensor(9.0, 8).digest();
+        let pool = WeightPool::new(2);
+        let chunks = ChunkAssembler::new(1 << 20);
+        let mut puller = Puller::new(small_cfg());
+        puller.want(digest, 1, 1, 0);
+
+        // First tick asks the origin (holder ring at node 0: [1, 2, 3]).
+        let mut ctx = StubCtx::new(0, 4);
+        ctx.now = 1_000;
+        puller.tick(&mut ctx, &pool, &chunks);
+        assert_eq!(ctx.sent_weight_msgs()[0].0, 1, "origin asked first");
+
+        // The transport rejects a forged frame claiming to be node 1:
+        // the in-flight fetch rotates immediately instead of waiting out
+        // the timeout, and node 1 is skipped as a holder.
+        puller.on_auth_fail(1);
+        assert_eq!(puller.stats.auth_rejects, 1);
+        assert_eq!(puller.stats.rotations, 1);
+        let mut ctx = StubCtx::new(0, 4);
+        ctx.now = 1_100;
+        puller.tick(&mut ctx, &pool, &chunks);
+        assert_eq!(ctx.sent_weight_msgs()[0].0, 2, "blacklisted holder skipped");
+
+        // An auth failure from a peer we did NOT ask blacklists it but
+        // rotates nothing (the in-flight request to 2 stays in flight).
+        puller.on_auth_fail(3);
+        assert_eq!(puller.stats.auth_rejects, 2);
+        assert_eq!(puller.stats.rotations, 1);
+        let mut ctx = StubCtx::new(0, 4);
+        ctx.now = 1_200;
+        puller.tick(&mut ctx, &pool, &chunks);
+        assert!(ctx.sends.is_empty(), "request to 2 still in flight");
+
+        // After 2 times out, the rotation walks past both blacklisted
+        // holders (3, then 1) and lands back on 2 — auth failures thin
+        // the ring without stranding the want.
+        let mut ctx = StubCtx::new(0, 4);
+        ctx.now = 3_000;
+        puller.tick(&mut ctx, &pool, &chunks);
+        let sent = ctx.sent_weight_msgs();
+        assert_eq!(sent.len(), 1, "the want keeps fetching");
+        assert_eq!(sent[0].0, 2, "only the non-blacklisted holder is asked");
     }
 
     #[test]

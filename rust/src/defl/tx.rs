@@ -590,6 +590,7 @@ mod tests {
                             done = Some(b);
                         }
                     }
+                    other => return Err(format!("unexpected multicast frame {other:?}")),
                 }
             }
             let got = done.ok_or("blob never completed")?;

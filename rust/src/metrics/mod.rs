@@ -48,6 +48,10 @@ pub struct NetMeter {
     /// Frames lost in flight (targeted injection or random drop), keyed
     /// by SENDER — the bytes were metered as sent but never arrived.
     msgs_dropped: BTreeMap<(NodeId, Traffic), u64>,
+    /// Frames rejected at the transport boundary because their
+    /// `SignedFrame` envelope failed verification, keyed by the CLAIMED
+    /// sender — the per-peer forgery/replay attribution signal.
+    auth_fail: BTreeMap<(NodeId, Traffic), u64>,
 }
 
 impl NetMeter {
@@ -67,6 +71,33 @@ impl NetMeter {
     /// A frame from `node` was lost in flight.
     pub fn on_drop(&mut self, node: NodeId, class: Traffic) {
         *self.msgs_dropped.entry((node, class)).or_default() += 1;
+    }
+
+    /// A frame claiming to be from `claimed` failed signature
+    /// verification at the receiving transport and was rejected.
+    pub fn on_auth_fail(&mut self, claimed: NodeId, class: Traffic) {
+        *self.auth_fail.entry((claimed, class)).or_default() += 1;
+    }
+
+    /// Auth rejections attributed to one claimed sender (all classes).
+    pub fn auth_fail_by(&self, claimed: NodeId) -> u64 {
+        Traffic::ALL
+            .iter()
+            .map(|c| self.auth_fail.get(&(claimed, *c)).copied().unwrap_or(0))
+            .sum()
+    }
+
+    /// Cluster-wide auth rejections in one traffic class.
+    pub fn auth_fail_class(&self, class: Traffic) -> u64 {
+        self.auth_fail
+            .iter()
+            .filter(|((_, c), _)| *c == class)
+            .map(|(_, v)| *v)
+            .sum()
+    }
+
+    pub fn auth_fail_total(&self) -> u64 {
+        self.auth_fail.values().sum()
     }
 
     /// Cluster-wide frames lost in one traffic class.
@@ -152,6 +183,9 @@ impl NetMeter {
         }
         for (k, v) in &other.msgs_dropped {
             *self.msgs_dropped.entry(*k).or_default() += v;
+        }
+        for (k, v) in &other.auth_fail {
+            *self.auth_fail.entry(*k).or_default() += v;
         }
     }
 }
@@ -477,6 +511,27 @@ mod tests {
         assert_eq!(a.recv_by(2), 7);
         assert_eq!(a.dropped_total(), 2);
         assert_eq!(a.dropped_class(Traffic::Weights), 1);
+    }
+
+    #[test]
+    fn auth_failures_attributed_per_peer() {
+        let mut m = NetMeter::new();
+        assert_eq!(m.auth_fail_total(), 0);
+        m.on_auth_fail(2, Traffic::Weights);
+        m.on_auth_fail(2, Traffic::Weights);
+        m.on_auth_fail(2, Traffic::Consensus);
+        m.on_auth_fail(0, Traffic::Consensus);
+        assert_eq!(m.auth_fail_by(2), 3);
+        assert_eq!(m.auth_fail_by(0), 1);
+        assert_eq!(m.auth_fail_by(1), 0);
+        assert_eq!(m.auth_fail_class(Traffic::Weights), 2);
+        assert_eq!(m.auth_fail_total(), 4);
+        // merge folds in the other meter's attributions.
+        let mut other = NetMeter::new();
+        other.on_auth_fail(2, Traffic::Blocks);
+        m.merge(&other);
+        assert_eq!(m.auth_fail_by(2), 4);
+        assert_eq!(m.auth_fail_total(), 5);
     }
 
     #[test]

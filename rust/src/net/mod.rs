@@ -11,6 +11,45 @@
 //! below is defined ABOVE the transport seam, so sim and TCP runs are
 //! byte-identical.
 //!
+//! **Signed envelope** — with authentication on
+//! ([`sim::SimNet::enable_auth`], or the `auth` registry handed to
+//! [`tcp::run_actor`]), every frame of every class travels inside a
+//! [`crate::crypto::SignedFrame`]:
+//!
+//! ```text
+//! sender: u32 LE | class: u8 | sig: 64 B | payload: u32 len + bytes
+//! ```
+//!
+//! The signature covers the binding digest `H(class ‖ sender ‖
+//! H(payload))`, with the class byte from
+//! [`transport::class_wire_byte`] (Consensus = 0, Weights = 1,
+//! Blocks = 2; the cluster control plane reserves 3 — see
+//! `cluster::control::CTRL_WIRE_CLASS`). Both transports share the
+//! byte, so an envelope sealed for one transport verifies on the other
+//! (the sim-vs-TCP parity tests pin this).
+//!
+//! Verification rules, applied at delivery on BOTH hosts:
+//!
+//! 1. the envelope must decode (on an authenticated link a bare frame
+//!    with no envelope is rejected outright);
+//! 2. `sig.node == sender` AND `sender` must equal the transport-level
+//!    peer the frame arrived from — a validly signed envelope replayed
+//!    from another node's connection is rejected and attributed to the
+//!    REPLAYER;
+//! 3. the signature must verify under the claimed sender's registry key
+//!    against the binding digest (so payload, class, and sender are all
+//!    tamper-evident; a frame cannot cross traffic classes).
+//!
+//! A rejected frame is NEVER delivered to `on_message`: the transport
+//! counts a per-claimed-sender `auth_fail` meter
+//! ([`crate::metrics::NetMeter`]) and fires
+//! [`transport::Actor::on_auth_fail`] so protocols can react to the
+//! attribution (the pull protocol rotates off such peers as blob
+//! holders). The TCP driver drains its queue and verifies each burst in
+//! one [`crate::crypto::verify_frames`] pass (pooled above a small
+//! burst), keeping the clean-path cost flat; CI gates signed/unsigned
+//! rounds/sec ≥ 0.9 from `BENCH_runtime.json`.
+//!
 //! **Consensus frames** (`Traffic::Consensus`) are
 //! [`crate::hotstuff::Msg`] encodings. View batching changes how DeFL's
 //! 45-byte UPD / 13-byte AGG transactions travel:

@@ -19,9 +19,11 @@
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashSet};
+use std::sync::Arc;
 
-use crate::crypto::NodeId;
+use crate::crypto::{KeyRegistry, NodeId, Signature, SignedFrame};
 use crate::metrics::{NetMeter, Traffic};
+use crate::net::transport::class_wire_byte;
 use crate::util::Pcg;
 
 pub use crate::net::transport::{Actor, Ctx};
@@ -104,7 +106,12 @@ impl Ctx for SimCtx {
 #[derive(Debug)]
 enum EventKind {
     Start,
-    Deliver { from: NodeId, class: Traffic, bytes: Vec<u8> },
+    /// A frame in flight. `sig` is the sender's `SignedFrame` signature
+    /// over `(class, from, payload digest)` when authentication is on
+    /// (`None` on unauthenticated nets, or for raw-injected forgeries
+    /// that omit one). The envelope's wire bytes are already modelled by
+    /// [`HEADER_BYTES`] ("auth tag"), so byte meters are unchanged.
+    Deliver { from: NodeId, class: Traffic, bytes: Vec<u8>, sig: Option<Signature> },
     Timer { id: u64 },
 }
 
@@ -160,6 +167,10 @@ pub struct SimNet {
     cut_links: HashSet<(NodeId, NodeId)>,
     /// Targeted frame-loss rules (seeded, exact fault injection).
     drop_rules: Vec<DropRule>,
+    /// When set, every routed frame is signed at the sender and verified
+    /// at the receiver ([`SignedFrame`] binding); failures are counted
+    /// per claimed sender and NOT delivered.
+    auth: Option<Arc<KeyRegistry>>,
     rng: Pcg,
     halted: bool,
     events_processed: u64,
@@ -181,6 +192,7 @@ impl SimNet {
             slowdown: vec![1.0; n],
             cut_links: HashSet::new(),
             drop_rules: Vec::new(),
+            auth: None,
             rng,
             halted: false,
             events_processed: 0,
@@ -236,6 +248,42 @@ impl SimNet {
         self.drop_rules.push(DropRule { from, to, class, skip, count });
     }
 
+    /// Turn on per-frame authentication: every send/multicast is sealed
+    /// with the sender's key and verified at delivery. Frames that fail
+    /// (forged signature, wrong claimed sender, missing envelope) are
+    /// rejected with a per-peer `auth_fail` metric and the receiving
+    /// actor's `on_auth_fail` hook instead of `on_message`. Timing, RNG
+    /// streams, and byte meters are unchanged — [`HEADER_BYTES`] already
+    /// accounts the envelope.
+    pub fn enable_auth(&mut self, registry: Arc<KeyRegistry>) {
+        self.auth = Some(registry);
+    }
+
+    /// Inject one raw frame as an adversary: delivered to `to` after the
+    /// base link latency, claiming to be from `from`, carrying exactly
+    /// `sig` (forge it, omit it, or sign it with any key — the receiver's
+    /// verification decides). Bypasses sender-side signing and send
+    /// meters (the forger is not an honest publisher) and does not touch
+    /// the jitter RNG, so an injection perturbs nothing else.
+    pub fn inject_raw(
+        &mut self,
+        from: NodeId,
+        to: NodeId,
+        class: Traffic,
+        bytes: Vec<u8>,
+        sig: Option<Signature>,
+    ) {
+        let at = self.time_us + self.cfg.latency_us;
+        self.push(at, to, EventKind::Deliver { from, class, bytes, sig });
+    }
+
+    /// Sign one outgoing payload when authentication is on.
+    fn sign_frame(&self, from: NodeId, class: Traffic, bytes: &[u8]) -> Option<Signature> {
+        let auth = self.auth.as_ref()?;
+        let binding = SignedFrame::binding(from, class_wire_byte(class), bytes);
+        Some(auth.signer(from).sign(&binding))
+    }
+
     /// Apply targeted rules to one frame; true = eat it.
     fn injected_drop(&mut self, from: NodeId, to: NodeId, class: Traffic) -> bool {
         for r in self.drop_rules.iter_mut() {
@@ -266,7 +314,15 @@ impl SimNet {
         self.cfg.latency_us + jitter
     }
 
-    fn route(&mut self, from: NodeId, to: NodeId, class: Traffic, bytes: Vec<u8>, meter_send: bool) {
+    fn route(
+        &mut self,
+        from: NodeId,
+        to: NodeId,
+        class: Traffic,
+        bytes: Vec<u8>,
+        meter_send: bool,
+        sig: Option<Signature>,
+    ) {
         let wire = bytes.len() as u64 + HEADER_BYTES;
         if meter_send {
             self.meter.on_send(from, class, wire);
@@ -283,22 +339,25 @@ impl SimNet {
             return;
         }
         let delay = self.link_delay();
-        self.push(self.time_us + delay, to, EventKind::Deliver { from, class, bytes });
+        self.push(self.time_us + delay, to, EventKind::Deliver { from, class, bytes, sig });
     }
 
     fn apply_ctx(&mut self, node: NodeId, ctx: SimCtx) {
         let slow = self.slowdown[node as usize];
         for (to, class, bytes) in ctx.sends {
-            self.route(node, to, class, bytes, true);
+            let sig = self.sign_frame(node, class, &bytes);
+            self.route(node, to, class, bytes, true, sig);
         }
         for (class, bytes) in ctx.multicasts {
             // Single-send accounting at the publisher…
             let wire = bytes.len() as u64 + HEADER_BYTES;
             self.meter.on_send(node, class, wire);
-            // …delivery (and receive accounting) at every peer.
+            // …one signature for the whole fan-out (the binding names no
+            // recipient), delivery + receive accounting at every peer.
+            let sig = self.sign_frame(node, class, &bytes);
             for to in 0..self.cfg.n_nodes as NodeId {
                 if to != node {
-                    self.route(node, to, class, bytes.clone(), false);
+                    self.route(node, to, class, bytes.clone(), false, sig.clone());
                 }
             }
         }
@@ -329,10 +388,30 @@ impl SimNet {
         let mut actor = std::mem::replace(&mut self.actors[ev.node as usize], Box::new(Noop));
         match ev.kind {
             EventKind::Start => actor.on_start(&mut ctx),
-            EventKind::Deliver { from, class, bytes } => {
+            EventKind::Deliver { from, class, bytes, sig } => {
                 let wire = bytes.len() as u64 + HEADER_BYTES;
                 self.meter.on_recv(ev.node, class, wire);
-                actor.on_message(&mut ctx, from, class, &bytes);
+                // Same acceptance rule as `SignedFrame::verify`: the
+                // signature must be by the claimed sender's key AND name
+                // the sender. An authenticated net rejects unsigned
+                // frames outright.
+                let accepted = match (&self.auth, &sig) {
+                    (None, _) => true,
+                    (Some(reg), Some(sig)) => {
+                        sig.node == from
+                            && reg.verify(
+                                &SignedFrame::binding(from, class_wire_byte(class), &bytes),
+                                sig,
+                            )
+                    }
+                    (Some(_), None) => false,
+                };
+                if accepted {
+                    actor.on_message(&mut ctx, from, class, &bytes);
+                } else {
+                    self.meter.on_auth_fail(from, class);
+                    actor.on_auth_fail(&mut ctx, from, class);
+                }
             }
             EventKind::Timer { id } => actor.on_timer(&mut ctx, id),
         }
@@ -571,6 +650,95 @@ mod tests {
         net.run(10_000);
         assert_eq!(net.actor_as::<Pinger>(1).unwrap().pings, 3);
         assert_eq!(net.meter.dropped_total(), 0);
+    }
+
+    #[test]
+    fn authenticated_net_passes_honest_frames_with_identical_meters() {
+        let authed = || {
+            let mut net = two_pingers(10);
+            net.enable_auth(Arc::new(crate::crypto::KeyRegistry::new(2, 7)));
+            net.run(10_000);
+            net
+        };
+        let mut plain = two_pingers(10);
+        plain.run(10_000);
+        let mut net = authed();
+        assert!(net.halted());
+        assert_eq!(net.meter.auth_fail_total(), 0);
+        // Honest traffic is untouched: same virtual time, same bytes,
+        // same delivery counts as the unauthenticated run.
+        assert_eq!(net.now_us(), plain.now_us());
+        assert_eq!(net.meter.total_sent(), plain.meter.total_sent());
+        assert_eq!(
+            net.actor_as::<Pinger>(1).unwrap().pings,
+            plain.actor_as::<Pinger>(1).unwrap().pings
+        );
+    }
+
+    /// Records rejected-peer attributions via the `on_auth_fail` hook.
+    struct AuthWatcher {
+        got: Vec<Vec<u8>>,
+        rejected: Vec<(NodeId, Traffic)>,
+    }
+    impl Actor for AuthWatcher {
+        fn on_start(&mut self, _: &mut dyn Ctx) {}
+        fn on_message(&mut self, _: &mut dyn Ctx, _: NodeId, _: Traffic, bytes: &[u8]) {
+            self.got.push(bytes.to_vec());
+        }
+        fn on_timer(&mut self, _: &mut dyn Ctx, _: u64) {}
+        fn on_auth_fail(&mut self, _: &mut dyn Ctx, from: NodeId, class: Traffic) {
+            self.rejected.push((from, class));
+        }
+        fn as_any(&mut self) -> &mut dyn Any {
+            self
+        }
+    }
+
+    #[test]
+    fn forged_and_replayed_frames_rejected_with_attribution() {
+        use crate::crypto::{KeyRegistry, SignedFrame};
+        use crate::net::transport::class_wire_byte;
+        let reg = Arc::new(KeyRegistry::new(3, 21));
+        let actors: Vec<Box<dyn Actor>> = (0..3)
+            .map(|_| Box::new(AuthWatcher { got: Vec::new(), rejected: Vec::new() }) as Box<dyn Actor>)
+            .collect();
+        let cfg = SimConfig { n_nodes: 3, jitter_us: 0, ..Default::default() };
+        let mut net = SimNet::new(cfg, actors);
+        net.enable_auth(Arc::clone(&reg));
+
+        let payload = b"weights-chunk".to_vec();
+        let bind = |from: NodeId| {
+            SignedFrame::binding(from, class_wire_byte(Traffic::Weights), &payload)
+        };
+        // 1. Valid frame: node 2 signs as itself — delivered.
+        net.inject_raw(2, 0, Traffic::Weights, payload.clone(), Some(reg.signer(2).sign(&bind(2))));
+        // 2. Wrong-sender replay: node 2's valid signature re-attributed
+        //    to node 1 — rejected, attributed to the CLAIMED sender.
+        net.inject_raw(1, 0, Traffic::Weights, payload.clone(), Some(reg.signer(2).sign(&bind(2))));
+        // 3. Forged mac: signed with node 2's key while claiming node 1
+        //    in both fields — rejected.
+        net.inject_raw(1, 0, Traffic::Weights, payload.clone(), {
+            let mut s = reg.signer(2).sign(&bind(1));
+            s.node = 1;
+            Some(s)
+        });
+        // 4. Missing envelope on an authenticated net — rejected.
+        net.inject_raw(2, 0, Traffic::Weights, payload.clone(), None);
+        net.run(100);
+
+        let w = net.actor_as::<AuthWatcher>(0).unwrap();
+        assert_eq!(w.got, vec![payload.clone()], "only the valid frame was delivered");
+        assert_eq!(
+            w.rejected,
+            vec![
+                (1, Traffic::Weights),
+                (1, Traffic::Weights),
+                (2, Traffic::Weights),
+            ]
+        );
+        assert_eq!(net.meter.auth_fail_by(1), 2);
+        assert_eq!(net.meter.auth_fail_by(2), 1);
+        assert_eq!(net.meter.auth_fail_total(), 3);
     }
 
     #[test]

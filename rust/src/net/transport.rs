@@ -23,6 +23,18 @@ use std::any::Any;
 use crate::crypto::NodeId;
 use crate::metrics::Traffic;
 
+/// The one-byte wire encoding of a traffic class, shared by every
+/// transport (the TCP frame header and the `SignedFrame` binding both
+/// use it, so a signature produced for one transport verifies on the
+/// other — the sim-vs-TCP parity tests rely on this).
+pub fn class_wire_byte(class: Traffic) -> u8 {
+    match class {
+        Traffic::Consensus => 0,
+        Traffic::Weights => 1,
+        Traffic::Blocks => 2,
+    }
+}
+
 /// Side-effect interface handed to actors. Implementations buffer the
 /// requested effects and apply them after the callback returns (so an
 /// actor never re-enters itself).
@@ -69,6 +81,12 @@ pub trait Actor {
     fn on_message(&mut self, ctx: &mut dyn Ctx, from: NodeId, class: Traffic, bytes: &[u8]);
     /// A timer set via `ctx.set_timer` fired.
     fn on_timer(&mut self, ctx: &mut dyn Ctx, timer_id: u64);
+    /// The transport rejected a frame claiming to be from `from` because
+    /// its `SignedFrame` envelope failed verification. The frame is NOT
+    /// delivered; this hook lets protocols react to the attribution (e.g.
+    /// the pull protocol blacklists the peer as a blob holder). Default:
+    /// ignore — the transport already counted the per-peer metric.
+    fn on_auth_fail(&mut self, _ctx: &mut dyn Ctx, _from: NodeId, _class: Traffic) {}
     /// Downcast hook so experiments can extract actor state after a run.
     fn as_any(&mut self) -> &mut dyn Any;
 }

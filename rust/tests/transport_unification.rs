@@ -122,6 +122,7 @@ fn run_on_tcp(c: &ExperimentConfig, base_port: u16) -> Vec<(u64, Digest)> {
                 Duration::from_secs(180),
                 |n| n.done,
                 Duration::from_secs(3),
+                None,
             )
             .expect("run");
             let d = node.final_theta.as_ref().expect("final theta").digest();
@@ -181,11 +182,15 @@ fn sim_and_tcp_agree_on_batched_chunked_path() {
         agg_quorum: None,
         pipeline: true,
         train_us: 0,
+        ..Default::default()
     };
 
-    // Simulator run.
+    // Simulator run — with per-frame authentication on, so this pins the
+    // signed envelope path end-to-end on BOTH transports (digests must
+    // still match the TCP mesh, which also runs signed below).
     let sim_cfg = SimConfig { n_nodes: c.n_nodes, latency_us: 200, jitter_us: 50, drop_prob: 0.0, seed: 3 };
     let mut net = SimNet::new(sim_cfg, lite_cluster(&c));
+    net.enable_auth(Arc::new(KeyRegistry::new(c.n_nodes, c.seed)));
     let mut t = 0u64;
     loop {
         t += 500_000;
@@ -211,7 +216,7 @@ fn sim_and_tcp_agree_on_batched_chunked_path() {
         let (c, addrs) = (c.clone(), addrs.clone());
         handles.push(std::thread::spawn(move || {
             let registry = KeyRegistry::new(c.n_nodes, c.seed);
-            let mut node = LiteNode::new(id, c, registry);
+            let mut node = LiteNode::new(id, c, registry.clone());
             let mesh = TcpNode::connect_mesh(id, &addrs).expect("mesh");
             run_actor(
                 &mesh,
@@ -219,6 +224,7 @@ fn sim_and_tcp_agree_on_batched_chunked_path() {
                 Duration::from_secs(120),
                 |n| n.done,
                 Duration::from_secs(2),
+                Some(&registry),
             )
             .expect("run");
             (node.rounds_done, node.final_digest.expect("tcp final digest"))
@@ -267,6 +273,9 @@ impl Actor for DropNthChunk {
     fn on_timer(&mut self, ctx: &mut dyn Ctx, id: u64) {
         self.inner.on_timer(ctx, id);
     }
+    fn on_auth_fail(&mut self, ctx: &mut dyn Ctx, from: NodeId, class: Traffic) {
+        self.inner.on_auth_fail(ctx, from, class);
+    }
     fn as_any(&mut self) -> &mut dyn Any {
         self
     }
@@ -293,6 +302,7 @@ fn sim_and_tcp_recover_identically_from_a_dropped_chunk() {
         agg_quorum: None,
         pipeline: true,
         train_us: 0,
+        ..Default::default()
     };
 
     let build = |id: NodeId, c: &LiteConfig| {
@@ -358,6 +368,7 @@ fn sim_and_tcp_recover_identically_from_a_dropped_chunk() {
                     Duration::from_secs(120),
                     |a| a.inner.done,
                     Duration::from_secs(2),
+                    None,
                 )
                 .expect("run");
                 assert_eq!(actor.remaining, 0, "tcp: the targeted chunk was never dropped");
@@ -374,6 +385,7 @@ fn sim_and_tcp_recover_identically_from_a_dropped_chunk() {
                     Duration::from_secs(120),
                     |n| n.done,
                     Duration::from_secs(2),
+                    None,
                 )
                 .expect("run");
                 (node.rounds_done, node.final_digest.expect("tcp digest"))
@@ -393,4 +405,121 @@ fn sim_and_tcp_recover_identically_from_a_dropped_chunk() {
         sim[0].1, tcp[0].1,
         "dropped-chunk recovery: sim and TCP reached different final models"
     );
+}
+
+/// Minimal actor recording which frames the transport delivered vs
+/// rejected — the probe for the forged-frame parity test below.
+#[derive(Default)]
+struct AuthProbe {
+    got: Vec<(NodeId, Vec<u8>)>,
+    rejected: Vec<(NodeId, Traffic)>,
+}
+
+impl Actor for AuthProbe {
+    fn on_start(&mut self, _ctx: &mut dyn Ctx) {}
+    fn on_message(&mut self, _ctx: &mut dyn Ctx, from: NodeId, _class: Traffic, bytes: &[u8]) {
+        self.got.push((from, bytes.to_vec()));
+    }
+    fn on_timer(&mut self, _ctx: &mut dyn Ctx, _id: u64) {}
+    fn on_auth_fail(&mut self, _ctx: &mut dyn Ctx, from: NodeId, class: Traffic) {
+        self.rejected.push((from, class));
+    }
+    fn as_any(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+/// Authenticated-wire parity: the SAME three frames — one honestly
+/// sealed by node 2, one wrong-sender replay of node 2's envelope pushed
+/// by node 0, and one garbage frame with no envelope — must be accepted
+/// and rejected IDENTICALLY by the simulator and the TCP driver, with
+/// the same per-claimed-sender attribution.
+#[test]
+fn forged_frames_rejected_identically_on_sim_and_tcp() {
+    use defl::crypto::SignedFrame;
+    use defl::net::transport::class_wire_byte;
+    use defl::util::Encode;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let reg = KeyRegistry::new(3, 77);
+    let payload = b"authenticated-weights".to_vec();
+    let wclass = class_wire_byte(Traffic::Weights);
+    let sealed = SignedFrame::seal(&reg.signer(2), wclass, payload.clone());
+
+    // ---- Simulator side: node 1 hosts the probe, frames injected raw.
+    let actors: Vec<Box<dyn Actor>> =
+        (0..3).map(|_| Box::new(AuthProbe::default()) as Box<dyn Actor>).collect();
+    let sim_cfg = SimConfig { n_nodes: 3, latency_us: 100, jitter_us: 0, drop_prob: 0.0, seed: 5 };
+    let mut net = SimNet::new(sim_cfg, actors);
+    net.enable_auth(Arc::new(reg.clone()));
+    // Honest: node 2's valid envelope under its own transport identity.
+    net.inject_raw(2, 1, Traffic::Weights, payload.clone(), Some(sealed.sig.clone()));
+    // Replay: node 0 pushes node 2's (valid) envelope as its own frame.
+    net.inject_raw(0, 1, Traffic::Weights, payload.clone(), Some(sealed.sig.clone()));
+    // Garbage: no envelope at all.
+    net.inject_raw(0, 1, Traffic::Weights, b"junk".to_vec(), None);
+    net.run_until(1_000_000, u64::MAX);
+    let probe = net.actor_as::<AuthProbe>(1).expect("probe");
+    let sim_got = probe.got.clone();
+    let mut sim_rejected = probe.rejected.clone();
+    sim_rejected.sort_by_key(|(from, _)| *from);
+
+    // ---- TCP side: same three frames over real sockets.
+    let addrs = local_addrs(3, 39815);
+    let done = Arc::new(AtomicBool::new(false));
+    let mut senders = Vec::new();
+    for id in [0u32, 2u32] {
+        let (addrs, reg, done) = (addrs.clone(), reg.clone(), done.clone());
+        let (payload, sealed_bytes) = (payload.clone(), sealed.to_bytes());
+        senders.push(std::thread::spawn(move || {
+            let mesh = TcpNode::connect_mesh(id, &addrs).expect("mesh");
+            if id == 2 {
+                // Honest: seal under our own key (exactly what run_actor
+                // would do) and send.
+                let f = SignedFrame::seal(&reg.signer(2), class_wire_byte(Traffic::Weights), payload);
+                mesh.send(1, Traffic::Weights, &f.to_bytes()).expect("send");
+            } else {
+                // Replay node 2's envelope from node 0's connection, then
+                // a frame with no envelope at all.
+                mesh.send(1, Traffic::Weights, &sealed_bytes).expect("send");
+                mesh.send(1, Traffic::Weights, b"junk").expect("send");
+            }
+            // Keep the socket open until the probe finished judging.
+            let t0 = std::time::Instant::now();
+            while !done.load(Ordering::SeqCst) && t0.elapsed() < Duration::from_secs(30) {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }));
+    }
+    let mut probe = AuthProbe::default();
+    {
+        let mesh = TcpNode::connect_mesh(1, &addrs).expect("mesh");
+        run_actor(
+            &mesh,
+            &mut probe,
+            Duration::from_secs(30),
+            |p| !p.got.is_empty() && p.rejected.len() >= 2,
+            Duration::ZERO,
+            Some(&reg),
+        )
+        .expect("run");
+    }
+    done.store(true, Ordering::SeqCst);
+    for s in senders {
+        s.join().expect("sender thread");
+    }
+    let tcp_got = probe.got;
+    let mut tcp_rejected = probe.rejected;
+    tcp_rejected.sort_by_key(|(from, _)| *from);
+
+    // Identical acceptance: only the honest frame, same payload, same
+    // attributed sender — and identical rejection attribution.
+    assert_eq!(sim_got, vec![(2, payload.clone())], "sim accepted set");
+    assert_eq!(tcp_got, sim_got, "sim and TCP accepted different frames");
+    assert_eq!(
+        sim_rejected,
+        vec![(0, Traffic::Weights), (0, Traffic::Weights)],
+        "sim rejection attribution"
+    );
+    assert_eq!(tcp_rejected, sim_rejected, "sim and TCP rejected differently");
 }
