@@ -1,0 +1,218 @@
+//! Sustained-load micro bench: commit-latency percentiles under
+//! continuous client traffic and the measured capacity model.
+//!
+//! Everything runs on the virtual-time simulator (n = 8 lite silos,
+//! artifact-free), so `BENCH_sustained.json` is bit-deterministic — CI
+//! runs this bench twice and diffs the two files byte-for-byte, then
+//! gates on the recorded numbers (p99 under the smoke SLO, a knee
+//! present, pipelined rounds/sec ≥ lockstep under identical load).
+//!
+//! The sweep models a silo front-end where every accepted client update
+//! costs `client_ingest_us` of UPD-publish delay: offered load then
+//! genuinely lengthens rounds (round_time ≈ base / (1 − rate·ingest)),
+//! which is what gives the capacity curve a knee instead of a flat line.
+mod common;
+
+use defl::defl::lite::LiteConfig;
+use defl::load::{run_sustained, CapacityModel, LoadConfig, LoadMode, RatePoint};
+use defl::net::sim::SimConfig;
+use defl::util::bench::BenchReport;
+
+const N: usize = 8;
+/// Smoke SLO: p99 arrival→commit latency under sustained load (µs).
+const SLO_P99_US: u64 = 400_000;
+/// A rate only counts as sustained if ≥ 99% of its arrivals committed.
+const MIN_COMPLETION: f64 = 0.99;
+
+fn lite(pipeline: bool) -> LiteConfig {
+    LiteConfig {
+        n_nodes: N,
+        dim: 256,
+        seed: 7,
+        gst_us: 20_000,
+        chunk_bytes: 1 << 16,
+        batch_consensus: true,
+        timeout_base_us: 100_000,
+        fetch_retry_us: 50_000,
+        // Unanimous AGG quorum: every round waits for the slowest silo's
+        // (ingest-delayed) UPD — the regime where load shows up.
+        agg_quorum: Some(N),
+        pipeline,
+        train_us: 20_000,
+        client_ingest_us: 100,
+        ..Default::default()
+    }
+}
+
+fn sim() -> SimConfig {
+    SimConfig { n_nodes: N, latency_us: 200, jitter_us: 50, drop_prob: 0.0, seed: 5 }
+}
+
+fn open_load(rate: f64) -> LoadConfig {
+    LoadConfig {
+        mode: LoadMode::Open { rate_per_silo_hz: rate, poisson: true },
+        duration_us: 5_000_000,
+        drain_us: 10_000_000,
+        step_us: 5_000,
+        seed: 0x5eed,
+    }
+}
+
+fn main() {
+    common::bench_scale();
+    let mut report = BenchReport::new("micro_sustained");
+    let mut failures: Vec<String> = Vec::new();
+
+    // -- Capacity sweep -------------------------------------------------
+    // rate·ingest: 0.1, 0.25, 0.5, 0.95 — from near-idle to past the
+    // knee (at 9 500/s/silo the model predicts ~20× round inflation,
+    // well over the SLO).
+    println!("== micro: sustained-load capacity sweep (lite, virtual time, n={N}) ==");
+    let rates = [1_000.0, 2_500.0, 5_000.0, 9_500.0];
+    let mut points = Vec::new();
+    for &rate in &rates {
+        let out = run_sustained(&lite(true), &sim(), &open_load(rate));
+        let p = RatePoint::from_outcome(rate, &out);
+        println!(
+            "rate {rate:>7.0}/s/silo  p50 {:>7} µs  p99 {:>8} µs  p999 {:>8} µs  \
+             {:>6.3} rounds/s  {:>5.0} B/node/round  {}/{} committed",
+            p.p50_us,
+            p.p99_us,
+            p.p999_us,
+            p.rounds_per_sec,
+            p.bytes_per_node_per_round,
+            p.commits,
+            p.arrivals,
+        );
+        points.push(p);
+    }
+    let model = CapacityModel::new(SLO_P99_US, MIN_COMPLETION, points);
+    for p in &model.points {
+        report.record_metrics(
+            &format!("sustained/rate r={}", p.rate_per_silo_hz),
+            &[("n", N as f64), ("rate_per_silo_hz", p.rate_per_silo_hz)],
+            &[
+                ("p50_us", p.p50_us as f64),
+                ("p99_us", p.p99_us as f64),
+                ("p999_us", p.p999_us as f64),
+                ("rounds_per_sec", p.rounds_per_sec),
+                ("bytes_per_node_per_round", p.bytes_per_node_per_round),
+                ("arrivals", p.arrivals as f64),
+                ("commits", p.commits as f64),
+                ("sustainable", if model.sustains(p) { 1.0 } else { 0.0 }),
+            ],
+        );
+    }
+    match model.knee() {
+        Some(knee) => {
+            // One update per user-hour: the cross-silo extrapolation the
+            // ROADMAP's "millions of users" claim rests on.
+            let interval_s = 3_600.0;
+            let users = model.users_supported(N, interval_s).unwrap();
+            println!(
+                "capacity knee: {:.0}/s/silo (p99 {} µs ≤ SLO {} µs) → cluster {:.0}/s \
+                 → {users:.2e} users at one update per hour",
+                knee.rate_per_silo_hz,
+                knee.p99_us,
+                SLO_P99_US,
+                model.cluster_rate_hz(N).unwrap(),
+            );
+            report.record_metrics(
+                "sustained/capacity",
+                &[("n", N as f64), ("slo_p99_us", SLO_P99_US as f64)],
+                &[
+                    ("knee_rate_per_silo_hz", knee.rate_per_silo_hz),
+                    ("knee_p99_us", knee.p99_us as f64),
+                    ("cluster_rate_hz", model.cluster_rate_hz(N).unwrap()),
+                    ("update_interval_s", interval_s),
+                    ("users_per_interval", users),
+                ],
+            );
+        }
+        None => failures.push(format!(
+            "no sustainable rate: even {:.0}/s/silo blew the {SLO_P99_US} µs SLO",
+            rates[0]
+        )),
+    }
+
+    // -- Pipelined vs lockstep under identical sustained load -----------
+    println!("\n== micro: pipelined vs lockstep under sustained load ==");
+    let rate = 2_500.0;
+    let pipe = run_sustained(&lite(true), &sim(), &open_load(rate));
+    let lock = run_sustained(&lite(false), &sim(), &open_load(rate));
+    println!(
+        "pipelined {:>6.3} rounds/s p99 {} µs (hits {} discards {} overlap {} ms) | \
+         lockstep {:>6.3} rounds/s p99 {} µs",
+        pipe.rounds_per_sec,
+        pipe.hist.p99(),
+        pipe.pipeline.spec_hits,
+        pipe.pipeline.spec_discards,
+        pipe.pipeline.train_overlap_us / 1_000,
+        lock.rounds_per_sec,
+        lock.hist.p99(),
+    );
+    report.record_metrics(
+        "sustained/pipelined_vs_lockstep",
+        &[("n", N as f64), ("rate_per_silo_hz", rate)],
+        &[
+            ("pipelined_rounds_per_sec", pipe.rounds_per_sec),
+            ("lockstep_rounds_per_sec", lock.rounds_per_sec),
+            ("pipelined_p99_us", pipe.hist.p99() as f64),
+            ("lockstep_p99_us", lock.hist.p99() as f64),
+            ("spec_hits", pipe.pipeline.spec_hits as f64),
+            ("spec_discards", pipe.pipeline.spec_discards as f64),
+            ("train_overlap_us", pipe.pipeline.train_overlap_us as f64),
+        ],
+    );
+    if pipe.rounds_per_sec < lock.rounds_per_sec {
+        failures.push(format!(
+            "pipelined engine slower than lockstep under load: {:.3} < {:.3} rounds/s",
+            pipe.rounds_per_sec, lock.rounds_per_sec
+        ));
+    }
+
+    // -- Closed-loop point ----------------------------------------------
+    // A think-time client population: the rate is emergent from latency,
+    // reported alongside the open-loop knee for comparison.
+    println!("\n== micro: closed-loop client population ==");
+    let closed_cfg = LoadConfig {
+        mode: LoadMode::Closed { clients_per_silo: 50, think_us: 100_000 },
+        duration_us: 5_000_000,
+        drain_us: 10_000_000,
+        step_us: 5_000,
+        seed: 0xc105ed,
+    };
+    let closed = run_sustained(&lite(true), &sim(), &closed_cfg);
+    let emergent_hz = closed.arrivals as f64 / (N as f64 * 5.0);
+    println!(
+        "50 clients/silo, 100 ms think: emergent {emergent_hz:.0}/s/silo, p50 {} µs \
+         p99 {} µs, {}/{} committed",
+        closed.hist.p50(),
+        closed.hist.p99(),
+        closed.commits,
+        closed.arrivals,
+    );
+    report.record_metrics(
+        "sustained/closed_loop",
+        &[("n", N as f64), ("clients_per_silo", 50.0), ("think_us", 100_000.0)],
+        &[
+            ("rate_hz", emergent_hz),
+            ("p50_us", closed.hist.p50() as f64),
+            ("p99_us", closed.hist.p99() as f64),
+            ("completion", closed.completion()),
+        ],
+    );
+    if closed.arrivals == 0 {
+        failures.push("closed-loop population issued no arrivals".into());
+    }
+
+    let path = common::bench_report_path("BENCH_sustained.json");
+    report.write(&path).expect("write BENCH_sustained.json");
+    println!("\nwrote {} ({} entries)", path.display(), report.len());
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("FAIL: {f}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -119,6 +119,19 @@ fn run() -> Result<()> {
         SiloMode::Full => run_full(&cc, id, &mesh, &snap, &shutdown)?,
     };
 
+    // Final-state heartbeat BEFORE the Done frame (same writer mutex, so
+    // the two can't interleave): the run loop updated `snap` on its last
+    // tick, and the supervisor's exit aggregation — notably the
+    // commit-latency histograms of a sustained-load run — must see those
+    // tail commits rather than whatever the periodic thread last shipped.
+    {
+        let s = snap.lock().unwrap().clone();
+        let _ = write_ctrl_signed(
+            &mut *writer.lock().unwrap(),
+            &ctrl_signer,
+            &CtrlMsg::Heartbeat(s),
+        );
+    }
     let _ = write_ctrl_signed(
         &mut *writer.lock().unwrap(),
         &ctrl_signer,

@@ -12,6 +12,12 @@
 //!   CLUSTER_ROUNDS <r>
 //!   CLUSTER_DIGEST <hex>
 //!   CLUSTER_RESTARTS <n>
+//! and, when the sustained-load driver is on
+//! (`experiment.load_rate_per_s > 0`):
+//!   CLUSTER_ARRIVALS / CLUSTER_COMMITS / CLUSTER_P50_US /
+//!   CLUSTER_P99_US / CLUSTER_P999_US
+//! plus, for a `--kill` run under load, the recovery windows
+//!   CLUSTER_P99_PREKILL_US / CLUSTER_P99_POSTREJOIN_US
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -56,5 +62,22 @@ fn run() -> Result<()> {
     println!("CLUSTER_ROUNDS {}", report.rounds);
     println!("CLUSTER_DIGEST {}", report.digest.hex());
     println!("CLUSTER_RESTARTS {}", report.restarts);
+    if report.load_arrivals > 0 {
+        println!("CLUSTER_ARRIVALS {}", report.load_arrivals);
+        println!("CLUSTER_COMMITS {}", report.load_commits);
+        println!("CLUSTER_P50_US {}", report.commit_hist.p50());
+        println!("CLUSTER_P99_US {}", report.commit_hist.p99());
+        println!("CLUSTER_P999_US {}", report.commit_hist.p999());
+        if let Some(pre) = &report.prekill_hist {
+            if pre.count() > 0 {
+                println!("CLUSTER_P99_PREKILL_US {}", pre.p99());
+            }
+        }
+        if let Some(post) = &report.postrejoin_hist {
+            if post.count() > 0 {
+                println!("CLUSTER_P99_POSTREJOIN_US {}", post.p99());
+            }
+        }
+    }
     Ok(())
 }

@@ -90,6 +90,16 @@ pub struct ClusterConfig {
     pub dim: usize,
     /// HotStuff base view timeout (ms).
     pub hs_timeout_ms: u64,
+    /// Sustained-load driver mode: client update arrivals per second
+    /// per silo (0 = off). Each lite silo self-paces arrivals from its
+    /// own seeded schedule and reports arrival→commit latency through
+    /// its heartbeats — see the runbook in [`crate::cluster`].
+    pub load_rate_per_s: f64,
+    /// Poisson (true) or fixed-gap (false) arrival schedule.
+    pub load_poisson: bool,
+    /// Modelled per-arrival ingest cost (µs) added to the UPD publish
+    /// delay — what makes offered load lengthen rounds.
+    pub client_ingest_us: u64,
     /// The experiment payload; `n_nodes` is forced to the cluster's.
     pub exp: ExperimentConfig,
 }
@@ -112,6 +122,9 @@ impl Default for ClusterConfig {
             linger_ms: 3_000,
             dim: 1_024,
             hs_timeout_ms: 100,
+            load_rate_per_s: 0.0,
+            load_poisson: true,
+            client_ingest_us: 0,
             exp: ExperimentConfig { n_nodes, ..Default::default() },
         }
     }
@@ -153,6 +166,9 @@ const EXPERIMENT_KEYS: &[&str] = &[
     "experiment.fetch_retry_ms",
     "experiment.dim",
     "experiment.hs_timeout_ms",
+    "experiment.load_rate_per_s",
+    "experiment.load_poisson",
+    "experiment.client_ingest_us",
 ];
 
 impl ClusterConfig {
@@ -233,6 +249,13 @@ impl ClusterConfig {
             .unwrap_or(e.fetch_retry_ms);
         cfg.dim = doc.get_parse("experiment.dim")?.unwrap_or(cfg.dim);
         cfg.hs_timeout_ms = doc.get_parse("experiment.hs_timeout_ms")?.unwrap_or(cfg.hs_timeout_ms);
+        cfg.load_rate_per_s = doc
+            .get_parse("experiment.load_rate_per_s")?
+            .unwrap_or(cfg.load_rate_per_s);
+        cfg.load_poisson = doc.get_parse("experiment.load_poisson")?.unwrap_or(cfg.load_poisson);
+        cfg.client_ingest_us = doc
+            .get_parse("experiment.client_ingest_us")?
+            .unwrap_or(cfg.client_ingest_us);
 
         cfg.exp.n_nodes = cfg.n_nodes;
         cfg.validate()?;
@@ -294,7 +317,10 @@ impl ClusterConfig {
              pipeline = {}\n\
              fetch_retry_ms = {}\n\
              dim = {}\n\
-             hs_timeout_ms = {}\n",
+             hs_timeout_ms = {}\n\
+             load_rate_per_s = {}\n\
+             load_poisson = {}\n\
+             client_ingest_us = {}\n",
             self.n_nodes,
             self.host,
             self.base_port,
@@ -324,6 +350,9 @@ impl ClusterConfig {
             self.exp.fetch_retry_ms,
             self.dim,
             self.hs_timeout_ms,
+            self.load_rate_per_s,
+            self.load_poisson,
+            self.client_ingest_us,
         )
     }
 
@@ -352,6 +381,9 @@ impl ClusterConfig {
         }
         if self.hs_timeout_ms == 0 {
             bail!("experiment.hs_timeout_ms must be positive");
+        }
+        if !self.load_rate_per_s.is_finite() || self.load_rate_per_s < 0.0 {
+            bail!("experiment.load_rate_per_s must be finite and >= 0");
         }
         if self.exp.n_nodes != self.n_nodes {
             bail!("experiment n_nodes diverged from cluster.nodes");
@@ -407,6 +439,11 @@ impl ClusterConfig {
             // crash-restart digest guarantee is unchanged; Krum-mode lite
             // runs are the attack bench's and the simulator's job.
             krum_f: None,
+            // Sustained-load knobs: arrivals never change tensor content,
+            // so a loaded cluster still commits the exact no-load digests.
+            load_rate_per_s: self.load_rate_per_s,
+            load_poisson: self.load_poisson,
+            client_ingest_us: self.client_ingest_us,
         }
     }
 
@@ -493,6 +530,23 @@ mod tests {
         .unwrap();
         assert!(!lockstep.lite_config().pipeline);
         assert!(!lockstep.full_config().pipeline);
+        // Load driver off by default; the three knobs flow to LiteConfig.
+        assert_eq!(cfg.load_rate_per_s, 0.0);
+        assert_eq!(lc.load_rate_per_s, 0.0);
+        let loaded = ClusterConfig::parse(
+            "[cluster]\nnodes = 4\n[experiment]\nload_rate_per_s = 250.5\n\
+             load_poisson = false\nclient_ingest_us = 120\n",
+        )
+        .unwrap();
+        let llc = loaded.lite_config();
+        assert_eq!(llc.load_rate_per_s, 250.5);
+        assert!(!llc.load_poisson);
+        assert_eq!(llc.client_ingest_us, 120);
+        assert!(
+            ClusterConfig::parse("[cluster]\nnodes = 4\n[experiment]\nload_rate_per_s = -1\n")
+                .is_err(),
+            "negative arrival rate must be rejected"
+        );
         // The full-mode config is the experiment section verbatim, with
         // the cluster's n.
         assert_eq!(cfg.full_config().n_nodes, 4);
@@ -542,6 +596,11 @@ mod tests {
                     linger_ms: rng.gen_range(5_000),
                     dim: 1 + rng.gen_usize(1 << 14),
                     hs_timeout_ms: 20 + rng.gen_range(400),
+                    // Quarter-step rates: f64 Display/parse roundtrips
+                    // these exactly, which the property requires.
+                    load_rate_per_s: rng.gen_range(10_000) as f64 / 4.0,
+                    load_poisson: rng.f64() < 0.5,
+                    client_ingest_us: rng.gen_range(1_000),
                     ..Default::default()
                 };
                 cfg.exp.n_nodes = n_nodes;

@@ -72,6 +72,67 @@
 //! bit-identical to `pipeline = false` (the lockstep baseline kept for
 //! A/B runs). See the [`crate::defl`] module docs for the lifecycle and
 //! the one-round-lookahead bound.
+//!
+//! # Runbook: sustained load against a real TCP cluster
+//!
+//! The sustained-load driver (see [`crate::load`]) is node-internal:
+//! each lite silo self-paces seeded client arrivals from its own timer,
+//! so driving a *real* multi-process cluster needs nothing beyond three
+//! `[experiment]` knobs in the TOML:
+//!
+//! ```text
+//! [experiment]
+//! load_rate_per_s = 200     # client arrivals per second PER SILO (0 = off)
+//! load_poisson    = true    # Poisson gaps (false = fixed-rate)
+//! client_ingest_us = 100    # modelled per-arrival ingest cost (µs)
+//! ```
+//!
+//! then run `defl-supervisor --config cluster.toml` as usual (lite mode;
+//! kill scenarios compose: add `--kill 2@1` to SIGKILL silo 2 under
+//! load). Arrivals queue at each silo, are absorbed into the next
+//! round's UPD publish (each one adding `client_ingest_us` of publish
+//! delay — that is what makes offered load lengthen rounds), and commit
+//! when that round decides. Crucially they never change tensor content,
+//! so a loaded cluster commits the **same digests** as an unloaded one.
+//! Every silo ships its cumulative arrival→commit latency histogram in
+//! its `StatsSnapshot` heartbeats; the supervisor merges them (exact,
+//! see [`crate::load::hist::LatencyHistogram::merge`]) and prints:
+//!
+//! * per-round summaries with a `load a/b committed, p50 x p99 y ms`
+//!   segment;
+//! * exit lines `CLUSTER_ARRIVALS` / `CLUSTER_COMMITS` /
+//!   `CLUSTER_P50_US` / `CLUSTER_P99_US` / `CLUSTER_P999_US`;
+//! * for a `--kill` run under load, `CLUSTER_P99_PREKILL_US` (start →
+//!   SIGKILL) and `CLUSTER_P99_POSTREJOIN_US` (from two rounds after the
+//!   kill round — past the stall backlog — to the end). The recovery
+//!   health check is `POSTREJOIN ≤ 2 × PREKILL`, pinned by
+//!   `tests/cluster_process.rs`.
+//!
+//! # Reading `BENCH_sustained.json`
+//!
+//! `benches/micro_sustained.rs` runs the same driver on the virtual-time
+//! simulator (n = 8 lite silos), so its JSON is bit-deterministic — CI
+//! runs it twice and diffs. Entries:
+//!
+//! * `sustained/rate r=<hz>` — one swept arrival rate: `p50_us` /
+//!   `p99_us` / `p999_us` commit latency, `rounds_per_sec`,
+//!   `bytes_per_node_per_round`, `arrivals`, `commits`, and `sustainable`
+//!   (1.0 when p99 met the SLO and the backlog fully committed).
+//! * `sustained/capacity` — the fitted model: `knee_rate_per_silo_hz`
+//!   is the highest rate whose entire prefix sustained;
+//!   `cluster_rate_hz = knee × silos`; `users_per_interval` extrapolates
+//!   to the user population one update per `update_interval_s` carries
+//!   (the paper-scale "users per silo × silos" headline).
+//! * `sustained/pipelined_vs_lockstep` — rounds/sec under identical
+//!   sustained load for both engines (the CI gate asserts the pipelined
+//!   engine is not slower).
+//! * `sustained/closed_loop` — a closed-loop (think-time population)
+//!   point: `rate_hz` is *emergent* there, reported for comparison with
+//!   the open-loop knee.
+//!
+//! The capacity claim to quote is the knee row: e.g. a knee of 4000/s/silo
+//! × 8 silos × one update per user-hour ≈ 115M users sustained under the
+//! smoke SLO — measured, not asserted.
 
 pub mod config;
 pub mod control;

@@ -25,6 +25,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::crypto::{Digest, KeyRegistry, NodeId};
+use crate::load::hist::LatencyHistogram;
 use crate::metrics::StatsSnapshot;
 use crate::util::bench::fmt_bytes;
 
@@ -76,6 +77,20 @@ pub struct SupervisorReport {
     /// Round the killed silo rejoined at (first heartbeat after
     /// restart), when a kill was requested.
     pub rejoin_round: Option<u64>,
+    /// Cluster-total client arrivals / commits under the sustained-load
+    /// driver (zero when `experiment.load_rate_per_s` is off).
+    pub load_arrivals: u64,
+    pub load_commits: u64,
+    /// Cluster-merged arrival→commit latency over the whole run.
+    pub commit_hist: LatencyHistogram,
+    /// Kill scenario under load: cluster-merged latency from start to
+    /// the SIGKILL moment.
+    pub prekill_hist: Option<LatencyHistogram>,
+    /// Kill scenario under load: cluster-merged latency window starting
+    /// once every silo (including the restarted one) is ≥ 2 rounds past
+    /// the kill round — the stall backlog drains into the *pre*-window
+    /// side of that boundary, so this measures recovered steady state.
+    pub postrejoin_hist: Option<LatencyHistogram>,
 }
 
 /// Exponential restart backoff: doubles per consecutive crash, capped.
@@ -100,9 +115,21 @@ pub fn summary_line(snaps: &[StatsSnapshot], restarts: u32) -> String {
         .flat_map(|s| s.peer_serves.iter())
         .map(|p| p.reqs_throttled)
         .sum();
+    let load = if snaps.iter().any(|s| s.load_arrivals > 0) {
+        let hist = merged_commit_hist(snaps);
+        format!(
+            " | load {}/{} committed, p50 {} p99 {} ms",
+            sum(|s| s.load_commits),
+            sum(|s| s.load_arrivals),
+            hist.p50() / 1_000,
+            hist.p99() / 1_000,
+        )
+    } else {
+        String::new()
+    };
     format!(
         "round {}..{} | height {}..{} | pool {} (peak {}) | \
-         fetch sent {} recovered {} served {} throttled {} | restarts {}",
+         fetch sent {} recovered {} served {} throttled {} | restarts {}{}",
         min(|s| s.round),
         max(|s| s.round),
         min(|s| s.decided_height),
@@ -114,7 +141,17 @@ pub fn summary_line(snaps: &[StatsSnapshot], restarts: u32) -> String {
         fmt_bytes(served),
         throttled,
         restarts,
+        load,
     )
+}
+
+/// Fold every silo's cumulative commit-latency histogram into one.
+fn merged_commit_hist(snaps: &[StatsSnapshot]) -> LatencyHistogram {
+    let mut out = LatencyHistogram::new();
+    for s in snaps {
+        out.merge(&s.commit_hist);
+    }
+    out
 }
 
 /// Per-silo supervision state.
@@ -300,6 +337,12 @@ fn supervise(
     let mut killed_at: Option<(NodeId, u64)> = None;
     let mut rejoin_round: Option<u64> = None;
     let mut last_summary_round: Option<u64> = None;
+    // Sustained-load kill windows: cluster-merged latency at the kill
+    // moment, and per-silo cumulative baselines captured once every silo
+    // is ≥ 2 rounds past the kill round (the stall backlog has drained
+    // by then, so `final − baseline` isolates recovered steady state).
+    let mut prekill_hist: Option<LatencyHistogram> = None;
+    let mut post_base: Option<Vec<LatencyHistogram>> = None;
 
     loop {
         if start.elapsed() > opts.deadline {
@@ -362,6 +405,9 @@ fn supervise(
                         "[supervisor] SIGKILLed silo {} at round {} (scenario)",
                         k.node, silo.snap.round
                     );
+                    let snaps: Vec<StatsSnapshot> =
+                        silos.iter().map(|s| s.snap.clone()).collect();
+                    prekill_hist = Some(merged_commit_hist(&snaps));
                 }
             }
         }
@@ -408,6 +454,17 @@ fn supervise(
         // Cluster summary at round boundaries.
         let snaps: Vec<StatsSnapshot> = silos.iter().map(|s| s.snap.clone()).collect();
         let cluster_round = snaps.iter().map(|s| s.round).min().unwrap_or(0);
+
+        // Post-rejoin window baseline (kill + load scenario).
+        if let Some((_, kill_round)) = killed_at {
+            if post_base.is_none() && rejoin_round.is_some() && cluster_round >= kill_round + 2 {
+                post_base = Some(snaps.iter().map(|s| s.commit_hist.clone()).collect());
+                println!(
+                    "[supervisor] post-rejoin latency window opens at cluster round \
+                     {cluster_round}"
+                );
+            }
+        }
         if snaps.iter().all(|s| s.round > 0 || s.done) && last_summary_round != Some(cluster_round)
         {
             last_summary_round = Some(cluster_round);
@@ -453,7 +510,29 @@ fn supervise(
              cluster committed through round {rounds}"
         );
     }
-    Ok(SupervisorReport { rounds, digest, restarts: total_restarts, rejoin_round })
+    let commit_hist = merged_commit_hist(&snaps);
+    // Post-rejoin window: per-silo `final − baseline`, merged. The
+    // saturating diff makes the restarted silo (whose cumulative
+    // histogram reset to zero) contribute only what it recorded after
+    // its own baseline.
+    let postrejoin_hist = post_base.map(|bases| {
+        let mut out = LatencyHistogram::new();
+        for (s, base) in snaps.iter().zip(bases.iter()) {
+            out.merge(&s.commit_hist.saturating_diff(base));
+        }
+        out
+    });
+    Ok(SupervisorReport {
+        rounds,
+        digest,
+        restarts: total_restarts,
+        rejoin_round,
+        load_arrivals: snaps.iter().map(|s| s.load_arrivals).sum(),
+        load_commits: snaps.iter().map(|s| s.load_commits).sum(),
+        commit_hist,
+        prekill_hist,
+        postrejoin_hist,
+    })
 }
 
 #[cfg(test)]
@@ -507,7 +586,34 @@ mod tests {
         assert!(line.contains("fetch sent 2 recovered 1"), "{line}");
         assert!(line.contains("throttled 1"), "{line}");
         assert!(line.contains("restarts 1"), "{line}");
+        assert!(!line.contains("load"), "no load segment when the driver is off: {line}");
         // Empty input must not panic (startup, before any heartbeat).
         let _ = summary_line(&[], 0);
+    }
+
+    #[test]
+    fn summary_reports_commit_latency_under_load() {
+        let mk = |node: NodeId, values: &[u64]| {
+            let mut hist = LatencyHistogram::new();
+            for v in values {
+                hist.record(*v);
+            }
+            StatsSnapshot {
+                node,
+                round: 5,
+                load_arrivals: values.len() as u64 + 1,
+                load_commits: values.len() as u64,
+                commit_hist: hist,
+                ..Default::default()
+            }
+        };
+        let snaps = vec![mk(0, &[120_000, 140_000]), mk(1, &[100_000, 900_000])];
+        let line = summary_line(&snaps, 0);
+        assert!(line.contains("load 4/6 committed"), "{line}");
+        assert!(line.contains("p99"), "{line}");
+        let merged = merged_commit_hist(&snaps);
+        assert_eq!(merged.count(), 4);
+        assert!(merged.p99() >= 900_000, "p99 {}", merged.p99());
+        assert!(merged.p50() >= 120_000 && merged.p50() <= 150_000, "p50 {}", merged.p50());
     }
 }

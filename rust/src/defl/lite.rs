@@ -24,6 +24,7 @@ use crate::config::Attack;
 use crate::crypto::{Digest, KeyRegistry, NodeId};
 use crate::hotstuff::{Action, ByzMode, HotStuff, HsConfig, Msg};
 use crate::krum;
+use crate::load::hist::LoadStats;
 use crate::mempool::{ChunkAssembler, WeightPool};
 use crate::metrics::{PipelineStats, Traffic};
 use crate::net::transport::{Actor, Ctx};
@@ -39,6 +40,8 @@ const TIMER_HS: u64 = 1 << 62;
 const TIMER_GST: u64 = 1 << 61;
 /// Deferred UPD publish: local training for `id & !TIMER_TRAIN` lands.
 const TIMER_TRAIN: u64 = 1 << 59;
+/// Self-paced client-arrival schedule (sustained-load driver mode).
+const TIMER_LOAD: u64 = 1 << 58;
 
 /// Knobs for a [`LiteNode`] cluster.
 #[derive(Debug, Clone)]
@@ -91,6 +94,23 @@ pub struct LiteConfig {
     /// FedAvg (the legacy lite aggregate, and what the multi-process
     /// cluster smoke pins its crash-restart digests on).
     pub krum_f: Option<usize>,
+    /// Sustained-load driver mode: > 0 makes the node inject its OWN
+    /// client weight-update arrivals at this per-silo rate (per second)
+    /// on a seeded schedule — one code path on both transports (virtual
+    /// timers in the sim, wall-clock timers on TCP). Each arrival queues
+    /// until the next round starts, rides that round, and records its
+    /// arrival→commit latency into [`LiteNode::load`]. Arrivals never
+    /// touch tensor content, so final digests are identical with the
+    /// driver on or off.
+    pub load_rate_per_s: f64,
+    /// Arrival process for the self-paced schedule: `true` = Poisson
+    /// (exponential inter-arrival gaps), `false` = fixed-rate.
+    pub load_poisson: bool,
+    /// Per-absorbed-arrival ingest cost (µs) added to the round's UPD
+    /// publish delay — the knob that makes arrival rate lengthen rounds,
+    /// so a rate sweep exhibits a genuine capacity knee instead of a
+    /// flat line. 0 (default) models free ingest.
+    pub client_ingest_us: u64,
 }
 
 impl Default for LiteConfig {
@@ -111,6 +131,9 @@ impl Default for LiteConfig {
             n_byzantine: 0,
             attack: Attack::None,
             krum_f: None,
+            load_rate_per_s: 0.0,
+            load_poisson: true,
+            client_ingest_us: 0,
         }
     }
 }
@@ -155,6 +178,16 @@ pub struct LiteNode {
     pending_publish: Option<u64>,
     /// Overlap-occupancy counters (speculation hits/discards, busy time).
     pub pipeline: PipelineStats,
+    /// Sustained-load accounting: arrivals, commits, latency histogram.
+    pub load: LoadStats,
+    /// Client arrivals waiting for the next round to start (timestamps).
+    client_queue: Vec<u64>,
+    /// Absorbed arrival batches riding an in-flight round, committed —
+    /// and their latencies recorded — once `r_round` reaches the batch's
+    /// target round.
+    absorbed: Vec<(u64, Vec<u64>)>,
+    /// Seeded arrival-schedule stream (self-paced driver mode).
+    load_rng: Pcg,
     pub done: bool,
     pub rounds_done: u64,
     /// Digest of the final aggregate (the cross-transport parity probe).
@@ -201,6 +234,10 @@ impl LiteNode {
             spec: None,
             pending_publish: None,
             pipeline: PipelineStats::default(),
+            load: LoadStats::default(),
+            client_queue: Vec::new(),
+            absorbed: Vec::new(),
+            load_rng: Pcg::new(cfg.seed ^ 0x10ad, id as u64),
             done: false,
             rounds_done: 0,
             final_digest: None,
@@ -232,6 +269,72 @@ impl LiteNode {
         &mut self.puller
     }
 
+    /// One client weight-update arrival at `now_us`: queued until the
+    /// next round starts, committed (latency = commit − arrival) when
+    /// that round's `r_round` advance executes. External load drivers
+    /// (the closed-loop sim harness) call this directly; the self-paced
+    /// open-loop schedule ([`LiteConfig::load_rate_per_s`]) calls it
+    /// from its own timer.
+    pub fn client_arrival(&mut self, now_us: u64) {
+        if self.done {
+            return; // a finished node serves peers but takes no clients
+        }
+        self.load.arrivals += 1;
+        self.client_queue.push(now_us);
+    }
+
+    /// Stop the self-paced arrival schedule (load drivers call this at
+    /// the measurement cutoff; the pending timer then fires into a no-op).
+    pub fn stop_load(&mut self) {
+        self.cfg.load_rate_per_s = 0.0;
+    }
+
+    /// Absorb every queued arrival into the round starting now; returns
+    /// the ingest cost (µs) those arrivals add to the UPD publish delay.
+    fn absorb_clients(&mut self, target: u64) -> u64 {
+        if self.client_queue.is_empty() {
+            return 0;
+        }
+        let batch = std::mem::take(&mut self.client_queue);
+        let cost = self.cfg.client_ingest_us.saturating_mul(batch.len() as u64);
+        self.absorbed.push((target, batch));
+        cost
+    }
+
+    /// Commit every absorbed batch whose target round has been reached,
+    /// recording arrival→commit latencies.
+    fn commit_absorbed(&mut self, now_us: u64) {
+        let r = self.replica.r_round;
+        let mut i = 0;
+        while i < self.absorbed.len() {
+            if self.absorbed[i].0 <= r {
+                let (_, batch) = self.absorbed.swap_remove(i);
+                for ts in batch {
+                    self.load.commits += 1;
+                    self.load.hist.record(now_us.saturating_sub(ts));
+                }
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Arm the next self-paced arrival (seeded Poisson or fixed-rate).
+    fn schedule_next_arrival(&mut self, ctx: &mut dyn Ctx) {
+        let rate = self.cfg.load_rate_per_s;
+        if rate <= 0.0 || self.done {
+            return;
+        }
+        let mean_us = 1e6 / rate;
+        let gap_us = if self.cfg.load_poisson {
+            let u = self.load_rng.f64();
+            (-(1.0 - u).max(f64::MIN_POSITIVE).ln() * mean_us) as u64
+        } else {
+            mean_us as u64
+        };
+        ctx.set_timer(gap_us.max(1), TIMER_LOAD);
+    }
+
     fn apply_actions(&mut self, ctx: &mut dyn Ctx, actions: Vec<Action>) {
         let mut executed = false;
         for act in actions {
@@ -249,6 +352,7 @@ impl LiteNode {
                         &cmds,
                     );
                     if exec.advanced {
+                        self.commit_absorbed(ctx.now_us());
                         self.pool.gc(self.replica.r_round);
                         self.chunks.gc(self.replica.r_round.saturating_sub(1));
                         self.puller.on_round();
@@ -335,6 +439,9 @@ impl LiteNode {
             self.pending_publish = None;
         }
         self.round_in_flight = Some(target);
+        // Queued client arrivals ride this round; their ingest cost
+        // extends the publish delay (never the tensor content).
+        let ingest_us = self.absorb_clients(target);
 
         // Resolve the speculative lookahead, if any: publish it only if
         // the decided W^LAST matches the predicted basis row for row;
@@ -344,13 +451,13 @@ impl LiteNode {
                 self.pipeline.spec_hits += 1;
                 self.theta = spec.theta;
                 let now = ctx.now_us();
-                if spec.ready_at_us > now {
-                    // Training still running: the decide wait hid part.
-                    self.pipeline.train_overlap_us +=
-                        self.cfg.train_us.saturating_sub(spec.ready_at_us - now);
-                    self.schedule_publish(ctx, target, spec.ready_at_us - now);
+                let train_left = spec.ready_at_us.saturating_sub(now);
+                // The decide wait hid whatever training already ran.
+                self.pipeline.train_overlap_us +=
+                    self.cfg.train_us.saturating_sub(train_left);
+                if train_left + ingest_us > 0 {
+                    self.schedule_publish(ctx, target, train_left + ingest_us);
                 } else {
-                    self.pipeline.train_overlap_us += self.cfg.train_us;
                     self.publish_update(ctx, target);
                 }
                 return;
@@ -361,8 +468,8 @@ impl LiteNode {
         let agg = self.aggregate_last();
         self.theta = self.local_update(agg, target);
         self.pipeline.train_busy_us += self.cfg.train_us;
-        if self.cfg.train_us > 0 {
-            self.schedule_publish(ctx, target, self.cfg.train_us);
+        if self.cfg.train_us + ingest_us > 0 {
+            self.schedule_publish(ctx, target, self.cfg.train_us + ingest_us);
         } else {
             self.publish_update(ctx, target);
         }
@@ -556,7 +663,15 @@ impl LiteNode {
 
     /// Control-plane snapshot of this node's live state (heartbeats).
     pub fn snapshot(&self) -> crate::metrics::StatsSnapshot {
-        super::node::snapshot_of(self.id, &self.replica, &self.hs, &self.pool, &self.puller, self.done)
+        super::node::snapshot_of(
+            self.id,
+            &self.replica,
+            &self.hs,
+            &self.pool,
+            &self.puller,
+            &self.load,
+            self.done,
+        )
     }
 }
 
@@ -566,6 +681,7 @@ impl Actor for LiteNode {
         self.hs.start(&mut out);
         self.apply_actions(ctx, out);
         self.try_start_round(ctx);
+        self.schedule_next_arrival(ctx);
     }
 
     fn on_message(&mut self, ctx: &mut dyn Ctx, from: NodeId, class: Traffic, bytes: &[u8]) {
@@ -645,6 +761,11 @@ impl Actor for LiteNode {
             let target = id & !TIMER_TRAIN;
             if !self.done && self.pending_publish == Some(target) {
                 self.publish_update(ctx, target);
+            }
+        } else if id & TIMER_LOAD != 0 {
+            if !self.done && self.cfg.load_rate_per_s > 0.0 {
+                self.client_arrival(ctx.now_us());
+                self.schedule_next_arrival(ctx);
             }
         }
     }

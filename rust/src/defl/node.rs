@@ -514,7 +514,17 @@ impl DeflNode {
 
     /// Control-plane snapshot of this node's live state (heartbeats).
     pub fn snapshot(&self) -> crate::metrics::StatsSnapshot {
-        snapshot_of(self.id, &self.replica, &self.hs, &self.pool, &self.puller, self.done)
+        // The full node has no client-arrival driver (yet): empty load
+        // stats, so its heartbeats stay field-compatible with lite's.
+        snapshot_of(
+            self.id,
+            &self.replica,
+            &self.hs,
+            &self.pool,
+            &self.puller,
+            &crate::load::hist::LoadStats::default(),
+            self.done,
+        )
     }
 
     pub fn pool(&self) -> &WeightPool {
@@ -540,6 +550,7 @@ pub(crate) fn snapshot_of(
     hs: &HotStuff,
     pool: &WeightPool,
     puller: &Puller,
+    load: &crate::load::hist::LoadStats,
     done: bool,
 ) -> crate::metrics::StatsSnapshot {
     let fs = &puller.stats;
@@ -558,6 +569,9 @@ pub(crate) fn snapshot_of(
         fetch_gave_up: fs.gave_up,
         serve_denied: fs.serve_denied,
         peer_serves: peer_serves(fs),
+        load_arrivals: load.arrivals,
+        load_commits: load.commits,
+        commit_hist: load.hist.clone(),
         done,
     }
 }

@@ -28,6 +28,7 @@ pub mod defl;
 pub mod fl;
 pub mod hotstuff;
 pub mod krum;
+pub mod load;
 pub mod mempool;
 pub mod metrics;
 pub mod net;

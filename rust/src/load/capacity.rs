@@ -1,0 +1,181 @@
+//! Measured capacity model: sweep arrival rate, find the knee.
+//!
+//! A sustained-load sweep produces one [`RatePoint`] per arrival rate.
+//! The model declares a rate *sustainable* when its p99 commit latency
+//! stays under the SLO **and** the run actually kept up (completion —
+//! committed/injected — above a floor; a saturated system can report a
+//! flattering p99 over the arrivals it managed to commit while the
+//! queue grows without bound). The **knee** is the highest swept rate
+//! where every rate up to and including it is sustainable — a single
+//! lucky point past an unsustainable one does not count, which keeps
+//! the reported capacity monotone in the sweep.
+//!
+//! From the knee the model extrapolates to the ROADMAP's headline
+//! numbers: knee × silos → cluster-sustainable update rate, and given
+//! a per-user update cadence, the user population that rate carries.
+
+use crate::load::driver::LoadOutcome;
+
+/// One swept arrival rate and what the cluster did under it.
+#[derive(Debug, Clone, Copy)]
+pub struct RatePoint {
+    /// Offered load: client arrivals per second per silo.
+    pub rate_per_silo_hz: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub p999_us: u64,
+    pub arrivals: u64,
+    pub commits: u64,
+    pub rounds_per_sec: f64,
+    pub bytes_per_node_per_round: f64,
+}
+
+impl RatePoint {
+    pub fn from_outcome(rate_per_silo_hz: f64, out: &LoadOutcome) -> RatePoint {
+        RatePoint {
+            rate_per_silo_hz,
+            p50_us: out.hist.p50(),
+            p99_us: out.hist.p99(),
+            p999_us: out.hist.p999(),
+            arrivals: out.arrivals,
+            commits: out.commits,
+            rounds_per_sec: out.rounds_per_sec,
+            bytes_per_node_per_round: out.bytes_per_node_per_round,
+        }
+    }
+
+    /// Fraction of injected arrivals that committed before the drain
+    /// deadline.
+    pub fn completion(&self) -> f64 {
+        if self.arrivals == 0 {
+            return 1.0;
+        }
+        self.commits as f64 / self.arrivals as f64
+    }
+}
+
+/// The swept points plus the sustainability criteria.
+#[derive(Debug, Clone)]
+pub struct CapacityModel {
+    /// p99 commit latency must stay under this for a rate to count.
+    pub slo_p99_us: u64,
+    /// Completion floor (0.99 is a sensible default: under 1% of the
+    /// window's arrivals still queued at drain).
+    pub min_completion: f64,
+    /// Swept points, ascending by `rate_per_silo_hz`.
+    pub points: Vec<RatePoint>,
+}
+
+impl CapacityModel {
+    pub fn new(slo_p99_us: u64, min_completion: f64, mut points: Vec<RatePoint>) -> CapacityModel {
+        points.sort_by(|a, b| a.rate_per_silo_hz.total_cmp(&b.rate_per_silo_hz));
+        CapacityModel { slo_p99_us, min_completion, points }
+    }
+
+    /// Does this point meet both sustainability criteria?
+    pub fn sustains(&self, p: &RatePoint) -> bool {
+        p.commits > 0 && p.p99_us <= self.slo_p99_us && p.completion() >= self.min_completion
+    }
+
+    /// The knee: the highest swept rate whose entire prefix (all rates
+    /// ≤ it) is sustainable. `None` when even the lowest rate fails.
+    pub fn knee(&self) -> Option<&RatePoint> {
+        let mut knee = None;
+        for p in &self.points {
+            if self.sustains(p) {
+                knee = Some(p);
+            } else {
+                break;
+            }
+        }
+        knee
+    }
+
+    /// Cluster-wide sustainable arrival rate: knee × silo count.
+    pub fn cluster_rate_hz(&self, silos: usize) -> Option<f64> {
+        self.knee().map(|k| k.rate_per_silo_hz * silos as f64)
+    }
+
+    /// User population the knee supports, given each user submits one
+    /// update every `update_interval_s` seconds (cross-silo FL: silos
+    /// are few, users-behind-a-silo are many — the paper's "millions of
+    /// users" framing).
+    pub fn users_supported(&self, silos: usize, update_interval_s: f64) -> Option<f64> {
+        self.cluster_rate_hz(silos).map(|r| r * update_interval_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(rate: f64, p99_ms: u64, arrivals: u64, commits: u64) -> RatePoint {
+        RatePoint {
+            rate_per_silo_hz: rate,
+            p50_us: p99_ms * 300,
+            p99_us: p99_ms * 1000,
+            p999_us: p99_ms * 1500,
+            arrivals,
+            commits,
+            rounds_per_sec: 10.0,
+            bytes_per_node_per_round: 4096.0,
+        }
+    }
+
+    #[test]
+    fn knee_is_last_rate_of_the_sustainable_prefix() {
+        let m = CapacityModel::new(
+            500_000,
+            0.99,
+            vec![
+                pt(100.0, 120, 1000, 1000),
+                pt(200.0, 180, 2000, 2000),
+                pt(400.0, 450, 4000, 3990),
+                pt(800.0, 2000, 8000, 5000), // blown SLO and completion
+            ],
+        );
+        let knee = m.knee().expect("knee");
+        assert_eq!(knee.rate_per_silo_hz, 400.0);
+        assert_eq!(m.cluster_rate_hz(8), Some(3200.0));
+        // 3200 updates/s × one update per user per hour → 11.52M users.
+        assert_eq!(m.users_supported(8, 3600.0), Some(3200.0 * 3600.0));
+    }
+
+    #[test]
+    fn lucky_point_past_a_failure_does_not_extend_the_knee() {
+        let m = CapacityModel::new(
+            500_000,
+            0.99,
+            vec![
+                pt(100.0, 100, 1000, 1000),
+                pt(200.0, 900, 2000, 1500), // fails
+                pt(400.0, 100, 4000, 4000), // "sustains", but past the break
+            ],
+        );
+        assert_eq!(m.knee().unwrap().rate_per_silo_hz, 100.0);
+    }
+
+    #[test]
+    fn no_sustainable_rate_means_no_knee() {
+        let m = CapacityModel::new(1_000, 0.99, vec![pt(100.0, 100, 1000, 1000)]);
+        assert!(m.knee().is_none(), "p99 100ms > 1ms SLO");
+        assert!(m.cluster_rate_hz(8).is_none());
+    }
+
+    #[test]
+    fn completion_floor_rejects_backlogged_points() {
+        let m = CapacityModel::new(500_000, 0.99, vec![pt(100.0, 100, 1000, 900)]);
+        assert!(m.knee().is_none(), "10% backlog must fail the floor");
+    }
+
+    #[test]
+    fn points_are_sorted_on_construction() {
+        let m = CapacityModel::new(
+            500_000,
+            0.99,
+            vec![pt(400.0, 100, 1, 1), pt(100.0, 100, 1, 1), pt(200.0, 100, 1, 1)],
+        );
+        let rates: Vec<f64> = m.points.iter().map(|p| p.rate_per_silo_hz).collect();
+        assert_eq!(rates, vec![100.0, 200.0, 400.0]);
+    }
+}

@@ -1,0 +1,395 @@
+//! Seeded sustained-load driver for the lite cluster.
+//!
+//! Runs an n-silo [`LiteNode`] deployment on [`SimNet`] under a
+//! continuous client-arrival stream for a fixed duration, then reports
+//! the merged arrival→commit latency distribution, throughput, and
+//! per-node traffic. Two injection modes:
+//!
+//! * **Open loop** — each silo self-paces arrivals from its own seeded
+//!   schedule ([`LiteConfig::load_rate_per_s`], Poisson or fixed-rate).
+//!   This is node-internal, so the *same* code path drives both this
+//!   sim harness and a real TCP `cluster/` deployment (the supervisor
+//!   only has to set the TOML knobs).
+//! * **Closed loop** — a fixed population of virtual clients per silo:
+//!   each client issues one update, waits for it to commit, thinks for
+//!   `think_us`, and reissues. Rate is emergent from latency (the
+//!   classic YCSB-style closed driver), so it cannot overrun the
+//!   system the way an open schedule can.
+//!
+//! Everything is virtual-time deterministic: same config + seed → the
+//! same arrivals, the same commits, the same percentiles, bit-for-bit.
+//! That is what lets CI diff two consecutive `BENCH_sustained.json`
+//! runs as a determinism gate.
+
+use crate::crypto::NodeId;
+use crate::defl::lite::{lite_cluster, LiteConfig, LiteNode};
+use crate::load::hist::LatencyHistogram;
+use crate::metrics::PipelineStats;
+use crate::net::sim::{SimConfig, SimNet};
+use crate::util::Pcg;
+
+/// How arrivals are generated during the measurement window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LoadMode {
+    /// Self-paced per-silo schedule at `rate_per_silo_hz` arrivals/sec
+    /// (seeded Poisson gaps when `poisson`, fixed gaps otherwise).
+    Open { rate_per_silo_hz: f64, poisson: bool },
+    /// `clients_per_silo` virtual clients per silo, each looping
+    /// issue → await commit → think `think_us` → reissue.
+    Closed { clients_per_silo: usize, think_us: u64 },
+}
+
+/// One sustained run: inject for `duration_us` of virtual time, then
+/// stop injecting and drain in-flight arrivals for up to `drain_us`.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadConfig {
+    pub mode: LoadMode,
+    /// Measurement window (virtual µs) during which arrivals are injected.
+    pub duration_us: u64,
+    /// Grace period after the cutoff for queued arrivals to commit.
+    pub drain_us: u64,
+    /// Sim stepping / sampling interval (also the closed-loop client
+    /// poll interval). 1–10 ms keeps the sample trace useful without
+    /// distorting virtual time.
+    pub step_us: u64,
+    /// Seed for the closed-loop client think-time jitter (the open-loop
+    /// schedule is seeded inside each node from `LiteConfig::seed`).
+    pub seed: u64,
+}
+
+impl Default for LoadConfig {
+    fn default() -> LoadConfig {
+        LoadConfig {
+            mode: LoadMode::Open { rate_per_silo_hz: 100.0, poisson: true },
+            duration_us: 5_000_000,
+            drain_us: 5_000_000,
+            step_us: 5_000,
+            seed: 0x5eed,
+        }
+    }
+}
+
+/// Periodic sample of cluster progress during the run — the raw series
+/// behind the monotonicity assertions in `tests/sustained_load.rs`.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadSample {
+    pub t_us: u64,
+    /// Minimum committed round across live silos at `t_us`.
+    pub committed_rounds: u64,
+    /// Cluster-summed pipeline counters at `t_us`.
+    pub pipeline: PipelineStats,
+}
+
+/// Everything a sustained run measures.
+#[derive(Debug, Clone)]
+pub struct LoadOutcome {
+    /// Merged arrival→commit latency across all silos (measurement
+    /// window + drain).
+    pub hist: LatencyHistogram,
+    /// Per-node histograms, index = NodeId.
+    pub per_node: Vec<LatencyHistogram>,
+    /// Total client arrivals injected across the cluster.
+    pub arrivals: u64,
+    /// Total arrivals that committed (≤ arrivals; the gap is whatever
+    /// was still queued when the drain deadline hit).
+    pub commits: u64,
+    /// Minimum committed round across silos at the measurement cutoff.
+    pub committed_rounds: u64,
+    /// Committed rounds per second of virtual time over the
+    /// measurement window.
+    pub rounds_per_sec: f64,
+    /// Mean wire bytes sent per node per committed round.
+    pub bytes_per_node_per_round: f64,
+    /// Cluster-summed pipeline counters at the end of the run.
+    pub pipeline: PipelineStats,
+    /// Progress trace sampled every `step_us`.
+    pub samples: Vec<LoadSample>,
+}
+
+impl LoadOutcome {
+    /// Fraction of injected arrivals that committed before the drain
+    /// deadline — the capacity model's liveness signal (a saturated
+    /// system leaves a growing queue behind).
+    pub fn completion(&self) -> f64 {
+        if self.arrivals == 0 {
+            return 1.0;
+        }
+        self.commits as f64 / self.arrivals as f64
+    }
+}
+
+/// State of one closed-loop virtual client.
+struct Client {
+    silo: NodeId,
+    /// Virtual time at which this client issues its next update;
+    /// `u64::MAX` while an update is in flight.
+    next_issue_us: u64,
+    /// Silo commit count that signals this client's in-flight update
+    /// has committed (commit counts are per-silo monotone, and a silo
+    /// commits queued arrivals strictly in absorb order).
+    waiting_below: u64,
+}
+
+fn sum_pipeline(net: &mut SimNet, n: usize) -> PipelineStats {
+    let mut total = PipelineStats::default();
+    for i in 0..n as NodeId {
+        if let Some(a) = net.actor_as::<LiteNode>(i) {
+            let s = a.pipeline;
+            total.spec_hits += s.spec_hits;
+            total.spec_discards += s.spec_discards;
+            total.train_busy_us += s.train_busy_us;
+            total.train_overlap_us += s.train_overlap_us;
+        }
+    }
+    total
+}
+
+fn min_round(net: &mut SimNet, n: usize) -> u64 {
+    (0..n as NodeId)
+        .filter_map(|i| net.actor_as::<LiteNode>(i).map(|a| a.replica.r_round))
+        .min()
+        .unwrap_or(0)
+}
+
+/// Run one sustained-load experiment on the lite cluster in virtual
+/// time. `lite` is the protocol configuration — its `rounds` bound is
+/// raised internally so silos never finish mid-window, and its
+/// open-loop knobs are overwritten from `load.mode`.
+pub fn run_sustained(lite: &LiteConfig, sim: &SimConfig, load: &LoadConfig) -> LoadOutcome {
+    let n = lite.n_nodes;
+    assert!(n > 0, "sustained run needs at least one silo");
+    assert!(load.step_us > 0, "step_us must be positive");
+
+    let mut cfg = lite.clone();
+    // Never finish: the driver, not a round count, ends the run. Timer
+    // ids embed only small round targets, so a huge bound is safe.
+    cfg.rounds = 1 << 40;
+    match load.mode {
+        LoadMode::Open { rate_per_silo_hz, poisson } => {
+            cfg.load_rate_per_s = rate_per_silo_hz;
+            cfg.load_poisson = poisson;
+        }
+        LoadMode::Closed { .. } => {
+            cfg.load_rate_per_s = 0.0;
+        }
+    }
+
+    let mut net = SimNet::new(sim.clone(), lite_cluster(&cfg));
+
+    // Closed-loop client population (empty in open mode).
+    let mut clients: Vec<Client> = match load.mode {
+        LoadMode::Closed { clients_per_silo, .. } => (0..n as NodeId)
+            .flat_map(|silo| {
+                (0..clients_per_silo).map(move |_| Client {
+                    silo,
+                    next_issue_us: 0,
+                    waiting_below: 0,
+                })
+            })
+            .collect(),
+        LoadMode::Open { .. } => Vec::new(),
+    };
+    let mut rng = Pcg::new(load.seed, 0x10ad);
+
+    let mut samples = Vec::new();
+    let mut t = net.now_us();
+    let cutoff = t + load.duration_us;
+    // Measurement window: inject + sample.
+    while t < cutoff {
+        if let LoadMode::Closed { think_us, .. } = load.mode {
+            for c in clients.iter_mut() {
+                if c.next_issue_us == u64::MAX {
+                    // Await commit: the silo's commit counter passing
+                    // `waiting_below` means this client's update (and
+                    // everything queued before it) has committed.
+                    let committed = net
+                        .actor_as::<LiteNode>(c.silo)
+                        .map(|a| a.load.commits >= c.waiting_below)
+                        .unwrap_or(false);
+                    if committed {
+                        // Think: ±50% jitter keeps the population from
+                        // phase-locking onto round boundaries.
+                        let jitter = (think_us / 2).max(1);
+                        c.next_issue_us = t + think_us + rng.gen_range(jitter);
+                    }
+                } else if c.next_issue_us <= t {
+                    if let Some(a) = net.actor_as::<LiteNode>(c.silo) {
+                        a.client_arrival(t);
+                        c.waiting_below = a.load.arrivals;
+                        c.next_issue_us = u64::MAX;
+                    }
+                }
+            }
+        }
+        t += load.step_us;
+        net.run_until(t, u64::MAX);
+        samples.push(LoadSample {
+            t_us: t,
+            committed_rounds: min_round(&mut net, n),
+            pipeline: sum_pipeline(&mut net, n),
+        });
+    }
+
+    let committed_rounds = min_round(&mut net, n);
+    let window_us = load.duration_us.max(1);
+    let rounds_per_sec = committed_rounds as f64 * 1e6 / window_us as f64;
+    let bytes_per_node_per_round = if committed_rounds > 0 {
+        net.meter.total_sent() as f64 / (n as f64 * committed_rounds as f64)
+    } else {
+        0.0
+    };
+
+    // Cutoff: stop injecting, let queued arrivals drain.
+    for i in 0..n as NodeId {
+        if let Some(a) = net.actor_as::<LiteNode>(i) {
+            a.stop_load();
+        }
+    }
+    clients.clear();
+    let drain_deadline = t + load.drain_us;
+    while t < drain_deadline {
+        t += load.step_us;
+        net.run_until(t, u64::MAX);
+        let all_drained = (0..n as NodeId).all(|i| {
+            net.actor_as::<LiteNode>(i)
+                .map(|a| a.load.commits == a.load.arrivals)
+                .unwrap_or(true)
+        });
+        if all_drained {
+            break;
+        }
+    }
+
+    let mut hist = LatencyHistogram::new();
+    let mut per_node = Vec::with_capacity(n);
+    let mut arrivals = 0u64;
+    let mut commits = 0u64;
+    for i in 0..n as NodeId {
+        let a = net.actor_as::<LiteNode>(i).expect("lite silo");
+        arrivals += a.load.arrivals;
+        commits += a.load.commits;
+        hist.merge(&a.load.hist);
+        per_node.push(a.load.hist.clone());
+    }
+    let pipeline = sum_pipeline(&mut net, n);
+
+    LoadOutcome {
+        hist,
+        per_node,
+        arrivals,
+        commits,
+        committed_rounds,
+        rounds_per_sec,
+        bytes_per_node_per_round,
+        pipeline,
+        samples,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn smoke_lite(n: usize) -> LiteConfig {
+        LiteConfig {
+            n_nodes: n,
+            dim: 64,
+            seed: 3,
+            gst_us: 5_000,
+            chunk_bytes: 1 << 16,
+            batch_consensus: true,
+            timeout_base_us: 100_000,
+            fetch_retry_us: 50_000,
+            pipeline: true,
+            train_us: 2_000,
+            ..Default::default()
+        }
+    }
+
+    fn smoke_sim(n: usize) -> SimConfig {
+        SimConfig { n_nodes: n, latency_us: 200, jitter_us: 50, drop_prob: 0.0, seed: 9 }
+    }
+
+    #[test]
+    fn open_loop_commits_arrivals_and_is_deterministic() {
+        let n = 4;
+        let load = LoadConfig {
+            mode: LoadMode::Open { rate_per_silo_hz: 150.0, poisson: true },
+            duration_us: 2_000_000,
+            drain_us: 2_000_000,
+            step_us: 5_000,
+            seed: 1,
+        };
+        let run = || run_sustained(&smoke_lite(n), &smoke_sim(n), &load);
+        let a = run();
+        assert!(a.arrivals > 0, "open-loop schedule injected nothing");
+        assert_eq!(a.commits, a.arrivals, "drain left arrivals uncommitted");
+        assert_eq!(a.hist.count(), a.commits);
+        assert!(a.committed_rounds > 0 && a.rounds_per_sec > 0.0);
+        assert!(a.bytes_per_node_per_round > 0.0);
+        let b = run();
+        assert_eq!(a.hist, b.hist, "same seed must reproduce the distribution");
+        assert_eq!(a.arrivals, b.arrivals);
+        assert_eq!(a.committed_rounds, b.committed_rounds);
+    }
+
+    #[test]
+    fn fixed_rate_open_loop_hits_the_configured_rate() {
+        let n = 4;
+        let rate = 200.0;
+        let load = LoadConfig {
+            mode: LoadMode::Open { rate_per_silo_hz: rate, poisson: false },
+            duration_us: 2_000_000,
+            drain_us: 2_000_000,
+            step_us: 5_000,
+            seed: 1,
+        };
+        let out = run_sustained(&smoke_lite(n), &smoke_sim(n), &load);
+        let expect = rate * n as f64 * 2.0; // 2 s window
+        let got = out.arrivals as f64;
+        assert!(
+            (got - expect).abs() / expect < 0.05,
+            "fixed-rate arrivals {got} not within 5% of {expect}"
+        );
+    }
+
+    #[test]
+    fn closed_loop_rate_is_emergent_and_bounded() {
+        let n = 4;
+        let load = LoadConfig {
+            mode: LoadMode::Closed { clients_per_silo: 3, think_us: 50_000 },
+            duration_us: 2_000_000,
+            drain_us: 2_000_000,
+            step_us: 5_000,
+            seed: 7,
+        };
+        let out = run_sustained(&smoke_lite(n), &smoke_sim(n), &load);
+        assert!(out.arrivals > 0, "closed loop issued nothing");
+        assert_eq!(out.commits, out.arrivals, "drain left arrivals uncommitted");
+        // Each client has at most one update in flight, so arrivals are
+        // bounded by population × (window / think).
+        let max = (n * 3) as u64 * (2_000_000 / 50_000 + 1);
+        assert!(out.arrivals <= max, "closed loop overran its population bound");
+        assert_eq!(out.completion(), 1.0);
+    }
+
+    #[test]
+    fn samples_are_monotone() {
+        let n = 4;
+        let load = LoadConfig {
+            mode: LoadMode::Open { rate_per_silo_hz: 100.0, poisson: true },
+            duration_us: 1_000_000,
+            drain_us: 1_000_000,
+            step_us: 5_000,
+            seed: 2,
+        };
+        let out = run_sustained(&smoke_lite(n), &smoke_sim(n), &load);
+        for w in out.samples.windows(2) {
+            assert!(w[1].t_us > w[0].t_us);
+            assert!(w[1].committed_rounds >= w[0].committed_rounds);
+            assert!(w[1].pipeline.spec_hits >= w[0].pipeline.spec_hits);
+            assert!(w[1].pipeline.spec_discards >= w[0].pipeline.spec_discards);
+            assert!(w[1].pipeline.train_overlap_us >= w[0].pipeline.train_overlap_us);
+        }
+    }
+}

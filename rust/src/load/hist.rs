@@ -1,0 +1,511 @@
+//! Log-bucket latency histogram: the sustained-load recorder.
+//!
+//! An HDR-style fixed-bucket histogram over µs values: power-of-two
+//! major buckets subdivided into [`SUB_BUCKETS`] linear sub-buckets, so
+//! any recorded value lands in a bucket whose width is at most 1/32 of
+//! its magnitude — quantiles read back within ~3% of the exact sorted
+//! reference (well inside one log bucket), with O(1) record cost and a
+//! fixed memory footprint regardless of sample count.
+//!
+//! Recording is per-thread (or per-node): each recorder owns its own
+//! histogram and the report path folds them together with
+//! [`LatencyHistogram::merge`], which is exact — `merge(record(a),
+//! record(b)) == record(a ++ b)` bucket for bucket (the satellite
+//! property test pins both claims). The histogram is also
+//! wire-serializable (sparse `(index, count)` pairs) so each silo ships
+//! its commit-latency distribution to the supervisor inside the
+//! control-plane [`crate::metrics::StatsSnapshot`] heartbeats.
+
+use anyhow::{bail, Result};
+
+use crate::util::codec::{Cursor, Decode, Encode};
+
+/// log2 of the linear sub-buckets per power-of-two major bucket.
+const SUB_BITS: u32 = 5;
+/// Linear sub-buckets per major bucket (relative error ≤ 1/32).
+pub const SUB_BUCKETS: usize = 1 << SUB_BITS;
+/// Total bucket count covering the full u64 range.
+pub const BUCKETS: usize = SUB_BUCKETS + (64 - SUB_BITS as usize - 1) * SUB_BUCKETS;
+
+/// Bucket index for a value (0 ≤ index < [`BUCKETS`]).
+fn bucket_index(v: u64) -> usize {
+    if v < SUB_BUCKETS as u64 {
+        return v as usize;
+    }
+    let major = 63 - v.leading_zeros(); // floor(log2 v), ≥ SUB_BITS
+    let shift = major - SUB_BITS;
+    ((shift as usize + 1) * SUB_BUCKETS) + ((v >> shift) as usize - SUB_BUCKETS)
+}
+
+/// Inclusive upper bound of a bucket — what quantiles report, matching
+/// the coarse [`crate::metrics::Histogram`] convention of never
+/// underestimating.
+fn bucket_upper(idx: usize) -> u64 {
+    if idx < SUB_BUCKETS {
+        return idx as u64;
+    }
+    let shift = (idx / SUB_BUCKETS - 1) as u32;
+    let sub = (idx % SUB_BUCKETS) as u64;
+    let lower = (SUB_BUCKETS as u64 + sub) << shift;
+    lower + (1u64 << shift) - 1
+}
+
+/// Fixed log-bucket latency histogram (µs). `Default` is an empty
+/// recorder with no allocation; the bucket array appears on first
+/// record, so carrying one inside every [`crate::metrics::StatsSnapshot`]
+/// costs nothing for nodes that never record.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyHistogram {
+    /// Lazily allocated to [`BUCKETS`] on first record; empty = all zero.
+    counts: Vec<u64>,
+    total: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram::default()
+    }
+
+    pub fn record(&mut self, value_us: u64) {
+        if self.counts.is_empty() {
+            self.counts = vec![0; BUCKETS];
+            self.min = u64::MAX;
+        }
+        self.counts[bucket_index(value_us)] += 1;
+        self.total += 1;
+        self.sum = self.sum.saturating_add(value_us);
+        self.min = self.min.min(value_us);
+        self.max = self.max.max(value_us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn min_us(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// Value at quantile `q` ∈ [0, 1]: the upper bound of the bucket
+    /// holding the ⌈q·total⌉-th sample, clamped to the observed max.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut acc = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return bucket_upper(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    pub fn p999(&self) -> u64 {
+        self.quantile(0.999)
+    }
+
+    /// Fold `other` into `self` — exact: bucket counts add, so merging
+    /// per-thread (or per-silo) recorders at report time is
+    /// indistinguishable from one recorder having seen every sample.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        if other.total == 0 {
+            return;
+        }
+        if self.counts.is_empty() {
+            self.counts = vec![0; BUCKETS];
+            self.min = u64::MAX;
+        }
+        for (c, o) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *c += o;
+        }
+        self.total += other.total;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// The window `self − base` as a new histogram: per-bucket saturating
+    /// difference against an earlier cumulative snapshot of the SAME
+    /// recorder. Min/max are reconstructed from the window's bucket
+    /// bounds (the originals describe the whole cumulative run).
+    /// Saturation makes a reset recorder (a restarted silo) safe: its
+    /// counts restart below the snapshot and simply contribute nothing.
+    pub fn saturating_diff(&self, base: &LatencyHistogram) -> LatencyHistogram {
+        let mut out = LatencyHistogram::new();
+        for (i, c) in self.counts.iter().enumerate() {
+            let b = base.counts.get(i).copied().unwrap_or(0);
+            let d = c.saturating_sub(b);
+            if d > 0 {
+                if out.counts.is_empty() {
+                    out.counts = vec![0; BUCKETS];
+                    out.min = u64::MAX;
+                }
+                out.counts[i] = d;
+                out.total += d;
+                let upper = bucket_upper(i);
+                out.sum = out.sum.saturating_add(upper.saturating_mul(d));
+                out.min = out.min.min(if i < SUB_BUCKETS { i as u64 } else { upper });
+                out.max = out.max.max(upper.min(self.max));
+            }
+        }
+        out
+    }
+
+    fn nonzero(&self) -> impl Iterator<Item = (usize, u64)> + '_ {
+        self.counts.iter().enumerate().filter(|(_, c)| **c > 0).map(|(i, c)| (i, *c))
+    }
+}
+
+/// Two histograms are equal when they describe the same sample multiset
+/// at bucket resolution — lazily-unallocated and allocated-but-empty
+/// recorders compare equal.
+impl PartialEq for LatencyHistogram {
+    fn eq(&self, other: &Self) -> bool {
+        self.total == other.total
+            && self.sum == other.sum
+            && self.min_us() == other.min_us()
+            && self.max == other.max
+            && self.nonzero().eq(other.nonzero())
+    }
+}
+
+impl Eq for LatencyHistogram {}
+
+/// Wire form: `total, sum, min, max, n_pairs, (u32 index, u64 count)*`
+/// — sparse, so an idle node's heartbeat carries 28 bytes and a loaded
+/// one a few hundred (commit latencies cluster in a handful of buckets).
+impl Encode for LatencyHistogram {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.total.encode(out);
+        self.sum.encode(out);
+        self.min_us().encode(out);
+        self.max.encode(out);
+        let pairs: Vec<(usize, u64)> = self.nonzero().collect();
+        (pairs.len() as u32).encode(out);
+        for (i, c) in pairs {
+            (i as u32).encode(out);
+            c.encode(out);
+        }
+    }
+    fn encoded_len(&self) -> usize {
+        8 * 4 + 4 + self.nonzero().count() * 12
+    }
+}
+
+impl Decode for LatencyHistogram {
+    fn decode(cur: &mut Cursor<'_>) -> Result<Self> {
+        let total = u64::decode(cur)?;
+        let sum = u64::decode(cur)?;
+        let min = u64::decode(cur)?;
+        let max = u64::decode(cur)?;
+        let n_pairs = u32::decode(cur)? as usize;
+        let mut h = LatencyHistogram::default();
+        if n_pairs > 0 {
+            h.counts = vec![0; BUCKETS];
+        }
+        let mut check = 0u64;
+        for _ in 0..n_pairs {
+            let idx = u32::decode(cur)? as usize;
+            let c = u64::decode(cur)?;
+            if idx >= BUCKETS {
+                bail!("histogram bucket index {idx} out of range");
+            }
+            if c == 0 {
+                bail!("histogram wire form must be sparse (zero count)");
+            }
+            h.counts[idx] += c;
+            check = check.saturating_add(c);
+        }
+        if check != total {
+            bail!("histogram bucket counts {check} disagree with total {total}");
+        }
+        h.total = total;
+        h.sum = sum;
+        h.min = if total == 0 { 0 } else { min };
+        h.max = max;
+        Ok(h)
+    }
+}
+
+/// Per-node sustained-load accounting: client update arrivals accepted,
+/// arrivals whose round committed, and the arrival→commit latency
+/// distribution. Lives on every [`crate::defl::lite::LiteNode`] and
+/// crosses the control plane inside [`crate::metrics::StatsSnapshot`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LoadStats {
+    /// Client update arrivals accepted into the ingest queue.
+    pub arrivals: u64,
+    /// Arrivals whose carrying round committed (latency recorded).
+    pub commits: u64,
+    /// Arrival→commit latency (µs).
+    pub hist: LatencyHistogram,
+}
+
+/// A pool of per-thread recorders, merged at report time: each worker
+/// thread takes one [`RecorderHandle`] (its own uncontended mutex — the
+/// "lock-free-ish" fast path: no sharing, no CAS loops on the record
+/// path beyond one uncontended lock), and [`RecorderPool::merged`] folds
+/// every shard into one histogram when the run ends.
+#[derive(Default)]
+pub struct RecorderPool {
+    shards: std::sync::Mutex<Vec<std::sync::Arc<std::sync::Mutex<LatencyHistogram>>>>,
+}
+
+/// One thread's private recorder shard.
+#[derive(Clone)]
+pub struct RecorderHandle(std::sync::Arc<std::sync::Mutex<LatencyHistogram>>);
+
+impl RecorderHandle {
+    pub fn record(&self, value_us: u64) {
+        self.0.lock().unwrap().record(value_us);
+    }
+}
+
+impl RecorderPool {
+    pub fn new() -> RecorderPool {
+        RecorderPool::default()
+    }
+
+    /// A fresh shard for one recording thread.
+    pub fn handle(&self) -> RecorderHandle {
+        let shard = std::sync::Arc::new(std::sync::Mutex::new(LatencyHistogram::new()));
+        self.shards.lock().unwrap().push(shard.clone());
+        RecorderHandle(shard)
+    }
+
+    /// Fold every shard into one histogram (exact, see
+    /// [`LatencyHistogram::merge`]).
+    pub fn merged(&self) -> LatencyHistogram {
+        let mut out = LatencyHistogram::new();
+        for shard in self.shards.lock().unwrap().iter() {
+            out.merge(&shard.lock().unwrap());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::Pcg;
+
+    #[test]
+    fn bucket_index_is_monotone_and_total() {
+        let mut values: Vec<u64> = vec![0];
+        for e in 0..64u32 {
+            values.push(1u64 << e);
+            values.push((1u64 << e) + 1);
+            values.push((1u64 << e).saturating_mul(2) - 1);
+        }
+        values.sort_unstable();
+        let mut prev = 0usize;
+        for v in values {
+            let idx = bucket_index(v);
+            assert!(idx < BUCKETS, "v={v} idx={idx}");
+            assert!(idx >= prev, "index not monotone at {v}");
+            prev = idx;
+            // The value must lie at or below its bucket's upper bound.
+            assert!(bucket_upper(idx) >= v, "upper({idx}) < {v}");
+        }
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn empty_and_single_sample() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p50(), 0);
+        assert_eq!(h.p999(), 0);
+        assert_eq!(h.min_us(), 0);
+        let mut h = LatencyHistogram::new();
+        h.record(1234);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.min_us(), 1234);
+        assert_eq!(h.max_us(), 1234);
+        // One sample: every quantile is that sample (clamped to max).
+        assert_eq!(h.p50(), 1234);
+        assert_eq!(h.p999(), 1234);
+    }
+
+    /// Satellite property: on seeded random samples spanning ten orders
+    /// of magnitude, recorded p50/p99/p999 stay within one log bucket
+    /// (here even one *sub*-bucket: ≤ 1/32 relative error) of the exact
+    /// sorted-reference quantiles, and merge(a, b) == record(a ++ b).
+    #[test]
+    fn prop_quantiles_near_exact_and_merge_is_exact() {
+        forall(
+            "latency-histogram",
+            0x11a7,
+            40,
+            4_000,
+            |rng: &mut Pcg, size| {
+                let n = 16 + rng.gen_usize(size.max(1));
+                (0..n)
+                    .map(|_| {
+                        // Log-uniform magnitudes: µs .. ~hours.
+                        let e = rng.gen_range(33);
+                        rng.gen_range(1u64 << e) + 1
+                    })
+                    .collect::<Vec<u64>>()
+            },
+            |samples| {
+                let mut h = LatencyHistogram::new();
+                let mut sorted = samples.clone();
+                sorted.sort_unstable();
+                for s in samples {
+                    h.record(*s);
+                }
+                for q in [0.5, 0.99, 0.999] {
+                    let rank = ((q * sorted.len() as f64).ceil() as usize)
+                        .clamp(1, sorted.len());
+                    let exact = sorted[rank - 1];
+                    let got = h.quantile(q);
+                    // Upper-bound convention: never below the exact
+                    // value, never more than one sub-bucket above it.
+                    if got < exact {
+                        return Err(format!("q={q}: {got} underestimates exact {exact}"));
+                    }
+                    if got > exact + exact / SUB_BUCKETS as u64 + 1 {
+                        return Err(format!(
+                            "q={q}: {got} beyond one sub-bucket of exact {exact}"
+                        ));
+                    }
+                }
+                // merge(a, b) == record(a ++ b), bucket for bucket.
+                let mid = samples.len() / 2;
+                let (a_s, b_s) = samples.split_at(mid);
+                let mut a = LatencyHistogram::new();
+                let mut b = LatencyHistogram::new();
+                for s in a_s {
+                    a.record(*s);
+                }
+                for s in b_s {
+                    b.record(*s);
+                }
+                a.merge(&b);
+                if a != h {
+                    return Err("merge(a, b) != record(a ++ b)".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn merge_handles_empty_sides() {
+        let mut a = LatencyHistogram::new();
+        let b = LatencyHistogram::new();
+        a.merge(&b);
+        assert_eq!(a, LatencyHistogram::new());
+        a.record(10);
+        let snap = a.clone();
+        a.merge(&LatencyHistogram::new());
+        assert_eq!(a, snap);
+        let mut empty = LatencyHistogram::new();
+        empty.merge(&a);
+        assert_eq!(empty, a);
+    }
+
+    #[test]
+    fn saturating_diff_isolates_a_window() {
+        let mut h = LatencyHistogram::new();
+        for v in [100u64, 200, 400] {
+            h.record(v);
+        }
+        let base = h.clone();
+        for v in [800u64, 800, 1_600] {
+            h.record(v);
+        }
+        let win = h.saturating_diff(&base);
+        assert_eq!(win.count(), 3);
+        assert!(win.p50() >= 800, "window p50 {}", win.p50());
+        assert!(win.min_us() >= 400, "window min {}", win.min_us());
+        // A reset recorder (restarted silo) diffs to nothing, not junk.
+        let fresh = LatencyHistogram::new().saturating_diff(&base);
+        assert_eq!(fresh.count(), 0);
+    }
+
+    #[test]
+    fn wire_roundtrip_is_exact_and_truncation_safe() {
+        let mut h = LatencyHistogram::new();
+        let mut rng = Pcg::seeded(9);
+        for _ in 0..500 {
+            h.record(rng.gen_range(10_000_000));
+        }
+        let bytes = h.to_bytes();
+        assert_eq!(bytes.len(), h.encoded_len(), "encoded_len mismatch");
+        assert_eq!(LatencyHistogram::from_bytes(&bytes).unwrap(), h);
+        for cut in 0..bytes.len() {
+            assert!(LatencyHistogram::from_bytes(&bytes[..cut]).is_err());
+        }
+        let empty = LatencyHistogram::new();
+        let bytes = empty.to_bytes();
+        assert_eq!(bytes.len(), empty.encoded_len());
+        assert_eq!(LatencyHistogram::from_bytes(&bytes).unwrap(), empty);
+        // A forged frame whose counts disagree with its total must error.
+        let mut forged = h.to_bytes();
+        forged[0] ^= 1;
+        assert!(LatencyHistogram::from_bytes(&forged).is_err());
+    }
+
+    #[test]
+    fn recorder_pool_merges_concurrent_shards() {
+        let pool = std::sync::Arc::new(RecorderPool::new());
+        let mut joins = Vec::new();
+        for t in 0..4u64 {
+            let h = pool.handle();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..1_000u64 {
+                    h.record(t * 1_000 + i);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let merged = pool.merged();
+        assert_eq!(merged.count(), 4_000);
+        assert_eq!(merged.min_us(), 0);
+        assert!(merged.max_us() >= 3_999);
+        // Reference: one recorder fed the same samples.
+        let mut one = LatencyHistogram::new();
+        for t in 0..4u64 {
+            for i in 0..1_000u64 {
+                one.record(t * 1_000 + i);
+            }
+        }
+        assert_eq!(merged, one);
+    }
+}

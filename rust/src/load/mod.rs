@@ -1,0 +1,32 @@
+//! Sustained-load harness: seeded drivers, latency percentiles, and a
+//! measured capacity model.
+//!
+//! The micro benches measure one-shot round times; this subsystem pins
+//! DeFL's commit-latency story under *continuous* client traffic:
+//!
+//! * [`hist`] — a fixed log-bucket latency histogram (HDR-lite:
+//!   ≤ 1/32 relative quantile error, exact merge, sparse wire codec)
+//!   plus the sharded [`hist::RecorderPool`] for wall-clock threads.
+//! * [`driver`] — seeded open-loop (per-silo Poisson / fixed-rate) and
+//!   closed-loop (client population with think time) injection into a
+//!   lite cluster on virtual time, reporting p50/p99/p999 commit
+//!   latency, rounds/sec, and bytes/node/round.
+//! * [`capacity`] — sweeps arrival rate to find the knee (max rate
+//!   whose whole prefix keeps p99 under SLO and commits its backlog)
+//!   and extrapolates silos × users-per-silo → sustainable update rate.
+//!
+//! The open-loop schedule lives *inside* [`crate::defl::lite::LiteNode`]
+//! (`LiteConfig::load_rate_per_s`), so the same code path drives the
+//! sim harness and a real TCP `cluster/` deployment — the supervisor
+//! only sets TOML knobs, and per-silo latency histograms ride the
+//! existing `StatsSnapshot` heartbeats back to it. `benches/
+//! micro_sustained.rs` turns all of this into `BENCH_sustained.json`,
+//! which CI uploads, diffs for determinism, and gates.
+
+pub mod capacity;
+pub mod driver;
+pub mod hist;
+
+pub use capacity::{CapacityModel, RatePoint};
+pub use driver::{run_sustained, LoadConfig, LoadMode, LoadOutcome, LoadSample};
+pub use hist::{LatencyHistogram, LoadStats, RecorderPool};

@@ -253,6 +253,16 @@ pub struct StatsSnapshot {
     pub serve_denied: u64,
     /// Per-peer serve-budget accounting, sorted by peer id.
     pub peer_serves: Vec<PeerServe>,
+    /// Sustained-load driver: client update arrivals accepted / committed
+    /// (zero when the load driver is off).
+    pub load_arrivals: u64,
+    pub load_commits: u64,
+    /// Arrival→commit latency distribution (sparse on the wire; empty —
+    /// 36 bytes — when the load driver is off). The supervisor merges
+    /// these per-silo histograms into the cluster-wide p50/p99/p999 it
+    /// prints, and diffs cumulative snapshots for windowed percentiles
+    /// around a kill/rejoin.
+    pub commit_hist: crate::load::hist::LatencyHistogram,
     /// The node finished its configured rounds.
     pub done: bool,
 }
@@ -273,10 +283,16 @@ impl Encode for StatsSnapshot {
         self.fetch_gave_up.encode(out);
         self.serve_denied.encode(out);
         crate::util::codec::encode_list(&self.peer_serves, out);
+        self.load_arrivals.encode(out);
+        self.load_commits.encode(out);
+        self.commit_hist.encode(out);
         self.done.encode(out);
     }
     fn encoded_len(&self) -> usize {
-        4 + 8 * 12 + 4 + self.peer_serves.len() * 20 + 1
+        4 + 8 * 12 + 4 + self.peer_serves.len() * 20
+            + 8 * 2
+            + self.commit_hist.encoded_len()
+            + 1
     }
 }
 
@@ -297,6 +313,9 @@ impl Decode for StatsSnapshot {
             fetch_gave_up: u64::decode(cur)?,
             serve_denied: u64::decode(cur)?,
             peer_serves: crate::util::codec::decode_list(cur)?,
+            load_arrivals: u64::decode(cur)?,
+            load_commits: u64::decode(cur)?,
+            commit_hist: crate::load::hist::LatencyHistogram::decode(cur)?,
             done: bool::decode(cur)?,
         })
     }
@@ -586,6 +605,15 @@ mod tests {
                 PeerServe { peer: 0, bytes_served: 1024, reqs_throttled: 0 },
                 PeerServe { peer: 2, bytes_served: 0, reqs_throttled: 3 },
             ],
+            load_arrivals: 120,
+            load_commits: 117,
+            commit_hist: {
+                let mut h = crate::load::hist::LatencyHistogram::new();
+                for v in [150_000u64, 180_000, 220_000, 900_000] {
+                    h.record(v);
+                }
+                h
+            },
             done: true,
         };
         let bytes = snap.to_bytes();

@@ -44,10 +44,49 @@ fn cluster_toml(base_port: u16, control_port: u16) -> String {
     )
 }
 
+/// Same cluster with the sustained-load driver on: 200 client
+/// arrivals/s/silo, each costing 50 µs of UPD-publish delay, over enough
+/// rounds that the pre-kill and post-rejoin latency windows both carry
+/// commits (arrivals of round r commit when round r + 1 decides, so the
+/// kill at round 3 has rounds 1–2 arrivals already committed behind it).
+fn loaded_toml(base_port: u16, control_port: u16) -> String {
+    format!(
+        "[cluster]\n\
+         nodes = 4\n\
+         base_port = {base_port}\n\
+         control_port = {control_port}\n\
+         heartbeat_ms = 100\n\
+         restart_backoff_ms = 250\n\
+         restart_backoff_max_ms = 2000\n\
+         max_restarts = 4\n\
+         mode = \"lite\"\n\
+         agg_quorum = \"all\"\n\
+         deadline_s = {DEADLINE_S}\n\
+         linger_ms = 2000\n\
+         \n\
+         [experiment]\n\
+         rounds = 8\n\
+         seed = 1234\n\
+         gst_ms = 200\n\
+         chunk_bytes = 256\n\
+         fetch_retry_ms = 50\n\
+         dim = 256\n\
+         hs_timeout_ms = 100\n\
+         load_rate_per_s = 200\n\
+         load_poisson = true\n\
+         client_ingest_us = 50\n"
+    )
+}
+
 struct RunOutcome {
     rounds: u64,
     digest: String,
     restarts: u64,
+    /// Sustained-load lines; present only when the config drives load
+    /// (and, for the kill windows, only when the run captured them).
+    commits: Option<u64>,
+    p99_prekill: Option<u64>,
+    p99_postrejoin: Option<u64>,
     stdout: String,
 }
 
@@ -69,17 +108,23 @@ fn run_supervisor(cfg_path: &Path, kill: Option<&str>) -> RunOutcome {
         out.status.success(),
         "supervisor failed (kill={kill:?}):\n--- stdout ---\n{stdout}\n--- stderr ---\n{stderr}"
     );
-    let grab = |key: &str| -> String {
+    let grab_opt = |key: &str| -> Option<String> {
         stdout
             .lines()
             .rev()
             .find_map(|l| l.strip_prefix(key).map(|v| v.trim().to_string()))
-            .unwrap_or_else(|| panic!("missing `{key}` line in:\n{stdout}"))
     };
+    let grab = |key: &str| -> String {
+        grab_opt(key).unwrap_or_else(|| panic!("missing `{key}` line in:\n{stdout}"))
+    };
+    let grab_u64 = |key: &str| grab_opt(key).map(|v| v.parse::<u64>().expect("u64 line"));
     RunOutcome {
         rounds: grab("CLUSTER_ROUNDS ").parse().expect("rounds"),
         digest: grab("CLUSTER_DIGEST "),
         restarts: grab("CLUSTER_RESTARTS ").parse().expect("restarts"),
+        commits: grab_u64("CLUSTER_COMMITS "),
+        p99_prekill: grab_u64("CLUSTER_P99_PREKILL_US "),
+        p99_postrejoin: grab_u64("CLUSTER_P99_POSTREJOIN_US "),
         stdout,
     }
 }
@@ -123,6 +168,83 @@ fn supervised_kill_restart_recovers_bit_identically() {
         killed.digest, baseline.digest,
         "kill+restart diverged from the uninterrupted run\n--- baseline ---\n{}\n--- killed ---\n{}",
         baseline.stdout, killed.stdout
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Sustained-load fault scenario: SIGKILL one silo while every silo is
+/// absorbing continuous client arrivals. Requires (a) load never changes
+/// what is committed — the loaded kill run's digest matches a loaded
+/// uninterrupted run bit-for-bit; (b) the latency SLO recovers — the
+/// post-rejoin p99 window (opened two rounds after the kill round, past
+/// the stall backlog) stays within 2× the pre-kill window.
+#[test]
+fn sustained_load_kill_recovers_p99_and_digests() {
+    let dir = std::env::temp_dir().join(format!("defl-cluster-load-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Loaded baseline: uninterrupted run under 200 arrivals/s/silo.
+    let base_cfg = dir.join("loaded-baseline.toml");
+    std::fs::write(&base_cfg, loaded_toml(41115, 41110)).unwrap();
+    let baseline = run_supervisor(&base_cfg, None);
+    assert_eq!(baseline.rounds, 8, "loaded baseline rounds:\n{}", baseline.stdout);
+    assert_eq!(baseline.restarts, 0, "loaded baseline must not restart anything");
+    let base_commits = baseline
+        .commits
+        .unwrap_or_else(|| panic!("loaded baseline printed no CLUSTER_COMMITS:\n{}", baseline.stdout));
+    assert!(
+        base_commits > 0,
+        "sustained load must commit client arrivals:\n{}",
+        baseline.stdout
+    );
+    assert!(
+        baseline.p99_prekill.is_none() && baseline.p99_postrejoin.is_none(),
+        "kill windows must not appear without --kill:\n{}",
+        baseline.stdout
+    );
+
+    // Kill silo 2 at round 3: by then the arrivals of rounds 1–2 have
+    // committed, so the pre-kill window is non-empty; rounds continue to
+    // 8, leaving room for the post-rejoin window after the +2 margin.
+    let kill_cfg = dir.join("loaded-kill.toml");
+    std::fs::write(&kill_cfg, loaded_toml(41215, 41210)).unwrap();
+    let killed = run_supervisor(&kill_cfg, Some("2@3"));
+    assert!(
+        killed.restarts >= 1,
+        "the loaded kill scenario must actually restart a silo:\n{}",
+        killed.stdout
+    );
+    assert_eq!(
+        killed.rounds, 8,
+        "loaded cluster must commit through all rounds past the rejoin:\n{}",
+        killed.stdout
+    );
+    assert!(
+        killed.commits.unwrap_or(0) > 0,
+        "loaded kill run committed no client arrivals:\n{}",
+        killed.stdout
+    );
+    // Load is latency-only: arrivals never change tensor content, so the
+    // kill+restart run under load still converges bit-identically.
+    assert_eq!(
+        killed.digest, baseline.digest,
+        "loaded kill+restart diverged from the loaded uninterrupted run\n\
+         --- baseline ---\n{}\n--- killed ---\n{}",
+        baseline.stdout, killed.stdout
+    );
+    // SLO recovery: post-rejoin p99 within 2× the pre-kill p99.
+    let pre = killed
+        .p99_prekill
+        .unwrap_or_else(|| panic!("no pre-kill latency window captured:\n{}", killed.stdout));
+    let post = killed
+        .p99_postrejoin
+        .unwrap_or_else(|| panic!("no post-rejoin latency window captured:\n{}", killed.stdout));
+    assert!(pre > 0, "pre-kill p99 must be positive:\n{}", killed.stdout);
+    assert!(
+        post <= 2 * pre,
+        "post-rejoin p99 {post} µs exceeds 2× pre-kill p99 {pre} µs:\n{}",
+        killed.stdout
     );
 
     let _ = std::fs::remove_dir_all(&dir);

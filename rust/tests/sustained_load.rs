@@ -1,0 +1,149 @@
+//! Sustained-load integration: the pipelined round engine's counters
+//! stay monotone and consistent with cluster progress while client
+//! arrivals flow continuously — in BOTH engine modes.
+//!
+//! The driver's `LoadSample` trace pairs the cluster-summed
+//! [`PipelineStats`] with the minimum committed round *at the same
+//! virtual instant*, which is what makes cross-checking them sound
+//! (the final `LoadOutcome.pipeline` is taken after the drain, when
+//! rounds have moved past the measurement cutoff).
+//!
+//! Invariants pinned here (n silos, summed counters):
+//! * lockstep (`pipeline = false`): all speculation counters are zero,
+//!   and `train_busy_us ≥ n × committed_rounds × train_us` — every
+//!   committed round was trained for real on every silo.
+//! * pipelined: `spec_hits + spec_discards ≤ n × (committed_rounds + 4)`
+//!   at every sample (one speculation resolves per round start, and a
+//!   silo runs at most a few rounds ahead of the cluster minimum), and
+//!   `train_overlap_us ≤ spec_hits × train_us` (each hit can hide at
+//!   most one full training step).
+//! * both: the sample trace is strictly time-ordered and every counter
+//!   is monotone non-decreasing; the merged histogram counts exactly
+//!   the committed arrivals.
+
+use defl::defl::lite::LiteConfig;
+use defl::load::{run_sustained, LoadConfig, LoadMode, LoadOutcome};
+use defl::net::sim::SimConfig;
+
+const N: usize = 4;
+const TRAIN_US: u64 = 2_000;
+
+fn lite(pipeline: bool) -> LiteConfig {
+    LiteConfig {
+        n_nodes: N,
+        dim: 64,
+        seed: 11,
+        gst_us: 5_000,
+        chunk_bytes: 1 << 16,
+        batch_consensus: true,
+        timeout_base_us: 100_000,
+        fetch_retry_us: 50_000,
+        pipeline,
+        train_us: TRAIN_US,
+        client_ingest_us: 50,
+        ..Default::default()
+    }
+}
+
+fn sim() -> SimConfig {
+    SimConfig { n_nodes: N, latency_us: 200, jitter_us: 50, drop_prob: 0.0, seed: 13 }
+}
+
+fn load() -> LoadConfig {
+    LoadConfig {
+        mode: LoadMode::Open { rate_per_silo_hz: 300.0, poisson: true },
+        duration_us: 3_000_000,
+        drain_us: 3_000_000,
+        step_us: 5_000,
+        seed: 0x10ad,
+    }
+}
+
+/// Mode-independent sanity: trace ordering, counter monotonicity, and
+/// histogram/commit bookkeeping.
+fn check_common(out: &LoadOutcome) {
+    assert!(out.arrivals > 0, "sustained run injected nothing");
+    assert!(out.commits > 0 && out.commits <= out.arrivals);
+    assert_eq!(
+        out.hist.count(),
+        out.commits,
+        "merged histogram must count exactly the committed arrivals"
+    );
+    let per_node_total: u64 = out.per_node.iter().map(|h| h.count()).sum();
+    assert_eq!(per_node_total, out.commits, "per-node histograms must partition the commits");
+    assert!(out.committed_rounds > 0, "no rounds committed under load");
+    assert!(!out.samples.is_empty());
+    for w in out.samples.windows(2) {
+        assert!(w[1].t_us > w[0].t_us, "sample trace must be strictly time-ordered");
+        assert!(w[1].committed_rounds >= w[0].committed_rounds);
+        assert!(w[1].pipeline.spec_hits >= w[0].pipeline.spec_hits);
+        assert!(w[1].pipeline.spec_discards >= w[0].pipeline.spec_discards);
+        assert!(w[1].pipeline.train_busy_us >= w[0].pipeline.train_busy_us);
+        assert!(w[1].pipeline.train_overlap_us >= w[0].pipeline.train_overlap_us);
+    }
+}
+
+#[test]
+fn lockstep_engine_never_speculates_under_load() {
+    let out = run_sustained(&lite(false), &sim(), &load());
+    check_common(&out);
+    assert_eq!(out.pipeline.spec_hits, 0, "lockstep must not speculate");
+    assert_eq!(out.pipeline.spec_discards, 0, "lockstep must not discard speculations");
+    assert_eq!(out.pipeline.train_overlap_us, 0, "lockstep hides no training time");
+    // Every committed round was trained for real on every silo. The
+    // final sample pairs both counters at the same instant.
+    let last = out.samples.last().unwrap();
+    assert!(
+        last.pipeline.train_busy_us >= N as u64 * last.committed_rounds * TRAIN_US,
+        "train_busy {} µs below {} committed rounds × {N} silos × {TRAIN_US} µs",
+        last.pipeline.train_busy_us,
+        last.committed_rounds,
+    );
+}
+
+#[test]
+fn pipelined_counters_track_committed_rounds_under_load() {
+    let out = run_sustained(&lite(true), &sim(), &load());
+    check_common(&out);
+    assert!(
+        out.pipeline.spec_hits > 0,
+        "a healthy pipelined run under load must land speculation hits: {:?}",
+        out.pipeline
+    );
+    // One speculation resolves per round start, and no silo runs more
+    // than a few rounds past the cluster-minimum committed round —
+    // checked at EVERY sample, not just the end, so a transient counter
+    // runaway cannot hide behind the final state.
+    for s in &out.samples {
+        let resolved = s.pipeline.spec_hits + s.pipeline.spec_discards;
+        let bound = N as u64 * (s.committed_rounds + 4);
+        assert!(
+            resolved <= bound,
+            "speculation resolutions {resolved} exceed {bound} \
+             (n={N}, committed {} at t={} µs)",
+            s.committed_rounds,
+            s.t_us,
+        );
+        assert!(
+            s.pipeline.train_overlap_us <= s.pipeline.spec_hits * TRAIN_US,
+            "overlap {} µs exceeds {} hits × {TRAIN_US} µs at t={} µs",
+            s.pipeline.train_overlap_us,
+            s.pipeline.spec_hits,
+            s.t_us,
+        );
+    }
+}
+
+#[test]
+fn sustained_outcome_is_reproducible_in_both_modes() {
+    for pipeline in [false, true] {
+        let a = run_sustained(&lite(pipeline), &sim(), &load());
+        let b = run_sustained(&lite(pipeline), &sim(), &load());
+        assert_eq!(a.arrivals, b.arrivals, "pipeline={pipeline}");
+        assert_eq!(a.commits, b.commits, "pipeline={pipeline}");
+        assert_eq!(a.hist, b.hist, "pipeline={pipeline}: distribution must reproduce");
+        assert_eq!(a.committed_rounds, b.committed_rounds, "pipeline={pipeline}");
+        assert_eq!(a.pipeline.spec_hits, b.pipeline.spec_hits, "pipeline={pipeline}");
+        assert_eq!(a.pipeline.spec_discards, b.pipeline.spec_discards, "pipeline={pipeline}");
+    }
+}
