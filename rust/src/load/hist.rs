@@ -24,8 +24,11 @@ use crate::util::codec::{Cursor, Decode, Encode};
 const SUB_BITS: u32 = 5;
 /// Linear sub-buckets per major bucket (relative error ≤ 1/32).
 pub const SUB_BUCKETS: usize = 1 << SUB_BITS;
-/// Total bucket count covering the full u64 range.
-pub const BUCKETS: usize = SUB_BUCKETS + (64 - SUB_BITS as usize - 1) * SUB_BUCKETS;
+/// Total bucket count covering the full u64 range: values below
+/// [`SUB_BUCKETS`] get one bucket each, and each of the `64 - SUB_BITS`
+/// remaining major (power-of-two) ranges contributes [`SUB_BUCKETS`]
+/// sub-buckets, the last ending exactly at `u64::MAX`.
+pub const BUCKETS: usize = SUB_BUCKETS + (64 - SUB_BITS as usize) * SUB_BUCKETS;
 
 /// Bucket index for a value (0 ≤ index < [`BUCKETS`]).
 fn bucket_index(v: u64) -> usize {
@@ -45,9 +48,18 @@ fn bucket_upper(idx: usize) -> u64 {
         return idx as u64;
     }
     let shift = (idx / SUB_BUCKETS - 1) as u32;
+    bucket_lower(idx) + (1u64 << shift) - 1
+}
+
+/// Inclusive lower bound of a bucket — used when reconstructing a
+/// window's min, which must never overestimate.
+fn bucket_lower(idx: usize) -> u64 {
+    if idx < SUB_BUCKETS {
+        return idx as u64;
+    }
+    let shift = (idx / SUB_BUCKETS - 1) as u32;
     let sub = (idx % SUB_BUCKETS) as u64;
-    let lower = (SUB_BUCKETS as u64 + sub) << shift;
-    lower + (1u64 << shift) - 1
+    (SUB_BUCKETS as u64 + sub) << shift
 }
 
 /// Fixed log-bucket latency histogram (µs). `Default` is an empty
@@ -157,7 +169,10 @@ impl LatencyHistogram {
     /// The window `self − base` as a new histogram: per-bucket saturating
     /// difference against an earlier cumulative snapshot of the SAME
     /// recorder. Min/max are reconstructed from the window's bucket
-    /// bounds (the originals describe the whole cumulative run).
+    /// bounds (the originals describe the whole cumulative run): min
+    /// from the lowest occupied bucket's LOWER bound (never
+    /// overestimates), max from the highest occupied bucket's upper
+    /// bound clamped to the cumulative max.
     /// Saturation makes a reset recorder (a restarted silo) safe: its
     /// counts restart below the snapshot and simply contribute nothing.
     pub fn saturating_diff(&self, base: &LatencyHistogram) -> LatencyHistogram {
@@ -174,7 +189,7 @@ impl LatencyHistogram {
                 out.total += d;
                 let upper = bucket_upper(i);
                 out.sum = out.sum.saturating_add(upper.saturating_mul(d));
-                out.min = out.min.min(if i < SUB_BUCKETS { i as u64 } else { upper });
+                out.min = out.min.min(bucket_lower(i));
                 out.max = out.max.max(upper.min(self.max));
             }
         }
@@ -202,8 +217,9 @@ impl PartialEq for LatencyHistogram {
 impl Eq for LatencyHistogram {}
 
 /// Wire form: `total, sum, min, max, n_pairs, (u32 index, u64 count)*`
-/// — sparse, so an idle node's heartbeat carries 28 bytes and a loaded
-/// one a few hundred (commit latencies cluster in a handful of buckets).
+/// — sparse, so an idle node's heartbeat carries 36 bytes (four u64
+/// fields plus the u32 pair count) and a loaded one a few hundred
+/// (commit latencies cluster in a handful of buckets).
 impl Encode for LatencyHistogram {
     fn encode(&self, out: &mut Vec<u8>) {
         self.total.encode(out);
