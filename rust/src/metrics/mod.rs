@@ -52,6 +52,13 @@ pub struct NetMeter {
     /// `SignedFrame` envelope failed verification, keyed by the CLAIMED
     /// sender — the per-peer forgery/replay attribution signal.
     auth_fail: BTreeMap<(NodeId, Traffic), u64>,
+    /// Frames dropped because the header's `from` field did not match
+    /// the transport-level peer the frame arrived from, keyed by the
+    /// ACTUAL peer (the hello-established connection identity) — the
+    /// spoofed-transport-sender attribution signal. The simulator cannot
+    /// produce these (its transport sender is the event's true origin);
+    /// on TCP they pin `Inbound.from` to the connection's peer id.
+    spoofed: BTreeMap<(NodeId, Traffic), u64>,
 }
 
 impl NetMeter {
@@ -98,6 +105,26 @@ impl NetMeter {
 
     pub fn auth_fail_total(&self) -> u64 {
         self.auth_fail.values().sum()
+    }
+
+    /// The transport peer `peer` delivered a frame whose header claimed
+    /// a different sender; the frame was dropped before dispatch.
+    pub fn on_spoof(&mut self, peer: NodeId, class: Traffic) {
+        *self.spoofed.entry((peer, class)).or_default() += 1;
+    }
+
+    /// Spoofed-sender drops attributed to one transport peer (all
+    /// classes). Unlike `auth_fail_by`, the key is always the REAL peer
+    /// the connection was hello-established with, never the forged id.
+    pub fn spoofed_by(&self, peer: NodeId) -> u64 {
+        Traffic::ALL
+            .iter()
+            .map(|c| self.spoofed.get(&(peer, *c)).copied().unwrap_or(0))
+            .sum()
+    }
+
+    pub fn spoofed_total(&self) -> u64 {
+        self.spoofed.values().sum()
     }
 
     /// Cluster-wide frames lost in one traffic class.
@@ -186,6 +213,9 @@ impl NetMeter {
         }
         for (k, v) in &other.auth_fail {
             *self.auth_fail.entry(*k).or_default() += v;
+        }
+        for (k, v) in &other.spoofed {
+            *self.spoofed.entry(*k).or_default() += v;
         }
     }
 }
@@ -551,6 +581,28 @@ mod tests {
         m.merge(&other);
         assert_eq!(m.auth_fail_by(2), 4);
         assert_eq!(m.auth_fail_total(), 5);
+    }
+
+    #[test]
+    fn spoofed_frames_attributed_to_the_transport_peer() {
+        let mut m = NetMeter::new();
+        assert_eq!(m.spoofed_total(), 0);
+        // Peer 3 forged two senders; both drops land on peer 3.
+        m.on_spoof(3, Traffic::Weights);
+        m.on_spoof(3, Traffic::Consensus);
+        m.on_spoof(1, Traffic::Blocks);
+        assert_eq!(m.spoofed_by(3), 2);
+        assert_eq!(m.spoofed_by(1), 1);
+        assert_eq!(m.spoofed_by(0), 0);
+        assert_eq!(m.spoofed_total(), 3);
+        // Spoof drops are transport-level and never bleed into the
+        // signature-rejection attribution.
+        assert_eq!(m.auth_fail_total(), 0);
+        let mut other = NetMeter::new();
+        other.on_spoof(3, Traffic::Weights);
+        m.merge(&other);
+        assert_eq!(m.spoofed_by(3), 3);
+        assert_eq!(m.spoofed_total(), 4);
     }
 
     #[test]

@@ -12,6 +12,13 @@
 //! payload`. A connection's first frame is a `hello` (class Consensus,
 //! payload `b"hello"`) identifying the dialing peer.
 //!
+//! The header's `from` field is advisory only: after the hello, every
+//! frame's `from` must equal the connection's hello-established peer id.
+//! Mismatches are dropped at the transport and attributed to the REAL
+//! peer via [`crate::metrics::NetMeter::on_spoof`] — the same rule the
+//! simulator gets for free (its transport sender is the event's true
+//! origin), so per-sender attribution is sound on both transports.
+//!
 //! # Mesh lifecycle
 //!
 //! Every node keeps its listener (and an acceptor thread) alive for the
@@ -40,7 +47,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::crypto::{KeyRegistry, NodeId, SignedFrame};
-use crate::metrics::Traffic;
+use crate::metrics::{NetMeter, Traffic};
 use crate::net::transport::{class_wire_byte, Actor, Ctx};
 use crate::util::codec::{Decode, Encode};
 
@@ -104,6 +111,9 @@ pub struct TcpNode {
     listen_addr: SocketAddr,
     closed: Arc<AtomicBool>,
     acceptor: Option<JoinHandle<()>>,
+    /// Transport-level drop attribution (spoofed-sender frames); see
+    /// [`TcpNode::meter`].
+    meter: Arc<Mutex<NetMeter>>,
 }
 
 /// How long the acceptor waits for a fresh connection's `hello` frame
@@ -127,13 +137,15 @@ impl TcpNode {
         let peers: Arc<Vec<Mutex<Option<TcpStream>>>> =
             Arc::new((0..n).map(|_| Mutex::new(None)).collect());
         let closed = Arc::new(AtomicBool::new(false));
+        let meter = Arc::new(Mutex::new(NetMeter::new()));
         let acceptor = {
             let (peers, tx, closed) = (peers.clone(), tx.clone(), closed.clone());
+            let meter = meter.clone();
             Some(std::thread::spawn(move || {
-                Self::accept_loop(id, listener, peers, tx, closed)
+                Self::accept_loop(id, listener, peers, tx, closed, meter)
             }))
         };
-        Ok(TcpNode { id, peers, rx, tx, listen_addr, closed, acceptor })
+        Ok(TcpNode { id, peers, rx, tx, listen_addr, closed, acceptor, meter })
     }
 
     /// Join a mesh at cluster start: listen on `addrs[id]`, dial higher
@@ -184,6 +196,7 @@ impl TcpNode {
         peers: Arc<Vec<Mutex<Option<TcpStream>>>>,
         tx: Sender<Inbound>,
         closed: Arc<AtomicBool>,
+        meter: Arc<Mutex<NetMeter>>,
     ) {
         loop {
             let Ok((stream, _)) = listener.accept() else {
@@ -196,7 +209,7 @@ impl TcpNode {
             if closed.load(Ordering::SeqCst) {
                 return;
             }
-            let (peers, tx) = (peers.clone(), tx.clone());
+            let (peers, tx, meter) = (peers.clone(), tx.clone(), meter.clone());
             std::thread::spawn(move || {
                 let mut stream = stream;
                 stream.set_nodelay(true).ok();
@@ -228,7 +241,7 @@ impl TcpNode {
                         "tcp n{my_id}: peer {peer} reconnected, replacing its connection"
                     );
                 }
-                Self::pump(stream, tx);
+                Self::pump(stream, tx, peer, meter);
             });
         }
     }
@@ -242,7 +255,7 @@ impl TcpNode {
         let mut s = stream.try_clone()?;
         write_frame(&mut s, self.id, Traffic::Consensus, b"hello")?;
         *self.peers[peer as usize].lock().unwrap() = Some(stream.try_clone()?);
-        Self::reader(stream, self.tx.clone());
+        Self::reader(stream, self.tx.clone(), peer, self.meter.clone());
         Ok(())
     }
 
@@ -287,10 +300,25 @@ impl TcpNode {
     /// Pump frames from one established connection into the shared
     /// inbound channel until the peer closes (or crashes). Blocking —
     /// run on a dedicated thread.
-    fn pump(mut stream: TcpStream, tx: Sender<Inbound>) {
+    ///
+    /// The frame header's `from` field is PINNED to `peer`, the identity
+    /// the connection's hello established: a frame claiming any other
+    /// sender is dropped here and attributed to `peer` in the meter,
+    /// never delivered. Without this, an unsigned-mode peer could forge
+    /// the sender every upper layer keys on (chunk budgets, signature
+    /// lookup, Byzantine attribution).
+    fn pump(mut stream: TcpStream, tx: Sender<Inbound>, peer: NodeId, meter: Arc<Mutex<NetMeter>>) {
         loop {
             match read_frame(&mut stream) {
                 Ok(msg) => {
+                    if msg.from != peer {
+                        log::warn!(
+                            "tcp: peer {peer} sent a frame claiming sender {} — dropped",
+                            msg.from
+                        );
+                        meter.lock().unwrap().on_spoof(peer, msg.class);
+                        continue;
+                    }
                     if tx.send(msg).is_err() {
                         return;
                     }
@@ -301,8 +329,8 @@ impl TcpNode {
     }
 
     /// Spawn a reader thread for one established connection.
-    fn reader(stream: TcpStream, tx: Sender<Inbound>) {
-        std::thread::spawn(move || Self::pump(stream, tx));
+    fn reader(stream: TcpStream, tx: Sender<Inbound>, peer: NodeId, meter: Arc<Mutex<NetMeter>>) {
+        std::thread::spawn(move || Self::pump(stream, tx, peer, meter));
     }
 
     /// Mesh size (peers + self).
@@ -317,6 +345,14 @@ impl TcpNode {
             .iter()
             .filter(|slot| slot.lock().unwrap().is_some())
             .count()
+    }
+
+    /// Snapshot of this node's transport meter. On TCP only the
+    /// transport-level drop attributions are populated (today: spoofed
+    /// transport senders, counted against the hello-established peer);
+    /// byte/message accounting lives in the simulator's mesh-wide meter.
+    pub fn meter(&self) -> NetMeter {
+        self.meter.lock().unwrap().clone()
     }
 
     pub fn send(&self, to: NodeId, class: Traffic, bytes: &[u8]) -> Result<()> {
@@ -672,6 +708,30 @@ mod tests {
     fn bad_class_rejected() {
         assert!(class_from_u8(9).is_err());
         assert_eq!(class_from_u8(1).unwrap(), Traffic::Weights);
+    }
+
+    /// Transport-sender pinning: a peer that hello-identified as node 2
+    /// cannot deliver frames claiming any other sender. The forged frame
+    /// is dropped at the transport (never surfaces from `recv_timeout`)
+    /// and the drop is attributed to the REAL peer in the meter.
+    #[test]
+    fn spoofed_sender_dropped_and_attributed() {
+        let addrs = local_addrs(3, 38115);
+        let node0 = TcpNode::bind(0, &addrs).unwrap();
+        // Raw attacker socket: hello as node 2, then forge node 1's id.
+        let mut s = TcpStream::connect(addrs[0]).unwrap();
+        write_frame(&mut s, 2, Traffic::Consensus, b"hello").unwrap();
+        write_frame(&mut s, 1, Traffic::Weights, b"forged").unwrap();
+        write_frame(&mut s, 2, Traffic::Weights, b"honest").unwrap();
+        // Only the honest frame arrives, attributed to its true sender.
+        let m = node0.recv_timeout(Duration::from_secs(10)).expect("honest frame");
+        assert_eq!((m.from, m.class), (2, Traffic::Weights));
+        assert_eq!(m.bytes, b"honest");
+        assert!(node0.recv_timeout(Duration::from_millis(200)).is_none());
+        let meter = node0.meter();
+        assert_eq!(meter.spoofed_by(2), 1, "drop must land on the transport peer");
+        assert_eq!(meter.spoofed_by(1), 0, "the forged id must not be blamed");
+        assert_eq!(meter.spoofed_total(), 1);
     }
 
     /// The crash-restart seam of the cluster subsystem: a peer's process
