@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
     };
     cfg.validate()?;
     let n = cfg.n_nodes;
-    let addrs = local_addrs(n, 42150);
+    let addrs = local_addrs(n, 42150)?;
     let registry = KeyRegistry::new(n, cfg.seed);
 
     println!("spawning {n} TCP DeFL nodes on 127.0.0.1:42150..{}", 42150 + n - 1);
@@ -66,6 +66,7 @@ fn main() -> anyhow::Result<()> {
             let shard = shards.remove(id as usize);
 
             let mesh = TcpNode::connect_mesh(id, &addrs)?;
+            let auth = registry.clone();
             let mut node = DeflNode::new(
                 id,
                 cfg,
@@ -84,6 +85,7 @@ fn main() -> anyhow::Result<()> {
                 Duration::from_secs(120),
                 |n| n.done,
                 Duration::from_secs(3),
+                Some(&auth),
             )?;
 
             let digest = node

@@ -72,28 +72,70 @@ pub struct Inbound {
     pub bytes: Vec<u8>,
 }
 
-fn write_frame(stream: &mut TcpStream, from: NodeId, class: Traffic, bytes: &[u8]) -> Result<()> {
-    let mut hdr = [0u8; 9];
+/// Wire size of the `(from: u32, class: u8, len: u32)` frame header.
+const FRAME_HDR_BYTES: usize = 9;
+
+/// Hard cap on a data frame's payload length (1 GiB). Anything larger
+/// is a protocol violation and kills the connection before allocation.
+const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// Hard cap on the HELLO frame's payload, independent of the data-frame
+/// cap: the handshake payload is the 5 bytes of `b"hello"`, so a
+/// pre-handshake connection never gets to size a large allocation.
+const MAX_HELLO_BYTES: usize = 64;
+
+/// A decoded frame header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct FrameHdr {
+    from: NodeId,
+    class: Traffic,
+    len: usize,
+}
+
+/// Encode one frame header into its 9-byte wire form.
+fn encode_hdr(from: NodeId, class: Traffic, len: usize) -> [u8; FRAME_HDR_BYTES] {
+    let mut hdr = [0u8; FRAME_HDR_BYTES];
     hdr[..4].copy_from_slice(&from.to_le_bytes());
     hdr[4] = class_to_u8(class);
-    hdr[5..9].copy_from_slice(&(bytes.len() as u32).to_le_bytes());
-    stream.write_all(&hdr)?;
-    stream.write_all(bytes)?;
+    hdr[5..9].copy_from_slice(&(len as u32).to_le_bytes());
+    hdr
+}
+
+/// Parse a frame header off the front of `buf`.
+///
+/// `Ok(None)` means the buffer holds fewer than 9 bytes (keep reading);
+/// `Err` means the bytes can never be a valid header under `max_len`
+/// (bad class or oversized length) — a protocol violation, so the
+/// caller must kill the connection. The length check runs BEFORE any
+/// payload allocation.
+fn parse_hdr(buf: &[u8], max_len: usize) -> Result<Option<FrameHdr>> {
+    if buf.len() < FRAME_HDR_BYTES {
+        return Ok(None);
+    }
+    let from = NodeId::from_le_bytes(buf[..4].try_into().unwrap());
+    let class = class_from_u8(buf[4])?;
+    let len = u32::from_le_bytes(buf[5..9].try_into().unwrap()) as usize;
+    if len > max_len {
+        bail!("frame too large: {len} (cap {max_len})");
+    }
+    Ok(Some(FrameHdr { from, class, len }))
+}
+
+fn write_frame<W: Write>(w: &mut W, from: NodeId, class: Traffic, bytes: &[u8]) -> Result<()> {
+    w.write_all(&encode_hdr(from, class, bytes.len()))?;
+    w.write_all(bytes)?;
     Ok(())
 }
 
-fn read_frame(stream: &mut TcpStream) -> Result<Inbound> {
-    let mut hdr = [0u8; 9];
-    stream.read_exact(&mut hdr)?;
-    let from = NodeId::from_le_bytes(hdr[..4].try_into().unwrap());
-    let class = class_from_u8(hdr[4])?;
-    let len = u32::from_le_bytes(hdr[5..9].try_into().unwrap()) as usize;
-    if len > 1 << 30 {
-        bail!("frame too large: {len}");
-    }
-    let mut bytes = vec![0u8; len];
-    stream.read_exact(&mut bytes)?;
-    Ok(Inbound { from, class, bytes })
+/// Blocking frame read with an explicit payload cap (`MAX_HELLO_BYTES`
+/// for the handshake, `MAX_FRAME_BYTES` after it).
+fn read_frame_from<R: Read>(r: &mut R, max_len: usize) -> Result<Inbound> {
+    let mut hdr = [0u8; FRAME_HDR_BYTES];
+    r.read_exact(&mut hdr)?;
+    let h = parse_hdr(&hdr, max_len)?.expect("a full header was read");
+    let mut bytes = vec![0u8; h.len];
+    r.read_exact(&mut bytes)?;
+    Ok(Inbound { from: h.from, class: h.class, bytes })
 }
 
 /// One node's endpoint in a fully-connected TCP mesh. The listener stays
@@ -214,7 +256,7 @@ impl TcpNode {
                 let mut stream = stream;
                 stream.set_nodelay(true).ok();
                 stream.set_read_timeout(Some(HELLO_TIMEOUT)).ok();
-                let hello = match read_frame(&mut stream) {
+                let hello = match read_frame_from(&mut stream, MAX_HELLO_BYTES) {
                     Ok(h) => h,
                     Err(e) => {
                         log::debug!("tcp n{my_id}: dropping connection without hello: {e}");
@@ -309,7 +351,7 @@ impl TcpNode {
     /// lookup, Byzantine attribution).
     fn pump(mut stream: TcpStream, tx: Sender<Inbound>, peer: NodeId, meter: Arc<Mutex<NetMeter>>) {
         loop {
-            match read_frame(&mut stream) {
+            match read_frame_from(&mut stream, MAX_FRAME_BYTES) {
                 Ok(msg) => {
                     if msg.from != peer {
                         log::warn!(
@@ -363,11 +405,20 @@ impl TcpNode {
         let Some(stream) = guard.as_mut() else {
             bail!("no connection to {to}");
         };
-        write_frame(stream, self.id, class, bytes)
-        // A failed write is NOT cleared from the slot: the acceptor
-        // replaces it when the peer redials, and clearing here would race
-        // that replacement. Until then every send fails like the
-        // simulator's sends to a crashed node.
+        let res = write_frame(stream, self.id, class, bytes);
+        if res.is_err() {
+            // Half-frame rule: a failed write may have left a partial
+            // header/payload on the wire, and any further bytes on the
+            // same socket would desync the peer's reader at a non-frame
+            // boundary. Cut the stream both ways so the peer sees clean
+            // EOF after its last COMPLETE frame. The slot itself is NOT
+            // cleared: the acceptor replaces it when the peer redials,
+            // and clearing here would race that replacement. Until then
+            // every send fails fast, like the simulator's sends to a
+            // crashed node.
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+        }
+        res
     }
 
     /// Best-effort broadcast: tries every connected peer even when some
@@ -422,10 +473,16 @@ impl Drop for TcpNode {
 }
 
 /// Allocate n consecutive localhost addresses starting at `base_port`.
-pub fn local_addrs(n: usize, base_port: u16) -> Vec<SocketAddr> {
-    (0..n)
+/// Errors when the range would wrap past `u16::MAX` (wrapping would
+/// silently alias two nodes onto one port — a duplicate-bind mess at
+/// mesh start, or worse, a mesh that half-works).
+pub fn local_addrs(n: usize, base_port: u16) -> Result<Vec<SocketAddr>> {
+    if n > 0 && (base_port as usize) + n - 1 > u16::MAX as usize {
+        bail!("mesh ports {base_port}..{base_port}+{n} wrap past {}", u16::MAX);
+    }
+    Ok((0..n)
         .map(|i| format!("127.0.0.1:{}", base_port + i as u16).parse().unwrap())
-        .collect()
+        .collect())
 }
 
 /// Side-effect collector for the TCP host: buffers an actor callback's
@@ -678,7 +735,7 @@ mod tests {
 
     #[test]
     fn three_node_mesh_roundtrip() {
-        let addrs = local_addrs(3, 39115);
+        let addrs = local_addrs(3, 39115).unwrap();
         let mut handles = Vec::new();
         for id in 0..3u32 {
             let addrs = addrs.clone();
@@ -716,7 +773,7 @@ mod tests {
     /// and the drop is attributed to the REAL peer in the meter.
     #[test]
     fn spoofed_sender_dropped_and_attributed() {
-        let addrs = local_addrs(3, 38115);
+        let addrs = local_addrs(3, 38115).unwrap();
         let node0 = TcpNode::bind(0, &addrs).unwrap();
         // Raw attacker socket: hello as node 2, then forge node 1's id.
         let mut s = TcpStream::connect(addrs[0]).unwrap();
@@ -734,13 +791,202 @@ mod tests {
         assert_eq!(meter.spoofed_total(), 1);
     }
 
+    #[test]
+    fn local_addrs_rejects_port_wraparound() {
+        // 65534 + 2 ports = {65534, 65535}: the last representable pair.
+        let ok = local_addrs(2, 65534).unwrap();
+        assert_eq!(ok[1].port(), u16::MAX);
+        // One more node would wrap to port 0 and alias the mesh.
+        assert!(local_addrs(3, 65534).is_err());
+        assert!(local_addrs(0, u16::MAX).unwrap().is_empty());
+    }
+
+    /// Frame-header codec fuzz: encode→parse roundtrips exactly; every
+    /// truncation is reported as incomplete (never an error, never a
+    /// frame); oversized lengths and bad class bytes are protocol
+    /// errors surfaced BEFORE any payload allocation.
+    #[test]
+    fn frame_header_roundtrip_and_rejects() {
+        use crate::prop_assert;
+        use crate::util::prop::{forall, gens};
+        forall(
+            "frame-hdr-roundtrip",
+            0xf4a3,
+            200,
+            512,
+            |rng, size| {
+                let from = rng.next_u32();
+                let class = Traffic::ALL[rng.gen_range(3) as usize];
+                let payload = gens::bytes(rng, rng.gen_range(size as u64 + 1) as usize);
+                (from, class, payload)
+            },
+            |(from, class, payload)| {
+                let mut wire = Vec::new();
+                write_frame(&mut wire, *from, *class, payload).expect("vec write");
+                // Header parse sees exactly what was encoded.
+                let h = parse_hdr(&wire, MAX_FRAME_BYTES).map_err(|e| e.to_string())?;
+                let h = h.ok_or("complete header parsed as incomplete")?;
+                prop_assert!(
+                    h == FrameHdr { from: *from, class: *class, len: payload.len() },
+                    "header mangled: {h:?}"
+                );
+                // Full blocking read roundtrips the whole frame.
+                let m = read_frame_from(&mut &wire[..], MAX_FRAME_BYTES)
+                    .map_err(|e| e.to_string())?;
+                prop_assert!(
+                    (m.from, m.class, &m.bytes) == (*from, *class, payload),
+                    "frame mangled"
+                );
+                // Every strict prefix is incomplete, not a decode.
+                for cut in 0..wire.len() {
+                    if cut < FRAME_HDR_BYTES {
+                        let p = parse_hdr(&wire[..cut], MAX_FRAME_BYTES)
+                            .map_err(|e| e.to_string())?;
+                        prop_assert!(p.is_none(), "short header decoded at cut {cut}");
+                    }
+                    prop_assert!(
+                        read_frame_from(&mut &wire[..cut], MAX_FRAME_BYTES).is_err(),
+                        "truncated frame decoded at cut {cut}"
+                    );
+                }
+                Ok(())
+            },
+        );
+        // Oversized length: rejected by the cap, before allocation.
+        let mut huge = encode_hdr(0, Traffic::Weights, 0).to_vec();
+        huge[5..9].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(parse_hdr(&huge, MAX_FRAME_BYTES).is_err());
+        assert!(read_frame_from(&mut &huge[..], MAX_FRAME_BYTES).is_err());
+        // A length legal for data frames is still rejected under the
+        // hello cap — the handshake cannot size a large allocation.
+        let hello_sized = encode_hdr(1, Traffic::Consensus, MAX_HELLO_BYTES + 1);
+        assert!(parse_hdr(&hello_sized, MAX_FRAME_BYTES).unwrap().is_some());
+        assert!(parse_hdr(&hello_sized, MAX_HELLO_BYTES).is_err());
+        // Bad class byte (3 is the cluster control plane's, not the
+        // mesh's; 9 is garbage): protocol error either way.
+        for bad in [3u8, 9, 255] {
+            let mut wire = encode_hdr(0, Traffic::Weights, 0).to_vec();
+            wire[4] = bad;
+            assert!(parse_hdr(&wire, MAX_FRAME_BYTES).is_err(), "class {bad} accepted");
+        }
+    }
+
+    /// Hello hardening: a pre-handshake connection claiming an
+    /// oversized hello payload is rejected outright (the 1 GiB data cap
+    /// never applies before the handshake), and the listener keeps
+    /// serving honest hellos afterwards.
+    #[test]
+    fn oversized_hello_rejected_before_allocation() {
+        let addrs = local_addrs(3, 38215).unwrap();
+        let node0 = TcpNode::bind(0, &addrs).unwrap();
+        let mut bad = TcpStream::connect(addrs[0]).unwrap();
+        // Valid data-frame length, but way past the hello cap.
+        bad.write_all(&encode_hdr(2, Traffic::Consensus, 1 << 20)).unwrap();
+        bad.write_all(&[0u8; 4096]).unwrap();
+        // The connection must be dropped without installing a peer.
+        bad.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let mut probe = [0u8; 1];
+            match bad.read(&mut probe) {
+                Ok(0) => break, // EOF: the acceptor dropped us
+                Ok(_) => panic!("acceptor answered a bad hello"),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    assert!(Instant::now() < deadline, "bad-hello connection never dropped");
+                }
+                Err(_) => break, // reset: dropped just as well
+            }
+        }
+        assert_eq!(node0.connected_peers(), 0);
+        // An honest hello on a fresh socket still installs.
+        let mut good = TcpStream::connect(addrs[0]).unwrap();
+        write_frame(&mut good, 2, Traffic::Consensus, b"hello").unwrap();
+        write_frame(&mut good, 2, Traffic::Weights, b"after").unwrap();
+        let m = node0.recv_timeout(Duration::from_secs(10)).expect("post-hello frame");
+        assert_eq!((m.from, m.bytes.as_slice()), (2, &b"after"[..]));
+        assert_eq!(node0.connected_peers(), 1);
+    }
+
+    /// Half-frame desync regression: when a send fails partway through a
+    /// frame (here: a write timeout against a peer that stopped
+    /// draining), the stream must be cut immediately. The peer's reader
+    /// then sees every COMPLETE frame bit-exact followed by clean
+    /// EOF/reset — never a partial frame followed by fresh bytes that
+    /// would be misparsed as headers — and every later send fails fast
+    /// until the peer redials.
+    #[test]
+    fn failed_mid_frame_send_never_desyncs_reader() {
+        let addrs = local_addrs(2, 38315).unwrap();
+        // The "peer" is a raw listener that accepts, hellos back nothing,
+        // and deliberately stops reading so the kernel buffers fill.
+        let listener = TcpListener::bind(addrs[1]).unwrap();
+        let node0 = TcpNode::bind(0, &addrs).unwrap();
+        node0.dial_peer(1, addrs[1], Duration::from_secs(5)).unwrap();
+        let (mut peer, _) = listener.accept().unwrap();
+        let hello = read_frame_from(&mut peer, MAX_HELLO_BYTES).unwrap();
+        assert_eq!((hello.from, hello.bytes.as_slice()), (0, &b"hello"[..]));
+
+        // Arm a short write timeout on the established slot stream so the
+        // flood below fails mid-frame instead of blocking forever.
+        node0.peers[1]
+            .lock()
+            .unwrap()
+            .as_ref()
+            .unwrap()
+            .set_write_timeout(Some(Duration::from_millis(50)))
+            .unwrap();
+
+        // Flood until a send fails. 256 KiB payloads overrun the unread
+        // socket buffers within a few frames.
+        let mut payload = vec![0x5Au8; 256 * 1024];
+        let mut sent = 0u8;
+        loop {
+            payload[0] = sent;
+            if node0.send(1, Traffic::Weights, &payload).is_err() {
+                break;
+            }
+            sent += 1;
+            assert!(sent < 200, "kernel swallowed the whole flood");
+        }
+        // Fail-fast from here on: the stream was shut down, not reused.
+        assert!(
+            node0.send(1, Traffic::Weights, &[9]).is_err(),
+            "send after a mid-frame failure must not touch the wire"
+        );
+
+        // Drain the peer side: exactly the successful frames, each
+        // bit-exact, then the stream ends — no desynced garbage frame.
+        let mut seen = 0u8;
+        loop {
+            match read_frame_from(&mut peer, MAX_FRAME_BYTES) {
+                Ok(m) => {
+                    assert_eq!((m.from, m.class), (0, Traffic::Weights));
+                    assert_eq!(m.bytes.len(), payload.len(), "frame {seen} truncated");
+                    assert_eq!(m.bytes[0], seen, "frames reordered/corrupted");
+                    assert!(
+                        m.bytes[1..].iter().all(|&b| b == 0x5A),
+                        "frame {seen} payload corrupted"
+                    );
+                    seen += 1;
+                }
+                Err(_) => break, // EOF or reset at a frame boundary
+            }
+        }
+        assert_eq!(seen, sent, "reader saw a different set of complete frames");
+    }
+
     /// The crash-restart seam of the cluster subsystem: a peer's process
     /// goes away, a fresh process rejoins under the same id, and the
     /// surviving node's acceptor replaces the dead connection so both
     /// directions work again — no restart of the survivor required.
     #[test]
     fn restarted_peer_rejoins_and_replaces_its_connection() {
-        let addrs = local_addrs(2, 39715);
+        let addrs = local_addrs(2, 39715).unwrap();
         let a_addrs = addrs.clone();
         let t0 = std::thread::spawn(move || {
             let node = TcpNode::connect_mesh(0, &a_addrs).unwrap();
@@ -801,7 +1047,7 @@ mod tests {
     }
 
     fn ping_pong_mesh(base_port: u16, auth: Option<KeyRegistry>) {
-        let addrs = local_addrs(2, base_port);
+        let addrs = local_addrs(2, base_port).unwrap();
         let mut handles = Vec::new();
         for id in 0..2u32 {
             let addrs = addrs.clone();

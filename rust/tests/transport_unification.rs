@@ -104,7 +104,7 @@ fn run_on_sim(c: &ExperimentConfig) -> Vec<(u64, Digest)> {
 
 /// Same, over real localhost TCP sockets via the unified driver.
 fn run_on_tcp(c: &ExperimentConfig, base_port: u16) -> Vec<(u64, Digest)> {
-    let addrs = local_addrs(c.n_nodes, base_port);
+    let addrs = local_addrs(c.n_nodes, base_port).unwrap();
     let mut handles = Vec::new();
     for id in 0..c.n_nodes as NodeId {
         let (c, addrs) = (c.clone(), addrs.clone());
@@ -210,7 +210,7 @@ fn sim_and_tcp_agree_on_batched_chunked_path() {
         .collect();
 
     // TCP run: each thread owns its node, like separate silo processes.
-    let addrs = local_addrs(c.n_nodes, 39515);
+    let addrs = local_addrs(c.n_nodes, 39515).unwrap();
     let mut handles = Vec::new();
     for id in 0..c.n_nodes as NodeId {
         let (c, addrs) = (c.clone(), addrs.clone());
@@ -353,7 +353,7 @@ fn sim_and_tcp_recover_identically_from_a_dropped_chunk() {
         .collect();
 
     // TCP run: identical injection at node 0, over real sockets.
-    let addrs = local_addrs(c.n_nodes, 39615);
+    let addrs = local_addrs(c.n_nodes, 39615).unwrap();
     let mut handles = Vec::new();
     for id in 0..c.n_nodes as NodeId {
         let (c, addrs) = (c.clone(), addrs.clone());
@@ -465,7 +465,7 @@ fn forged_frames_rejected_identically_on_sim_and_tcp() {
     sim_rejected.sort_by_key(|(from, _)| *from);
 
     // ---- TCP side: same three frames over real sockets.
-    let addrs = local_addrs(3, 39815);
+    let addrs = local_addrs(3, 39815).unwrap();
     let done = Arc::new(AtomicBool::new(false));
     let mut senders = Vec::new();
     for id in [0u32, 2u32] {
