@@ -8,12 +8,23 @@
 //! network-overhead trajectory CI uploads), and HARD-FAILS if batched
 //! consensus traffic is not strictly below unbatched at every n — the
 //! overhead reduction is an acceptance criterion, not a nice-to-have.
+//!
+//! Also benches the REAL-socket transport cores: a 32-node localhost
+//! full mesh under the event-driven driver vs the thread-per-peer
+//! baseline, recording frames/sec and send→recv p50/p99 latency — and
+//! HARD-FAILS if the event driver does not reach the baseline's
+//! throughput (the ROADMAP gate, also enforced in CI from the JSON).
 mod common;
+
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
 
 use defl::crypto::NodeId;
 use defl::defl::lite::{lite_cluster, LiteConfig, LiteNode};
+use defl::load::hist::LatencyHistogram;
 use defl::metrics::Traffic;
 use defl::net::sim::{SimConfig, SimNet};
+use defl::net::tcp::{local_addrs, TcpConfig, TcpDriver, TcpNode};
 use defl::util::bench::{fmt_bytes, BenchReport, Table};
 
 struct NetRun {
@@ -65,6 +76,74 @@ fn run_cluster(cfg: &LiteConfig, seed: u64) -> NetRun {
     }
 }
 
+/// TCP transport-core mesh size. The ROADMAP gate is "event ≥ threads
+/// at n ≥ 32", so the bench runs exactly the gated width.
+const TCP_N: usize = 32;
+/// Frames each node broadcasts (every peer receives each one).
+const TCP_FRAMES_PER_NODE: usize = 800;
+/// Payload bytes per frame; the first 8 carry the send timestamp (µs
+/// since a process-wide epoch — every node shares one clock here).
+const TCP_PAYLOAD: usize = 224;
+
+/// One full-mesh run on real localhost sockets: every node broadcasts
+/// `TCP_FRAMES_PER_NODE` timestamped frames and drains its peers'
+/// opportunistically between sends, so the bounded queues keep moving
+/// and the closed loop cannot deadlock. Returns (frames/sec received
+/// mesh-wide over the SLOWEST node's wall-clock, merged send→recv
+/// latency histogram).
+fn tcp_mesh_run(base_port: u16, driver: TcpDriver) -> (f64, LatencyHistogram) {
+    let addrs = local_addrs(TCP_N, base_port).unwrap();
+    let epoch = Instant::now();
+    let start = Arc::new(Barrier::new(TCP_N));
+    let done = Arc::new(Barrier::new(TCP_N));
+    let mut handles = Vec::new();
+    for id in 0..TCP_N as NodeId {
+        let addrs = addrs.clone();
+        let (start, done) = (start.clone(), done.clone());
+        handles.push(std::thread::spawn(move || {
+            let cfg = TcpConfig { driver, ..TcpConfig::default() };
+            let node = TcpNode::connect_mesh_with(id, &addrs, cfg).unwrap();
+            let expected = (TCP_N - 1) * TCP_FRAMES_PER_NODE;
+            let mut hist = LatencyHistogram::new();
+            let mut got = 0usize;
+            let mut payload = vec![0u8; TCP_PAYLOAD];
+            start.wait();
+            let t0 = Instant::now();
+            for _ in 0..TCP_FRAMES_PER_NODE {
+                let now = epoch.elapsed().as_micros() as u64;
+                payload[..8].copy_from_slice(&now.to_le_bytes());
+                node.broadcast(Traffic::Weights, &payload).expect("mesh broadcast");
+                while got < expected {
+                    let Some(m) = node.recv_timeout(Duration::ZERO) else { break };
+                    let sent = u64::from_le_bytes(m.bytes[..8].try_into().unwrap());
+                    hist.record((epoch.elapsed().as_micros() as u64).saturating_sub(sent));
+                    got += 1;
+                }
+            }
+            while got < expected {
+                let m = node.recv_timeout(Duration::from_secs(30)).expect("mesh frame");
+                let sent = u64::from_le_bytes(m.bytes[..8].try_into().unwrap());
+                hist.record((epoch.elapsed().as_micros() as u64).saturating_sub(sent));
+                got += 1;
+            }
+            let elapsed = t0.elapsed().as_secs_f64();
+            // Hold the mesh open until EVERY node has drained — tearing
+            // down early would reset connections with frames in flight.
+            done.wait();
+            (elapsed, hist)
+        }));
+    }
+    let results: Vec<(f64, LatencyHistogram)> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let slowest = results.iter().map(|(e, _)| *e).fold(0.0f64, f64::max);
+    let total = (TCP_N * (TCP_N - 1) * TCP_FRAMES_PER_NODE) as f64;
+    let mut hist = LatencyHistogram::new();
+    for (_, h) in &results {
+        hist.merge(h);
+    }
+    (total / slowest.max(1e-9), hist)
+}
+
 fn main() {
     common::bench_scale();
     let mut report = BenchReport::new("micro_net");
@@ -86,9 +165,8 @@ fn main() {
             batch_consensus: batch,
             timeout_base_us: 200_000,
             fetch_retry_us: 50_000,
-            agg_quorum: None,
             pipeline: true,
-            train_us: 0,
+            ..LiteConfig::default()
         };
         let batched = run_cluster(&mk(true), 21);
         let unbatched = run_cluster(&mk(false), 21);
@@ -145,9 +223,8 @@ fn main() {
                 batch_consensus: true,
                 timeout_base_us: 200_000,
                 fetch_retry_us: 50_000,
-                agg_quorum: None,
                 pipeline: true,
-                train_us: 0,
+                ..LiteConfig::default()
             };
             let r = run_cluster(&cfg, 33);
             let bpr = r.weights_bytes as f64 / r.rounds as f64;
@@ -176,6 +253,50 @@ fn main() {
         }
     }
     table.print();
+
+    // ---- transport cores: event-driven vs thread-per-peer ----
+    let mut table = Table::new(
+        "TCP transport cores, 32-node localhost full mesh",
+        &["driver", "frames/s", "p50 latency", "p99 latency"],
+    );
+    let mut tcp_fps = Vec::new();
+    for (driver, ports) in
+        [(TcpDriver::Event, [46100u16, 46200]), (TcpDriver::Threads, [46300, 46400])]
+    {
+        // Two runs, best-of: one cold run's scheduler noise must not
+        // decide the CI gate.
+        let mut best: Option<(f64, LatencyHistogram)> = None;
+        for port in ports {
+            let (fps, hist) = tcp_mesh_run(port, driver);
+            if best.as_ref().map(|(b, _)| fps > *b).unwrap_or(true) {
+                best = Some((fps, hist));
+            }
+        }
+        let (fps, hist) = best.unwrap();
+        table.row(&[
+            driver.name().into(),
+            format!("{fps:.0}"),
+            format!("{} µs", hist.p50()),
+            format!("{} µs", hist.p99()),
+        ]);
+        report.record_metrics(
+            &format!("tcp/{}", driver.name()),
+            &[("n", TCP_N as f64)],
+            &[
+                ("frames_per_s", fps),
+                ("p50_us", hist.p50() as f64),
+                ("p99_us", hist.p99() as f64),
+            ],
+        );
+        tcp_fps.push(fps);
+    }
+    table.print();
+    if tcp_fps[0] < tcp_fps[1] {
+        failures.push(format!(
+            "n={TCP_N}: event driver {:.0} frames/s NOT at or above thread-per-peer {:.0}",
+            tcp_fps[0], tcp_fps[1]
+        ));
+    }
 
     let path = common::bench_report_path("BENCH_net.json");
     report.write(&path).expect("write BENCH_net.json");

@@ -99,17 +99,19 @@ fn run() -> Result<()> {
         });
     }
 
-    // Mesh: fresh cluster start vs crash-restart rejoin.
+    // Mesh: fresh cluster start vs crash-restart rejoin, on whichever
+    // transport core `cluster.net_driver` picked.
     let addrs = cc.mesh_addrs();
     let t0 = Instant::now();
     let mesh = if rejoin {
-        TcpNode::rejoin_mesh(id, &addrs, Duration::from_secs(15))?
+        TcpNode::rejoin_mesh_with(id, &addrs, Duration::from_secs(15), cc.tcp_config())?
     } else {
-        TcpNode::connect_mesh(id, &addrs)?
+        TcpNode::connect_mesh_with(id, &addrs, cc.tcp_config())?
     };
     println!(
-        "silo {id}: {} mesh in {:?} ({} peers connected)",
+        "silo {id}: {} {} mesh in {:?} ({} peers connected)",
         if rejoin { "rejoined" } else { "joined" },
+        cc.net_driver.name(),
         t0.elapsed(),
         mesh.connected_peers()
     );

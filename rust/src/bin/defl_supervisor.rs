@@ -51,6 +51,12 @@ fn run() -> Result<()> {
     };
     let kill = args.get("kill").map(KillSpec::parse).transpose()?;
     let deadline_s: u64 = args.get_parse_or("deadline-s", cc.deadline_s)?;
+    println!(
+        "supervising {} {}-mode silos on the {} transport core",
+        cc.n_nodes,
+        cc.mode.name(),
+        cc.net_driver.name()
+    );
 
     let opts = SupervisorOpts {
         silo_bin,

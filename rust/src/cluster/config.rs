@@ -19,6 +19,7 @@ use anyhow::{bail, Context, Result};
 use crate::config::toml::TomlDoc;
 use crate::config::{Attack, ExperimentConfig, Model, Partition, System};
 use crate::defl::LiteConfig;
+use crate::net::tcp::{TcpConfig, TcpDriver};
 
 /// Which protocol node a silo process hosts.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -100,6 +101,10 @@ pub struct ClusterConfig {
     /// Modelled per-arrival ingest cost (µs) added to the UPD publish
     /// delay — what makes offered load lengthen rounds.
     pub client_ingest_us: u64,
+    /// Which transport core silo meshes run: `"event"` (default, one
+    /// readiness-driven driver thread per silo) or `"threads"` (the
+    /// thread-per-peer baseline, kept reachable for A/B deployment).
+    pub net_driver: TcpDriver,
     /// The experiment payload; `n_nodes` is forced to the cluster's.
     pub exp: ExperimentConfig,
 }
@@ -125,6 +130,7 @@ impl Default for ClusterConfig {
             load_rate_per_s: 0.0,
             load_poisson: true,
             client_ingest_us: 0,
+            net_driver: TcpDriver::Event,
             exp: ExperimentConfig { n_nodes, ..Default::default() },
         }
     }
@@ -144,6 +150,7 @@ const CLUSTER_KEYS: &[&str] = &[
     "cluster.agg_quorum",
     "cluster.deadline_s",
     "cluster.linger_ms",
+    "cluster.net_driver",
 ];
 
 const EXPERIMENT_KEYS: &[&str] = &[
@@ -216,6 +223,9 @@ impl ClusterConfig {
         }
         cfg.deadline_s = doc.get_parse("cluster.deadline_s")?.unwrap_or(cfg.deadline_s);
         cfg.linger_ms = doc.get_parse("cluster.linger_ms")?.unwrap_or(cfg.linger_ms);
+        if let Some(v) = doc.get("cluster.net_driver") {
+            cfg.net_driver = TcpDriver::parse(v)?;
+        }
 
         let e = &mut cfg.exp;
         if let Some(v) = doc.get("experiment.system") {
@@ -297,6 +307,7 @@ impl ClusterConfig {
              agg_quorum = \"{}\"\n\
              deadline_s = {}\n\
              linger_ms = {}\n\
+             net_driver = \"{}\"\n\
              \n\
              [experiment]\n\
              system = \"{}\"\n\
@@ -333,6 +344,7 @@ impl ClusterConfig {
             if self.agg_quorum_all { "all" } else { "auto" },
             self.deadline_s,
             self.linger_ms,
+            self.net_driver.name(),
             self.exp.system.name(),
             self.exp.model.name(),
             self.exp.f_byzantine,
@@ -401,6 +413,13 @@ impl ClusterConfig {
     /// Supervisor control-plane address.
     pub fn control_addr(&self) -> SocketAddr {
         SocketAddr::new(self.host, self.control_port)
+    }
+
+    /// The transport-core config silo meshes bind with (buffer sizes
+    /// stay at the library defaults; only the driver choice is a
+    /// deployment knob).
+    pub fn tcp_config(&self) -> TcpConfig {
+        TcpConfig { driver: self.net_driver, ..TcpConfig::default() }
     }
 
     /// The AGG quorum every silo runs with (see `agg_quorum_all`).
@@ -570,6 +589,22 @@ mod tests {
         .is_err());
         assert!(ClusterConfig::parse("[cluster]\nmode = \"threads\"\n").is_err());
         assert!(ClusterConfig::parse("[cluster]\nagg_quorum = \"most\"\n").is_err());
+        assert!(ClusterConfig::parse("[cluster]\nnodes = 4\nnet_driver = \"epoll\"\n").is_err());
+    }
+
+    #[test]
+    fn net_driver_knob_selects_transport_core() {
+        let cfg = ClusterConfig::parse("[cluster]\nnodes = 4\n").unwrap();
+        assert_eq!(cfg.net_driver, TcpDriver::Event, "event core is the default");
+        assert_eq!(cfg.tcp_config().driver, TcpDriver::Event);
+        let baseline =
+            ClusterConfig::parse("[cluster]\nnodes = 4\nnet_driver = \"threads\"\n").unwrap();
+        assert_eq!(baseline.net_driver, TcpDriver::Threads);
+        assert_eq!(baseline.tcp_config().driver, TcpDriver::Threads);
+        // Buffer knobs stay at library defaults either way.
+        assert_eq!(baseline.tcp_config().send_buf_bytes, TcpConfig::default().send_buf_bytes);
+        let back = ClusterConfig::parse(&baseline.to_toml()).unwrap();
+        assert_eq!(back, baseline, "net_driver survives the TOML roundtrip");
     }
 
     #[test]
@@ -601,6 +636,11 @@ mod tests {
                     load_rate_per_s: rng.gen_range(10_000) as f64 / 4.0,
                     load_poisson: rng.f64() < 0.5,
                     client_ingest_us: rng.gen_range(1_000),
+                    net_driver: if rng.f64() < 0.5 {
+                        TcpDriver::Event
+                    } else {
+                        TcpDriver::Threads
+                    },
                     ..Default::default()
                 };
                 cfg.exp.n_nodes = n_nodes;

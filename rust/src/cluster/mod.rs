@@ -62,6 +62,35 @@
 //! lock state: safe under the crash-fault model supervised here, and
 //! counted against the Byzantine budget otherwise.
 //!
+//! ## What restart-recovery relies on from the transport
+//!
+//! The rejoin path leans on three `net::tcp` mesh-lifecycle properties
+//! (held by BOTH transport cores — see the `net` module docs):
+//!
+//! * **Occupied-but-dead slots.** A crashed silo's connection slot on
+//!   every survivor stays occupied: sends to it fail fast (so round
+//!   logic sees the failure immediately) but the slot is never cleared
+//!   by the failure path itself — clearing is the exclusive right of
+//!   the accept path installing the restarted silo's fresh dial. On the
+//!   event core that installation happens on the ONE driver thread that
+//!   owns every socket, so replacement cannot race a concurrent reader
+//!   or a half-torn-down connection by construction.
+//! * **Clean EOF on write failure.** A send that fails mid-frame shuts
+//!   the socket down both ways, so the dead connection never leaves a
+//!   half-frame for the survivor's reader to desync on; the restarted
+//!   silo's fresh connection starts at a frame boundary with empty
+//!   buffers (no pre-crash bytes can leak into the new stream).
+//! * **Fault-schedule coverage.** `tests/cluster_process.rs` pins the
+//!   SIGKILL → restart → bit-identical digest drill end-to-end, and
+//!   `tests/tcp_mesh_soak.rs` soaks kill + rejoin on a 32-node event
+//!   mesh with exact per-sender frame tallies.
+//!
+//! Which transport core silos mesh over is the `cluster.net_driver`
+//! TOML knob (`"event"`, the default readiness-driven driver, or
+//! `"threads"`, the thread-per-peer baseline); the supervisor prints
+//! the active core at startup and both binaries plumb it through
+//! [`config::ClusterConfig::tcp_config`].
+//!
 //! # Pipelined rounds in a cluster
 //!
 //! `experiment.pipeline` (TOML; default `true`) selects the pipelined

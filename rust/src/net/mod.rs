@@ -104,6 +104,47 @@
 //!   the blob; the requester rotates immediately instead of waiting out
 //!   its per-holder timeout.
 //!
+//! # TCP framing and transport cores
+//!
+//! Below the seam, [`tcp::TcpNode`] moves frames as `from: u32 LE |
+//! class: u8 | len: u32 LE | payload` (the envelope above, when auth is
+//! on, IS the payload). The first frame on every connection is a
+//! `hello` naming the dialer — class Consensus, payload `b"hello"`,
+//! capped at 64 bytes independently of the 1 GiB data cap — and from
+//! then on the `from` field of every frame must match
+//! the hello-established peer: a mismatch is counted per REAL peer in
+//! the node's [`crate::metrics::NetMeter`] (`spoofed_by`) and dropped
+//! before delivery, so transport-level attribution cannot be forged
+//! even on unauthenticated meshes.
+//!
+//! Two interchangeable cores implement the mesh behind one API,
+//! selected by [`tcp::TcpConfig::driver`] (deployments pick one via the
+//! `cluster.net_driver` TOML knob):
+//!
+//! * [`tcp::TcpDriver::Event`] (default) — ONE driver thread owns the
+//!   listener and every peer socket, all nonblocking: each pass accepts
+//!   new connections, adopts locally-dialed ones, pumps pending hellos,
+//!   then polls every connection for readiness. Sends append to a
+//!   per-connection coalescing buffer (many frames, one syscall) that
+//!   resumes mid-frame from a cursor after partial writes; a send
+//!   finding the buffer at its high-water mark blocks until the driver
+//!   drains it, and the driver stops reading any socket while the
+//!   bounded inbox is full, so backpressure propagates to the peer as
+//!   real TCP flow control instead of unbounded memory growth.
+//! * [`tcp::TcpDriver::Threads`] — the measured baseline: blocking
+//!   sockets, one reader thread per connection plus an acceptor, sends
+//!   written inline under the slot lock.
+//!
+//! Both cores share the mesh lifecycle: a dead peer's slot stays
+//! OCCUPIED (sends fail fast, broadcasts still report it) until the
+//! peer redials and the acceptor path replaces the connection, and a
+//! mid-frame write error shuts the socket down BOTH ways so the peer's
+//! reader sees clean EOF after its last complete frame rather than a
+//! desynced byte stream. `benches/micro_net.rs` races the two cores on
+//! a 32-node localhost mesh and CI gates event ≥ threads frames/sec;
+//! `tests/tcp_mesh_soak.rs` soaks the event core through a
+//! kill-and-rejoin fault schedule at the same width.
+//!
 //! # Running a real multi-process cluster
 //!
 //! `examples/tcp_cluster.rs` hosts n node THREADS in one process — fine

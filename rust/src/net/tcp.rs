@@ -19,28 +19,62 @@
 //! simulator gets for free (its transport sender is the event's true
 //! origin), so per-sender attribution is sound on both transports.
 //!
+//! # Transport cores
+//!
+//! Two interchangeable cores sit behind the same [`TcpNode`] API,
+//! selected by [`TcpConfig::driver`]:
+//!
+//! - [`TcpDriver::Event`] (default): a single readiness-driven driver
+//!   thread owns the listener and every peer socket, all nonblocking.
+//!   Each loop iteration accepts/adopts connections, pumps pending
+//!   hellos, drains readable sockets into per-connection reassembly
+//!   buffers (frames decoded off the buffer, not the socket), and
+//!   flushes each connection's coalesced send buffer with one `write`
+//!   per readiness — senders append frames to the buffer, so bursts of
+//!   small frames leave in a single syscall instead of a syscall pair
+//!   per frame. When nothing is ready the driver spins briefly, then
+//!   parks; senders unpark it (the `Thread::unpark` token makes the
+//!   handoff lost-wakeup-free).
+//! - [`TcpDriver::Threads`]: the original thread-per-peer blocking
+//!   core (one reader thread per connection, blocking writes under the
+//!   slot lock). Kept as the measured baseline — `micro_net` records
+//!   frames/sec + latency for both and CI gates event ≥ threads.
+//!
+//! Both cores feed a **bounded** inbound queue
+//! ([`TcpConfig::recv_queue_frames`]) that exerts real backpressure:
+//! the event driver stops reading a socket while the queue is full
+//! (TCP flow control pushes back to the sender), and the threads core
+//! blocks the reader thread. Outbound, the event core bounds each
+//! connection's coalescing buffer at [`TcpConfig::send_buf_bytes`];
+//! a send against a full buffer waits for the driver to drain it
+//! (high-water mark: a single oversized frame still ships) and errors
+//! only after a stall timeout.
+//!
 //! # Mesh lifecycle
 //!
-//! Every node keeps its listener (and an acceptor thread) alive for the
-//! life of the [`TcpNode`], and the acceptor installs — or **replaces** —
-//! the peer connection a `hello` identifies. That is what makes silo
-//! crash-restart recovery work over real sockets: a restarted process
-//! calls [`TcpNode::rejoin_mesh`], which dials *every* peer with
-//! exponential backoff, and each surviving peer's acceptor swaps the dead
-//! connection for the fresh one. Sends to a peer whose connection died
-//! fail and are logged/skipped by [`run_actor`] (the simulator's
-//! crashed-node semantics); frames lost that way are recovered by the
-//! protocol layers (QC-chain sync + digest-addressed blob pull), not the
-//! transport. [`TcpNode::shutdown`] (also run on drop) closes the
-//! listener and every peer socket gracefully.
+//! Every node keeps its listener alive for the life of the [`TcpNode`],
+//! and the accept path installs — or **replaces** — the peer connection
+//! a `hello` identifies. That is what makes silo crash-restart recovery
+//! work over real sockets: a restarted process calls
+//! [`TcpNode::rejoin_mesh`], which dials *every* peer with exponential
+//! backoff, and each surviving peer swaps the dead connection for the
+//! fresh one (in the event core the swap happens inside the single
+//! driver thread, so it cannot race the connection's reader or writer).
+//! Sends to a peer whose connection died fail and are logged/skipped by
+//! [`run_actor`] (the simulator's crashed-node semantics); frames lost
+//! that way are recovered by the protocol layers (QC-chain sync +
+//! digest-addressed blob pull), not the transport. A connection that
+//! errors mid-write is `shutdown(Both)` so a partial frame is never
+//! followed by more bytes, and its slot stays occupied-but-dead until
+//! the peer redials. [`TcpNode::shutdown`] (also run on drop) closes
+//! the listener and every peer socket gracefully.
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
-use std::io::{Read, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::collections::{BinaryHeap, VecDeque};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -138,36 +172,274 @@ fn read_frame_from<R: Read>(r: &mut R, max_len: usize) -> Result<Inbound> {
     Ok(Inbound { from: h.from, class: h.class, bytes })
 }
 
-/// One node's endpoint in a fully-connected TCP mesh. The listener stays
-/// open (acceptor thread) for the node's lifetime, so peers restarted
-/// after a crash can redial and replace their dead connection at any
-/// point — see the module docs for the mesh lifecycle.
+/// Which transport core a [`TcpNode`] runs on — see the module docs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TcpDriver {
+    /// Readiness-driven event loop: one driver thread, nonblocking
+    /// sockets, per-connection write coalescing. The default.
+    #[default]
+    Event,
+    /// Thread-per-peer blocking sockets — the measured baseline.
+    Threads,
+}
+
+impl TcpDriver {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TcpDriver::Event => "event",
+            TcpDriver::Threads => "threads",
+        }
+    }
+
+    /// Parse the `cluster.net_driver` TOML value.
+    pub fn parse(s: &str) -> Result<TcpDriver> {
+        match s {
+            "event" => Ok(TcpDriver::Event),
+            "threads" => Ok(TcpDriver::Threads),
+            _ => bail!("unknown net driver {s:?} (expected \"event\" or \"threads\")"),
+        }
+    }
+}
+
+/// Transport tuning for a [`TcpNode`]. The defaults suit the cluster
+/// binaries and tests; benches override `driver` to compare cores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TcpConfig {
+    pub driver: TcpDriver,
+    /// Event core: high-water mark (bytes) of one connection's
+    /// outbound coalescing buffer. A send finding the buffer at or
+    /// above the mark waits for the driver to drain it below.
+    pub send_buf_bytes: usize,
+    /// Bound (frames) of the shared inbound queue. The event driver
+    /// stops reading sockets while the queue is full; the threads
+    /// core blocks its reader threads.
+    pub recv_queue_frames: usize,
+}
+
+impl Default for TcpConfig {
+    fn default() -> TcpConfig {
+        TcpConfig {
+            driver: TcpDriver::Event,
+            send_buf_bytes: 4 << 20,
+            recv_queue_frames: 8192,
+        }
+    }
+}
+
+/// Bounded MPMC queue between the transport core and `recv_timeout`.
+/// Replaces the old unbounded mpsc channel: a node that stops draining
+/// now pushes back to its peers through TCP flow control instead of
+/// buffering frames without limit.
+struct Inbox {
+    q: Mutex<VecDeque<Inbound>>,
+    /// Signalled on push (consumers wait here)…
+    ready: Condvar,
+    /// …and on pop (blocked producers / backpressured senders wait
+    /// here). Two condvars on ONE mutex — never the reverse.
+    space: Condvar,
+    cap: usize,
+    closed: AtomicBool,
+}
+
+impl Inbox {
+    fn new(cap: usize) -> Inbox {
+        Inbox {
+            q: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+            space: Condvar::new(),
+            cap: cap.max(1),
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.q.lock().unwrap().len()
+    }
+
+    /// Nonblocking push, used by the event driver. The driver checks
+    /// `len() < cap` BEFORE reading a socket, so the queue can overshoot
+    /// the cap by at most the frames of one read burst — a soft cap
+    /// that keeps the driver from ever blocking.
+    fn push(&self, m: Inbound) {
+        self.q.lock().unwrap().push_back(m);
+        self.ready.notify_one();
+    }
+
+    /// Blocking push, used by the threads core's reader threads: waits
+    /// for space (the real backpressure), except during shutdown.
+    fn push_blocking(&self, m: Inbound) {
+        let mut q = self.q.lock().unwrap();
+        while q.len() >= self.cap && !self.closed.load(Ordering::SeqCst) {
+            let (g, _) = self.space.wait_timeout(q, Duration::from_millis(50)).unwrap();
+            q = g;
+        }
+        q.push_back(m);
+        drop(q);
+        self.ready.notify_one();
+    }
+
+    fn pop_timeout(&self, timeout: Duration) -> Option<Inbound> {
+        let deadline = Instant::now() + timeout;
+        let mut q = self.q.lock().unwrap();
+        loop {
+            if let Some(m) = q.pop_front() {
+                drop(q);
+                self.space.notify_one();
+                return Some(m);
+            }
+            if self.closed.load(Ordering::SeqCst) {
+                return None;
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return None;
+            }
+            let (g, _) = self.ready.wait_timeout(q, left).unwrap();
+            q = g;
+        }
+    }
+
+    fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        let _q = self.q.lock().unwrap();
+        self.ready.notify_all();
+        self.space.notify_all();
+    }
+}
+
+/// One peer slot's lifecycle in the event core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SlotState {
+    /// Never connected: broadcast skips it (crashed-node semantics).
+    Empty,
+    /// Connected; sends append to the coalescing buffer.
+    Live,
+    /// Connection died. The slot stays OCCUPIED so the installed-or-
+    /// replaced invariant matches the threads core: sends fail fast
+    /// until the peer redials and the driver replaces the slot.
+    Dead,
+}
+
+/// Event core, per-peer send side: frames are appended here by senders
+/// and drained by the driver with one `write` per readiness — the
+/// contiguous buffer IS the vectored batch, so cross-frame coalescing
+/// costs no extra syscalls or copies at flush time.
+struct SendSlot {
+    state: SlotState,
+    buf: Vec<u8>,
+    /// First unflushed byte of `buf` (a cursor, so a partial write
+    /// RESUMES exactly where it stopped — mid-frame desync is
+    /// structurally impossible on this core).
+    start: usize,
+}
+
+impl SendSlot {
+    fn pending(&self) -> usize {
+        self.buf.len() - self.start
+    }
+}
+
+/// State shared between an event-core [`TcpNode`] handle and its driver
+/// thread.
+struct EventShared {
+    id: NodeId,
+    cfg: TcpConfig,
+    slots: Vec<Mutex<SendSlot>>,
+    /// Per-slot "the driver drained / killed this slot" signal for
+    /// backpressured senders.
+    space: Vec<Condvar>,
+    /// Locally dialed, hello'd connections awaiting adoption by the
+    /// driver (the driver owns ALL sockets; dialing threads hand over).
+    dials: Mutex<Vec<(NodeId, TcpStream)>>,
+    inbox: Arc<Inbox>,
+    meter: Arc<Mutex<NetMeter>>,
+    closed: AtomicBool,
+    /// The driver thread's handle for `unpark` (set once at spawn).
+    driver: OnceLock<std::thread::Thread>,
+}
+
+impl EventShared {
+    fn unpark_driver(&self) {
+        if let Some(t) = self.driver.get() {
+            t.unpark();
+        }
+    }
+
+    fn slot_state(&self, peer: usize) -> SlotState {
+        self.slots[peer].lock().unwrap().state
+    }
+}
+
+/// The two cores behind [`TcpNode`] — see the module docs.
+enum Core {
+    Threads {
+        /// Per-peer connection slots (write side). Each slot has its
+        /// own lock so sends to different peers never serialize.
+        peers: Arc<Vec<Mutex<Option<TcpStream>>>>,
+        closed: Arc<AtomicBool>,
+        acceptor: Option<JoinHandle<()>>,
+    },
+    Event {
+        sh: Arc<EventShared>,
+        driver: Option<JoinHandle<()>>,
+    },
+}
+
+/// One node's endpoint in a fully-connected TCP mesh. The listener
+/// stays open for the node's lifetime, so peers restarted after a
+/// crash can redial and replace their dead connection at any point —
+/// see the module docs for the mesh lifecycle and the two cores.
 pub struct TcpNode {
     pub id: NodeId,
-    /// Per-peer connection slots (write side). The acceptor thread
-    /// replaces a slot when the peer redials, so each slot has its own
-    /// lock and sends to different peers never serialize on each other.
-    peers: Arc<Vec<Mutex<Option<TcpStream>>>>,
-    rx: Receiver<Inbound>,
-    tx: Sender<Inbound>,
+    n: usize,
     listen_addr: SocketAddr,
-    closed: Arc<AtomicBool>,
-    acceptor: Option<JoinHandle<()>>,
+    inbox: Arc<Inbox>,
     /// Transport-level drop attribution (spoofed-sender frames); see
     /// [`TcpNode::meter`].
     meter: Arc<Mutex<NetMeter>>,
+    core: Core,
 }
 
-/// How long the acceptor waits for a fresh connection's `hello` frame
-/// before giving up on it (a peer that connects and sends nothing would
-/// otherwise block all other accepts).
+/// How long the accept path waits for a fresh connection's `hello`
+/// frame before giving up on it (a peer that connects and sends nothing
+/// must not pin accept-side state forever).
 const HELLO_TIMEOUT: Duration = Duration::from_secs(5);
 
+/// Event driver: idle iterations of cheap spinning (yield) before the
+/// driver parks and waits for an unpark from a sender/dialer/shutdown.
+const EVENT_SPIN_ITERS: u32 = 16;
+
+/// Event driver: park duration when idle. Short enough that a missed
+/// external edge (readable socket with no local event) is picked up
+/// promptly; the unpark token covers every local edge exactly.
+const EVENT_PARK: Duration = Duration::from_millis(1);
+
+/// Event driver: bytes per socket `read` call into the scratch buffer.
+const READ_CHUNK: usize = 64 * 1024;
+
+/// Event driver: compaction threshold for consumed read-buffer prefixes
+/// and flushed send-buffer prefixes.
+const COMPACT_BYTES: usize = 64 * 1024;
+
+/// Event core: how long a backpressured send waits for the driver to
+/// drain the connection's buffer before giving up.
+const SEND_STALL_MAX: Duration = Duration::from_secs(10);
+
+/// Event core: how long a dialing thread waits for the driver to adopt
+/// its handed-over connection (the legacy core installed synchronously,
+/// and `rejoin_mesh` callers send immediately after it returns).
+const DIAL_ADOPT_MAX: Duration = Duration::from_secs(5);
+
 impl TcpNode {
-    /// Bind the node's listener and start the acceptor, with every peer
-    /// slot still empty. [`connect_mesh`](Self::connect_mesh) and
+    /// Bind the node's listener and start its core (driver thread or
+    /// acceptor thread), with every peer slot still empty.
+    /// [`connect_mesh`](Self::connect_mesh) and
     /// [`rejoin_mesh`](Self::rejoin_mesh) build on this.
     pub fn bind(id: NodeId, addrs: &[SocketAddr]) -> Result<TcpNode> {
+        Self::bind_with(id, addrs, TcpConfig::default())
+    }
+
+    pub fn bind_with(id: NodeId, addrs: &[SocketAddr], cfg: TcpConfig) -> Result<TcpNode> {
         let n = addrs.len();
         if id as usize >= n {
             bail!("node id {id} outside the {n}-address mesh");
@@ -175,26 +447,76 @@ impl TcpNode {
         let listen_addr = addrs[id as usize];
         let listener =
             TcpListener::bind(listen_addr).with_context(|| format!("bind {listen_addr}"))?;
-        let (tx, rx) = channel::<Inbound>();
-        let peers: Arc<Vec<Mutex<Option<TcpStream>>>> =
-            Arc::new((0..n).map(|_| Mutex::new(None)).collect());
-        let closed = Arc::new(AtomicBool::new(false));
+        let inbox = Arc::new(Inbox::new(cfg.recv_queue_frames));
         let meter = Arc::new(Mutex::new(NetMeter::new()));
-        let acceptor = {
-            let (peers, tx, closed) = (peers.clone(), tx.clone(), closed.clone());
-            let meter = meter.clone();
-            Some(std::thread::spawn(move || {
-                Self::accept_loop(id, listener, peers, tx, closed, meter)
-            }))
+        let core = match cfg.driver {
+            TcpDriver::Threads => {
+                let peers: Arc<Vec<Mutex<Option<TcpStream>>>> =
+                    Arc::new((0..n).map(|_| Mutex::new(None)).collect());
+                let closed = Arc::new(AtomicBool::new(false));
+                let acceptor = {
+                    let (peers, closed) = (peers.clone(), closed.clone());
+                    let (inbox, meter) = (inbox.clone(), meter.clone());
+                    Some(std::thread::spawn(move || {
+                        Self::accept_loop(id, listener, peers, inbox, closed, meter)
+                    }))
+                };
+                Core::Threads { peers, closed, acceptor }
+            }
+            TcpDriver::Event => {
+                listener
+                    .set_nonblocking(true)
+                    .with_context(|| format!("nonblocking listener on {listen_addr}"))?;
+                let sh = Arc::new(EventShared {
+                    id,
+                    cfg,
+                    slots: (0..n)
+                        .map(|_| {
+                            Mutex::new(SendSlot {
+                                state: SlotState::Empty,
+                                buf: Vec::new(),
+                                start: 0,
+                            })
+                        })
+                        .collect(),
+                    space: (0..n).map(|_| Condvar::new()).collect(),
+                    dials: Mutex::new(Vec::new()),
+                    inbox: inbox.clone(),
+                    meter: meter.clone(),
+                    closed: AtomicBool::new(false),
+                    driver: OnceLock::new(),
+                });
+                let handle = {
+                    let sh = sh.clone();
+                    std::thread::spawn(move || {
+                        EventDriver {
+                            conns: (0..n).map(|_| None).collect(),
+                            pending: Vec::new(),
+                            scratch: vec![0u8; READ_CHUNK],
+                            sh,
+                            listener,
+                        }
+                        .run()
+                    })
+                };
+                // Registered before the handle is stored, so every
+                // unpark after this point reaches the driver thread.
+                sh.driver.set(handle.thread().clone()).ok();
+                Core::Event { sh, driver: Some(handle) }
+            }
         };
-        Ok(TcpNode { id, peers, rx, tx, listen_addr, closed, acceptor, meter })
+        Ok(TcpNode { id, n, listen_addr, inbox, meter, core })
     }
 
     /// Join a mesh at cluster start: listen on `addrs[id]`, dial higher
     /// ids (lower ids dial us). Returns once fully connected to all
     /// peers.
     pub fn connect_mesh(id: NodeId, addrs: &[SocketAddr]) -> Result<TcpNode> {
-        let node = Self::bind(id, addrs)?;
+        Self::connect_mesh_with(id, addrs, TcpConfig::default())
+    }
+
+    pub fn connect_mesh_with(id: NodeId, addrs: &[SocketAddr], cfg: TcpConfig) -> Result<TcpNode> {
+        let node = Self::bind_with(id, addrs, cfg)?;
         for peer in (id as usize + 1)..addrs.len() {
             node.dial_peer(peer as NodeId, addrs[peer], Duration::from_secs(10))?;
         }
@@ -204,12 +526,21 @@ impl TcpNode {
 
     /// Rejoin a running mesh after a crash restart: listen on
     /// `addrs[id]` again and dial EVERY peer (they are already up, their
-    /// acceptors replace the dead connection) with per-dial exponential
-    /// backoff. A peer that stays unreachable within `budget` is left
-    /// unconnected — sends to it are dropped like a crashed node's, and
-    /// it can still dial us later.
+    /// accept paths replace the dead connection) with per-dial
+    /// exponential backoff. A peer that stays unreachable within
+    /// `budget` is left unconnected — sends to it are dropped like a
+    /// crashed node's, and it can still dial us later.
     pub fn rejoin_mesh(id: NodeId, addrs: &[SocketAddr], budget: Duration) -> Result<TcpNode> {
-        let node = Self::bind(id, addrs)?;
+        Self::rejoin_mesh_with(id, addrs, budget, TcpConfig::default())
+    }
+
+    pub fn rejoin_mesh_with(
+        id: NodeId,
+        addrs: &[SocketAddr],
+        budget: Duration,
+        cfg: TcpConfig,
+    ) -> Result<TcpNode> {
+        let node = Self::bind_with(id, addrs, cfg)?;
         let deadline = Instant::now() + budget;
         for (peer, addr) in addrs.iter().enumerate() {
             if peer == id as usize {
@@ -224,19 +555,19 @@ impl TcpNode {
         Ok(node)
     }
 
-    /// Accept connections for the node's lifetime. Each connection is
-    /// handed to its own handshake thread (a slow or wedged dialer must
-    /// never stall the acceptor — a crash-restarted silo's rejoin dial
-    /// has to get through): the thread reads the `hello` frame naming
-    /// the dialer, installs the connection in (or replaces) that peer's
-    /// slot, and then becomes the connection's reader. Ends when
-    /// [`shutdown`](Self::shutdown) sets the flag and unblocks the
-    /// accept with a loopback connection.
+    /// Threads core: accept connections for the node's lifetime. Each
+    /// connection is handed to its own handshake thread (a slow or
+    /// wedged dialer must never stall the acceptor — a crash-restarted
+    /// silo's rejoin dial has to get through): the thread reads the
+    /// `hello` frame naming the dialer, installs the connection in (or
+    /// replaces) that peer's slot, and then becomes the connection's
+    /// reader. Ends when [`shutdown`](Self::shutdown) sets the flag and
+    /// unblocks the accept with a loopback connection.
     fn accept_loop(
         my_id: NodeId,
         listener: TcpListener,
         peers: Arc<Vec<Mutex<Option<TcpStream>>>>,
-        tx: Sender<Inbound>,
+        inbox: Arc<Inbox>,
         closed: Arc<AtomicBool>,
         meter: Arc<Mutex<NetMeter>>,
     ) {
@@ -251,7 +582,7 @@ impl TcpNode {
             if closed.load(Ordering::SeqCst) {
                 return;
             }
-            let (peers, tx, meter) = (peers.clone(), tx.clone(), meter.clone());
+            let (peers, inbox, meter) = (peers.clone(), inbox.clone(), meter.clone());
             std::thread::spawn(move || {
                 let mut stream = stream;
                 stream.set_nodelay(true).ok();
@@ -265,11 +596,7 @@ impl TcpNode {
                 };
                 stream.set_read_timeout(None).ok();
                 let peer = hello.from;
-                if peer as usize >= peers.len()
-                    || peer == my_id
-                    || hello.class != Traffic::Consensus
-                    || hello.bytes != b"hello"
-                {
+                if !valid_hello(&hello, my_id, peers.len()) {
                     log::debug!("tcp n{my_id}: rejecting bad hello from {peer}");
                     return;
                 }
@@ -283,34 +610,57 @@ impl TcpNode {
                         "tcp n{my_id}: peer {peer} reconnected, replacing its connection"
                     );
                 }
-                Self::pump(stream, tx, peer, meter);
+                Self::pump(stream, inbox, peer, meter);
             });
         }
     }
 
-    /// Dial one peer (retrying with exponential backoff within `budget`),
-    /// introduce ourselves with a hello frame, and install the
-    /// connection.
+    /// Dial one peer (retrying with exponential backoff within
+    /// `budget`), introduce ourselves with a hello frame, and install
+    /// the connection. On the event core the socket is handed to the
+    /// driver, and this blocks until the driver has adopted it — the
+    /// caller may send the moment this returns, exactly like the
+    /// threads core's synchronous install.
     fn dial_peer(&self, peer: NodeId, addr: SocketAddr, budget: Duration) -> Result<()> {
         let stream = Self::dial(addr, budget)?;
         stream.set_nodelay(true).ok();
-        let mut s = stream.try_clone()?;
-        write_frame(&mut s, self.id, Traffic::Consensus, b"hello")?;
-        *self.peers[peer as usize].lock().unwrap() = Some(stream.try_clone()?);
-        Self::reader(stream, self.tx.clone(), peer, self.meter.clone());
-        Ok(())
+        match &self.core {
+            Core::Threads { peers, .. } => {
+                let mut s = stream.try_clone()?;
+                write_frame(&mut s, self.id, Traffic::Consensus, b"hello")?;
+                *peers[peer as usize].lock().unwrap() = Some(stream.try_clone()?);
+                Self::reader(stream, self.inbox.clone(), peer, self.meter.clone());
+                Ok(())
+            }
+            Core::Event { sh, .. } => {
+                let mut stream = stream;
+                // Hello written while the socket is still blocking, so
+                // the handshake is on the wire before handover.
+                write_frame(&mut stream, self.id, Traffic::Consensus, b"hello")?;
+                sh.dials.lock().unwrap().push((peer, stream));
+                sh.unpark_driver();
+                let deadline = Instant::now() + DIAL_ADOPT_MAX;
+                while sh.slot_state(peer as usize) != SlotState::Live {
+                    if sh.closed.load(Ordering::SeqCst) {
+                        bail!("tcp n{}: node shut down during dial to {peer}", self.id);
+                    }
+                    if Instant::now() > deadline {
+                        bail!("tcp n{}: driver never adopted the dial to {peer}", self.id);
+                    }
+                    sh.unpark_driver();
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                Ok(())
+            }
+        }
     }
 
     /// Block until every peer slot is connected (mesh start).
     fn await_connected(&self, budget: Duration) -> Result<()> {
         let deadline = Instant::now() + budget;
         loop {
-            let missing: Vec<usize> = self
-                .peers
-                .iter()
-                .enumerate()
-                .filter(|(i, slot)| *i != self.id as usize && slot.lock().unwrap().is_none())
-                .map(|(i, _)| i)
+            let missing: Vec<usize> = (0..self.n)
+                .filter(|&i| i != self.id as usize && !self.peer_occupied(i))
                 .collect();
             if missing.is_empty() {
                 return Ok(());
@@ -339,9 +689,10 @@ impl TcpNode {
         }
     }
 
-    /// Pump frames from one established connection into the shared
-    /// inbound channel until the peer closes (or crashes). Blocking —
-    /// run on a dedicated thread.
+    /// Threads core: pump frames from one established connection into
+    /// the shared inbox until the peer closes (or crashes). Blocking —
+    /// run on a dedicated thread; a full inbox blocks it (the
+    /// backpressure path).
     ///
     /// The frame header's `from` field is PINNED to `peer`, the identity
     /// the connection's hello established: a frame claiming any other
@@ -349,7 +700,7 @@ impl TcpNode {
     /// never delivered. Without this, an unsigned-mode peer could forge
     /// the sender every upper layer keys on (chunk budgets, signature
     /// lookup, Byzantine attribution).
-    fn pump(mut stream: TcpStream, tx: Sender<Inbound>, peer: NodeId, meter: Arc<Mutex<NetMeter>>) {
+    fn pump(mut stream: TcpStream, inbox: Arc<Inbox>, peer: NodeId, meter: Arc<Mutex<NetMeter>>) {
         loop {
             match read_frame_from(&mut stream, MAX_FRAME_BYTES) {
                 Ok(msg) => {
@@ -361,9 +712,7 @@ impl TcpNode {
                         meter.lock().unwrap().on_spoof(peer, msg.class);
                         continue;
                     }
-                    if tx.send(msg).is_err() {
-                        return;
-                    }
+                    inbox.push_blocking(msg);
                 }
                 Err(_) => return, // peer closed
             }
@@ -371,21 +720,30 @@ impl TcpNode {
     }
 
     /// Spawn a reader thread for one established connection.
-    fn reader(stream: TcpStream, tx: Sender<Inbound>, peer: NodeId, meter: Arc<Mutex<NetMeter>>) {
-        std::thread::spawn(move || Self::pump(stream, tx, peer, meter));
+    fn reader(stream: TcpStream, inbox: Arc<Inbox>, peer: NodeId, meter: Arc<Mutex<NetMeter>>) {
+        std::thread::spawn(move || Self::pump(stream, inbox, peer, meter));
     }
 
     /// Mesh size (peers + self).
     pub fn n_nodes(&self) -> usize {
-        self.peers.len()
+        self.n
     }
 
-    /// Peers with a live connection slot (restarted peers reappear here
-    /// once they redial).
+    /// Whether peer slot `i` ever got a connection (live OR dead-but-
+    /// awaiting-replacement — both cores keep a died connection's slot
+    /// occupied until the peer redials).
+    fn peer_occupied(&self, i: usize) -> bool {
+        match &self.core {
+            Core::Threads { peers, .. } => peers[i].lock().unwrap().is_some(),
+            Core::Event { sh, .. } => sh.slot_state(i) != SlotState::Empty,
+        }
+    }
+
+    /// Peers with an occupied connection slot (restarted peers reappear
+    /// here once they redial).
     pub fn connected_peers(&self) -> usize {
-        self.peers
-            .iter()
-            .filter(|slot| slot.lock().unwrap().is_some())
+        (0..self.n)
+            .filter(|&i| i != self.id as usize && self.peer_occupied(i))
             .count()
     }
 
@@ -398,27 +756,79 @@ impl TcpNode {
     }
 
     pub fn send(&self, to: NodeId, class: Traffic, bytes: &[u8]) -> Result<()> {
-        let Some(slot) = self.peers.get(to as usize) else {
+        if to as usize >= self.n {
             bail!("no such peer {to}");
-        };
-        let mut guard = slot.lock().unwrap();
-        let Some(stream) = guard.as_mut() else {
-            bail!("no connection to {to}");
-        };
-        let res = write_frame(stream, self.id, class, bytes);
-        if res.is_err() {
-            // Half-frame rule: a failed write may have left a partial
-            // header/payload on the wire, and any further bytes on the
-            // same socket would desync the peer's reader at a non-frame
-            // boundary. Cut the stream both ways so the peer sees clean
-            // EOF after its last COMPLETE frame. The slot itself is NOT
-            // cleared: the acceptor replaces it when the peer redials,
-            // and clearing here would race that replacement. Until then
-            // every send fails fast, like the simulator's sends to a
-            // crashed node.
-            let _ = stream.shutdown(std::net::Shutdown::Both);
         }
-        res
+        match &self.core {
+            Core::Threads { peers, .. } => {
+                let mut guard = peers[to as usize].lock().unwrap();
+                let Some(stream) = guard.as_mut() else {
+                    bail!("no connection to {to}");
+                };
+                let res = write_frame(stream, self.id, class, bytes);
+                if res.is_err() {
+                    // Half-frame rule: a failed write may have left a
+                    // partial header/payload on the wire, and any further
+                    // bytes on the same socket would desync the peer's
+                    // reader at a non-frame boundary. Cut the stream both
+                    // ways so the peer sees clean EOF after its last
+                    // COMPLETE frame. The slot itself is NOT cleared: the
+                    // acceptor replaces it when the peer redials, and
+                    // clearing here would race that replacement. Until
+                    // then every send fails fast, like the simulator's
+                    // sends to a crashed node.
+                    let _ = stream.shutdown(Shutdown::Both);
+                }
+                res
+            }
+            Core::Event { sh, .. } => Self::event_send(sh, self.id, to, class, bytes),
+        }
+    }
+
+    /// Event core send: append the encoded frame to the peer's coalesced
+    /// send buffer and wake the driver. Blocks (with a hard stall bail)
+    /// while the buffer is at or past the high-water mark — the bounded
+    /// buffer IS the backpressure that replaced the unbounded channel.
+    /// The half-frame rule holds structurally here: frames enter the
+    /// buffer whole, and the driver's write cursor resumes mid-frame
+    /// after short writes, so the stream can only ever die between
+    /// fully flushed bytes of a frame — never "partial frame then more
+    /// frames".
+    fn event_send(sh: &Arc<EventShared>, my_id: NodeId, to: NodeId, class: Traffic, bytes: &[u8]) -> Result<()> {
+        if sh.closed.load(Ordering::SeqCst) {
+            bail!("node is shut down");
+        }
+        let hdr = encode_hdr(my_id, class, bytes.len());
+        let deadline = Instant::now() + SEND_STALL_MAX;
+        let mut s = sh.slots[to as usize].lock().unwrap();
+        loop {
+            match s.state {
+                SlotState::Empty => bail!("no connection to {to}"),
+                // Occupied-but-dead: fail fast (crashed-node semantics)
+                // until the peer redials and the driver replaces the slot.
+                SlotState::Dead => bail!("connection to {to} is down"),
+                SlotState::Live => {}
+            }
+            if s.pending() < sh.cfg.send_buf_bytes {
+                break;
+            }
+            if sh.closed.load(Ordering::SeqCst) {
+                bail!("node is shut down");
+            }
+            if Instant::now() >= deadline {
+                bail!("send to {to} stalled: peer not draining {} buffered bytes", s.pending());
+            }
+            sh.unpark_driver();
+            let (guard, _) = sh.space[to as usize]
+                .wait_timeout(s, Duration::from_millis(20))
+                .unwrap();
+            s = guard;
+        }
+        s.buf.extend_from_slice(&hdr);
+        s.buf.extend_from_slice(bytes);
+        drop(s);
+        sh.unpark_driver();
+        Ok(())
     }
 
     /// Best-effort broadcast: tries every connected peer even when some
@@ -426,9 +836,9 @@ impl TcpNode {
     /// then reports the failures.
     pub fn broadcast(&self, class: Traffic, bytes: &[u8]) -> Result<()> {
         let mut failed: Vec<NodeId> = Vec::new();
-        for (i, slot) in self.peers.iter().enumerate() {
+        for i in 0..self.n {
             let peer = i as NodeId;
-            if peer == self.id || slot.lock().unwrap().is_none() {
+            if peer == self.id || !self.peer_occupied(i) {
                 continue; // self, or never-connected: crashed-node semantics
             }
             if self.send(peer, class, bytes).is_err() {
@@ -443,32 +853,417 @@ impl TcpNode {
     }
 
     pub fn recv_timeout(&self, timeout: Duration) -> Option<Inbound> {
-        self.rx.recv_timeout(timeout).ok()
+        self.inbox.pop_timeout(timeout)
     }
 
     /// Graceful shutdown: stop accepting, close every peer socket (their
     /// readers see EOF), release the listen port. Idempotent; also runs
     /// on drop.
     pub fn shutdown(&mut self) {
-        if self.closed.swap(true, Ordering::SeqCst) {
-            return;
-        }
-        // Unblock the acceptor's blocking accept().
-        let _ = TcpStream::connect(self.listen_addr);
-        if let Some(h) = self.acceptor.take() {
-            let _ = h.join();
-        }
-        for slot in self.peers.iter() {
-            if let Some(s) = slot.lock().unwrap().take() {
-                let _ = s.shutdown(std::net::Shutdown::Both);
+        match &mut self.core {
+            Core::Threads { peers, closed, acceptor } => {
+                if closed.swap(true, Ordering::SeqCst) {
+                    return;
+                }
+                // Unblock the acceptor's blocking accept().
+                let _ = TcpStream::connect(self.listen_addr);
+                if let Some(h) = acceptor.take() {
+                    let _ = h.join();
+                }
+                for slot in peers.iter() {
+                    if let Some(s) = slot.lock().unwrap().take() {
+                        let _ = s.shutdown(Shutdown::Both);
+                    }
+                }
+            }
+            Core::Event { sh, driver } => {
+                if sh.closed.swap(true, Ordering::SeqCst) {
+                    return;
+                }
+                sh.unpark_driver();
+                if let Some(h) = driver.take() {
+                    let _ = h.join();
+                }
             }
         }
+        // Wake any blocked receivers/senders after the core is down.
+        self.inbox.close();
     }
 }
 
 impl Drop for TcpNode {
     fn drop(&mut self) {
         self.shutdown();
+    }
+}
+
+/// A fresh connection's first frame must name a real, non-self peer and
+/// be the literal hello — anything else and the connection is dropped
+/// before it can claim a slot.
+fn valid_hello(h: &Inbound, my_id: NodeId, n: usize) -> bool {
+    (h.from as usize) < n && h.from != my_id && h.class == Traffic::Consensus && h.bytes == b"hello"
+}
+
+/// One established connection's read side in the event driver: socket
+/// bytes land in the reassembly buffer, frames are decoded off it —
+/// the decode is staged off the poll loop's read call.
+struct Conn {
+    stream: TcpStream,
+    rd: Vec<u8>,
+    /// First unconsumed byte of `rd`.
+    pos: usize,
+}
+
+/// An accepted connection whose hello has not arrived yet. The driver
+/// reads EXACTLY the hello's bytes into `buf`, never past it, so frames
+/// a peer pipelines right behind its hello stay queued in the socket
+/// for the installed connection's reassembly buffer.
+struct Pending {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    deadline: Instant,
+}
+
+enum HelloStatus {
+    /// Not enough bytes yet; keep the connection pending.
+    Wait,
+    /// Protocol violation — drop the connection.
+    Reject(String),
+    /// Complete, valid hello from this peer — install.
+    Hello(NodeId),
+}
+
+/// The event core's driver: a single thread that owns the listener and
+/// every peer socket (all nonblocking). Because every socket is touched
+/// by exactly one thread, connection replacement on rejoin cannot race
+/// a reader or writer — the race the threads core documents away is
+/// gone by construction here.
+struct EventDriver {
+    /// Read side per peer slot (send side lives in `sh.slots`).
+    conns: Vec<Option<Conn>>,
+    pending: Vec<Pending>,
+    /// Reused `read` destination, READ_CHUNK bytes.
+    scratch: Vec<u8>,
+    sh: Arc<EventShared>,
+    listener: TcpListener,
+}
+
+impl EventDriver {
+    fn run(mut self) {
+        let mut idle: u32 = 0;
+        while !self.sh.closed.load(Ordering::SeqCst) {
+            let mut progress = false;
+            progress |= self.accept_new();
+            progress |= self.adopt_dials();
+            progress |= self.poll_pending();
+            for peer in 0..self.conns.len() {
+                progress |= self.poll_conn(peer);
+            }
+            if progress {
+                idle = 0;
+            } else {
+                idle += 1;
+                if idle < EVENT_SPIN_ITERS {
+                    std::thread::yield_now();
+                } else {
+                    // Senders/dialers/shutdown unpark us (lost-wakeup-
+                    // free: the unpark token is consumed by this park if
+                    // it arrived since the last one). The short timeout
+                    // only bounds latency for EXTERNAL edges — bytes
+                    // arriving from peers while we park.
+                    std::thread::park_timeout(EVENT_PARK);
+                }
+            }
+        }
+        // Teardown: flush what senders already handed us, then close
+        // every socket; mark live slots dead and wake backpressured
+        // senders. The inbox is closed by `TcpNode::shutdown` AFTER
+        // joining this thread, so frames already queued stay drainable.
+        for p in self.pending.drain(..) {
+            let _ = p.stream.shutdown(Shutdown::Both);
+        }
+        for peer in 0..self.conns.len() {
+            let conn = self.conns[peer].take();
+            let mut s = self.sh.slots[peer].lock().unwrap();
+            if let Some(mut c) = conn {
+                if s.state == SlotState::Live && s.pending() > 0 {
+                    // Best-effort graceful flush: the threads core's
+                    // blocking sends are on the wire by the time its
+                    // shutdown runs, and graceful drop relies on that —
+                    // a node's last frames must not vanish into a
+                    // dropped buffer.
+                    c.stream.set_nonblocking(false).ok();
+                    c.stream.set_write_timeout(Some(Duration::from_secs(1))).ok();
+                    let _ = c.stream.write_all(&s.buf[s.start..]);
+                }
+                let _ = c.stream.shutdown(Shutdown::Both);
+            }
+            if s.state == SlotState::Live {
+                s.state = SlotState::Dead;
+            }
+            s.buf.clear();
+            s.start = 0;
+            drop(s);
+            self.sh.space[peer].notify_all();
+        }
+    }
+
+    /// Accept any queued incoming connections into the pending-hello
+    /// list. Nonblocking; a slow or wedged dialer pins only its own
+    /// `Pending` entry, never the driver.
+    fn accept_new(&mut self) -> bool {
+        let mut progress = false;
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nodelay(true).ok();
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    self.pending.push(Pending {
+                        stream,
+                        buf: Vec::new(),
+                        deadline: Instant::now() + HELLO_TIMEOUT,
+                    });
+                    progress = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+        progress
+    }
+
+    /// Adopt locally dialed connections handed over by `dial_peer` (the
+    /// dialer already wrote the hello on the still-blocking socket).
+    fn adopt_dials(&mut self) -> bool {
+        let dials: Vec<(NodeId, TcpStream)> = std::mem::take(&mut *self.sh.dials.lock().unwrap());
+        let progress = !dials.is_empty();
+        for (peer, stream) in dials {
+            self.install(peer, stream);
+        }
+        progress
+    }
+
+    /// Pump every pending connection's hello; install completed ones,
+    /// drop rejected or timed-out ones.
+    fn poll_pending(&mut self) -> bool {
+        let mut progress = false;
+        let mut i = 0;
+        while i < self.pending.len() {
+            let p = &mut self.pending[i];
+            match Self::pump_hello(p, self.sh.id, self.conns.len()) {
+                HelloStatus::Wait => {
+                    if Instant::now() > p.deadline {
+                        log::debug!("tcp n{}: dropping connection without hello", self.sh.id);
+                        let p = self.pending.swap_remove(i);
+                        let _ = p.stream.shutdown(Shutdown::Both);
+                        progress = true;
+                    } else {
+                        i += 1;
+                    }
+                }
+                HelloStatus::Reject(why) => {
+                    log::debug!("tcp n{}: rejecting bad hello: {why}", self.sh.id);
+                    let p = self.pending.swap_remove(i);
+                    let _ = p.stream.shutdown(Shutdown::Both);
+                    progress = true;
+                }
+                HelloStatus::Hello(peer) => {
+                    let p = self.pending.swap_remove(i);
+                    self.install(peer, p.stream);
+                    progress = true;
+                }
+            }
+        }
+        progress
+    }
+
+    /// Advance one pending hello, reading exactly the bytes still
+    /// missing (header first, then the payload the header sizes, capped
+    /// at `MAX_HELLO_BYTES` BEFORE any allocation).
+    fn pump_hello(p: &mut Pending, my_id: NodeId, n: usize) -> HelloStatus {
+        loop {
+            let need = match parse_hdr(&p.buf, MAX_HELLO_BYTES) {
+                Err(e) => return HelloStatus::Reject(e.to_string()),
+                Ok(None) => FRAME_HDR_BYTES - p.buf.len(),
+                Ok(Some(h)) => {
+                    let total = FRAME_HDR_BYTES + h.len;
+                    if p.buf.len() >= total {
+                        let hello = Inbound {
+                            from: h.from,
+                            class: h.class,
+                            bytes: p.buf[FRAME_HDR_BYTES..total].to_vec(),
+                        };
+                        if !valid_hello(&hello, my_id, n) {
+                            return HelloStatus::Reject(format!("bad hello from {}", h.from));
+                        }
+                        return HelloStatus::Hello(h.from);
+                    }
+                    total - p.buf.len()
+                }
+            };
+            let mut chunk = [0u8; FRAME_HDR_BYTES + MAX_HELLO_BYTES];
+            match p.stream.read(&mut chunk[..need]) {
+                Ok(0) => return HelloStatus::Reject("EOF before hello".into()),
+                Ok(k) => p.buf.extend_from_slice(&chunk[..k]),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return HelloStatus::Wait,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return HelloStatus::Reject(e.to_string()),
+            }
+        }
+    }
+
+    /// Install (or replace) `peer`'s connection. Runs ONLY on the
+    /// driver thread, which owns every socket — replacement cannot race
+    /// the connection's reader or writer, by construction.
+    fn install(&mut self, peer: NodeId, stream: TcpStream) {
+        stream.set_nodelay(true).ok();
+        if stream.set_nonblocking(true).is_err() {
+            let _ = stream.shutdown(Shutdown::Both);
+            return;
+        }
+        let i = peer as usize;
+        if let Some(old) = self.conns[i].take() {
+            log::info!(
+                "tcp n{}: peer {peer} reconnected, replacing its connection",
+                self.sh.id
+            );
+            let _ = old.stream.shutdown(Shutdown::Both);
+        }
+        self.conns[i] = Some(Conn { stream, rd: Vec::new(), pos: 0 });
+        let mut s = self.sh.slots[i].lock().unwrap();
+        s.state = SlotState::Live;
+        s.buf.clear();
+        s.start = 0;
+        drop(s);
+        self.sh.space[i].notify_all();
+    }
+
+    /// One readiness pass over `peer`'s connection: drain the readable
+    /// side into the reassembly buffer (decoding complete frames off
+    /// it), then flush the coalesced send buffer with a single `write`.
+    fn poll_conn(&mut self, peer: usize) -> bool {
+        let Some(conn) = self.conns[peer].as_mut() else {
+            return false;
+        };
+        let mut progress = false;
+        let mut dead = false;
+
+        // Read side. Backpressure: stop reading while the shared inbox
+        // is at its cap — TCP flow control then pushes back on the peer.
+        while self.sh.inbox.len() < self.sh.cfg.recv_queue_frames {
+            match conn.stream.read(&mut self.scratch) {
+                Ok(0) => {
+                    dead = true;
+                    break;
+                }
+                Ok(k) => {
+                    progress = true;
+                    conn.rd.extend_from_slice(&self.scratch[..k]);
+                    if let Err(e) = Self::drain_frames(&self.sh, peer, conn) {
+                        log::warn!("tcp n{}: killing connection to {peer}: {e}", self.sh.id);
+                        dead = true;
+                        break;
+                    }
+                    if k < self.scratch.len() {
+                        break; // socket drained
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    dead = true;
+                    break;
+                }
+            }
+        }
+
+        // Write side: one `write` per pass, resuming at the cursor. A
+        // short write can split a frame across passes, but the unsent
+        // suffix stays at the cursor — the stream carries either the
+        // whole frame or a prefix followed by connection death, never a
+        // partial frame followed by other bytes (half-frame rule).
+        let mut drained = false;
+        if !dead {
+            let mut s = self.sh.slots[peer].lock().unwrap();
+            if s.state == SlotState::Live && s.pending() > 0 {
+                match conn.stream.write(&s.buf[s.start..]) {
+                    Ok(0) => dead = true,
+                    Ok(k) => {
+                        progress = true;
+                        s.start += k;
+                        if s.start == s.buf.len() {
+                            s.buf.clear();
+                            s.start = 0;
+                        } else if s.start > COMPACT_BYTES {
+                            s.buf.drain(..s.start);
+                            s.start = 0;
+                        }
+                        drained = true;
+                    }
+                    Err(e)
+                        if e.kind() == ErrorKind::WouldBlock
+                            || e.kind() == ErrorKind::Interrupted => {}
+                    Err(_) => dead = true,
+                }
+            }
+            drop(s);
+            if drained {
+                self.sh.space[peer].notify_all();
+            }
+        }
+
+        if dead {
+            // Same rule as the threads core: cut the stream both ways
+            // and keep the slot occupied (Dead) until the peer redials
+            // — sends fail fast, broadcast still skips only Empty.
+            let _ = conn.stream.shutdown(Shutdown::Both);
+            self.conns[peer] = None;
+            let mut s = self.sh.slots[peer].lock().unwrap();
+            s.state = SlotState::Dead;
+            s.buf.clear();
+            s.start = 0;
+            drop(s);
+            self.sh.space[peer].notify_all();
+            progress = true;
+        }
+        progress
+    }
+
+    /// Decode every complete frame in `conn`'s reassembly buffer into
+    /// the inbox, pinning the sender to the hello-established peer —
+    /// spoofed frames are dropped and attributed to the REAL peer, same
+    /// as the threads core's `pump`.
+    fn drain_frames(sh: &EventShared, peer: usize, conn: &mut Conn) -> Result<()> {
+        loop {
+            let avail = &conn.rd[conn.pos..];
+            let Some(h) = parse_hdr(avail, MAX_FRAME_BYTES)? else { break };
+            let total = FRAME_HDR_BYTES + h.len;
+            if avail.len() < total {
+                break;
+            }
+            let payload = &avail[FRAME_HDR_BYTES..total];
+            if h.from as usize == peer {
+                sh.inbox.push(Inbound { from: h.from, class: h.class, bytes: payload.to_vec() });
+            } else {
+                log::warn!(
+                    "tcp: peer {peer} sent a frame claiming sender {} — dropped",
+                    h.from
+                );
+                sh.meter.lock().unwrap().on_spoof(peer as NodeId, h.class);
+            }
+            conn.pos += total;
+        }
+        if conn.pos == conn.rd.len() {
+            conn.rd.clear();
+            conn.pos = 0;
+        } else if conn.pos > COMPACT_BYTES {
+            conn.rd.drain(..conn.pos);
+            conn.pos = 0;
+        }
+        Ok(())
     }
 }
 
@@ -733,14 +1528,17 @@ mod tests {
     use super::*;
     use std::any::Any;
 
-    #[test]
-    fn three_node_mesh_roundtrip() {
-        let addrs = local_addrs(3, 39115).unwrap();
+    fn cfg(driver: TcpDriver) -> TcpConfig {
+        TcpConfig { driver, ..TcpConfig::default() }
+    }
+
+    fn mesh_roundtrip(base_port: u16, driver: TcpDriver) {
+        let addrs = local_addrs(3, base_port).unwrap();
         let mut handles = Vec::new();
         for id in 0..3u32 {
             let addrs = addrs.clone();
             handles.push(std::thread::spawn(move || {
-                let node = TcpNode::connect_mesh(id, &addrs).unwrap();
+                let node = TcpNode::connect_mesh_with(id, &addrs, cfg(driver)).unwrap();
                 // Everyone broadcasts its id, then collects 2 messages.
                 node.broadcast(Traffic::Weights, &[id as u8; 16]).unwrap();
                 let mut got = Vec::new();
@@ -762,6 +1560,16 @@ mod tests {
     }
 
     #[test]
+    fn three_node_mesh_roundtrip_event() {
+        mesh_roundtrip(39115, TcpDriver::Event);
+    }
+
+    #[test]
+    fn three_node_mesh_roundtrip_threads() {
+        mesh_roundtrip(38515, TcpDriver::Threads);
+    }
+
+    #[test]
     fn bad_class_rejected() {
         assert!(class_from_u8(9).is_err());
         assert_eq!(class_from_u8(1).unwrap(), Traffic::Weights);
@@ -771,10 +1579,9 @@ mod tests {
     /// cannot deliver frames claiming any other sender. The forged frame
     /// is dropped at the transport (never surfaces from `recv_timeout`)
     /// and the drop is attributed to the REAL peer in the meter.
-    #[test]
-    fn spoofed_sender_dropped_and_attributed() {
-        let addrs = local_addrs(3, 38115).unwrap();
-        let node0 = TcpNode::bind(0, &addrs).unwrap();
+    fn spoofed_sender_dropped(base_port: u16, driver: TcpDriver) {
+        let addrs = local_addrs(3, base_port).unwrap();
+        let node0 = TcpNode::bind_with(0, &addrs, cfg(driver)).unwrap();
         // Raw attacker socket: hello as node 2, then forge node 1's id.
         let mut s = TcpStream::connect(addrs[0]).unwrap();
         write_frame(&mut s, 2, Traffic::Consensus, b"hello").unwrap();
@@ -789,6 +1596,16 @@ mod tests {
         assert_eq!(meter.spoofed_by(2), 1, "drop must land on the transport peer");
         assert_eq!(meter.spoofed_by(1), 0, "the forged id must not be blamed");
         assert_eq!(meter.spoofed_total(), 1);
+    }
+
+    #[test]
+    fn spoofed_sender_dropped_and_attributed_event() {
+        spoofed_sender_dropped(38115, TcpDriver::Event);
+    }
+
+    #[test]
+    fn spoofed_sender_dropped_and_attributed_threads() {
+        spoofed_sender_dropped(38715, TcpDriver::Threads);
     }
 
     #[test]
@@ -875,10 +1692,9 @@ mod tests {
     /// oversized hello payload is rejected outright (the 1 GiB data cap
     /// never applies before the handshake), and the listener keeps
     /// serving honest hellos afterwards.
-    #[test]
-    fn oversized_hello_rejected_before_allocation() {
-        let addrs = local_addrs(3, 38215).unwrap();
-        let node0 = TcpNode::bind(0, &addrs).unwrap();
+    fn oversized_hello_rejected(base_port: u16, driver: TcpDriver) {
+        let addrs = local_addrs(3, base_port).unwrap();
+        let node0 = TcpNode::bind_with(0, &addrs, cfg(driver)).unwrap();
         let mut bad = TcpStream::connect(addrs[0]).unwrap();
         // Valid data-frame length, but way past the hello cap.
         bad.write_all(&encode_hdr(2, Traffic::Consensus, 1 << 20)).unwrap();
@@ -912,6 +1728,16 @@ mod tests {
         assert_eq!(node0.connected_peers(), 1);
     }
 
+    #[test]
+    fn oversized_hello_rejected_before_allocation_event() {
+        oversized_hello_rejected(38215, TcpDriver::Event);
+    }
+
+    #[test]
+    fn oversized_hello_rejected_before_allocation_threads() {
+        oversized_hello_rejected(38915, TcpDriver::Threads);
+    }
+
     /// Half-frame desync regression: when a send fails partway through a
     /// frame (here: a write timeout against a peer that stopped
     /// draining), the stream must be cut immediately. The peer's reader
@@ -925,7 +1751,7 @@ mod tests {
         // The "peer" is a raw listener that accepts, hellos back nothing,
         // and deliberately stops reading so the kernel buffers fill.
         let listener = TcpListener::bind(addrs[1]).unwrap();
-        let node0 = TcpNode::bind(0, &addrs).unwrap();
+        let node0 = TcpNode::bind_with(0, &addrs, cfg(TcpDriver::Threads)).unwrap();
         node0.dial_peer(1, addrs[1], Duration::from_secs(5)).unwrap();
         let (mut peer, _) = listener.accept().unwrap();
         let hello = read_frame_from(&mut peer, MAX_HELLO_BYTES).unwrap();
@@ -933,7 +1759,10 @@ mod tests {
 
         // Arm a short write timeout on the established slot stream so the
         // flood below fails mid-frame instead of blocking forever.
-        node0.peers[1]
+        let Core::Threads { peers, .. } = &node0.core else {
+            unreachable!("test pins the threads core")
+        };
+        peers[1]
             .lock()
             .unwrap()
             .as_ref()
@@ -980,16 +1809,77 @@ mod tests {
         assert_eq!(seen, sent, "reader saw a different set of complete frames");
     }
 
+    /// Event-core counterpart of the half-frame rule: on this core a
+    /// frame enters the coalescing buffer whole and the write cursor
+    /// resumes mid-frame, so a connection can only die BETWEEN flushed
+    /// bytes — the peer reads complete frames bit-exact until the cut.
+    /// After the driver notices the death, sends fail fast (the slot is
+    /// occupied-but-dead), and a redial replaces the connection so both
+    /// directions work again.
+    #[test]
+    fn event_core_dead_peer_fails_fast_then_accepts_replacement() {
+        let addrs = local_addrs(2, 38415).unwrap();
+        let listener = TcpListener::bind(addrs[1]).unwrap();
+        let node0 = TcpNode::bind(0, &addrs).unwrap(); // event is the default
+        node0.dial_peer(1, addrs[1], Duration::from_secs(5)).unwrap();
+        let (mut peer, _) = listener.accept().unwrap();
+        let hello = read_frame_from(&mut peer, MAX_HELLO_BYTES).unwrap();
+        assert_eq!((hello.from, hello.bytes.as_slice()), (0, &b"hello"[..]));
+
+        // Burst of sends lands coalesced but decodes bit-exact.
+        for i in 0..5u8 {
+            node0.send(1, Traffic::Weights, &[i; 32]).unwrap();
+        }
+        for i in 0..5u8 {
+            let m = read_frame_from(&mut peer, MAX_FRAME_BYTES).unwrap();
+            assert_eq!((m.from, m.class), (0, Traffic::Weights));
+            assert_eq!(m.bytes, vec![i; 32], "frame {i} corrupted");
+        }
+
+        // Peer dies. The driver notices and marks the slot dead: sends
+        // fail fast, but the slot stays occupied until a redial.
+        drop(peer);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while node0.send(1, Traffic::Weights, &[0; 32]).is_ok() {
+            assert!(Instant::now() < deadline, "driver never noticed the dead peer");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(
+            node0.send(1, Traffic::Weights, &[9]).is_err(),
+            "send to a dead slot must fail fast"
+        );
+        assert_eq!(node0.connected_peers(), 1, "dead slot stays occupied");
+
+        // The peer "restarts" and dials back: the driver replaces the
+        // dead connection and both directions work again.
+        let mut re = TcpStream::connect(addrs[0]).unwrap();
+        write_frame(&mut re, 1, Traffic::Consensus, b"hello").unwrap();
+        write_frame(&mut re, 1, Traffic::Weights, b"back").unwrap();
+        let m = node0.recv_timeout(Duration::from_secs(10)).expect("frame after rejoin");
+        assert_eq!((m.from, m.bytes.as_slice()), (1, &b"back"[..]));
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            match node0.send(1, Traffic::Weights, b"again") {
+                Ok(()) => break,
+                Err(_) => {
+                    assert!(Instant::now() < deadline, "slot never replaced after redial");
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+        }
+        let m = read_frame_from(&mut re, MAX_FRAME_BYTES).unwrap();
+        assert_eq!((m.from, m.bytes.as_slice()), (0, &b"again"[..]));
+    }
+
     /// The crash-restart seam of the cluster subsystem: a peer's process
     /// goes away, a fresh process rejoins under the same id, and the
     /// surviving node's acceptor replaces the dead connection so both
     /// directions work again — no restart of the survivor required.
-    #[test]
-    fn restarted_peer_rejoins_and_replaces_its_connection() {
-        let addrs = local_addrs(2, 39715).unwrap();
+    fn restarted_peer_rejoins(base_port: u16, driver: TcpDriver) {
+        let addrs = local_addrs(2, base_port).unwrap();
         let a_addrs = addrs.clone();
         let t0 = std::thread::spawn(move || {
-            let node = TcpNode::connect_mesh(0, &a_addrs).unwrap();
+            let node = TcpNode::connect_mesh_with(0, &a_addrs, cfg(driver)).unwrap();
             // Generation 1 of peer 1.
             let m = node.recv_timeout(Duration::from_secs(10)).expect("gen1 frame");
             assert_eq!((m.from, m.bytes.as_slice()), (1, &[1u8][..]));
@@ -1003,17 +1893,28 @@ mod tests {
             assert_eq!(m.bytes, vec![4u8]);
         });
         {
-            let node1 = TcpNode::connect_mesh(1, &addrs).unwrap();
+            let node1 = TcpNode::connect_mesh_with(1, &addrs, cfg(driver)).unwrap();
             node1.send(0, Traffic::Weights, &[1]).unwrap();
             // Dropping = graceful shutdown: sockets closed, port freed.
         }
-        let node1 = TcpNode::rejoin_mesh(1, &addrs, Duration::from_secs(10)).unwrap();
+        let node1 =
+            TcpNode::rejoin_mesh_with(1, &addrs, Duration::from_secs(10), cfg(driver)).unwrap();
         assert_eq!(node1.connected_peers(), 1);
         node1.send(0, Traffic::Weights, &[2]).unwrap();
         let m = node1.recv_timeout(Duration::from_secs(10)).expect("frame from 0");
         assert_eq!(m.bytes, vec![3u8]);
         node1.send(0, Traffic::Weights, &[4]).unwrap();
         t0.join().unwrap();
+    }
+
+    #[test]
+    fn restarted_peer_rejoins_and_replaces_its_connection_event() {
+        restarted_peer_rejoins(39715, TcpDriver::Event);
+    }
+
+    #[test]
+    fn restarted_peer_rejoins_and_replaces_its_connection_threads() {
+        restarted_peer_rejoins(38615, TcpDriver::Threads);
     }
 
     /// Transport-agnostic ping-pong actor: proves `run_actor` hosts the
@@ -1046,14 +1947,14 @@ mod tests {
         }
     }
 
-    fn ping_pong_mesh(base_port: u16, auth: Option<KeyRegistry>) {
+    fn ping_pong_mesh(base_port: u16, driver: TcpDriver, auth: Option<KeyRegistry>) {
         let addrs = local_addrs(2, base_port).unwrap();
         let mut handles = Vec::new();
         for id in 0..2u32 {
             let addrs = addrs.clone();
             let auth = auth.clone();
             handles.push(std::thread::spawn(move || {
-                let node = TcpNode::connect_mesh(id, &addrs).unwrap();
+                let node = TcpNode::connect_mesh_with(id, &addrs, cfg(driver)).unwrap();
                 let mut actor = Pinger { pongs: 0, max: 5, timer_fired: false };
                 run_actor(
                     &node,
@@ -1074,7 +1975,7 @@ mod tests {
 
     #[test]
     fn run_actor_drives_messages_and_timers() {
-        ping_pong_mesh(39315, None);
+        ping_pong_mesh(39315, TcpDriver::Event, None);
     }
 
     /// The same ping-pong over a fully authenticated mesh: every frame is
@@ -1082,6 +1983,13 @@ mod tests {
     /// completes — the signed path is transparent to honest actors.
     #[test]
     fn run_actor_authenticated_roundtrip() {
-        ping_pong_mesh(39215, Some(KeyRegistry::new(2, 0xfeed)));
+        ping_pong_mesh(39215, TcpDriver::Event, Some(KeyRegistry::new(2, 0xfeed)));
+    }
+
+    /// `run_actor` is core-agnostic: the signed ping-pong also completes
+    /// on the thread-per-peer baseline.
+    #[test]
+    fn run_actor_authenticated_roundtrip_threads() {
+        ping_pong_mesh(38815, TcpDriver::Threads, Some(KeyRegistry::new(2, 0xfeed)));
     }
 }

@@ -523,3 +523,132 @@ fn forged_frames_rejected_identically_on_sim_and_tcp() {
     );
     assert_eq!(tcp_rejected, sim_rejected, "sim and TCP rejected differently");
 }
+
+/// Transport-sender spoofing parity. On the simulator the transport
+/// sender cannot be forged at all — `SimNet` itself attributes every
+/// delivery. On TCP the `from` field of a frame header is
+/// peer-controlled, so the transport pins it to the hello-established
+/// peer: a mismatching frame is dropped BEFORE the actor seam and
+/// counted against the REAL peer in the node's `NetMeter`. Above the
+/// seam the two transports must therefore look identical — the actor
+/// sees exactly the honest frames, with the forgery visible only in the
+/// TCP meter's attribution.
+#[test]
+fn spoofed_transport_sender_is_invisible_above_the_seam() {
+    use defl::net::transport::class_wire_byte;
+    use std::io::Write;
+    use std::net::TcpStream;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::time::Instant;
+
+    let payload = b"honest-weights".to_vec();
+
+    // ---- Simulator side: node 1 hosts the probe; only the honest frame
+    // can even be expressed (the transport sender is not forgeable).
+    let actors: Vec<Box<dyn Actor>> =
+        (0..3).map(|_| Box::new(AuthProbe::default()) as Box<dyn Actor>).collect();
+    let sim_cfg = SimConfig { n_nodes: 3, latency_us: 100, jitter_us: 0, drop_prob: 0.0, seed: 9 };
+    let mut net = SimNet::new(sim_cfg, actors);
+    net.inject_raw(2, 1, Traffic::Weights, payload.clone(), None);
+    net.run_until(1_000_000, u64::MAX);
+    let sim_got = net.actor_as::<AuthProbe>(1).expect("probe").got.clone();
+    assert_eq!(net.meter.spoofed_total(), 0, "the sim cannot even express a spoof");
+
+    // ---- TCP side: node 2 sends the same honest frame through the
+    // mesh; "node 0" is a raw socket that hellos as itself and then
+    // writes a frame whose header claims node 2 sent it.
+    let addrs = local_addrs(3, 39915).unwrap();
+    let done = Arc::new(AtomicBool::new(false));
+    let hold = |mut s: TcpStream, done: Arc<AtomicBool>| {
+        let t0 = Instant::now();
+        while !done.load(Ordering::SeqCst) && t0.elapsed() < Duration::from_secs(30) {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        let _ = s.flush();
+    };
+    let frame = |from: u32, class: u8, payload: &[u8]| {
+        let mut f = Vec::new();
+        f.extend_from_slice(&from.to_le_bytes());
+        f.push(class);
+        f.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        f.extend_from_slice(payload);
+        f
+    };
+    // The raw dials race the TcpNode listeners' binds: retry like a
+    // real dialer would.
+    let dial = |addr: std::net::SocketAddr| -> TcpStream {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => return s,
+                Err(e) => {
+                    assert!(Instant::now() < deadline, "raw dial {addr}: {e}");
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        }
+    };
+    let hello = frame(0, class_wire_byte(Traffic::Consensus), b"hello");
+    let mut raw_threads = Vec::new();
+    {
+        // Node 0's connection to node 2 exists only so node 2's mesh
+        // handshake completes; the spoof goes over its link to node 1.
+        let (hello, done) = (hello.clone(), done.clone());
+        let to2 = addrs[2];
+        raw_threads.push(std::thread::spawn(move || {
+            let mut s = dial(to2);
+            s.write_all(&hello).expect("hello to 2");
+            hold(s, done);
+        }));
+    }
+    {
+        let (done, spoof) = (done.clone(), frame(2, class_wire_byte(Traffic::Weights), b"forged"));
+        let to1 = addrs[1];
+        raw_threads.push(std::thread::spawn(move || {
+            let mut s = dial(to1);
+            s.write_all(&hello).expect("hello to 1");
+            s.write_all(&spoof).expect("spoofed frame to 1");
+            hold(s, done);
+        }));
+    }
+    {
+        let (addrs, payload, done) = (addrs.clone(), payload.clone(), done.clone());
+        raw_threads.push(std::thread::spawn(move || {
+            let mesh = TcpNode::connect_mesh(2, &addrs).expect("mesh");
+            mesh.send(1, Traffic::Weights, &payload).expect("honest send");
+            let t0 = Instant::now();
+            while !done.load(Ordering::SeqCst) && t0.elapsed() < Duration::from_secs(30) {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }));
+    }
+    let mut probe = AuthProbe::default();
+    let mesh = TcpNode::connect_mesh(1, &addrs).expect("mesh");
+    run_actor(
+        &mesh,
+        &mut probe,
+        Duration::from_secs(30),
+        |p| !p.got.is_empty(),
+        Duration::ZERO,
+        None,
+    )
+    .expect("run");
+    // The transport core drops + attributes spoofs off the actor path,
+    // so the meter may tick slightly after the honest delivery.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while mesh.meter().spoofed_total() == 0 {
+        assert!(Instant::now() < deadline, "spoofed frame was never attributed");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let meter = mesh.meter();
+    done.store(true, Ordering::SeqCst);
+    for t in raw_threads {
+        t.join().expect("raw thread");
+    }
+
+    assert_eq!(sim_got, vec![(2, payload)], "sim delivered set");
+    assert_eq!(probe.got, sim_got, "the spoof must be invisible above the seam");
+    assert!(probe.rejected.is_empty(), "spoofing is not an auth failure");
+    assert_eq!(meter.spoofed_by(0), 1, "the drop is attributed to the REAL peer");
+    assert_eq!(meter.spoofed_by(2), 0, "the claimed sender is not blamed");
+}
