@@ -13,6 +13,7 @@ use defl::defl::lite::{lite_cluster, lite_registry, LiteConfig, LiteNode};
 use defl::metrics::PipelineStats;
 use defl::net::sim::{SimConfig, SimNet};
 use defl::runtime::Batch;
+use defl::trace::{Tracer, DEFAULT_RING_CAP};
 use defl::util::bench::{bench, BenchReport};
 use defl::util::Pcg;
 
@@ -211,13 +212,116 @@ fn lite_auth_overhead(report: &mut BenchReport) -> bool {
     digest_match
 }
 
+/// Flight recorder on vs off, in WALL time: the same lite cluster run
+/// with the default `Tracer::off()` handle and with one 16Ki-event ring
+/// per node recording every instrumented phase. The tracer does no I/O
+/// on the hot path and stamps time from the deterministic actor clock,
+/// so the virtual trajectory — and the final digest — must be
+/// bit-identical; the wall clock isolates the pure recording cost. CI
+/// gates traced/untraced rounds/sec ≥ 0.95 from the JSON. Returns false
+/// if the two modes finish on different digests (tracing must be
+/// behaviour-invariant).
+fn lite_trace_overhead(report: &mut BenchReport) -> bool {
+    let n = 8usize;
+    let rounds = 8u64;
+    let c = LiteConfig {
+        n_nodes: n,
+        rounds,
+        dim: 4096,
+        seed: 13,
+        gst_us: 20_000,
+        // Small chunks, zero modelled train time: maximum events per
+        // wall second, the regime where recording overhead would show.
+        chunk_bytes: 1 << 12,
+        batch_consensus: true,
+        timeout_base_us: 100_000,
+        fetch_retry_us: 50_000,
+        agg_quorum: Some(n),
+        pipeline: true,
+        train_us: 0,
+        ..Default::default()
+    };
+    let run = |traced: bool| {
+        let sim = SimConfig { n_nodes: n, latency_us: 200, jitter_us: 50, drop_prob: 0.0, seed: 5 };
+        let mut net = SimNet::new(sim, lite_cluster(&c));
+        if traced {
+            for i in 0..n as NodeId {
+                net.actor_as::<LiteNode>(i).unwrap().set_tracer(Tracer::on(i, DEFAULT_RING_CAP));
+            }
+        }
+        let t0 = std::time::Instant::now();
+        let mut t = net.now_us();
+        loop {
+            t += 10_000;
+            net.run_until(t, u64::MAX);
+            let done = (0..n as NodeId)
+                .all(|i| net.actor_as::<LiteNode>(i).map(|a| a.done).unwrap_or(false));
+            if done {
+                break;
+            }
+            assert!(t < 120_000_000, "lite trace bench did not finish (traced={traced})");
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let events: u64 = (0..n as NodeId)
+            .map(|i| {
+                let tr = net.actor_as::<LiteNode>(i).unwrap().tracer().clone();
+                tr.snapshot().len() as u64 + tr.dropped()
+            })
+            .sum();
+        let digest = net.actor_as::<LiteNode>(0).unwrap().final_digest.expect("final digest");
+        (wall, digest, events)
+    };
+
+    println!("\n== micro: flight recorder on vs off (lite, wall time, n={n}) ==");
+    // Interleaved best-of-3, same discipline as the signed-wire bench.
+    let mut best = [f64::INFINITY; 2];
+    let mut digests = [None; 2];
+    let mut events = 0u64;
+    for _ in 0..3 {
+        for (slot, traced) in [(0usize, false), (1, true)] {
+            let (wall, d, ev) = run(traced);
+            best[slot] = best[slot].min(wall);
+            digests[slot] = Some(d);
+            if traced {
+                events = ev;
+            }
+        }
+    }
+    let rps = |wall: f64| rounds as f64 / wall;
+    let ratio = rps(best[1]) / rps(best[0]);
+    let digest_match = digests[0] == digests[1] && digests[0].is_some();
+    println!("untraced {:>8.2} rounds/s (wall, best of 3)", rps(best[0]));
+    println!(
+        "traced   {:>8.2} rounds/s (wall, best of 3)  traced/untraced {ratio:.3}  \
+         {events} events  digest_match {digest_match}",
+        rps(best[1]),
+    );
+    report.record_metrics(
+        "lite/trace untraced",
+        &[("n", n as f64), ("rounds", rounds as f64)],
+        &[("rounds_per_sec_wall", rps(best[0]))],
+    );
+    report.record_metrics(
+        "lite/trace traced",
+        &[("n", n as f64), ("rounds", rounds as f64)],
+        &[
+            ("rounds_per_sec_wall", rps(best[1])),
+            ("traced_over_untraced", ratio),
+            ("events_recorded", events as f64),
+            ("digest_match", if digest_match { 1.0 } else { 0.0 }),
+        ],
+    );
+    digest_match
+}
+
 fn main() {
     common::bench_scale();
     let mut report = BenchReport::new("micro_runtime");
 
     let pipeline_ok = lite_pipeline_rounds(&mut report);
     let auth_ok = lite_auth_overhead(&mut report);
-    let digests_ok = pipeline_ok && auth_ok;
+    let trace_ok = lite_trace_overhead(&mut report);
+    let digests_ok = pipeline_ok && auth_ok && trace_ok;
 
     // Artifact-free baseline: the native weighted-mean aggregation pass
     // (the fallback every node runs when no fedavg artifact is exported).
@@ -280,7 +384,7 @@ fn main() {
     report.write(&path).expect("write BENCH_runtime.json");
     println!("wrote {} ({} entries)", path.display(), report.len());
     if !digests_ok {
-        eprintln!("FAIL: lite runs diverged on final digests (pipeline or signed wire)");
+        eprintln!("FAIL: lite runs diverged on final digests (pipeline, signed wire, or tracing)");
         std::process::exit(1);
     }
 }

@@ -14,6 +14,7 @@
 //! their acceptors to swap in the fresh connection; consensus and pool
 //! state are then recovered via QC-chain sync + digest-addressed pulls.
 
+use std::io::Write;
 use std::net::TcpStream;
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -24,12 +25,13 @@ use anyhow::{bail, Context, Result};
 
 use defl::cluster::{
     ctrl_registry, read_ctrl_signed, supervisor_id, write_ctrl_signed, ClusterConfig, CtrlMsg,
-    SiloMode,
+    SiloMode, TRACE_CHUNK_MAX_EVENTS,
 };
-use defl::crypto::{Digest, KeyRegistry, NodeId};
+use defl::crypto::{Digest, KeyRegistry, NodeId, Signer};
 use defl::defl::{DeflNode, LiteNode};
 use defl::metrics::StatsSnapshot;
 use defl::net::tcp::{run_actor, TcpNode};
+use defl::trace::{format_flight_line, Tracer, DEFAULT_RING_CAP};
 use defl::util::cli::Args;
 
 fn main() {
@@ -58,6 +60,32 @@ fn run() -> Result<()> {
     // the heartbeat thread and the final Done frame can never interleave
     // bytes on the wire. Every frame is signed under this silo's
     // control-plane key; Shutdown is obeyed only under the supervisor's.
+    // Round tracing (`cluster.trace_dir`): ring tracer, flight-recorder
+    // log, and a panic hook that dumps the ring before the process dies.
+    let tracer = match cc.trace_dir() {
+        Some(dir) => {
+            std::fs::create_dir_all(dir).with_context(|| format!("creating trace dir {dir}"))?;
+            Tracer::on(id, DEFAULT_RING_CAP)
+        }
+        None => Tracer::off(),
+    };
+    let flight_path = cc
+        .trace_dir()
+        .map(|d| Path::new(d).join(format!("flight_n{id}.log")));
+    if let Some(path) = flight_path.clone() {
+        let t = tracer.clone();
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+                let _ = writeln!(f, "=== flight dump (panic) ===");
+                for ev in t.snapshot() {
+                    let _ = writeln!(f, "{}", format_flight_line(&ev));
+                }
+            }
+            prev(info);
+        }));
+    }
+
     let ctrl_reg = ctrl_registry(cc.n_nodes, cc.exp.seed);
     let ctrl_signer = ctrl_reg.signer(id);
     let mut ctrl = dial_ctrl(&cc, Duration::from_secs(10))?;
@@ -66,8 +94,10 @@ fn run() -> Result<()> {
     let snap = Arc::new(Mutex::new(StatsSnapshot { node: id, ..Default::default() }));
     let shutdown = Arc::new(AtomicBool::new(false));
     let stop_beats = Arc::new(AtomicBool::new(false));
+    let pump = Arc::new(Mutex::new(TracePump::new(tracer.clone(), flight_path.as_deref())));
     let beats = {
         let (snap, stop, writer) = (snap.clone(), stop_beats.clone(), writer.clone());
+        let pump = pump.clone();
         let signer = ctrl_signer.clone();
         let period = Duration::from_millis(cc.heartbeat_ms);
         std::thread::spawn(move || {
@@ -78,6 +108,9 @@ fn run() -> Result<()> {
                 {
                     return; // supervisor gone; keep running regardless
                 }
+                // Flight log + supervisor trace chunks ride the same
+                // cadence, so a SIGKILL loses at most one beat of events.
+                pump.lock().unwrap().pump(&writer, &signer);
                 std::thread::sleep(period);
             }
         })
@@ -117,9 +150,13 @@ fn run() -> Result<()> {
     );
 
     let (rounds, digest) = match cc.mode {
-        SiloMode::Lite => run_lite(&cc, id, &mesh, &snap, &shutdown)?,
-        SiloMode::Full => run_full(&cc, id, &mesh, &snap, &shutdown)?,
+        SiloMode::Lite => run_lite(&cc, id, &mesh, &snap, &shutdown, &tracer)?,
+        SiloMode::Full => run_full(&cc, id, &mesh, &snap, &shutdown, &tracer)?,
     };
+
+    // Final trace drain BEFORE the Done frame: the supervisor's merge
+    // must include the run's last round.
+    pump.lock().unwrap().pump(&writer, &ctrl_signer);
 
     // Final-state heartbeat BEFORE the Done frame (same writer mutex, so
     // the two can't interleave): the run loop updated `snap` on its last
@@ -145,6 +182,47 @@ fn run() -> Result<()> {
     Ok(())
 }
 
+/// Heartbeat-cadence trace pump: append new ring events to the flight
+/// log (so a SIGKILLed generation leaves its final seconds on disk) and
+/// ship the same events to the supervisor in bounded `CtrlMsg::Trace`
+/// chunks. One drain cursor serves both sinks.
+struct TracePump {
+    tracer: Tracer,
+    cursor: u64,
+    flight: Option<std::fs::File>,
+}
+
+impl TracePump {
+    fn new(tracer: Tracer, flight_path: Option<&Path>) -> TracePump {
+        let flight = flight_path
+            .and_then(|p| std::fs::OpenOptions::new().create(true).append(true).open(p).ok());
+        TracePump { tracer, cursor: 0, flight }
+    }
+
+    fn pump(&mut self, writer: &Mutex<TcpStream>, signer: &Signer) {
+        if !self.tracer.is_on() {
+            return;
+        }
+        let events = self.tracer.drain_since(self.cursor);
+        let Some(last) = events.last() else {
+            return;
+        };
+        self.cursor = last.seq;
+        if let Some(f) = self.flight.as_mut() {
+            for ev in &events {
+                let _ = writeln!(f, "{}", format_flight_line(ev));
+            }
+            let _ = f.flush();
+        }
+        for chunk in events.chunks(TRACE_CHUNK_MAX_EVENTS) {
+            let trace = CtrlMsg::Trace(chunk.to_vec());
+            if write_ctrl_signed(&mut *writer.lock().unwrap(), signer, &trace).is_err() {
+                break; // supervisor gone; the flight log still records
+            }
+        }
+    }
+}
+
 fn dial_ctrl(cc: &ClusterConfig, budget: Duration) -> Result<TcpStream> {
     let addr = cc.control_addr();
     let deadline = Instant::now() + budget;
@@ -164,16 +242,32 @@ fn dial_ctrl(cc: &ClusterConfig, budget: Duration) -> Result<TcpStream> {
     }
 }
 
+/// Graft the transport's event-driver counters onto a node snapshot
+/// (they live in the mesh, not the node; zeros on the threads core).
+fn with_driver_stats(mut s: StatsSnapshot, mesh: &TcpNode) -> StatsSnapshot {
+    let ds = mesh.driver_stats();
+    s.drv_poll_iters = ds.poll_iters;
+    s.drv_parked_us = ds.parked_us;
+    s.drv_frames_coalesced = ds.frames_coalesced;
+    s.drv_flushes = ds.flushes;
+    s
+}
+
 fn run_lite(
     cc: &ClusterConfig,
     id: NodeId,
     mesh: &TcpNode,
     snap: &Arc<Mutex<StatsSnapshot>>,
     shutdown: &Arc<AtomicBool>,
+    tracer: &Tracer,
 ) -> Result<(u64, Digest)> {
     let lc = cc.lite_config();
     let registry = KeyRegistry::new(cc.n_nodes, lc.seed);
     let mut node = LiteNode::new(id, lc, registry.clone());
+    if tracer.is_on() {
+        node.set_tracer(tracer.clone());
+        mesh.install_tracer(tracer);
+    }
     // The done predicate runs after every message and idle tick; rebuild
     // the (allocating) snapshot only at the heartbeat cadence.
     let snap_period = Duration::from_millis(cc.heartbeat_ms.max(2) / 2);
@@ -188,7 +282,7 @@ fn run_lite(
             }
             if n.done || Instant::now() >= next_snap {
                 next_snap = Instant::now() + snap_period;
-                *snap.lock().unwrap() = n.snapshot();
+                *snap.lock().unwrap() = with_driver_stats(n.snapshot(), mesh);
             }
             n.done
         },
@@ -207,6 +301,7 @@ fn run_full(
     mesh: &TcpNode,
     snap: &Arc<Mutex<StatsSnapshot>>,
     shutdown: &Arc<AtomicBool>,
+    tracer: &Tracer,
 ) -> Result<(u64, Digest)> {
     use defl::runtime::Engine;
     use defl::sim::build_data;
@@ -222,6 +317,10 @@ fn run_full(
     let shard = shards.remove(id as usize);
     let registry = KeyRegistry::new(exp.n_nodes, exp.seed);
     let mut node = DeflNode::new(id, exp, engine, train, shard, sizes, registry.clone(), theta0);
+    if tracer.is_on() {
+        node.set_tracer(tracer.clone());
+        mesh.install_tracer(tracer);
+    }
     let snap_period = Duration::from_millis(cc.heartbeat_ms.max(2) / 2);
     let mut next_snap = Instant::now();
     run_actor(
@@ -234,7 +333,7 @@ fn run_full(
             }
             if n.done || Instant::now() >= next_snap {
                 next_snap = Instant::now() + snap_period;
-                *snap.lock().unwrap() = n.snapshot();
+                *snap.lock().unwrap() = with_driver_stats(n.snapshot(), mesh);
             }
             n.done
         },

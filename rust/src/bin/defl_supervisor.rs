@@ -18,6 +18,8 @@
 //!   CLUSTER_P99_US / CLUSTER_P999_US
 //! plus, for a `--kill` run under load, the recovery windows
 //!   CLUSTER_P99_PREKILL_US / CLUSTER_P99_POSTREJOIN_US
+//! and, when `cluster.trace_dir` is set, the merged timeline path
+//!   CLUSTER_TRACE <path>
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -84,6 +86,9 @@ fn run() -> Result<()> {
                 println!("CLUSTER_P99_POSTREJOIN_US {}", post.p99());
             }
         }
+    }
+    if let Some(path) = &report.trace_path {
+        println!("CLUSTER_TRACE {}", path.display());
     }
     Ok(())
 }

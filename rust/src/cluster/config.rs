@@ -105,6 +105,13 @@ pub struct ClusterConfig {
     /// readiness-driven driver thread per silo) or `"threads"` (the
     /// thread-per-peer baseline, kept reachable for A/B deployment).
     pub net_driver: TcpDriver,
+    /// Round-trace output directory ("" = tracing off, the default).
+    /// When set, every silo records per-phase spans into its ring,
+    /// ships chunks over the control plane, and appends a flight-
+    /// recorder log to `<trace_dir>/flight_n<id>.log`; the supervisor
+    /// merges all silos into `<trace_dir>/TRACE_cluster.json` (Chrome
+    /// trace format). See the runbook in [`crate::cluster`].
+    pub trace_dir: String,
     /// The experiment payload; `n_nodes` is forced to the cluster's.
     pub exp: ExperimentConfig,
 }
@@ -131,6 +138,7 @@ impl Default for ClusterConfig {
             load_poisson: true,
             client_ingest_us: 0,
             net_driver: TcpDriver::Event,
+            trace_dir: String::new(),
             exp: ExperimentConfig { n_nodes, ..Default::default() },
         }
     }
@@ -151,6 +159,7 @@ const CLUSTER_KEYS: &[&str] = &[
     "cluster.deadline_s",
     "cluster.linger_ms",
     "cluster.net_driver",
+    "cluster.trace_dir",
 ];
 
 const EXPERIMENT_KEYS: &[&str] = &[
@@ -225,6 +234,9 @@ impl ClusterConfig {
         cfg.linger_ms = doc.get_parse("cluster.linger_ms")?.unwrap_or(cfg.linger_ms);
         if let Some(v) = doc.get("cluster.net_driver") {
             cfg.net_driver = TcpDriver::parse(v)?;
+        }
+        if let Some(v) = doc.get("cluster.trace_dir") {
+            cfg.trace_dir = v.to_string();
         }
 
         let e = &mut cfg.exp;
@@ -308,6 +320,7 @@ impl ClusterConfig {
              deadline_s = {}\n\
              linger_ms = {}\n\
              net_driver = \"{}\"\n\
+             trace_dir = \"{}\"\n\
              \n\
              [experiment]\n\
              system = \"{}\"\n\
@@ -345,6 +358,7 @@ impl ClusterConfig {
             self.deadline_s,
             self.linger_ms,
             self.net_driver.name(),
+            self.trace_dir,
             self.exp.system.name(),
             self.exp.model.name(),
             self.exp.f_byzantine,
@@ -420,6 +434,15 @@ impl ClusterConfig {
     /// deployment knob).
     pub fn tcp_config(&self) -> TcpConfig {
         TcpConfig { driver: self.net_driver, ..TcpConfig::default() }
+    }
+
+    /// The trace output directory, or `None` when tracing is off.
+    pub fn trace_dir(&self) -> Option<&str> {
+        if self.trace_dir.is_empty() {
+            None
+        } else {
+            Some(&self.trace_dir)
+        }
     }
 
     /// The AGG quorum every silo runs with (see `agg_quorum_all`).
@@ -593,6 +616,20 @@ mod tests {
     }
 
     #[test]
+    fn trace_dir_knob_roundtrips_and_defaults_off() {
+        let cfg = ClusterConfig::parse("[cluster]\nnodes = 4\n").unwrap();
+        assert_eq!(cfg.trace_dir, "");
+        assert_eq!(cfg.trace_dir(), None, "tracing is off by default");
+        let traced = ClusterConfig::parse(
+            "[cluster]\nnodes = 4\ntrace_dir = \"traces/smoke\"\n",
+        )
+        .unwrap();
+        assert_eq!(traced.trace_dir(), Some("traces/smoke"));
+        let back = ClusterConfig::parse(&traced.to_toml()).unwrap();
+        assert_eq!(back, traced, "trace_dir survives the TOML roundtrip");
+    }
+
+    #[test]
     fn net_driver_knob_selects_transport_core() {
         let cfg = ClusterConfig::parse("[cluster]\nnodes = 4\n").unwrap();
         assert_eq!(cfg.net_driver, TcpDriver::Event, "event core is the default");
@@ -640,6 +677,11 @@ mod tests {
                         TcpDriver::Event
                     } else {
                         TcpDriver::Threads
+                    },
+                    trace_dir: if rng.f64() < 0.5 {
+                        String::new()
+                    } else {
+                        "traces/run-a".to_string()
                     },
                     ..Default::default()
                 };

@@ -15,6 +15,10 @@
 //!   final-model digest.
 //! * tag 4 `Shutdown` — supervisor → silo: finalize now and exit
 //!   cleanly (drives [`crate::defl::DeflNode::shutdown`]).
+//! * tag 5 `Trace(Vec<TraceEvent>)` — incremental flight-recorder chunk
+//!   (events the silo has not shipped yet, oldest first); the
+//!   supervisor accumulates these per node and merges them into
+//!   `TRACE_cluster.json` at exit (see [`crate::trace`]).
 //!
 //! The supervisor never trusts these bytes: frames are length-capped and
 //! decode through the bounds-checked cursor, so a wedged or malicious
@@ -51,7 +55,12 @@ pub enum CtrlMsg {
     Heartbeat(StatsSnapshot),
     Done { node: NodeId, rounds: u64, digest: Digest },
     Shutdown,
+    Trace(Vec<crate::trace::TraceEvent>),
 }
+
+/// Cap on events per `Trace` chunk: 4096 × 39 B ≈ 160 KiB, comfortably
+/// under [`CTRL_MAX_FRAME`] with the signature envelope around it.
+pub const TRACE_CHUNK_MAX_EVENTS: usize = 4096;
 
 impl Encode for CtrlMsg {
     fn encode(&self, out: &mut Vec<u8>) {
@@ -71,6 +80,10 @@ impl Encode for CtrlMsg {
                 digest.encode(out);
             }
             CtrlMsg::Shutdown => 4u8.encode(out),
+            CtrlMsg::Trace(events) => {
+                5u8.encode(out);
+                crate::util::codec::encode_list(events, out);
+            }
         }
     }
     fn encoded_len(&self) -> usize {
@@ -79,6 +92,7 @@ impl Encode for CtrlMsg {
             CtrlMsg::Heartbeat(snap) => snap.encoded_len(),
             CtrlMsg::Done { .. } => 4 + 8 + 32,
             CtrlMsg::Shutdown => 0,
+            CtrlMsg::Trace(events) => 4 + events.len() * crate::trace::TRACE_EVENT_BYTES,
         }
     }
 }
@@ -94,6 +108,14 @@ impl Decode for CtrlMsg {
                 digest: Digest::decode(cur)?,
             },
             4 => CtrlMsg::Shutdown,
+            5 => {
+                let events: Vec<crate::trace::TraceEvent> =
+                    crate::util::codec::decode_list(cur)?;
+                if events.len() > TRACE_CHUNK_MAX_EVENTS {
+                    bail!("trace chunk too large: {} events", events.len());
+                }
+                CtrlMsg::Trace(events)
+            }
             t => bail!("bad ctrl msg tag {t}"),
         })
     }
@@ -189,7 +211,48 @@ mod tests {
             }),
             CtrlMsg::Done { node: 2, rounds: 6, digest: Digest::of_bytes(b"model") },
             CtrlMsg::Shutdown,
+            CtrlMsg::Trace(vec![
+                crate::trace::TraceEvent {
+                    seq: 1,
+                    t_us: 1_000,
+                    node: 2,
+                    round: 3,
+                    phase: crate::trace::Phase::Train,
+                    kind: crate::trace::Kind::SpanBegin,
+                    code: crate::trace::code::TRAIN,
+                    detail: 3,
+                },
+                crate::trace::TraceEvent {
+                    seq: 2,
+                    t_us: 2_500,
+                    node: 2,
+                    round: 3,
+                    phase: crate::trace::Phase::Consensus,
+                    kind: crate::trace::Kind::Instant,
+                    code: crate::trace::code::HS_DECIDE,
+                    detail: 11,
+                },
+            ]),
+            CtrlMsg::Trace(Vec::new()),
         ]
+    }
+
+    #[test]
+    fn oversized_trace_chunk_rejected() {
+        let ev = crate::trace::TraceEvent {
+            seq: 1,
+            t_us: 0,
+            node: 0,
+            round: 0,
+            phase: crate::trace::Phase::Pull,
+            kind: crate::trace::Kind::Instant,
+            code: 0,
+            detail: 0,
+        };
+        let ok = CtrlMsg::Trace(vec![ev; TRACE_CHUNK_MAX_EVENTS]);
+        assert!(CtrlMsg::from_bytes(&ok.to_bytes()).is_ok());
+        let over = CtrlMsg::Trace(vec![ev; TRACE_CHUNK_MAX_EVENTS + 1]);
+        assert!(CtrlMsg::from_bytes(&over.to_bytes()).is_err());
     }
 
     #[test]

@@ -162,6 +162,44 @@
 //! The capacity claim to quote is the knee row: e.g. a knee of 4000/s/silo
 //! × 8 silos × one update per user-hour ≈ 115M users sustained under the
 //! smoke SLO — measured, not asserted.
+//!
+//! # Runbook: capturing a cluster timeline (round tracing)
+//!
+//! The flight recorder (see [`crate::trace`]) is off by default and
+//! enabled by one TOML knob:
+//!
+//! ```text
+//! [cluster]
+//! trace_dir = "traces/run1"   # "" (default) = tracing off
+//! ```
+//!
+//! With it set, every silo:
+//!
+//! * records per-phase spans (train / spec_train / multicast / consensus
+//!   / aggregate / pull / driver) into a fixed 16Ki-event in-memory ring
+//!   — no I/O or locks on the hot path, so round behaviour (and the
+//!   committed digests) is bit-identical to an untraced run;
+//! * ships new events to the supervisor as `CtrlMsg::Trace` chunks at
+//!   the heartbeat cadence;
+//! * appends the same events, human-readable, to
+//!   `<trace_dir>/flight_n<id>.log` (append mode, so the pre-crash tail
+//!   of a SIGKILLed generation survives its restart — the crash-time
+//!   flight record).
+//!
+//! On exit the supervisor merges all silos into
+//! `<trace_dir>/TRACE_cluster.json` — standard Chrome trace format: open
+//! it in <https://ui.perfetto.dev> or `chrome://tracing` to see one
+//! process row per silo with one lane per phase, spans for train /
+//! aggregate and the speculative window, instants for consensus votes,
+//! fetch rotations, and the event-driver's 10 ms poll/park/flush
+//! summaries. Reading it: a speculation hit shows as a `spec_train` span
+//! whose end coincides with a near-empty `train` span (the round's cost
+//! was hidden); a `consensus` lane dense with `hs_timeout` instants
+//! means the view timer is too tight for the deployment's RTT; a `pull`
+//! lane full of `fetch_rotate` marks a holder that keeps timing out.
+//! Diagnosing a crash: read the tail of the dead silo's
+//! `flight_n<id>.log` — the last stamped `n<id> r<round>` lines say
+//! exactly which phase of which round it died in.
 
 pub mod config;
 pub mod control;
@@ -170,6 +208,6 @@ pub mod supervisor;
 pub use config::{ClusterConfig, SiloMode};
 pub use control::{
     ctrl_registry, read_ctrl, read_ctrl_signed, supervisor_id, write_ctrl, write_ctrl_signed,
-    CtrlMsg,
+    CtrlMsg, TRACE_CHUNK_MAX_EVENTS,
 };
 pub use supervisor::{run_supervisor, KillSpec, SupervisorOpts, SupervisorReport};

@@ -27,6 +27,7 @@ use anyhow::{bail, Context, Result};
 use crate::crypto::{Digest, KeyRegistry, NodeId};
 use crate::load::hist::LatencyHistogram;
 use crate::metrics::StatsSnapshot;
+use crate::trace::TraceEvent;
 use crate::util::bench::fmt_bytes;
 
 use super::config::{ClusterConfig, SiloMode};
@@ -91,7 +92,15 @@ pub struct SupervisorReport {
     /// the kill round — the stall backlog drains into the *pre*-window
     /// side of that boundary, so this measures recovered steady state.
     pub postrejoin_hist: Option<LatencyHistogram>,
+    /// Where the merged Chrome-trace timeline was written, when
+    /// `cluster.trace_dir` was set and the write succeeded.
+    pub trace_path: Option<PathBuf>,
 }
+
+/// Per-silo cap on buffered trace events (~39 B each; newest win — the
+/// interesting tail of a long run survives, exactly like the on-node
+/// ring).
+const TRACE_BUF_CAP: usize = 1 << 18;
 
 /// Exponential restart backoff: doubles per consecutive crash, capped.
 pub fn next_backoff(cur_ms: u64, max_ms: u64) -> u64 {
@@ -162,6 +171,9 @@ struct Silo {
     restart_at: Option<Instant>,
     snap: StatsSnapshot,
     done: Option<(u64, Digest)>,
+    /// Trace chunks received over the control plane (bounded; restarted
+    /// generations simply keep appending — the merge sorts by wall time).
+    trace: Vec<TraceEvent>,
 }
 
 fn spawn_silo(opts: &SupervisorOpts, id: NodeId, rejoin: bool) -> Result<Child> {
@@ -213,6 +225,7 @@ pub fn run_supervisor(cc: &ClusterConfig, opts: &SupervisorOpts) -> Result<Super
             restart_at: None,
             snap: StatsSnapshot::default(),
             done: None,
+            trace: Vec::new(),
         })
         .collect();
 
@@ -390,6 +403,13 @@ fn supervise(
                     );
                     silo.done = Some((rounds, digest));
                 }
+                CtrlMsg::Trace(events) => {
+                    silo.trace.extend(events);
+                    if silo.trace.len() > TRACE_BUF_CAP {
+                        let excess = silo.trace.len() - TRACE_BUF_CAP;
+                        silo.trace.drain(..excess);
+                    }
+                }
                 CtrlMsg::Shutdown => {} // silos never send this
             }
         }
@@ -522,6 +542,7 @@ fn supervise(
         }
         out
     });
+    let trace_path = write_cluster_trace(cc, silos);
     Ok(SupervisorReport {
         rounds,
         digest,
@@ -532,7 +553,40 @@ fn supervise(
         commit_hist,
         prekill_hist,
         postrejoin_hist,
+        trace_path,
     })
+}
+
+/// Merge every silo's buffered trace chunks into one Chrome-trace JSON
+/// file at `<trace_dir>/TRACE_cluster.json` (Perfetto / `chrome://
+/// tracing` loadable). No-op when `cluster.trace_dir` is unset; a write
+/// failure is logged, never fatal — tracing must not fail a healthy run.
+fn write_cluster_trace(cc: &ClusterConfig, silos: &[Silo]) -> Option<PathBuf> {
+    let dir = cc.trace_dir()?;
+    let per_node: Vec<(NodeId, Vec<TraceEvent>)> = silos
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| !s.trace.is_empty())
+        .map(|(id, s)| (id as NodeId, s.trace.clone()))
+        .collect();
+    let path = PathBuf::from(dir).join("TRACE_cluster.json");
+    let events: usize = per_node.iter().map(|(_, ev)| ev.len()).sum();
+    match std::fs::create_dir_all(dir)
+        .and_then(|()| std::fs::write(&path, crate::trace::chrome_trace_json(&per_node)))
+    {
+        Ok(()) => {
+            println!(
+                "[supervisor] merged trace: {} ({events} events from {} silos)",
+                path.display(),
+                per_node.len()
+            );
+            Some(path)
+        }
+        Err(e) => {
+            log::warn!("[supervisor] writing {} failed: {e}", path.display());
+            None
+        }
+    }
 }
 
 #[cfg(test)]

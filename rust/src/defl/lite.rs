@@ -28,6 +28,7 @@ use crate::load::hist::LoadStats;
 use crate::mempool::{ChunkAssembler, WeightPool};
 use crate::metrics::{PipelineStats, Traffic};
 use crate::net::transport::{Actor, Ctx};
+use crate::trace::{code, Phase, Tracer};
 use crate::util::{Decode, Encode, Pcg};
 use crate::weights::Weights;
 
@@ -188,6 +189,8 @@ pub struct LiteNode {
     absorbed: Vec<(u64, Vec<u64>)>,
     /// Seeded arrival-schedule stream (self-paced driver mode).
     load_rng: Pcg,
+    /// Flight-recorder handle (off by default — a branch per emit).
+    tracer: Tracer,
     pub done: bool,
     pub rounds_done: u64,
     /// Digest of the final aggregate (the cross-transport parity probe).
@@ -238,6 +241,7 @@ impl LiteNode {
             client_queue: Vec::new(),
             absorbed: Vec::new(),
             load_rng: Pcg::new(cfg.seed ^ 0x10ad, id as u64),
+            tracer: Tracer::off(),
             done: false,
             rounds_done: 0,
             final_digest: None,
@@ -247,6 +251,28 @@ impl LiteNode {
 
     pub fn pool(&self) -> &WeightPool {
         &self.pool
+    }
+
+    /// Attach a flight-recorder handle. Clones share the node's cached
+    /// clock/round cells, so the consensus replica's and the puller's
+    /// events inherit the timestamps the host stamps at callback
+    /// boundaries — no clock reads on the simulator's hot path.
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.hs.set_tracer(tracer.clone());
+        self.puller.set_tracer(tracer.clone());
+        self.tracer = tracer;
+    }
+
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    /// Callback-boundary stamp: cache the context every emit in this
+    /// callback will carry, and tag the thread's log lines with it.
+    fn stamp(&self, now_us: u64) {
+        self.tracer.set_now_us(now_us);
+        self.tracer.set_round(self.replica.r_round);
+        crate::util::logging::set_context(self.id, self.replica.r_round);
     }
 
     /// The aggregate this node finished on — the vector `final_digest`
@@ -447,14 +473,19 @@ impl LiteNode {
         // the decided W^LAST matches the predicted basis row for row;
         // anything else is discarded, never committed.
         if let Some(spec) = self.spec.take() {
+            self.tracer.end(Phase::SpecTrain, code::SPEC_TRAIN, spec.target);
             if spec.target == target && spec.predicted == self.replica.w_last {
                 self.pipeline.spec_hits += 1;
+                self.tracer.instant(Phase::SpecTrain, code::SPEC_HIT, spec.target);
                 self.theta = spec.theta;
                 let now = ctx.now_us();
                 let train_left = spec.ready_at_us.saturating_sub(now);
                 // The decide wait hid whatever training already ran.
                 self.pipeline.train_overlap_us +=
                     self.cfg.train_us.saturating_sub(train_left);
+                // The Train span covers only the residual (unhidden)
+                // training time on this path.
+                self.tracer.begin(Phase::Train, code::TRAIN, target);
                 if train_left + ingest_us > 0 {
                     self.schedule_publish(ctx, target, train_left + ingest_us);
                 } else {
@@ -463,11 +494,15 @@ impl LiteNode {
                 return;
             }
             self.pipeline.spec_discards += 1;
+            self.tracer.instant(Phase::SpecTrain, code::SPEC_DISCARD, spec.target);
         }
 
+        self.tracer.begin(Phase::Aggregate, code::AGGREGATE, target);
         let agg = self.aggregate_last();
+        self.tracer.end(Phase::Aggregate, code::AGGREGATE, target);
         self.theta = self.local_update(agg, target);
         self.pipeline.train_busy_us += self.cfg.train_us;
+        self.tracer.begin(Phase::Train, code::TRAIN, target);
         if self.cfg.train_us + ingest_us > 0 {
             self.schedule_publish(ctx, target, self.cfg.train_us + ingest_us);
         } else {
@@ -561,6 +596,8 @@ impl LiteNode {
         if self.replica.r_round + 1 != target {
             return; // round raced past while the publish was deferred
         }
+        self.tracer.end(Phase::Train, code::TRAIN, target);
+        self.tracer.instant(Phase::Multicast, code::PUBLISH, (self.cfg.dim * 4) as u64);
         let committed = self.committed_weights(target);
         let digest = committed.digest();
         let blob = WeightBlob { node: self.id, round: target, weights: committed.clone() };
@@ -634,11 +671,14 @@ impl LiteNode {
         }
         let agg = self.aggregate_rows(&rows);
         let theta = self.local_update(agg, target);
-        if self.spec.take().is_some() {
+        if let Some(old) = self.spec.take() {
             // Basis changed under the trainer: the old guess is dead.
             self.pipeline.spec_discards += 1;
+            self.tracer.end(Phase::SpecTrain, code::SPEC_TRAIN, old.target);
+            self.tracer.instant(Phase::SpecTrain, code::SPEC_DISCARD, old.target);
         }
         self.pipeline.train_busy_us += self.cfg.train_us;
+        self.tracer.begin(Phase::SpecTrain, code::SPEC_TRAIN, target);
         self.spec = Some(SpecRound {
             target,
             predicted,
@@ -677,6 +717,7 @@ impl LiteNode {
 
 impl Actor for LiteNode {
     fn on_start(&mut self, ctx: &mut dyn Ctx) {
+        self.stamp(ctx.now_us());
         let mut out = Vec::new();
         self.hs.start(&mut out);
         self.apply_actions(ctx, out);
@@ -685,6 +726,7 @@ impl Actor for LiteNode {
     }
 
     fn on_message(&mut self, ctx: &mut dyn Ctx, from: NodeId, class: Traffic, bytes: &[u8]) {
+        self.stamp(ctx.now_us());
         match class {
             Traffic::Weights => {
                 match receive_weight_frame(
@@ -722,6 +764,7 @@ impl Actor for LiteNode {
     }
 
     fn on_auth_fail(&mut self, ctx: &mut dyn Ctx, from: NodeId, class: Traffic) {
+        self.stamp(ctx.now_us());
         // Same policy as `DeflNode`: a forged Weights frame disqualifies
         // the claimed sender as a blob holder.
         if class == Traffic::Weights {
@@ -731,6 +774,7 @@ impl Actor for LiteNode {
     }
 
     fn on_timer(&mut self, ctx: &mut dyn Ctx, id: u64) {
+        self.stamp(ctx.now_us());
         if id & TIMER_HS != 0 {
             let mut out = Vec::new();
             self.hs.on_timeout(id & !TIMER_HS, &mut out);

@@ -32,6 +32,7 @@ use crate::mempool::{ChunkAssembler, WeightPool};
 use crate::metrics::{PipelineStats, Traffic};
 use crate::net::transport::{Actor, Ctx};
 use crate::runtime::{AggPath, Engine};
+use crate::trace::{code, Phase, Tracer};
 use crate::util::{Decode, Encode};
 use crate::weights::Weights;
 
@@ -113,6 +114,8 @@ pub struct DeflNode {
     spec: Option<SpecTrain>,
     attack: Attack,
     is_byzantine: bool,
+    /// Round-trace handle (off by default; see [`crate::trace`]).
+    tracer: Tracer,
 
     pub stats: NodeStats,
     pub done: bool,
@@ -166,6 +169,7 @@ impl DeflNode {
             spec: None,
             attack,
             is_byzantine,
+            tracer: Tracer::off(),
             stats: NodeStats::default(),
             done: false,
             final_theta: None,
@@ -177,6 +181,28 @@ impl DeflNode {
             shard_sizes,
             cfg,
         }
+    }
+
+    /// Install a trace handle. The clones share clock/round cells, so
+    /// one `stamp` at each callback boundary timestamps the node's, the
+    /// replica's, and the puller's events alike.
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.hs.set_tracer(tracer.clone());
+        self.puller.set_tracer(tracer.clone());
+        self.tracer = tracer;
+    }
+
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    /// Callback-boundary stamp: pin the trace clock to the transport
+    /// clock (deterministic on the simulator — never a wall read here)
+    /// and refresh the round cell plus the log-line context.
+    fn stamp(&self, now_us: u64) {
+        self.tracer.set_now_us(now_us);
+        self.tracer.set_round(self.replica.r_round);
+        crate::util::logging::set_context(self.id, self.replica.r_round);
     }
 
     fn apply_actions(&mut self, ctx: &mut dyn Ctx, actions: Vec<Action>) {
@@ -313,17 +339,23 @@ impl DeflNode {
         // bits the lockstep path would recompute. Anything else (a row
         // landed late, a different quorum shape) is discarded unseen.
         if let Some(spec) = self.spec.take() {
+            self.tracer.end(Phase::SpecTrain, code::SPEC_TRAIN, spec.target);
             if spec.target == target && spec.predicted == self.replica.w_last {
                 self.stats.pipeline.spec_hits += 1;
                 self.stats.pipeline.train_overlap_us += spec.train_us;
                 self.theta = spec.theta;
                 self.stats.losses.push(spec.loss);
+                self.tracer.instant(Phase::SpecTrain, code::SPEC_HIT, spec.target);
+                // Residual (unhidden) round tail — commit_update ends it.
+                self.tracer.begin(Phase::Train, code::TRAIN, target);
                 self.commit_update(ctx, target);
                 return;
             }
             self.stats.pipeline.spec_discards += 1;
+            self.tracer.instant(Phase::SpecTrain, code::SPEC_DISCARD, spec.target);
         }
 
+        self.tracer.begin(Phase::Aggregate, code::AGGREGATE, target);
         let agg = match self.aggregate_last() {
             Ok(a) => a,
             Err(e) => {
@@ -331,11 +363,13 @@ impl DeflNode {
                 self.theta.to_vec()
             }
         };
+        self.tracer.end(Phase::Aggregate, code::AGGREGATE, target);
         if self.record_history {
             self.theta_history.push((self.replica.r_round, Weights::new(agg.clone())));
         }
         let lr = self.cfg.lr_at(target - 1);
         let steps = self.cfg.local_steps;
+        self.tracer.begin(Phase::Train, code::TRAIN, target);
         let t0 = std::time::Instant::now();
         match local_train(&self.engine, &self.data, &self.shard, target, agg, steps, lr) {
             Ok((theta_new, loss)) => {
@@ -377,6 +411,8 @@ impl DeflNode {
         let digest = committed.digest();
         let blob = WeightBlob { node: self.id, round: target, weights: committed.clone() };
         self.pool.put(target, committed);
+        self.tracer.end(Phase::Train, code::TRAIN, target);
+        self.tracer.instant(Phase::Multicast, code::PUBLISH, (self.engine.dim() * 4) as u64);
         multicast_blob(ctx, &blob, self.cfg.chunk_bytes);
 
         // UPD transaction through consensus (digest only).
@@ -472,9 +508,13 @@ impl DeflNode {
             Ok((theta_new, loss)) => {
                 let train_us = t0.elapsed().as_micros() as u64;
                 self.stats.pipeline.train_busy_us += train_us;
-                if self.spec.take().is_some() {
+                if let Some(old) = self.spec.take() {
                     self.stats.pipeline.spec_discards += 1;
+                    self.tracer.end(Phase::SpecTrain, code::SPEC_TRAIN, old.target);
+                    self.tracer.instant(Phase::SpecTrain, code::SPEC_DISCARD, old.target);
                 }
+                // Open span: resolved (hit or discard) in try_start_round.
+                self.tracer.begin(Phase::SpecTrain, code::SPEC_TRAIN, target);
                 self.spec = Some(SpecTrain {
                     target,
                     predicted,
@@ -568,6 +608,13 @@ pub(crate) fn snapshot_of(
         fetch_rotations: fs.rotations,
         fetch_gave_up: fs.gave_up,
         serve_denied: fs.serve_denied,
+        // Event-driver counters live in the transport, not the node; the
+        // process host (defl-silo) overwrites these from the mesh's
+        // `driver_stats()` before each heartbeat leaves.
+        drv_poll_iters: 0,
+        drv_parked_us: 0,
+        drv_frames_coalesced: 0,
+        drv_flushes: 0,
         peer_serves: peer_serves(fs),
         load_arrivals: load.arrivals,
         load_commits: load.commits,
@@ -594,6 +641,7 @@ fn peer_serves(fs: &crate::defl::pull::FetchStats) -> Vec<crate::metrics::PeerSe
 
 impl Actor for DeflNode {
     fn on_start(&mut self, ctx: &mut dyn Ctx) {
+        self.stamp(ctx.now_us());
         let mut out = Vec::new();
         self.hs.start(&mut out);
         self.apply_actions(ctx, out);
@@ -601,6 +649,7 @@ impl Actor for DeflNode {
     }
 
     fn on_message(&mut self, ctx: &mut dyn Ctx, from: NodeId, class: Traffic, bytes: &[u8]) {
+        self.stamp(ctx.now_us());
         match class {
             Traffic::Weights => match receive_weight_frame(
                 &mut self.pool,
@@ -639,6 +688,7 @@ impl Actor for DeflNode {
     }
 
     fn on_auth_fail(&mut self, ctx: &mut dyn Ctx, from: NodeId, class: Traffic) {
+        self.stamp(ctx.now_us());
         // A forged Weights frame means the claimed sender cannot be
         // trusted as a blob holder: blacklist it in the pull protocol and
         // rotate any fetch currently asked of it. Consensus frames need
@@ -651,6 +701,7 @@ impl Actor for DeflNode {
     }
 
     fn on_timer(&mut self, ctx: &mut dyn Ctx, id: u64) {
+        self.stamp(ctx.now_us());
         if id & TIMER_HS != 0 {
             let mut out = Vec::new();
             self.hs.on_timeout(id & !TIMER_HS, &mut out);

@@ -38,6 +38,7 @@ use crate::crypto::{Digest, NodeId};
 use crate::mempool::{ChunkAssembler, WeightPool};
 use crate::metrics::Traffic;
 use crate::net::transport::Ctx;
+use crate::trace::{code, Phase, Tracer};
 use crate::util::{Decode, Encode};
 
 use super::replica::ReplicaState;
@@ -157,6 +158,9 @@ pub struct Puller {
     /// Byzantine test knob: serve digest-mismatched reply payloads.
     pub corrupt_serve: bool,
     pub stats: FetchStats,
+    /// Round-trace handle; fetch lifecycle events land on the
+    /// [`Phase::Pull`] lane (off by default — see [`crate::trace`]).
+    tracer: Tracer,
 }
 
 impl Puller {
@@ -170,7 +174,14 @@ impl Puller {
             timer_armed: false,
             corrupt_serve: false,
             stats: FetchStats::default(),
+            tracer: Tracer::off(),
         }
+    }
+
+    /// Install a trace handle (the embedding node keeps the shared
+    /// clock/round cells stamped).
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
     }
 
     pub fn cfg(&self) -> &FetchConfig {
@@ -242,10 +253,11 @@ impl Puller {
             if w.next_due_us > now {
                 continue;
             }
-            if w.asked.take().is_some() {
+            if let Some(old) = w.asked.take() {
                 // The in-flight request produced nothing before its
                 // timeout: rotate.
                 self.stats.rotations += 1;
+                self.tracer.instant(Phase::Pull, code::FETCH_ROTATE, u64::from(old));
             }
             // Origin-first ring of candidate holders, excluding self.
             let ring: Vec<NodeId> =
@@ -253,6 +265,7 @@ impl Puller {
             let ring_len = ring.len() as u32;
             if ring_len == 0 || w.cycles >= self.cfg.max_cycles {
                 self.stats.gave_up += 1;
+                self.tracer.instant(Phase::Pull, code::FETCH_GIVEUP, w.round);
                 self.given_up.insert(*digest);
                 resolved.push(*digest);
                 continue;
@@ -300,6 +313,7 @@ impl Puller {
                 let fetch = BlobFetch { digest: *digest, from_byte, to_byte };
                 sends.push((holder, WeightMsg::Fetch(fetch).to_bytes()));
                 self.stats.fetches_sent += 1;
+                self.tracer.instant(Phase::Pull, code::FETCH_SEND, u64::from(holder));
             }
         }
         for d in resolved {
@@ -396,9 +410,11 @@ impl Puller {
         chunks.set_round_horizon(replica_round + CHUNK_ROUND_SLACK);
         match chunks.accept(from, chunk) {
             Ok(Some(blob)) => {
+                let bytes = blob.weights.as_bytes().len() as u64;
                 pool.put(round.max(blob.round), blob.weights);
                 self.wants.remove(&digest);
                 self.stats.blobs_recovered += 1;
+                self.tracer.instant(Phase::Pull, code::FETCH_RECOVER, bytes);
                 Ok(true)
             }
             Ok(None) => Ok(false),
@@ -410,6 +426,7 @@ impl Puller {
                         w.asked = None;
                         w.next_due_us = 0; // rotate on the next tick
                         self.stats.rotations += 1;
+                        self.tracer.instant(Phase::Pull, code::FETCH_ROTATE, u64::from(from));
                     }
                 }
                 Err(e)
@@ -437,6 +454,9 @@ impl Puller {
             }
         }
         self.stats.rotations += rotations;
+        if rotations > 0 {
+            self.tracer.instant(Phase::Pull, code::FETCH_ROTATE, u64::from(from));
+        }
     }
 
     /// The asked holder reported it does not have the blob: rotate on
@@ -449,6 +469,7 @@ impl Puller {
                 w.asked = None;
                 w.next_due_us = 0;
                 self.stats.rotations += 1;
+                self.tracer.instant(Phase::Pull, code::FETCH_ROTATE, u64::from(from));
             }
         }
     }

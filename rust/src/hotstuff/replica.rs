@@ -200,6 +200,11 @@ pub struct HotStuff {
     pub sync_rejects: u64,
     /// Best-effort jumps past an unrecoverable gap.
     pub sync_jumps: u64,
+
+    /// Round-trace handle (off by default; see [`crate::trace`]). Named
+    /// fully qualified throughout because this module has its own
+    /// consensus-phase `Phase` enum.
+    tracer: crate::trace::Tracer,
 }
 
 impl HotStuff {
@@ -241,7 +246,15 @@ impl HotStuff {
             sync_gap_requests: 0,
             sync_rejects: 0,
             sync_jumps: 0,
+            tracer: crate::trace::Tracer::off(),
         }
+    }
+
+    /// Install a trace handle; consensus events land on its
+    /// [`crate::trace::Phase::Consensus`] lane. The embedder keeps the
+    /// clock/round cells stamped (shared with its own clone).
+    pub fn set_tracer(&mut self, tracer: crate::trace::Tracer) {
+        self.tracer = tracer;
     }
 
     /// 1-based height of the decided tip (blocks this replica executed).
@@ -375,6 +388,11 @@ impl HotStuff {
     }
 
     fn enter_view(&mut self, view: u64, out: &mut Vec<Action>) {
+        self.tracer.instant(
+            crate::trace::Phase::Consensus,
+            crate::trace::code::HS_VIEW,
+            view,
+        );
         self.view = view;
         self.current_block = None;
         self.leader = LeaderState::default();
@@ -401,6 +419,11 @@ impl HotStuff {
         if epoch != self.timer_epoch {
             return;
         }
+        self.tracer.instant(
+            crate::trace::Phase::Consensus,
+            crate::trace::code::HS_TIMEOUT,
+            self.view,
+        );
         self.consecutive_timeouts += 1;
         self.view_changes += 1;
         let next = self.view + 1;
@@ -754,6 +777,11 @@ impl HotStuff {
         let take = self.pending.len().min(self.cfg.max_batch);
         let cmds: Vec<Vec<u8>> = self.pending[..take].iter().map(|p| p.cmd.clone()).collect();
         let block = Block { view, parent: high_qc.block, cmds };
+        self.tracer.instant(
+            crate::trace::Phase::Consensus,
+            crate::trace::code::HS_PROPOSE,
+            view,
+        );
 
         if self.byz == ByzMode::Equivocate {
             // Conflicting proposal to the upper half of the cluster.
@@ -844,6 +872,11 @@ impl HotStuff {
     }
 
     fn vote(&mut self, phase: Phase, block: Digest, out: &mut Vec<Action>) -> Result<()> {
+        self.tracer.instant(
+            crate::trace::Phase::Consensus,
+            crate::trace::code::HS_VOTE,
+            self.view,
+        );
         let vd = vote_digest(phase, self.view, &block, self.decided_height + 1);
         let sig = self.signer.sign(&vd);
         let leader = leader_of(self.view, self.n);
@@ -928,6 +961,11 @@ impl HotStuff {
         self.last_decided_view = view;
         self.decided_blocks += 1;
         self.consecutive_timeouts = 0;
+        self.tracer.instant(
+            crate::trace::Phase::Consensus,
+            crate::trace::code::HS_DECIDE,
+            qc.height,
+        );
         // The commit QC covers the decided height and was verified above
         // (quorum signatures) — it is authoritative. In sync it equals
         // our local `decided_height + 1`; if it is ahead we missed

@@ -34,5 +34,6 @@ pub mod metrics;
 pub mod net;
 pub mod runtime;
 pub mod sim;
+pub mod trace;
 pub mod util;
 pub mod weights;

@@ -281,6 +281,17 @@ pub struct StatsSnapshot {
     pub fetch_rotations: u64,
     pub fetch_gave_up: u64,
     pub serve_denied: u64,
+    /// Event-driver health (zeros on the threads core and the
+    /// simulator): loop iterations, parked-idle µs, frames appended to
+    /// the coalescing buffers, and the flush writes that drained them.
+    /// `drv_frames_coalesced / drv_flushes` is the frames-per-syscall
+    /// ratio, and `drv_parked_us` against wall time is the poll-wait vs
+    /// work split — the data the "shard the driver?" decision needs,
+    /// shipped even when full tracing is off.
+    pub drv_poll_iters: u64,
+    pub drv_parked_us: u64,
+    pub drv_frames_coalesced: u64,
+    pub drv_flushes: u64,
     /// Per-peer serve-budget accounting, sorted by peer id.
     pub peer_serves: Vec<PeerServe>,
     /// Sustained-load driver: client update arrivals accepted / committed
@@ -312,6 +323,10 @@ impl Encode for StatsSnapshot {
         self.fetch_rotations.encode(out);
         self.fetch_gave_up.encode(out);
         self.serve_denied.encode(out);
+        self.drv_poll_iters.encode(out);
+        self.drv_parked_us.encode(out);
+        self.drv_frames_coalesced.encode(out);
+        self.drv_flushes.encode(out);
         crate::util::codec::encode_list(&self.peer_serves, out);
         self.load_arrivals.encode(out);
         self.load_commits.encode(out);
@@ -319,7 +334,7 @@ impl Encode for StatsSnapshot {
         self.done.encode(out);
     }
     fn encoded_len(&self) -> usize {
-        4 + 8 * 12 + 4 + self.peer_serves.len() * 20
+        4 + 8 * 16 + 4 + self.peer_serves.len() * 20
             + 8 * 2
             + self.commit_hist.encoded_len()
             + 1
@@ -342,6 +357,10 @@ impl Decode for StatsSnapshot {
             fetch_rotations: u64::decode(cur)?,
             fetch_gave_up: u64::decode(cur)?,
             serve_denied: u64::decode(cur)?,
+            drv_poll_iters: u64::decode(cur)?,
+            drv_parked_us: u64::decode(cur)?,
+            drv_frames_coalesced: u64::decode(cur)?,
+            drv_flushes: u64::decode(cur)?,
             peer_serves: crate::util::codec::decode_list(cur)?,
             load_arrivals: u64::decode(cur)?,
             load_commits: u64::decode(cur)?,
@@ -653,6 +672,10 @@ mod tests {
             fetch_rotations: 1,
             fetch_gave_up: 0,
             serve_denied: 3,
+            drv_poll_iters: 55_000,
+            drv_parked_us: 1_200_000,
+            drv_frames_coalesced: 640,
+            drv_flushes: 90,
             peer_serves: vec![
                 PeerServe { peer: 0, bytes_served: 1024, reqs_throttled: 0 },
                 PeerServe { peer: 2, bytes_served: 0, reqs_throttled: 3 },

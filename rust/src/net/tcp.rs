@@ -73,7 +73,7 @@ use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
 use std::io::{ErrorKind, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -339,6 +339,44 @@ impl SendSlot {
     }
 }
 
+/// Cumulative event-driver health counters (see
+/// [`TcpNode::driver_stats`]): the poll-wait vs work split and the
+/// write-coalescing ratio the ROADMAP's "shard the driver?" question
+/// needs. Always on — four relaxed atomic adds on paths that already
+/// take a lock — and independent of the full trace subsystem.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DriverStats {
+    /// Driver loop iterations since bind.
+    pub poll_iters: u64,
+    /// Time spent parked waiting for work (µs).
+    pub parked_us: u64,
+    /// Frames appended to connection coalescing buffers by senders.
+    pub frames_coalesced: u64,
+    /// Socket writes that drained a coalescing buffer (each may carry
+    /// many frames; `frames_coalesced / flushes` = frames per syscall).
+    pub flushes: u64,
+}
+
+/// The shared atomic cells behind [`DriverStats`].
+#[derive(Default)]
+struct DriverCounters {
+    poll_iters: AtomicU64,
+    parked_us: AtomicU64,
+    frames_coalesced: AtomicU64,
+    flushes: AtomicU64,
+}
+
+impl DriverCounters {
+    fn snapshot(&self) -> DriverStats {
+        DriverStats {
+            poll_iters: self.poll_iters.load(Ordering::Relaxed),
+            parked_us: self.parked_us.load(Ordering::Relaxed),
+            frames_coalesced: self.frames_coalesced.load(Ordering::Relaxed),
+            flushes: self.flushes.load(Ordering::Relaxed),
+        }
+    }
+}
+
 /// State shared between an event-core [`TcpNode`] handle and its driver
 /// thread.
 struct EventShared {
@@ -356,6 +394,13 @@ struct EventShared {
     closed: AtomicBool,
     /// The driver thread's handle for `unpark` (set once at spawn).
     driver: OnceLock<std::thread::Thread>,
+    /// Always-on driver health counters (see [`DriverStats`]).
+    stats: DriverCounters,
+    /// Trace handle installed by [`TcpNode::install_tracer`] after bind
+    /// (the config is `Copy`, so the handle cannot ride in it). The
+    /// driver emits rate-limited window summaries when this is set; a
+    /// `get()` miss costs one atomic load per loop iteration.
+    tracer: OnceLock<crate::trace::Tracer>,
 }
 
 impl EventShared {
@@ -413,6 +458,11 @@ const EVENT_SPIN_ITERS: u32 = 16;
 /// external edge (readable socket with no local event) is picked up
 /// promptly; the unpark token covers every local edge exactly.
 const EVENT_PARK: Duration = Duration::from_millis(1);
+
+/// Event driver: minimum gap between trace window summaries. One
+/// `DRV_POLL`/`DRV_PARK`/`DRV_FLUSH` instant triple per window keeps
+/// the ring from drowning in per-iteration driver noise.
+const DRV_TRACE_WINDOW: Duration = Duration::from_millis(10);
 
 /// Event driver: bytes per socket `read` call into the scratch buffer.
 const READ_CHUNK: usize = 64 * 1024;
@@ -485,6 +535,8 @@ impl TcpNode {
                     meter: meter.clone(),
                     closed: AtomicBool::new(false),
                     driver: OnceLock::new(),
+                    stats: DriverCounters::default(),
+                    tracer: OnceLock::new(),
                 });
                 let handle = {
                     let sh = sh.clone();
@@ -493,6 +545,7 @@ impl TcpNode {
                             conns: (0..n).map(|_| None).collect(),
                             pending: Vec::new(),
                             scratch: vec![0u8; READ_CHUNK],
+                            win_max_flush: 0,
                             sh,
                             listener,
                         }
@@ -755,6 +808,27 @@ impl TcpNode {
         self.meter.lock().unwrap().clone()
     }
 
+    /// Snapshot of the event driver's health counters. Zeros on the
+    /// threads core (no driver loop to measure).
+    pub fn driver_stats(&self) -> DriverStats {
+        match &self.core {
+            Core::Threads { .. } => DriverStats::default(),
+            Core::Event { sh, .. } => sh.stats.snapshot(),
+        }
+    }
+
+    /// Install a trace handle on the event driver (first install wins;
+    /// no-op on the threads core). The driver gets its own clock cells
+    /// ([`crate::trace::Tracer::fork_clock`]) so its wall-clock stamps
+    /// never race the node's cached-now cells, and emits rate-limited
+    /// `Driver`-lane window summaries from then on.
+    pub fn install_tracer(&self, tracer: &crate::trace::Tracer) {
+        if let Core::Event { sh, .. } = &self.core {
+            let _ = sh.tracer.set(tracer.fork_clock());
+            sh.unpark_driver();
+        }
+    }
+
     pub fn send(&self, to: NodeId, class: Traffic, bytes: &[u8]) -> Result<()> {
         if to as usize >= self.n {
             bail!("no such peer {to}");
@@ -827,6 +901,7 @@ impl TcpNode {
         s.buf.extend_from_slice(&hdr);
         s.buf.extend_from_slice(bytes);
         drop(s);
+        sh.stats.frames_coalesced.fetch_add(1, Ordering::Relaxed);
         sh.unpark_driver();
         Ok(())
     }
@@ -944,6 +1019,9 @@ struct EventDriver {
     pending: Vec<Pending>,
     /// Reused `read` destination, READ_CHUNK bytes.
     scratch: Vec<u8>,
+    /// Largest single coalesced-flush write in the current trace
+    /// window (bytes) — driver-thread-only, reset per window.
+    win_max_flush: u64,
     sh: Arc<EventShared>,
     listener: TcpListener,
 }
@@ -951,7 +1029,10 @@ struct EventDriver {
 impl EventDriver {
     fn run(mut self) {
         let mut idle: u32 = 0;
+        let mut win_start = Instant::now();
+        let mut win_last = DriverStats::default();
         while !self.sh.closed.load(Ordering::SeqCst) {
+            self.sh.stats.poll_iters.fetch_add(1, Ordering::Relaxed);
             let mut progress = false;
             progress |= self.accept_new();
             progress |= self.adopt_dials();
@@ -971,7 +1052,29 @@ impl EventDriver {
                     // it arrived since the last one). The short timeout
                     // only bounds latency for EXTERNAL edges — bytes
                     // arriving from peers while we park.
+                    let parked = Instant::now();
                     std::thread::park_timeout(EVENT_PARK);
+                    self.sh
+                        .stats
+                        .parked_us
+                        .fetch_add(parked.elapsed().as_micros() as u64, Ordering::Relaxed);
+                }
+            }
+            // Rate-limited trace summary: one instant triple per window
+            // — poll-vs-park split + the window's largest coalesced
+            // flush. The driver stamps its own wall clock (fork_clock),
+            // so the node's cached-now cells are never raced.
+            if let Some(tr) = self.sh.tracer.get() {
+                if win_start.elapsed() >= DRV_TRACE_WINDOW {
+                    let cur = self.sh.stats.snapshot();
+                    tr.touch_wall();
+                    use crate::trace::{code, Phase};
+                    tr.instant(Phase::Driver, code::DRV_POLL, cur.poll_iters - win_last.poll_iters);
+                    tr.instant(Phase::Driver, code::DRV_PARK, cur.parked_us - win_last.parked_us);
+                    tr.instant(Phase::Driver, code::DRV_FLUSH, self.win_max_flush);
+                    self.win_max_flush = 0;
+                    win_last = cur;
+                    win_start = Instant::now();
                 }
             }
         }
@@ -1193,6 +1296,8 @@ impl EventDriver {
                     Ok(0) => dead = true,
                     Ok(k) => {
                         progress = true;
+                        self.sh.stats.flushes.fetch_add(1, Ordering::Relaxed);
+                        self.win_max_flush = self.win_max_flush.max(k as u64);
                         s.start += k;
                         if s.start == s.buf.len() {
                             s.buf.clear();
@@ -1915,6 +2020,53 @@ mod tests {
     #[test]
     fn restarted_peer_rejoins_and_replaces_its_connection_threads() {
         restarted_peer_rejoins(38615, TcpDriver::Threads);
+    }
+
+    /// Driver observability: the always-on counters tick under traffic,
+    /// and an installed tracer gets rate-limited `Driver`-lane window
+    /// summaries stamped on the driver's own clock. The threads core
+    /// reports zeros and ignores the install.
+    #[test]
+    fn event_driver_counters_and_trace_summaries_tick() {
+        let addrs = local_addrs(2, 39415).unwrap();
+        let listener = TcpListener::bind(addrs[1]).unwrap();
+        let node0 = TcpNode::bind(0, &addrs).unwrap(); // event is the default
+        let tracer = crate::trace::Tracer::on(0, 4096);
+        node0.install_tracer(&tracer);
+        node0.dial_peer(1, addrs[1], Duration::from_secs(5)).unwrap();
+        let (mut peer, _) = listener.accept().unwrap();
+        let hello = read_frame_from(&mut peer, MAX_HELLO_BYTES).unwrap();
+        assert_eq!((hello.from, hello.bytes.as_slice()), (0, &b"hello"[..]));
+
+        for i in 0..8u8 {
+            node0.send(1, Traffic::Weights, &[i; 64]).unwrap();
+        }
+        for i in 0..8u8 {
+            let m = read_frame_from(&mut peer, MAX_FRAME_BYTES).unwrap();
+            assert_eq!(m.bytes, vec![i; 64]);
+        }
+        let st = node0.driver_stats();
+        assert!(st.poll_iters > 0, "driver loop never counted");
+        assert_eq!(st.frames_coalesced, 8, "one count per event_send frame");
+        assert!(st.flushes >= 1, "draining 8 frames takes at least one write");
+        assert!(st.flushes <= 8, "flushes can never exceed frames");
+
+        // Window summaries appear on the Driver lane without any help
+        // from the node side (the driver clocks itself).
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while tracer.snapshot().is_empty() {
+            assert!(Instant::now() < deadline, "no driver window summary emitted");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let events = tracer.snapshot();
+        assert!(events.iter().all(|e| e.phase == crate::trace::Phase::Driver));
+        assert!(events.iter().any(|e| e.code == crate::trace::code::DRV_POLL));
+
+        // Threads core: no driver loop — zeros, and install is a no-op.
+        let addrs2 = local_addrs(1, 39515).unwrap();
+        let t = TcpNode::bind_with(0, &addrs2, cfg(TcpDriver::Threads)).unwrap();
+        t.install_tracer(&tracer);
+        assert_eq!(t.driver_stats(), DriverStats::default());
     }
 
     /// Transport-agnostic ping-pong actor: proves `run_actor` hosts the

@@ -1,0 +1,811 @@
+//! Round-trace flight recorder: per-phase spans and instants from every
+//! hot layer, buffered in a fixed-capacity per-node ring.
+//!
+//! # Event schema
+//!
+//! A [`TraceEvent`] is a compact fixed-layout record:
+//!
+//! | field    | type  | meaning                                         |
+//! |----------|-------|-------------------------------------------------|
+//! | `seq`    | `u64` | per-node monotone sequence number               |
+//! | `t_us`   | `u64` | timestamp: virtual µs on the simulator, wall µs |
+//! |          |       | since the tracer's epoch on TCP                 |
+//! | `node`   | `u32` | emitting node id                                |
+//! | `round`  | `u64` | the node's working round when emitted (0 for    |
+//! |          |       | roundless contexts like the event driver)       |
+//! | `phase`  | `u8`  | [`Phase`] taxonomy (the Perfetto lane)          |
+//! | `kind`   | `u8`  | [`Kind`]: span begin / span end / instant       |
+//! | `code`   | `u8`  | what specifically happened (see [`code`])       |
+//! | `detail` | `u64` | code-specific payload (view, bytes, holder, …)  |
+//!
+//! # Phase taxonomy
+//!
+//! * `Train` — committed local training for a round (span).
+//! * `SpecTrain` — speculative next-round training, plus its resolution
+//!   instants (`spec_hit` / `spec_discard`).
+//! * `Multicast` — UPD publish: blob enters the pool and the mesh.
+//! * `Consensus` — HotStuff view lifecycle (enter/propose/vote/decide/
+//!   timeout instants).
+//! * `Aggregate` — W^LAST aggregation (span).
+//! * `Pull` — digest-addressed fetch attempts, rotations, recoveries,
+//!   give-ups.
+//! * `Driver` — the `net::tcp` event-driver loop: poll-vs-park split and
+//!   coalesced-flush sizes, emitted as rate-limited window summaries.
+//!
+//! # Overhead contract
+//!
+//! The off switch is a branch, never a lock: a disabled [`Tracer`] is an
+//! `Option::None` and every emit helper returns after one `is_none`
+//! check. Tracing never changes protocol behaviour — events are
+//! emitted strictly off the wire path, timestamps come from a cached
+//! cell the host sets at callback boundaries (no mid-callback clock
+//! reads on the simulator, so virtual-time runs stay deterministic),
+//! and the ring drops its OLDEST event on overflow instead of blocking.
+//! `benches/micro_runtime.rs` gates traced ≥ 0.95× untraced rounds/sec
+//! with bit-identical final digests.
+//!
+//! # Exports
+//!
+//! * Control plane: [`crate::cluster::CtrlMsg::Trace`] chunks ride the
+//!   silo→supervisor connection; the supervisor merges all silos into
+//!   one Chrome-trace JSON via [`chrome_trace_json`] (`TRACE_cluster
+//!   .json`, loadable in Perfetto / `chrome://tracing`).
+//! * Flight recorder: hosts periodically flush new events through
+//!   [`Tracer::drain_since`] into a per-silo text dump
+//!   ([`format_flight_line`]), so a SIGKILLed silo leaves its final
+//!   round's events on disk.
+//! * Bench: `micro_runtime` records traced-vs-untraced rounds/sec into
+//!   `BENCH_runtime.json`.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::crypto::NodeId;
+use crate::util::codec::{Cursor, Decode, Encode};
+
+/// Default ring capacity for deployed silos: last 16Ki events.
+pub const DEFAULT_RING_CAP: usize = 16_384;
+
+/// Where in the stack an event was emitted — the Perfetto lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Phase {
+    Train = 0,
+    SpecTrain = 1,
+    Multicast = 2,
+    Consensus = 3,
+    Aggregate = 4,
+    Pull = 5,
+    Driver = 6,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 7] = [
+        Phase::Train,
+        Phase::SpecTrain,
+        Phase::Multicast,
+        Phase::Consensus,
+        Phase::Aggregate,
+        Phase::Pull,
+        Phase::Driver,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Train => "train",
+            Phase::SpecTrain => "spec_train",
+            Phase::Multicast => "multicast",
+            Phase::Consensus => "consensus",
+            Phase::Aggregate => "aggregate",
+            Phase::Pull => "pull",
+            Phase::Driver => "driver",
+        }
+    }
+
+    fn from_u8(b: u8) -> Result<Phase> {
+        Phase::ALL
+            .get(b as usize)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("trace: bad phase byte {b}"))
+    }
+}
+
+/// Span begin / span end / point event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Kind {
+    SpanBegin = 0,
+    SpanEnd = 1,
+    Instant = 2,
+}
+
+impl Kind {
+    fn from_u8(b: u8) -> Result<Kind> {
+        Ok(match b {
+            0 => Kind::SpanBegin,
+            1 => Kind::SpanEnd,
+            2 => Kind::Instant,
+            _ => bail!("trace: bad kind byte {b}"),
+        })
+    }
+}
+
+/// Event codes: what specifically happened. Grouped by phase; `detail`
+/// semantics are noted per code.
+pub mod code {
+    /// Generic: the phase name alone describes the event.
+    pub const NONE: u8 = 0;
+    /// Train span for a round (`detail` = target round).
+    pub const TRAIN: u8 = 1;
+    /// Speculative training span (`detail` = target round).
+    pub const SPEC_TRAIN: u8 = 2;
+    /// Speculation resolved as a hit (`detail` = target round).
+    pub const SPEC_HIT: u8 = 3;
+    /// Speculation discarded (`detail` = target round).
+    pub const SPEC_DISCARD: u8 = 4;
+    /// UPD published: blob pooled + multicast (`detail` = blob bytes).
+    pub const PUBLISH: u8 = 5;
+    /// Aggregate span (`detail` = target round).
+    pub const AGGREGATE: u8 = 6;
+    /// HotStuff entered a view (`detail` = view).
+    pub const HS_VIEW: u8 = 16;
+    /// This replica proposed as leader (`detail` = view).
+    pub const HS_PROPOSE: u8 = 17;
+    /// This replica voted on a proposal (`detail` = view).
+    pub const HS_VOTE: u8 = 18;
+    /// A block decided (`detail` = decided height).
+    pub const HS_DECIDE: u8 = 19;
+    /// A view timed out (`detail` = the timed-out view).
+    pub const HS_TIMEOUT: u8 = 20;
+    /// Fetch request sent (`detail` = holder node id).
+    pub const FETCH_SEND: u8 = 32;
+    /// Fetch rotated to the next holder (`detail` = new holder).
+    pub const FETCH_ROTATE: u8 = 33;
+    /// Blob recovered through the pull protocol (`detail` = bytes).
+    pub const FETCH_RECOVER: u8 = 34;
+    /// Fetch gave up: no holder left (`detail` = 0).
+    pub const FETCH_GIVEUP: u8 = 35;
+    /// Driver window summary: loop iterations (`detail` = iterations).
+    pub const DRV_POLL: u8 = 48;
+    /// Driver window summary: parked time (`detail` = parked µs).
+    pub const DRV_PARK: u8 = 49;
+    /// Largest coalesced flush in the window (`detail` = bytes).
+    pub const DRV_FLUSH: u8 = 50;
+
+    /// Human/Perfetto name for a code (`phase` names code 0 events).
+    pub fn name(phase: super::Phase, code: u8) -> &'static str {
+        match code {
+            NONE => phase.name(),
+            TRAIN => "train",
+            SPEC_TRAIN => "spec_train",
+            SPEC_HIT => "spec_hit",
+            SPEC_DISCARD => "spec_discard",
+            PUBLISH => "publish",
+            AGGREGATE => "aggregate",
+            HS_VIEW => "hs_view",
+            HS_PROPOSE => "hs_propose",
+            HS_VOTE => "hs_vote",
+            HS_DECIDE => "hs_decide",
+            HS_TIMEOUT => "hs_timeout",
+            FETCH_SEND => "fetch_send",
+            FETCH_ROTATE => "fetch_rotate",
+            FETCH_RECOVER => "fetch_recover",
+            FETCH_GIVEUP => "fetch_giveup",
+            DRV_POLL => "drv_poll",
+            DRV_PARK => "drv_park",
+            DRV_FLUSH => "drv_flush",
+            _ => "unknown",
+        }
+    }
+}
+
+/// One compact trace record — see the module docs for the schema.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub seq: u64,
+    pub t_us: u64,
+    pub node: NodeId,
+    pub round: u64,
+    pub phase: Phase,
+    pub kind: Kind,
+    pub code: u8,
+    pub detail: u64,
+}
+
+/// Fixed wire size of one event.
+pub const TRACE_EVENT_BYTES: usize = 8 + 8 + 4 + 8 + 1 + 1 + 1 + 8;
+
+impl Encode for TraceEvent {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.seq.encode(out);
+        self.t_us.encode(out);
+        self.node.encode(out);
+        self.round.encode(out);
+        out.push(self.phase as u8);
+        out.push(self.kind as u8);
+        out.push(self.code);
+        self.detail.encode(out);
+    }
+
+    fn encoded_len(&self) -> usize {
+        TRACE_EVENT_BYTES
+    }
+}
+
+impl Decode for TraceEvent {
+    fn decode(cur: &mut Cursor<'_>) -> Result<Self> {
+        Ok(TraceEvent {
+            seq: u64::decode(cur)?,
+            t_us: u64::decode(cur)?,
+            node: NodeId::decode(cur)?,
+            round: u64::decode(cur)?,
+            phase: Phase::from_u8(u8::decode(cur)?)?,
+            kind: Kind::from_u8(u8::decode(cur)?)?,
+            code: u8::decode(cur)?,
+            detail: u64::decode(cur)?,
+        })
+    }
+}
+
+/// Fixed-capacity event ring: overflow evicts the OLDEST event (the
+/// flight-recorder contract — the last N events always survive).
+pub struct TraceRing {
+    cap: usize,
+    buf: VecDeque<TraceEvent>,
+    /// Events evicted by overflow since creation.
+    pub dropped: u64,
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> TraceRing {
+        TraceRing { cap: cap.max(1), buf: VecDeque::new(), dropped: 0 }
+    }
+
+    pub fn push(&mut self, ev: TraceEvent) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(ev);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Resident events, oldest first.
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        self.buf.iter().copied().collect()
+    }
+
+    /// Events with `seq > last`, oldest first — the incremental-flush
+    /// primitive (control-plane chunks and flight-recorder appends each
+    /// keep their own cursor).
+    pub fn drain_since(&self, last: u64) -> Vec<TraceEvent> {
+        self.buf.iter().copied().filter(|e| e.seq > last).collect()
+    }
+}
+
+/// Per-clone cached context cells: the timestamp and round every emit
+/// stamps. Hosts set these at callback boundaries, so clock-less
+/// components (HotStuff, the puller) inherit the right values. Clones
+/// of one node's tracer SHARE the cells; [`Tracer::fork_clock`] gives a
+/// thread its own (the event driver stamps wall time independently).
+struct Cells {
+    now_us: AtomicU64,
+    round: AtomicU64,
+}
+
+struct Inner {
+    node: NodeId,
+    seq: AtomicU64,
+    ring: Mutex<TraceRing>,
+    /// Wall-clock base for [`Tracer::touch_wall`] stamps.
+    epoch: Instant,
+}
+
+/// The cheap emit handle threaded through every instrumented layer.
+/// Disabled ([`Tracer::off`], the default) it is a `None` and every
+/// operation is a single branch.
+#[derive(Clone)]
+pub struct Tracer {
+    inner: Option<Arc<Inner>>,
+    cells: Arc<Cells>,
+}
+
+impl Default for Tracer {
+    fn default() -> Tracer {
+        Tracer::off()
+    }
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.inner {
+            Some(inner) => write!(f, "Tracer(on, n{})", inner.node),
+            None => write!(f, "Tracer(off)"),
+        }
+    }
+}
+
+impl Tracer {
+    /// A disabled tracer: every emit is a branch and a return.
+    pub fn off() -> Tracer {
+        Tracer {
+            inner: None,
+            cells: Arc::new(Cells { now_us: AtomicU64::new(0), round: AtomicU64::new(0) }),
+        }
+    }
+
+    /// An enabled tracer for `node` with a ring of `cap` events.
+    pub fn on(node: NodeId, cap: usize) -> Tracer {
+        Tracer {
+            inner: Some(Arc::new(Inner {
+                node,
+                seq: AtomicU64::new(0),
+                ring: Mutex::new(TraceRing::new(cap)),
+                epoch: Instant::now(),
+            })),
+            cells: Arc::new(Cells { now_us: AtomicU64::new(0), round: AtomicU64::new(0) }),
+        }
+    }
+
+    pub fn is_on(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    pub fn node(&self) -> Option<NodeId> {
+        self.inner.as_ref().map(|i| i.node)
+    }
+
+    /// Same ring, fresh context cells — for a thread that stamps its own
+    /// clock (the event driver) without racing the node's cells.
+    pub fn fork_clock(&self) -> Tracer {
+        Tracer {
+            inner: self.inner.clone(),
+            cells: Arc::new(Cells { now_us: AtomicU64::new(0), round: AtomicU64::new(0) }),
+        }
+    }
+
+    /// Cache the timestamp subsequent emits stamp (virtual-time hosts).
+    pub fn set_now_us(&self, t_us: u64) {
+        if self.inner.is_some() {
+            self.cells.now_us.store(t_us, Ordering::Relaxed);
+        }
+    }
+
+    /// Cache wall µs since the tracer's epoch (wall-clock hosts).
+    pub fn touch_wall(&self) {
+        if let Some(inner) = &self.inner {
+            let t = inner.epoch.elapsed().as_micros() as u64;
+            self.cells.now_us.store(t, Ordering::Relaxed);
+        }
+    }
+
+    /// Cache the round subsequent emits are attributed to.
+    pub fn set_round(&self, round: u64) {
+        if self.inner.is_some() {
+            self.cells.round.store(round, Ordering::Relaxed);
+        }
+    }
+
+    fn emit(&self, kind: Kind, phase: Phase, code: u8, detail: u64) {
+        let Some(inner) = &self.inner else { return };
+        let ev = TraceEvent {
+            seq: inner.seq.fetch_add(1, Ordering::Relaxed) + 1,
+            t_us: self.cells.now_us.load(Ordering::Relaxed),
+            node: inner.node,
+            round: self.cells.round.load(Ordering::Relaxed),
+            phase,
+            kind,
+            code,
+            detail,
+        };
+        inner.ring.lock().unwrap().push(ev);
+    }
+
+    pub fn begin(&self, phase: Phase, code: u8, detail: u64) {
+        self.emit(Kind::SpanBegin, phase, code, detail);
+    }
+
+    pub fn end(&self, phase: Phase, code: u8, detail: u64) {
+        self.emit(Kind::SpanEnd, phase, code, detail);
+    }
+
+    pub fn instant(&self, phase: Phase, code: u8, detail: u64) {
+        self.emit(Kind::Instant, phase, code, detail);
+    }
+
+    /// Events newer than `last` (by seq), oldest first. Empty when off.
+    pub fn drain_since(&self, last: u64) -> Vec<TraceEvent> {
+        match &self.inner {
+            Some(inner) => inner.ring.lock().unwrap().drain_since(last),
+            None => Vec::new(),
+        }
+    }
+
+    /// Everything still resident, oldest first. Empty when off.
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        match &self.inner {
+            Some(inner) => inner.ring.lock().unwrap().snapshot(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Ring-overflow evictions so far.
+    pub fn dropped(&self) -> u64 {
+        match &self.inner {
+            Some(inner) => inner.ring.lock().unwrap().dropped,
+            None => 0,
+        }
+    }
+}
+
+/// One flight-recorder dump line: stable, grep-friendly text (what
+/// `tests/cluster_process.rs` asserts the killed silo left behind).
+pub fn format_flight_line(ev: &TraceEvent) -> String {
+    let k = match ev.kind {
+        Kind::SpanBegin => "B",
+        Kind::SpanEnd => "E",
+        Kind::Instant => "i",
+    };
+    format!(
+        "n{} r{} t={}us {}/{} {} detail={} seq={}",
+        ev.node,
+        ev.round,
+        ev.t_us,
+        ev.phase.name(),
+        code::name(ev.phase, ev.code),
+        k,
+        ev.detail,
+        ev.seq
+    )
+}
+
+fn json_escape_into(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+}
+
+/// Merge per-node event streams into one Chrome-trace JSON document
+/// (the `traceEvents` array format Perfetto and `chrome://tracing`
+/// load). Each node is a `pid`, each phase a named `tid` lane within
+/// it. Begin/end pairs are matched per (node, phase) lane and emitted
+/// as complete `"X"` events; unmatched begins/ends degrade to instants
+/// (a ring that wrapped mid-span must still load cleanly).
+pub fn chrome_trace_json(per_node: &[(NodeId, Vec<TraceEvent>)]) -> String {
+    let mut out = String::from("{\"traceEvents\":[");
+    let mut first = true;
+    let mut push_ev = |s: &str, out: &mut String| {
+        if !std::mem::take(&mut first) {
+            out.push(',');
+        }
+        out.push_str(s);
+    };
+
+    for (node, _) in per_node {
+        push_ev(
+            &format!(
+                "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{node},\"tid\":0,\
+                 \"args\":{{\"name\":\"silo {node}\"}}}}"
+            ),
+            &mut out,
+        );
+        for ph in Phase::ALL {
+            push_ev(
+                &format!(
+                    "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{node},\"tid\":{},\
+                     \"args\":{{\"name\":\"{}\"}}}}",
+                    ph as u8,
+                    ph.name()
+                ),
+                &mut out,
+            );
+        }
+    }
+
+    for (node, events) in per_node {
+        // Open-span stack per phase lane (spans of one phase on one
+        // node are emitted nested or sequential, never interleaved).
+        let mut open: Vec<Vec<&TraceEvent>> = vec![Vec::new(); Phase::ALL.len()];
+        let mut events: Vec<&TraceEvent> = events.iter().collect();
+        events.sort_by_key(|e| (e.t_us, e.seq));
+        for ev in &events {
+            let lane = ev.phase as usize;
+            let mut name = String::new();
+            json_escape_into(code::name(ev.phase, ev.code), &mut name);
+            let args = format!(
+                "{{\"round\":{},\"detail\":{},\"seq\":{}}}",
+                ev.round, ev.detail, ev.seq
+            );
+            match ev.kind {
+                Kind::SpanBegin => open[lane].push(ev),
+                Kind::SpanEnd => match open[lane].pop() {
+                    Some(b) => push_ev(
+                        &format!(
+                            "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\
+                             \"dur\":{},\"pid\":{node},\"tid\":{lane},\"args\":{args}}}",
+                            code::name(b.phase, b.code),
+                            ev.phase.name(),
+                            b.t_us,
+                            ev.t_us.saturating_sub(b.t_us)
+                        ),
+                        &mut out,
+                    ),
+                    // End without a begin (ring wrapped): degrade.
+                    None => push_ev(
+                        &format!(
+                            "{{\"name\":\"{name}\",\"cat\":\"{}\",\"ph\":\"i\",\"ts\":{},\
+                             \"s\":\"t\",\"pid\":{node},\"tid\":{lane},\"args\":{args}}}",
+                            ev.phase.name(),
+                            ev.t_us
+                        ),
+                        &mut out,
+                    ),
+                },
+                Kind::Instant => push_ev(
+                    &format!(
+                        "{{\"name\":\"{name}\",\"cat\":\"{}\",\"ph\":\"i\",\"ts\":{},\
+                         \"s\":\"t\",\"pid\":{node},\"tid\":{lane},\"args\":{args}}}",
+                        ev.phase.name(),
+                        ev.t_us
+                    ),
+                    &mut out,
+                ),
+            }
+        }
+        // Begins without an end (run cut mid-span): degrade to instants.
+        for lane in open {
+            for b in lane {
+                let mut name = String::new();
+                json_escape_into(code::name(b.phase, b.code), &mut name);
+                push_ev(
+                    &format!(
+                        "{{\"name\":\"{name}\",\"cat\":\"{}\",\"ph\":\"i\",\"ts\":{},\
+                         \"s\":\"t\",\"pid\":{},\"tid\":{},\"args\":{{\"round\":{},\
+                         \"detail\":{},\"seq\":{}}}}}",
+                        b.phase.name(),
+                        b.t_us,
+                        node,
+                        b.phase as usize,
+                        b.round,
+                        b.detail,
+                        b.seq
+                    ),
+                    &mut out,
+                );
+            }
+        }
+    }
+    out.push_str("]}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::forall;
+
+    fn ev(seq: u64, t: u64, phase: Phase, kind: Kind, code: u8) -> TraceEvent {
+        TraceEvent { seq, t_us: t, node: 2, round: 3, phase, kind, code, detail: 7 }
+    }
+
+    #[test]
+    fn event_roundtrips_exactly_and_rejects_truncation() {
+        let e = ev(42, 1_000_000, Phase::Consensus, Kind::Instant, code::HS_DECIDE);
+        let bytes = e.to_bytes();
+        assert_eq!(bytes.len(), TRACE_EVENT_BYTES);
+        assert_eq!(bytes.len(), e.encoded_len());
+        assert_eq!(TraceEvent::from_bytes(&bytes).unwrap(), e);
+        for cut in 0..bytes.len() {
+            assert!(TraceEvent::from_bytes(&bytes[..cut]).is_err(), "cut {cut} accepted");
+        }
+        let mut over = bytes.clone();
+        over.push(0xff);
+        assert!(TraceEvent::from_bytes(&over).is_err(), "over-length accepted");
+    }
+
+    #[test]
+    fn bad_phase_and_kind_bytes_rejected() {
+        let e = ev(1, 2, Phase::Train, Kind::SpanBegin, code::TRAIN);
+        let bytes = e.to_bytes();
+        // phase byte is at offset 28, kind at 29.
+        let mut bad = bytes.clone();
+        bad[28] = 7;
+        assert!(TraceEvent::from_bytes(&bad).is_err(), "phase 7 accepted");
+        let mut bad = bytes;
+        bad[29] = 3;
+        assert!(TraceEvent::from_bytes(&bad).is_err(), "kind 3 accepted");
+    }
+
+    /// Fuzz the event codec the same way the wire suites do: random
+    /// valid events roundtrip bit-exactly, and every truncation of the
+    /// encoding errors (never panics).
+    #[test]
+    fn prop_event_roundtrip_and_truncation() {
+        forall(
+            "trace-event-roundtrip",
+            0x7ace,
+            300,
+            64,
+            |rng, _| TraceEvent {
+                seq: rng.next_u64(),
+                t_us: rng.next_u64(),
+                node: rng.next_u32(),
+                round: rng.next_u64(),
+                phase: Phase::ALL[rng.gen_range(Phase::ALL.len() as u64) as usize],
+                kind: match rng.gen_range(3) {
+                    0 => Kind::SpanBegin,
+                    1 => Kind::SpanEnd,
+                    _ => Kind::Instant,
+                },
+                code: (rng.next_u32() & 0xff) as u8,
+                detail: rng.next_u64(),
+            },
+            |e| {
+                let bytes = e.to_bytes();
+                prop_assert!(bytes.len() == e.encoded_len(), "encoded_len mismatch");
+                let back = TraceEvent::from_bytes(&bytes).map_err(|e| e.to_string())?;
+                prop_assert!(back == *e, "event mangled: {back:?}");
+                for cut in 0..bytes.len() {
+                    prop_assert!(
+                        TraceEvent::from_bytes(&bytes[..cut]).is_err(),
+                        "truncation at {cut} accepted"
+                    );
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Ring wraparound keeps exactly the newest `cap` events in seq
+    /// order and counts every eviction.
+    #[test]
+    fn prop_ring_wraparound_keeps_newest_in_order() {
+        forall(
+            "trace-ring-wrap",
+            0x41d6,
+            100,
+            256,
+            |rng, size| {
+                let cap = rng.gen_range(size as u64) as usize + 1;
+                let n = rng.gen_range(3 * size as u64) as usize;
+                (cap, n)
+            },
+            |&(cap, n)| {
+                let mut ring = TraceRing::new(cap);
+                for i in 0..n {
+                    ring.push(ev(i as u64 + 1, i as u64, Phase::Pull, Kind::Instant, 0));
+                }
+                let snap = ring.snapshot();
+                prop_assert!(snap.len() == n.min(cap), "len {} != {}", snap.len(), n.min(cap));
+                prop_assert!(
+                    ring.dropped == n.saturating_sub(cap) as u64,
+                    "dropped {} != {}",
+                    ring.dropped,
+                    n.saturating_sub(cap)
+                );
+                for w in snap.windows(2) {
+                    prop_assert!(w[0].seq + 1 == w[1].seq, "seq gap/reorder");
+                }
+                if let Some(first) = snap.first() {
+                    prop_assert!(
+                        first.seq == n.saturating_sub(cap) as u64 + 1,
+                        "oldest survivor wrong: {}",
+                        first.seq
+                    );
+                }
+                // drain_since returns exactly the strict suffix.
+                let mid = n as u64 / 2;
+                let suffix = ring.drain_since(mid);
+                for e in &suffix {
+                    prop_assert!(e.seq > mid, "drain_since returned seq {}", e.seq);
+                }
+                let expect = snap.iter().filter(|e| e.seq > mid).count();
+                prop_assert!(suffix.len() == expect, "drain_since miscounted");
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn disabled_tracer_emits_nothing() {
+        let t = Tracer::off();
+        t.set_now_us(5);
+        t.set_round(1);
+        t.begin(Phase::Train, code::TRAIN, 1);
+        t.end(Phase::Train, code::TRAIN, 1);
+        t.instant(Phase::Pull, code::FETCH_SEND, 2);
+        assert!(!t.is_on());
+        assert!(t.snapshot().is_empty());
+        assert!(t.drain_since(0).is_empty());
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn tracer_stamps_cached_now_and_round_across_clones() {
+        let t = Tracer::on(4, 64);
+        t.set_now_us(100);
+        t.set_round(2);
+        let component = t.clone(); // e.g. the HotStuff replica's handle
+        component.instant(Phase::Consensus, code::HS_VIEW, 9);
+        t.set_now_us(250); // host advances the clock; clones see it
+        component.instant(Phase::Consensus, code::HS_DECIDE, 1);
+        let snap = t.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!((snap[0].t_us, snap[0].round, snap[0].node), (100, 2, 4));
+        assert_eq!(snap[1].t_us, 250);
+        assert_eq!(snap[0].seq + 1, snap[1].seq);
+
+        // fork_clock shares the ring but not the cells.
+        let drv = t.fork_clock();
+        drv.set_now_us(9_999);
+        drv.instant(Phase::Driver, code::DRV_POLL, 3);
+        assert_eq!(t.snapshot().len(), 3);
+        assert_eq!(t.snapshot()[2].t_us, 9_999);
+        assert_eq!(t.snapshot()[1].t_us, 250, "fork must not clobber the node cells");
+    }
+
+    #[test]
+    fn flight_line_is_grep_friendly() {
+        let line = format_flight_line(&ev(9, 123, Phase::Consensus, Kind::Instant, code::HS_DECIDE));
+        assert_eq!(line, "n2 r3 t=123us consensus/hs_decide i detail=7 seq=9");
+    }
+
+    #[test]
+    fn chrome_json_pairs_spans_and_degrades_unmatched() {
+        let events = vec![
+            ev(1, 10, Phase::Train, Kind::SpanBegin, code::TRAIN),
+            ev(2, 40, Phase::Train, Kind::SpanEnd, code::TRAIN),
+            ev(3, 50, Phase::Consensus, Kind::Instant, code::HS_DECIDE),
+            ev(4, 60, Phase::Aggregate, Kind::SpanBegin, code::AGGREGATE), // never ends
+            ev(5, 5, Phase::Pull, Kind::SpanEnd, code::NONE),              // never began
+        ];
+        let json = chrome_trace_json(&[(2, events)]);
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.ends_with("]}"));
+        // The matched pair became one complete event with the right dur.
+        assert!(json.contains("\"ph\":\"X\""), "no complete span emitted");
+        assert!(json.contains("\"dur\":30"), "span duration wrong");
+        // Unmatched ends/begins degrade to instants, not broken nesting.
+        assert!(!json.contains("\"ph\":\"B\"") && !json.contains("\"ph\":\"E\""));
+        assert!(json.contains("\"name\":\"hs_decide\""));
+        assert!(json.contains("\"name\":\"silo 2\""));
+        // Balanced braces/brackets — cheap structural sanity for a
+        // hand-built document.
+        let opens = json.matches('{').count();
+        let closes = json.matches('}').count();
+        assert_eq!(opens, closes, "unbalanced JSON braces");
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn chrome_json_multi_node_covers_all_pids() {
+        let per_node: Vec<(NodeId, Vec<TraceEvent>)> = (0..3)
+            .map(|n| {
+                let mut e = ev(1, 10, Phase::Multicast, Kind::Instant, code::PUBLISH);
+                e.node = n;
+                (n, vec![e])
+            })
+            .collect();
+        let json = chrome_trace_json(&per_node);
+        for n in 0..3 {
+            assert!(json.contains(&format!("\"name\":\"silo {n}\"")), "pid {n} missing");
+        }
+    }
+}

@@ -381,6 +381,7 @@ mod fuzz_tests {
         let _ = crate::metrics::StatsSnapshot::from_bytes(bytes);
         let _ = crate::cluster::CtrlMsg::from_bytes(bytes);
         let _ = crate::crypto::SignedFrame::from_bytes(bytes);
+        let _ = crate::trace::TraceEvent::from_bytes(bytes);
     }
 
     #[test]

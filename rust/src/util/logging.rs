@@ -2,10 +2,41 @@
 //!
 //! `init()` installs a stderr logger whose level comes from `DEFL_LOG`
 //! (error|warn|info|debug|trace, default info). Safe to call repeatedly.
+//!
+//! Every line is prefixed with the calling thread's node context
+//! (`n<id> r<round>`, see [`set_context`]) when one is set — in a
+//! multi-silo deployment all processes interleave on the supervisor's
+//! stderr, and the prefix keeps each line attributable to the silo and
+//! round that emitted it. Panics are routed through the logger too
+//! ([`init`] installs a hook), so a dying silo's last words carry the
+//! same context before any flight-recorder dump runs.
 
+use std::cell::Cell;
 use std::sync::Once;
 
 use log::{Level, LevelFilter, Metadata, Record};
+
+thread_local! {
+    /// (node, round) context for the current thread; `None` = unset.
+    static LOG_CTX: Cell<Option<(u32, u64)>> = Cell::new(None);
+}
+
+/// Tag this thread's log lines with `n<node> r<round>`. Node loops call
+/// this at callback boundaries; it is a thread-local store, cheap enough
+/// for hot paths.
+pub fn set_context(node: u32, round: u64) {
+    LOG_CTX.with(|c| c.set(Some((node, round))));
+}
+
+/// Remove this thread's log context.
+pub fn clear_context() {
+    LOG_CTX.with(|c| c.set(None));
+}
+
+/// The current thread's `n<id> r<round>` tag, if set.
+pub fn context() -> Option<(u32, u64)> {
+    LOG_CTX.with(|c| c.get())
+}
 
 struct StderrLogger;
 
@@ -25,7 +56,12 @@ impl log::Log for StderrLogger {
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
         };
-        eprintln!("[{lvl}] {}: {}", record.target(), record.args());
+        match context() {
+            Some((node, round)) => {
+                eprintln!("[{lvl}] n{node} r{round} {}: {}", record.target(), record.args())
+            }
+            None => eprintln!("[{lvl}] {}: {}", record.target(), record.args()),
+        }
     }
 
     fn flush(&self) {}
@@ -34,7 +70,11 @@ impl log::Log for StderrLogger {
 static LOGGER: StderrLogger = StderrLogger;
 static INIT: Once = Once::new();
 
-/// Install the logger; level from DEFL_LOG (default info).
+/// Install the logger; level from DEFL_LOG (default info). Also chains
+/// a panic hook that routes the panic through the logger (with the
+/// thread's `n<id> r<round>` context) before the previous hook — so a
+/// silo's crash report is attributable even when stderr interleaves,
+/// and runs before any flight-recorder hook installed later.
 pub fn init() {
     INIT.call_once(|| {
         let level = match std::env::var("DEFL_LOG").as_deref() {
@@ -47,6 +87,11 @@ pub fn init() {
         };
         let _ = log::set_logger(&LOGGER);
         log::set_max_level(level);
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            log::error!("panic: {info}");
+            prev(info);
+        }));
     });
 }
 
@@ -57,5 +102,22 @@ mod tests {
         super::init();
         super::init();
         log::info!("logging smoke");
+    }
+
+    #[test]
+    fn context_is_thread_local_and_clearable() {
+        super::set_context(3, 7);
+        assert_eq!(super::context(), Some((3, 7)));
+        // Another thread starts unset, and its context stays its own.
+        std::thread::spawn(|| {
+            assert_eq!(super::context(), None);
+            super::set_context(9, 1);
+            assert_eq!(super::context(), Some((9, 1)));
+        })
+        .join()
+        .unwrap();
+        assert_eq!(super::context(), Some((3, 7)));
+        super::clear_context();
+        assert_eq!(super::context(), None);
     }
 }

@@ -18,7 +18,10 @@ use std::process::Command;
 /// Supervisor hard deadline per run (also this test's effective cap).
 const DEADLINE_S: u64 = 150;
 
-fn cluster_toml(base_port: u16, control_port: u16) -> String {
+fn cluster_toml(base_port: u16, control_port: u16, trace_dir: Option<&Path>) -> String {
+    let trace = trace_dir
+        .map(|d| format!("trace_dir = \"{}\"\n", d.display()))
+        .unwrap_or_default();
     format!(
         "[cluster]\n\
          nodes = 4\n\
@@ -32,6 +35,7 @@ fn cluster_toml(base_port: u16, control_port: u16) -> String {
          agg_quorum = \"all\"\n\
          deadline_s = {DEADLINE_S}\n\
          linger_ms = 2000\n\
+         {trace}\
          \n\
          [experiment]\n\
          rounds = 4\n\
@@ -134,18 +138,26 @@ fn supervised_kill_restart_recovers_bit_identically() {
     let dir = std::env::temp_dir().join(format!("defl-cluster-proc-{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
 
-    // Baseline: uninterrupted 4-silo run.
+    // Baseline: uninterrupted 4-silo run, flight recorder OFF.
     let base_cfg = dir.join("baseline.toml");
-    std::fs::write(&base_cfg, cluster_toml(40915, 40910)).unwrap();
+    std::fs::write(&base_cfg, cluster_toml(40915, 40910, None)).unwrap();
     let baseline = run_supervisor(&base_cfg, None);
     assert_eq!(baseline.rounds, 4, "baseline rounds:\n{}", baseline.stdout);
     assert_eq!(baseline.restarts, 0, "baseline must not restart anything");
+    assert!(
+        !baseline.stdout.contains("CLUSTER_TRACE"),
+        "tracing is off by default, no merged trace expected:\n{}",
+        baseline.stdout
+    );
 
     // Scenario: SIGKILL silo 2 once it reports round 1, restart it, and
     // require full recovery (different ports so stray sockets from the
-    // first run cannot interfere).
+    // first run cannot interfere). This run records a flight trace: the
+    // digest-equality assertion below then ALSO proves tracing is
+    // behaviour-invariant (traced kill run == untraced baseline).
+    let trace_dir = dir.join("traces");
     let kill_cfg = dir.join("kill.toml");
-    std::fs::write(&kill_cfg, cluster_toml(41015, 41010)).unwrap();
+    std::fs::write(&kill_cfg, cluster_toml(41015, 41010, Some(&trace_dir))).unwrap();
     let killed = run_supervisor(&kill_cfg, Some("2@1"));
     assert!(
         killed.restarts >= 1,
@@ -163,11 +175,59 @@ fn supervised_kill_restart_recovers_bit_identically() {
         killed.stdout
     );
     // The headline property: recovery through real process boundaries is
-    // bit-identical to never having crashed.
+    // bit-identical to never having crashed — and, since this run traced
+    // while the baseline did not, the recorder provably changed nothing.
     assert_eq!(
         killed.digest, baseline.digest,
         "kill+restart diverged from the uninterrupted run\n--- baseline ---\n{}\n--- killed ---\n{}",
         baseline.stdout, killed.stdout
+    );
+
+    // Merged cluster timeline: the supervisor wrote Chrome-trace JSON
+    // covering most phase lanes from most silos.
+    assert!(
+        killed.stdout.contains("CLUSTER_TRACE "),
+        "traced run must print the merged trace path:\n{}",
+        killed.stdout
+    );
+    let merged = std::fs::read_to_string(trace_dir.join("TRACE_cluster.json"))
+        .expect("reading TRACE_cluster.json");
+    assert!(
+        merged.starts_with("{\"traceEvents\":[") && merged.ends_with("]}"),
+        "merged trace is not a Chrome-trace document ({} bytes)",
+        merged.len()
+    );
+    let phases = ["train", "spec_train", "multicast", "consensus", "aggregate", "pull", "driver"];
+    let covered: Vec<&str> = phases
+        .iter()
+        .filter(|p| merged.contains(&format!("\"cat\":\"{p}\"")))
+        .copied()
+        .collect();
+    assert!(
+        covered.len() >= 5,
+        "merged trace covers only {covered:?} (need spans/instants from ≥5 phases)"
+    );
+    let silos_traced = merged.matches("\"name\":\"process_name\"").count();
+    assert!(
+        silos_traced >= 3,
+        "merged trace carries events from only {silos_traced} silos (need ≥3)"
+    );
+
+    // Crash-time flight record: the SIGKILLed silo's per-beat dump file
+    // survived its death (append mode), and its tail reaches the kill
+    // round — the last thing silo 2 did is on disk, human-readable.
+    let flight = std::fs::read_to_string(trace_dir.join("flight_n2.log"))
+        .expect("reading flight_n2.log");
+    let max_round = flight
+        .lines()
+        .filter_map(|l| l.strip_prefix("n2 r"))
+        .filter_map(|rest| rest.split_whitespace().next().and_then(|r| r.parse::<u64>().ok()))
+        .max();
+    assert!(
+        max_round.is_some_and(|r| r >= 1),
+        "flight_n2.log must record silo 2's events up to the kill round (max round {max_round:?}, \
+         {} lines)",
+        flight.lines().count()
     );
 
     let _ = std::fs::remove_dir_all(&dir);
